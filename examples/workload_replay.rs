@@ -1,0 +1,65 @@
+//! Workload replay: generate the paper's Fig. 1/Fig. 2 trace, print
+//! both figures' data series, then push a compressed slice of it
+//! through the coordinator.
+//!
+//! ```text
+//! cargo run --release --example workload_replay
+//! ```
+
+use tlsched::coordinator::{Coordinator, CoordinatorConfig};
+use tlsched::graph::{generate, BlockPartition};
+use tlsched::scheduler::{SchedulerConfig, SchedulerKind};
+use tlsched::trace::{self, TraceConfig};
+
+fn main() {
+    tlsched::util::logging::init();
+    // One week of arrivals calibrated to the paper's summary stats.
+    let tc = TraceConfig::default();
+    let jobs = trace::generate(&tc);
+    let stats = trace::analyze(&jobs, tc.days * 86_400.0);
+
+    println!("== Fig 1: one week's workload (jobs per hour) ==");
+    for (h, c) in stats.hourly_counts.iter().enumerate() {
+        let day = h / 24;
+        let hod = h % 24;
+        let bar = "#".repeat((*c as usize).min(80));
+        println!("d{day} {hod:02}h {c:>4} {bar}");
+    }
+
+    println!("\n== Fig 2: CCDF of concurrent jobs per second ==");
+    println!("{:>4} {:>8}", "k", "P(>=k)");
+    for &(k, p) in stats.concurrency_ccdf.iter().take(25) {
+        println!("{k:>4} {p:>8.4}");
+    }
+    println!(
+        "\npaper:  peak > 20, mean 8.7, P(>=2) = 83.4%\nours:   peak = {}, mean = {:.1}, P(>=2) = {:.1}%",
+        stats.peak_concurrency,
+        stats.mean_concurrency,
+        100.0 * stats.p_at_least(2)
+    );
+
+    // Replay the first half-day through the coordinator, compressed.
+    let graph = generate::rmat(13, 8, 5);
+    let partition = BlockPartition::by_cache_budget(&graph, 1 << 20, 16);
+    let slice: Vec<_> = jobs
+        .iter()
+        .filter(|j| j.arrival_s < 0.5 * 86_400.0)
+        .cloned()
+        .map(|mut j| {
+            j.source %= graph.num_vertices() as u32;
+            j
+        })
+        .collect();
+    println!("\nreplaying first half-day ({} jobs) at 7200x compression…", slice.len());
+    let mut ccfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    ccfg.max_concurrent = 24;
+    let mut coord = Coordinator::new(&graph, &partition, ccfg);
+    let m = coord.run_trace(&slice, 7200.0);
+    println!(
+        "completed {} jobs: throughput {:.0} jobs/h (virtual), mean latency {:.0}s, sharing {:.2}",
+        m.completed(),
+        m.throughput_per_hour(),
+        m.mean_latency_s(),
+        m.sharing_factor()
+    );
+}

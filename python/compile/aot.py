@@ -1,0 +1,97 @@
+"""AOT lowering: L2 model -> HLO text artifacts for the rust runtime.
+
+HLO *text* is the interchange format (NOT ``lowered.compile()`` /
+serialized protos): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla``
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--jobs 8] [--n 1024] [--tile 256]
+
+Writes one ``.hlo.txt`` per entry point plus ``manifest.json``
+describing shapes, so the rust loader never guesses.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    pagerank_step_model,
+    pagerank_step_reference,
+    sssp_step_model,
+    sssp_step_reference,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--jobs", type=int, default=8, help="J: concurrent job lanes")
+    ap.add_argument("--n", type=int, default=1024, help="N: padded vertex count")
+    ap.add_argument("--tile", type=int, default=256, help="kernel tile size")
+    args = ap.parse_args()
+
+    j, n = args.jobs, args.n
+    assert n % args.tile == 0, "n must be a multiple of tile"
+
+    f32 = jnp.float32
+    lane = jax.ShapeDtypeStruct((j, n), f32)
+    mat = jax.ShapeDtypeStruct((n, n), f32)
+    mask = jax.ShapeDtypeStruct((n,), f32)
+
+    entries = [
+        ("pagerank_step", pagerank_step_model, (lane, lane, mat, mask)),
+        ("pagerank_step_ref", pagerank_step_reference, (lane, lane, mat, mask)),
+        ("sssp_step", sssp_step_model, (lane, mat, mask)),
+        ("sssp_step_ref", sssp_step_reference, (lane, mat, mask)),
+    ]
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"jobs": j, "n": n, "tile": args.tile, "entries": []}
+    for name, fn, ex in entries:
+        lowered = lower_entry(fn, ex)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_j{j}_n{n}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        n_inputs = len(ex)
+        n_outputs = len(lowered.out_info) if isinstance(lowered.out_info, tuple) else 1
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": n_inputs,
+                "outputs": n_outputs,
+                "hlo_bytes": len(text),
+            }
+        )
+        print(f"wrote {path} ({len(text)} bytes)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

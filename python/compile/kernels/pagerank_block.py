@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: batched masked delta-PageRank propagation.
+
+The paper's cache insight re-expressed for TPU (DESIGN.md
+§Hardware-Adaptation): one graph block (an ``adj_norm`` tile) is copied
+HBM -> VMEM **once** and reused by all J concurrent jobs' delta rows —
+the Pallas analogue of CAJS keeping a block hot in LLC while every
+unconverged job processes it. Propagation is a [J, N] x [N, N] matmul
+tiled (TILE_K x TILE_N) for the MXU; J rides the sublane axis.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU numbers are estimated in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, a_ref, o_ref, *, n_k_tiles):
+    """Accumulating tile matmul: o[c] = sum_k x[k] @ a[k, c].
+
+    Grid is (col_tiles, k_tiles); the k axis accumulates into o_ref,
+    which Pallas keeps resident in VMEM across the k loop ("revisiting"
+    the same output block).
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_tiled(x, a, *, tile_n=256, tile_k=256, interpret=True):
+    """[J, K] @ [K, N] via the Pallas tile kernel."""
+    j, k_dim = x.shape
+    k_dim2, n = a.shape
+    assert k_dim == k_dim2, (x.shape, a.shape)
+    assert k_dim % tile_k == 0 and n % tile_n == 0, (x.shape, a.shape, tile_k, tile_n)
+    n_k_tiles = k_dim // tile_k
+    grid = (n // tile_n, n_k_tiles)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k_tiles=n_k_tiles),
+        grid=grid,
+        in_specs=[
+            # x: all J rows, k-th K tile; same block for every col tile
+            pl.BlockSpec((j, tile_k), lambda c, k: (0, k)),
+            # a: (k, c) tile — the graph block; loaded once per (c, k)
+            pl.BlockSpec((tile_k, tile_n), lambda c, k: (k, c)),
+        ],
+        out_specs=pl.BlockSpec((j, tile_n), lambda c, k: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((j, n), jnp.float32),
+        interpret=interpret,
+    )(x, a)
+
+
+def auto_tile(n, preferred=256):
+    """Largest power-of-two tile <= preferred that divides n."""
+    t = preferred
+    while t > 1 and n % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def pagerank_step(values, deltas, adj_norm, mask, *, tile=None, interpret=True):
+    """One masked synchronous delta-PageRank step (kernel-backed).
+
+    Matches ``ref.pagerank_step_ref`` exactly in semantics; the matmul
+    runs through the Pallas tile kernel.
+    """
+    if tile is None:
+        tile = auto_tile(values.shape[1])
+    consumed = deltas * mask[None, :]
+    new_values = values + consumed
+    propagated = matmul_tiled(
+        consumed, adj_norm, tile_n=tile, tile_k=tile, interpret=interpret
+    )
+    new_deltas = deltas * (1.0 - mask)[None, :] + propagated
+    return new_values, new_deltas

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas block kernels.
+
+These define the semantics the kernels must match bit-for-bit (modulo
+float accumulation order). The L2 model functions and the pytest suite
+both compare against these.
+
+Semantics (matching the rust engine's delta-accumulative model, in the
+synchronous "process all scheduled blocks at once" form):
+
+* ``pagerank_step``: consume the deltas of *masked* (scheduled)
+  vertices; fold them into the values; propagate ``d * delta / outdeg``
+  along out-edges. ``adj_norm[u, v] = d / outdeg(u)`` for each edge
+  ``u -> v`` (zero elsewhere), so propagation is one matmul.
+
+* ``sssp_step``: relax all out-edges of masked vertices:
+  ``cand[j, v] = min_u(dist[j, u] + w[u, v])`` over masked ``u``;
+  ``new_dist = min(dist, cand)``. ``w`` holds BIG for non-edges.
+"""
+
+import jax.numpy as jnp
+
+# A large-but-finite stand-in for +inf: masking with true inf creates
+# inf - inf NaN hazards under reordering; the rust side uses the same
+# constant when building literals. Python float (not a jnp scalar) so
+# Pallas kernels can close over it as a literal.
+BIG = 3.0e38
+
+
+def pagerank_step_ref(values, deltas, adj_norm, mask):
+    """One masked synchronous delta-PageRank step.
+
+    Args:
+      values:   [J, N] accumulated PageRank values.
+      deltas:   [J, N] pending deltas.
+      adj_norm: [N, N] ``d/outdeg(u)`` at ``[u, v]`` per edge u->v.
+      mask:     [N] 1.0 where the vertex's block is scheduled.
+
+    Returns:
+      (new_values [J, N], new_deltas [J, N])
+    """
+    consumed = deltas * mask[None, :]
+    new_values = values + consumed
+    new_deltas = deltas * (1.0 - mask)[None, :] + consumed @ adj_norm
+    return new_values, new_deltas
+
+
+def sssp_step_ref(dist, weights, mask):
+    """One masked synchronous SSSP relaxation step.
+
+    Args:
+      dist:    [J, N] current best distances (BIG = unreached).
+      weights: [N, N] edge weight at ``[u, v]``, BIG for non-edges.
+      mask:    [N] 1.0 where the vertex's block is scheduled.
+
+    Returns:
+      new_dist [J, N]
+    """
+    # unmasked sources must not relax: push them to BIG
+    src = jnp.where(mask[None, :] > 0, dist, BIG)
+    cand = jnp.min(src[:, :, None] + weights[None, :, :], axis=1)
+    return jnp.minimum(dist, jnp.minimum(cand, BIG))

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: batched masked SSSP relaxation (min-plus product).
+
+Tropical-semiring analogue of the PageRank kernel: the same
+one-block-serves-all-jobs VMEM schedule, with (min, +) instead of
+(+, x). There is no MXU for min-plus, so this targets the VPU with
+(8, 128)-shaped vector ops; the block tile is still fetched once per
+grid step and shared across the J job lanes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BIG
+
+
+def _minplus_kernel(x_ref, a_ref, o_ref, *, n_k_tiles):
+    """o[c] = min_k minplus(x[k], a[k, c]) with BIG as identity."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, BIG)
+
+    x = x_ref[...]  # [J, TK]
+    a = a_ref[...]  # [TK, TN]
+    # broadcast min-plus: [J, TK, 1] + [1, TK, TN] -> min over TK
+    cand = jnp.min(x[:, :, None] + a[None, :, :], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.minimum(cand, BIG))
+
+
+def minplus_tiled(x, a, *, tile_n=256, tile_k=256, interpret=True):
+    """Tropical [J, K] (min,+) [K, N] via the Pallas tile kernel."""
+    j, k_dim = x.shape
+    k_dim2, n = a.shape
+    assert k_dim == k_dim2, (x.shape, a.shape)
+    assert k_dim % tile_k == 0 and n % tile_n == 0
+    n_k_tiles = k_dim // tile_k
+    grid = (n // tile_n, n_k_tiles)
+    return pl.pallas_call(
+        functools.partial(_minplus_kernel, n_k_tiles=n_k_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((j, tile_k), lambda c, k: (0, k)),
+            pl.BlockSpec((tile_k, tile_n), lambda c, k: (k, c)),
+        ],
+        out_specs=pl.BlockSpec((j, tile_n), lambda c, k: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((j, n), jnp.float32),
+        interpret=interpret,
+    )(x, a)
+
+
+def sssp_step(dist, weights, mask, *, tile=None, interpret=True):
+    """One masked synchronous SSSP relaxation step (kernel-backed).
+
+    Matches ``ref.sssp_step_ref``.
+    """
+    if tile is None:
+        from .pagerank_block import auto_tile
+
+        tile = auto_tile(dist.shape[1])
+    src = jnp.where(mask[None, :] > 0, dist, BIG)
+    cand = minplus_tiled(src, weights, tile_n=tile, tile_k=tile, interpret=interpret)
+    return jnp.minimum(dist, jnp.minimum(cand, BIG))

@@ -1,0 +1,50 @@
+"""L2 JAX model: the batched multi-job block-update step.
+
+Composes the L1 Pallas kernels into the two entry points the rust
+runtime executes per scheduling round:
+
+* ``pagerank_step_model`` — masked synchronous delta-PageRank step for
+  J concurrent jobs.
+* ``sssp_step_model`` — masked synchronous SSSP relaxation step.
+
+The mask is the output of the rust scheduler (MPDS global priority
+queue expanded to vertex granularity); the kernels do the compute.
+Python exists only at build time — ``aot.py`` lowers these functions to
+HLO text once, and the rust PJRT runtime replays them.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.pagerank_block import pagerank_step
+from .kernels.sssp_block import sssp_step
+from .kernels import ref
+
+
+def pagerank_step_model(values, deltas, adj_norm, mask):
+    """(values, deltas, adj_norm, mask) -> (new_values, new_deltas)."""
+    return pagerank_step(values, deltas, adj_norm, mask)
+
+
+def sssp_step_model(dist, weights, mask):
+    """(dist, weights, mask) -> new_dist."""
+    return sssp_step(dist, weights, mask)
+
+
+def pagerank_step_reference(values, deltas, adj_norm, mask):
+    """Oracle-backed variant (no Pallas) — lowered alongside the kernel
+    version so the rust integration tests can cross-check numerics of
+    both artifact flavours."""
+    return ref.pagerank_step_ref(values, deltas, adj_norm, mask)
+
+
+def sssp_step_reference(dist, weights, mask):
+    return ref.sssp_step_ref(dist, weights, mask)
+
+
+def build_adj_norm(n, edges, out_degrees, damping=0.85):
+    """Dense ``adj_norm`` from an edge list (test helper; the rust side
+    builds the same matrix from its CSR)."""
+    a = jnp.zeros((n, n), dtype=jnp.float32)
+    for (u, v) in edges:
+        a = a.at[u, v].add(damping / out_degrees[u])
+    return a

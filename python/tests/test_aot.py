@@ -1,0 +1,66 @@
+"""AOT pipeline: lowering produces loadable HLO text and an accurate
+manifest; shapes stay configurable."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYDIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--jobs", "2",
+         "--n", "128", "--tile", "32"],
+        cwd=PYDIR,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_manifest_lists_all_entries(artifacts):
+    m = json.loads((artifacts / "manifest.json").read_text())
+    assert m["jobs"] == 2
+    assert m["n"] == 128
+    assert m["tile"] == 32
+    names = {e["name"] for e in m["entries"]}
+    assert names == {"pagerank_step", "pagerank_step_ref", "sssp_step", "sssp_step_ref"}
+    for e in m["entries"]:
+        assert (artifacts / e["file"]).exists()
+        assert e["hlo_bytes"] > 0
+
+
+def test_hlo_text_is_parseable_module(artifacts):
+    m = json.loads((artifacts / "manifest.json").read_text())
+    for e in m["entries"]:
+        text = (artifacts / e["file"]).read_text()
+        assert text.startswith("HloModule"), f"{e['name']} missing HloModule header"
+        assert "ENTRY" in text
+        # the interchange contract: text, not serialized proto
+        assert "\x00" not in text
+
+
+def test_entry_arity_matches_manifest(artifacts):
+    m = json.loads((artifacts / "manifest.json").read_text())
+    by_name = {e["name"]: e for e in m["entries"]}
+    assert by_name["pagerank_step"]["inputs"] == 4
+    assert by_name["pagerank_step"]["outputs"] == 2
+    assert by_name["sssp_step"]["inputs"] == 3
+    assert by_name["sssp_step"]["outputs"] == 1
+
+
+def test_bad_tile_rejected():
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", "/tmp/nope", "--n", "100",
+         "--tile", "33"],
+        cwd=PYDIR,
+        capture_output=True,
+    )
+    assert r.returncode != 0

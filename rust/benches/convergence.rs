@@ -1,0 +1,180 @@
+//! Headline convergence experiment: work-to-convergence for concurrent
+//! jobs under each policy, plus the paper's design-choice ablations
+//! (queue length Eq. 4, ε tie-band, α reserved split, block size V_B).
+//!
+//! The paper claims two-level scheduling "accelerates the convergence
+//! speed of concurrent jobs"; the comparable shape here is fewer block
+//! loads and less redundant work for the same fixpoints, with the
+//! prioritized policies beating sweeps as selectivity rises.
+//!
+//! `cargo bench --bench convergence [-- --scale 13 --jobs 8 --sweep-q]`
+
+use tlsched::engine::{JobSpec, JobState, NoProbe};
+use tlsched::graph::{generate, BlockPartition, Graph};
+use tlsched::scheduler::{
+    run_to_convergence, Scheduler, SchedulerConfig, SchedulerKind,
+};
+use tlsched::trace::JobKind;
+use tlsched::util::args::ArgSpec;
+use tlsched::util::benchkit::{export_jsonl, Table};
+
+fn jobs_for(g: &Graph, n: usize) -> Vec<JobState> {
+    (0..n)
+        .map(|i| {
+            JobSpec::new(JobKind::ALL[i % 5], (i as u32 * 797) % g.num_vertices() as u32)
+        })
+        .map(|s| JobState::new(0, s, g))
+        .enumerate()
+        .map(|(i, mut j)| {
+            j.id = i as u32;
+            j
+        })
+        .collect()
+}
+
+fn run_policy(
+    g: &Graph,
+    part: &BlockPartition,
+    cfg: SchedulerConfig,
+    njobs: usize,
+) -> (usize, tlsched::scheduler::RoundStats, f64) {
+    let mut jobs = jobs_for(g, njobs);
+    let mut sched = Scheduler::new(cfg);
+    let t0 = std::time::Instant::now();
+    let (rounds, stats) =
+        run_to_convergence(&mut sched, g, part, &mut jobs, &mut NoProbe, 1_000_000);
+    assert!(jobs.iter().all(|j| j.converged), "non-convergence");
+    (rounds, stats, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let spec = ArgSpec::new("convergence", "work-to-convergence across policies")
+        .opt("scale", "13", "rmat scale")
+        .opt("block-vertices", "128", "vertices per block")
+        .opt("jobs", "4,8,16", "concurrency sweep")
+        .flag("sweep-q", "run the Eq. 4 queue-length ablation")
+        .flag("sweep-ablation", "run ε/α/V_B ablations")
+        .flag("incremental", "enable incremental summary tracking (perf ablation)");
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let a = spec.parse_from(&argv).unwrap_or_else(|_| spec.parse_from(&[]).unwrap());
+
+    let g = generate::rmat(a.parse("scale"), 8, 4242);
+    let part = BlockPartition::by_vertex_count(&g, a.usize("block-vertices"));
+    eprintln!(
+        "graph: {} vertices {} edges, {} blocks",
+        g.num_vertices(),
+        g.num_edges(),
+        part.num_blocks()
+    );
+
+    // ---- main comparison -----------------------------------------------
+    let mut t = Table::new(&[
+        "jobs",
+        "policy",
+        "rounds",
+        "block_loads",
+        "updates",
+        "edges",
+        "sharing",
+        "wall_s",
+        "loads_vs_indep",
+    ]);
+    for njobs in a.list::<usize>("jobs") {
+        let mut indep_loads = 0u64;
+        for kind in SchedulerKind::ALL {
+            let mut cfg = SchedulerConfig::new(kind);
+            cfg.incremental_summaries = a.flag("incremental");
+            let (rounds, stats, wall) = run_policy(&g, &part, cfg, njobs);
+            if kind == SchedulerKind::Independent {
+                indep_loads = stats.block_loads;
+            }
+            t.row(&[
+                format!("{njobs}"),
+                kind.name().into(),
+                format!("{rounds}"),
+                format!("{}", stats.block_loads),
+                format!("{}", stats.updates),
+                format!("{}", stats.edges),
+                format!("{:.2}", stats.dispatches as f64 / stats.block_loads.max(1) as f64),
+                format!("{wall:.3}"),
+                format!("{:.2}", indep_loads as f64 / stats.block_loads.max(1) as f64),
+            ]);
+        }
+    }
+    t.print("convergence: work to fixpoint per policy (paper headline)");
+    export_jsonl(&t.to_jsonl("convergence_policies"));
+
+    // ---- Eq. 4 queue-length sweep ---------------------------------------
+    if a.flag("sweep-q") {
+        let njobs = 8;
+        let base_q =
+            tlsched::scheduler::optimal_queue_length(100.0, part.num_blocks(), g.num_vertices());
+        let mut t2 = Table::new(&["q", "q_over_eq4", "rounds", "block_loads", "updates", "wall_s"]);
+        for mult in [0.25, 0.5, 1.0, 2.0, 4.0] {
+            let q = ((base_q as f64 * mult) as usize).clamp(1, part.num_blocks());
+            let mut cfg = SchedulerConfig::new(SchedulerKind::TwoLevel);
+            cfg.q_override = Some(q);
+            let (rounds, stats, wall) = run_policy(&g, &part, cfg, njobs);
+            t2.row(&[
+                format!("{q}"),
+                format!("{mult:.2}"),
+                format!("{rounds}"),
+                format!("{}", stats.block_loads),
+                format!("{}", stats.updates),
+                format!("{wall:.3}"),
+            ]);
+        }
+        t2.print("Eq. 4 ablation: global queue length q (paper optimum at 1.0x)");
+        export_jsonl(&t2.to_jsonl("q_sweep"));
+    }
+
+    // ---- ε / α / V_B ablations ------------------------------------------
+    if a.flag("sweep-ablation") {
+        let njobs = 8;
+        let mut t3 = Table::new(&["epsilon_frac", "rounds", "block_loads", "updates"]);
+        for eps in [0.0, 0.1, 0.2, 0.4, 0.8] {
+            let mut cfg = SchedulerConfig::new(SchedulerKind::TwoLevel);
+            cfg.epsilon_frac = eps;
+            let (rounds, stats, _) = run_policy(&g, &part, cfg, njobs);
+            t3.row(&[
+                format!("{eps:.1}"),
+                format!("{rounds}"),
+                format!("{}", stats.block_loads),
+                format!("{}", stats.updates),
+            ]);
+        }
+        t3.print("ablation: CBP ε tie-band (paper default 0.2)");
+        export_jsonl(&t3.to_jsonl("epsilon_sweep"));
+
+        let mut t4 = Table::new(&["alpha", "rounds", "block_loads", "updates"]);
+        for alpha in [0.2, 0.4, 0.6, 0.8, 1.0] {
+            let mut cfg = SchedulerConfig::new(SchedulerKind::TwoLevel);
+            cfg.alpha = alpha;
+            let (rounds, stats, _) = run_policy(&g, &part, cfg, njobs);
+            t4.row(&[
+                format!("{alpha:.1}"),
+                format!("{rounds}"),
+                format!("{}", stats.block_loads),
+                format!("{}", stats.updates),
+            ]);
+        }
+        t4.print("ablation: De_Gl_Priority α reserved split (paper default 0.8)");
+        export_jsonl(&t4.to_jsonl("alpha_sweep"));
+
+        let mut t5 = Table::new(&["block_vertices", "blocks", "rounds", "block_loads", "wall_s"]);
+        for vb in [32usize, 64, 128, 256, 512] {
+            let p = BlockPartition::by_vertex_count(&g, vb);
+            let (rounds, stats, wall) =
+                run_policy(&g, &p, SchedulerConfig::new(SchedulerKind::TwoLevel), njobs);
+            t5.row(&[
+                format!("{vb}"),
+                format!("{}", p.num_blocks()),
+                format!("{rounds}"),
+                format!("{}", stats.block_loads),
+                format!("{wall:.3}"),
+            ]);
+        }
+        t5.print("ablation: block size V_B (coarse-grained priority trade-off)");
+        export_jsonl(&t5.to_jsonl("vb_sweep"));
+    }
+}

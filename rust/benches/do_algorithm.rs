@@ -1,0 +1,89 @@
+//! DO algorithm (Function 2 / Eq. 2) reproduction: selection cost vs a
+//! full sort across block-table sizes, plus top-q recall quality and
+//! the sample-size ablation.
+//!
+//! Paper claim: O(B_N) + O(q log q) instead of O(B_N log B_N), with the
+//! 500-sample threshold estimate giving an approximately-top-q queue.
+//!
+//! `cargo bench --bench do_algorithm [-- --sizes 1024,4096,16384,65536]`
+
+use tlsched::scheduler::{optimal_queue_length, DoSelector, PriorityPair};
+use tlsched::util::args::ArgSpec;
+use tlsched::util::benchkit::{export_jsonl, fmt_ns, Bench, Table};
+use tlsched::util::rng::Pcg32;
+
+fn make_table(n: usize, rng: &mut Pcg32) -> Vec<PriorityPair> {
+    (0..n)
+        .map(|i| PriorityPair::new(i as u32, rng.gen_range(200), rng.gen_f64() * 10.0))
+        .collect()
+}
+
+fn recall(sel: &DoSelector, table: &[PriorityPair], q: usize, rng: &mut Pcg32) -> f64 {
+    let approx = sel.select_top_q(table, q, rng);
+    let exact = sel.exact_top_q(table, q);
+    let ids: std::collections::HashSet<u32> = approx.iter().map(|p| p.block).collect();
+    exact.iter().filter(|p| ids.contains(&p.block)).count() as f64 / q.max(1) as f64
+}
+
+fn main() {
+    let spec = ArgSpec::new("do_algorithm", "DO selection vs full sort")
+        .opt("sizes", "1024,4096,16384,65536", "block-table sizes B_N")
+        .opt("vn-per-block", "64", "V_B used for Eq. 4 q");
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let a = spec.parse_from(&argv).unwrap_or_else(|_| spec.parse_from(&[]).unwrap());
+
+    let mut rng = Pcg32::seeded(7);
+    let sel = DoSelector::default();
+    let bench = Bench::quick();
+
+    let mut t = Table::new(&[
+        "B_N",
+        "q_eq4",
+        "do_select",
+        "full_sort",
+        "speedup_x",
+        "recall",
+    ]);
+    for b_n in a.list::<usize>("sizes") {
+        let v_n = b_n * a.usize("vn-per-block");
+        let q = optimal_queue_length(100.0, b_n, v_n);
+        let table = make_table(b_n, &mut rng);
+        let mut r1 = Pcg32::seeded(11);
+        let s_do = bench.run("do", || {
+            std::hint::black_box(sel.select_top_q(&table, q, &mut r1));
+        });
+        let s_sort = bench.run("sort", || {
+            std::hint::black_box(sel.exact_top_q(&table, q));
+        });
+        let mut r2 = Pcg32::seeded(13);
+        let rec = recall(&sel, &table, q, &mut r2);
+        t.row(&[
+            format!("{b_n}"),
+            format!("{q}"),
+            fmt_ns(s_do.mean_ns),
+            fmt_ns(s_sort.mean_ns),
+            format!("{:.2}", s_sort.mean_ns / s_do.mean_ns.max(0.001)),
+            format!("{rec:.3}"),
+        ]);
+    }
+    t.print("DO algorithm: approximate top-q selection vs full sort (Eq. 2)");
+    export_jsonl(&t.to_jsonl("do_algorithm"));
+
+    // ---- ablation: sample-set size s ------------------------------------
+    let b_n = 16384;
+    let table = make_table(b_n, &mut rng);
+    let q = optimal_queue_length(100.0, b_n, b_n * 64);
+    let mut t2 = Table::new(&["samples_s", "do_select", "recall"]);
+    for s in [50usize, 125, 250, 500, 1000, 2000] {
+        let sel_s = DoSelector::new(tlsched::scheduler::Cbp::default(), s);
+        let mut r1 = Pcg32::seeded(17);
+        let timing = bench.run("do_s", || {
+            std::hint::black_box(sel_s.select_top_q(&table, q, &mut r1));
+        });
+        let mut r2 = Pcg32::seeded(19);
+        let rec = recall(&sel_s, &table, q, &mut r2);
+        t2.row(&[format!("{s}"), fmt_ns(timing.mean_ns), format!("{rec:.3}")]);
+    }
+    t2.print("ablation: DO sample-set size (paper default s = 500)");
+    export_jsonl(&t2.to_jsonl("do_samples_ablation"));
+}

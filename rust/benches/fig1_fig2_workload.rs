@@ -1,0 +1,56 @@
+//! Fig 1 + Fig 2 reproduction: one week's workload (hourly arrival
+//! series) and the CCDF of concurrent jobs per second.
+//!
+//! Paper targets: peak concurrency > 20, mean concurrency 8.7,
+//! P(>= 2 concurrent) = 83.4%.
+//!
+//! `cargo bench --bench fig1_fig2_workload [-- --days 7 --rate 38]`
+
+use tlsched::trace::{self, TraceConfig};
+use tlsched::util::args::ArgSpec;
+use tlsched::util::benchkit::{export_jsonl, Table};
+
+fn main() {
+    let spec = ArgSpec::new("fig1_fig2_workload", "reproduce paper Figs 1-2")
+        .opt("days", "7", "trace length (days)")
+        .opt("rate", "38", "mean arrivals per hour")
+        .opt("seed", "2018", "trace seed");
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let a = spec.parse_from(&argv).unwrap_or_else(|_| spec.parse_from(&[]).unwrap());
+
+    let tc = TraceConfig {
+        days: a.f64("days"),
+        mean_rate_per_hour: a.f64("rate"),
+        seed: a.u64("seed"),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let jobs = trace::generate(&tc);
+    let stats = trace::analyze(&jobs, tc.days * 86_400.0);
+    let gen_s = t0.elapsed().as_secs_f64();
+
+    // Fig 1 series: hourly counts, printed day-major like the paper plot.
+    let mut fig1 = Table::new(&["day", "hour", "jobs"]);
+    for (h, c) in stats.hourly_counts.iter().enumerate() {
+        fig1.row(&[format!("{}", h / 24), format!("{}", h % 24), format!("{c}")]);
+    }
+    fig1.print("Fig 1: one week's workload of graph computation (hourly arrivals)");
+
+    // Fig 2 series: CCDF of per-second concurrency.
+    let mut fig2 = Table::new(&["concurrency_k", "p_at_least_k"]);
+    for &(k, p) in stats.concurrency_ccdf.iter().take(33) {
+        fig2.row(&[format!("{k}"), format!("{p:.4}")]);
+    }
+    fig2.print("Fig 2: CCDF of number of concurrent jobs (per second)");
+
+    let mut summary = Table::new(&["metric", "paper", "measured"]);
+    summary.row(&["peak_concurrency".into(), ">20".into(), format!("{}", stats.peak_concurrency)]);
+    summary.row(&["mean_concurrency".into(), "8.7".into(), format!("{:.2}", stats.mean_concurrency)]);
+    summary.row(&["p_at_least_2".into(), "0.834".into(), format!("{:.3}", stats.p_at_least(2))]);
+    summary.row(&["total_jobs".into(), "-".into(), format!("{}", jobs.len())]);
+    summary.row(&["gen_seconds".into(), "-".into(), format!("{gen_s:.2}")]);
+    summary.print("Fig 1/2 summary: paper vs measured");
+
+    export_jsonl(&fig2.to_jsonl("fig2_ccdf"));
+    export_jsonl(&summary.to_jsonl("fig1_fig2_summary"));
+}

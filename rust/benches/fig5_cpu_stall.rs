@@ -1,0 +1,79 @@
+//! Fig 5 reproduction: CPU execution vs cache-stall share as the
+//! number of concurrent jobs grows (the paper's sd1-arc measurement).
+//!
+//! The stall model charges each access its hit level's latency;
+//! `stall_share = stall_cycles / (stall + work)`. The paper's plot
+//! shows the stall share growing with concurrency under conventional
+//! execution; we print both the baseline and two-level columns.
+//!
+//! `cargo bench --bench fig5_cpu_stall [-- --scale 12]`
+
+use tlsched::coordinator::{Coordinator, CoordinatorConfig};
+use tlsched::engine::{JobSpec, SimProbe};
+use tlsched::graph::{generate, BlockPartition};
+use tlsched::memsim::{AddressMap, HierarchyConfig, MemoryHierarchy};
+use tlsched::scheduler::{SchedulerConfig, SchedulerKind};
+use tlsched::trace::JobKind;
+use tlsched::util::args::ArgSpec;
+use tlsched::util::benchkit::{export_jsonl, Table};
+
+fn stall_for(
+    g: &tlsched::graph::Graph,
+    part: &BlockPartition,
+    kind: SchedulerKind,
+    jobs: usize,
+    cap: usize,
+) -> (f64, f64) {
+    let map = AddressMap::new(g);
+    let mut mem = MemoryHierarchy::new(HierarchyConfig::tiny());
+    let mut probe = SimProbe { map: &map, mem: &mut mem };
+    let specs: Vec<JobSpec> = (0..jobs)
+        .map(|i| JobSpec::new(JobKind::ALL[i % 5], (i as u32 * 389) % g.num_vertices() as u32))
+        .collect();
+    let mut ccfg = CoordinatorConfig::new(SchedulerConfig::new(kind));
+    ccfg.max_rounds_per_job = cap;
+    let mut coord = Coordinator::new(g, part, ccfg);
+    let _ = coord.run_batch_probed(&specs, &mut probe);
+    let s = mem.stats();
+    (s.stall_share(), 1.0 - s.stall_share())
+}
+
+fn main() {
+    let spec = ArgSpec::new("fig5_cpu_stall", "reproduce paper Fig 5")
+        .opt("scale", "12", "rmat scale (sd1-arc substitute)")
+        .opt("block-vertices", "256", "vertices per block")
+        .opt("jobs", "1,2,4,8,12,16,20", "concurrency sweep")
+        .opt("rounds-cap", "30", "max rounds per case");
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let a = spec.parse_from(&argv).unwrap_or_else(|_| spec.parse_from(&[]).unwrap());
+
+    let g = generate::rmat(a.parse("scale"), 8, 31337);
+    let part = BlockPartition::by_vertex_count(&g, a.usize("block-vertices"));
+
+    let mut table = Table::new(&[
+        "jobs",
+        "indep_stall_pct",
+        "indep_exec_pct",
+        "twolevel_stall_pct",
+        "twolevel_exec_pct",
+    ]);
+    for jobs in a.list::<usize>("jobs") {
+        let cap = a.usize("rounds-cap");
+        let (is_, ie) = stall_for(&g, &part, SchedulerKind::Independent, jobs, cap);
+        let (ts, te) = stall_for(&g, &part, SchedulerKind::TwoLevel, jobs, cap);
+        table.row(&[
+            format!("{jobs}"),
+            format!("{:.1}", is_ * 100.0),
+            format!("{:.1}", ie * 100.0),
+            format!("{:.1}", ts * 100.0),
+            format!("{:.1}", te * 100.0),
+        ]);
+    }
+    table.print("Fig 5: CPU execution vs cache stall share (percent of cycles)");
+    export_jsonl(&table.to_jsonl("fig5_cpu_stall"));
+    println!(
+        "\npaper shape: the stall share of total CPU time grows with the number of\n\
+         concurrent jobs when they access memory independently; two-level\n\
+         scheduling claws execution share back."
+    );
+}

@@ -1,0 +1,155 @@
+//! Headline throughput experiment: end-to-end jobs/hour and latency on
+//! a concurrent arrival trace replayed through the coordinator, per
+//! policy, plus the concurrency-scaling sweep.
+//!
+//! `cargo bench --bench throughput [-- --scale 13 --minutes 8]`
+
+use tlsched::coordinator::{Coordinator, CoordinatorConfig};
+use tlsched::graph::{generate, BlockPartition};
+use tlsched::scheduler::{SchedulerConfig, SchedulerKind};
+use tlsched::trace::{self, TraceConfig};
+use tlsched::util::args::ArgSpec;
+use tlsched::util::benchkit::{export_jsonl, Table};
+
+fn main() {
+    let spec = ArgSpec::new("throughput", "trace-replay throughput per policy")
+        .opt("scale", "13", "rmat scale")
+        .opt("block-vertices", "128", "vertices per block")
+        .opt("minutes", "8", "virtual trace length (minutes)")
+        .opt("rate", "1800", "arrivals per hour")
+        .opt("time-scale", "240", "virtual seconds per wall second")
+        .opt("max-concurrent", "16", "admission limit");
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let a = spec.parse_from(&argv).unwrap_or_else(|_| spec.parse_from(&[]).unwrap());
+
+    let g = generate::rmat(a.parse("scale"), 8, 99);
+    let part = BlockPartition::by_vertex_count(&g, a.usize("block-vertices"));
+    let tc = TraceConfig {
+        days: a.f64("minutes") / (24.0 * 60.0),
+        mean_rate_per_hour: a.f64("rate"),
+        mean_service_s: 20.0,
+        num_vertices: g.num_vertices() as u32,
+        ..Default::default()
+    };
+    let jobs = trace::generate(&tc);
+    eprintln!(
+        "graph: {} vertices {} edges; trace: {} jobs over {:.1} virtual minutes",
+        g.num_vertices(),
+        g.num_edges(),
+        jobs.len(),
+        a.f64("minutes")
+    );
+
+    let mut t = Table::new(&[
+        "policy",
+        "completed",
+        "throughput_jobs_h",
+        "mean_latency_s",
+        "p95_latency_s",
+        "sharing",
+        "block_loads",
+        "sched_overhead_s",
+    ]);
+    let mut base_tp = 0.0f64;
+    for kind in SchedulerKind::ALL {
+        let mut ccfg = CoordinatorConfig::new(SchedulerConfig::new(kind));
+        ccfg.max_concurrent = a.usize("max-concurrent");
+        let mut coord = Coordinator::new(&g, &part, ccfg);
+        let m = coord.run_trace(&jobs, a.f64("time-scale"));
+        if kind == SchedulerKind::Independent {
+            base_tp = m.throughput_per_hour();
+        }
+        t.row(&[
+            kind.name().into(),
+            format!("{}", m.completed()),
+            format!("{:.0}", m.throughput_per_hour()),
+            format!("{:.1}", m.mean_latency_s()),
+            format!("{:.1}", m.p95_latency_s()),
+            format!("{:.2}", m.sharing_factor()),
+            format!("{}", m.totals.block_loads),
+            format!("{:.3}", m.scheduling_s),
+        ]);
+    }
+    t.print("throughput: trace replay per policy (paper headline)");
+    export_jsonl(&t.to_jsonl("throughput_policies"));
+    let _ = base_tp;
+
+    // concurrency scaling: batch convergence wall time vs #jobs
+    let mut t2 = Table::new(&["jobs", "indep_wall_s", "twolevel_wall_s", "speedup_x"]);
+    for njobs in [2usize, 4, 8, 16] {
+        let specs: Vec<tlsched::engine::JobSpec> = (0..njobs)
+            .map(|i| {
+                tlsched::engine::JobSpec::new(
+                    tlsched::trace::JobKind::ALL[i % 5],
+                    (i as u32 * 131) % g.num_vertices() as u32,
+                )
+            })
+            .collect();
+        let mut walls = Vec::new();
+        for kind in [SchedulerKind::Independent, SchedulerKind::TwoLevel] {
+            let mut coord =
+                Coordinator::new(&g, &part, CoordinatorConfig::new(SchedulerConfig::new(kind)));
+            let m = coord.run_batch(&specs);
+            assert_eq!(m.completed(), njobs);
+            walls.push(m.wall_s);
+        }
+        t2.row(&[
+            format!("{njobs}"),
+            format!("{:.3}", walls[0]),
+            format!("{:.3}", walls[1]),
+            format!("{:.2}", walls[0] / walls[1].max(1e-9)),
+        ]);
+    }
+    t2.print("concurrency scaling: batch wall time, independent vs two-level");
+    export_jsonl(&t2.to_jsonl("throughput_scaling"));
+
+    // ---- simulated-cycle throughput -------------------------------------
+    // On this testbed the bench graphs fit the *real* LLC, so wall time
+    // cannot show the DRAM-redundancy effect the paper measures; the
+    // cache-simulated cycle count is the apples-to-apples metric (same
+    // address stream the paper's hardware counters saw).
+    use tlsched::engine::SimProbe;
+    use tlsched::memsim::{AddressMap, HierarchyConfig, MemoryHierarchy};
+    let mut t3 = Table::new(&[
+        "jobs",
+        "indep_gcycles",
+        "twolevel_gcycles",
+        "speedup_x",
+        "indep_stall_pct",
+        "twolevel_stall_pct",
+    ]);
+    for njobs in [4usize, 8, 16] {
+        let specs: Vec<tlsched::engine::JobSpec> = (0..njobs)
+            .map(|i| {
+                tlsched::engine::JobSpec::new(
+                    tlsched::trace::JobKind::ALL[i % 5],
+                    (i as u32 * 131) % g.num_vertices() as u32,
+                )
+            })
+            .collect();
+        let mut cyc = Vec::new();
+        let mut stall = Vec::new();
+        for kind in [SchedulerKind::Independent, SchedulerKind::TwoLevel] {
+            let map = AddressMap::new(&g);
+            let mut mem = MemoryHierarchy::new(HierarchyConfig::tiny());
+            let mut probe = SimProbe { map: &map, mem: &mut mem };
+            let mut coord =
+                Coordinator::new(&g, &part, CoordinatorConfig::new(SchedulerConfig::new(kind)));
+            let m = coord.run_batch_probed(&specs, &mut probe);
+            assert_eq!(m.completed(), njobs);
+            let s = mem.stats();
+            cyc.push(s.total_cycles() as f64);
+            stall.push(s.stall_share());
+        }
+        t3.row(&[
+            format!("{njobs}"),
+            format!("{:.2}", cyc[0] / 1e9),
+            format!("{:.2}", cyc[1] / 1e9),
+            format!("{:.2}", cyc[0] / cyc[1].max(1.0)),
+            format!("{:.1}", stall[0] * 100.0),
+            format!("{:.1}", stall[1] * 100.0),
+        ]);
+    }
+    t3.print("simulated-cycle throughput: batch convergence, independent vs two-level");
+    export_jsonl(&t3.to_jsonl("throughput_simulated_cycles"));
+}

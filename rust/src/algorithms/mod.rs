@@ -1,0 +1,113 @@
+//! Delta-based accumulative vertex programs (the PrIter/Maiter model
+//! the paper's §4.4 adopts): PageRank, personalized PageRank, SSSP,
+//! BFS and WCC, plus reference implementations (power iteration,
+//! Dijkstra, union-find) used by the test suite.
+
+pub mod pagerank;
+pub mod sssp;
+pub mod traits;
+pub mod wcc;
+
+pub use pagerank::{PageRank, PersonalizedPageRank};
+pub use sssp::{Bfs, Sssp};
+pub use traits::DeltaProgram;
+pub use wcc::Wcc;
+
+use crate::graph::Graph;
+use crate::trace::JobKind;
+
+/// Statically-dispatched program union.
+///
+/// The engine's hot loop calls `combine`/`is_active`/`priority` once or
+/// more **per edge**; going through `dyn DeltaProgram` costs a vtable
+/// call each (measured ~2.5x on the full engine — EXPERIMENTS.md
+/// §Perf). This enum delegates with `#[inline]` matches so the trivial
+/// bodies (`a + b`, `a.min(b)`, one compare) inline into the loop.
+#[derive(Debug, Clone)]
+pub enum Program {
+    PageRank(PageRank),
+    Ppr(PersonalizedPageRank),
+    Sssp(Sssp),
+    Bfs(Bfs),
+    Wcc(Wcc),
+}
+
+macro_rules! dispatch {
+    ($self:expr, $p:ident => $body:expr) => {
+        match $self {
+            Program::PageRank($p) => $body,
+            Program::Ppr($p) => $body,
+            Program::Sssp($p) => $body,
+            Program::Bfs($p) => $body,
+            Program::Wcc($p) => $body,
+        }
+    };
+}
+
+impl DeltaProgram for Program {
+    #[inline(always)]
+    fn identity(&self) -> f32 {
+        dispatch!(self, p => p.identity())
+    }
+
+    #[inline(always)]
+    fn combine(&self, a: f32, b: f32) -> f32 {
+        dispatch!(self, p => p.combine(a, b))
+    }
+
+    #[inline(always)]
+    fn apply(&self, value: f32, delta: f32) -> f32 {
+        dispatch!(self, p => p.apply(value, delta))
+    }
+
+    #[inline(always)]
+    fn propagate(&self, delta: f32, deg: usize, w: f32) -> f32 {
+        dispatch!(self, p => p.propagate(delta, deg, w))
+    }
+
+    #[inline(always)]
+    fn is_active(&self, value: f32, delta: f32) -> bool {
+        dispatch!(self, p => p.is_active(value, delta))
+    }
+
+    #[inline(always)]
+    fn priority(&self, value: f32, delta: f32) -> f32 {
+        dispatch!(self, p => p.priority(value, delta))
+    }
+
+    fn init(&self, g: &Graph, source: Option<u32>) -> (Vec<f32>, Vec<f32>) {
+        dispatch!(self, p => p.init(g, source))
+    }
+
+    fn name(&self) -> &'static str {
+        dispatch!(self, p => p.name())
+    }
+
+    fn value_tolerance(&self) -> f32 {
+        dispatch!(self, p => p.value_tolerance())
+    }
+}
+
+/// Construct the program for a trace job kind.
+pub fn program_for(kind: JobKind) -> Program {
+    match kind {
+        JobKind::PageRank => Program::PageRank(PageRank::default()),
+        JobKind::Ppr => Program::Ppr(PersonalizedPageRank::default()),
+        JobKind::Sssp => Program::Sssp(Sssp),
+        JobKind::Bfs => Program::Bfs(Bfs),
+        JobKind::Wcc => Program::Wcc(Wcc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_for_covers_all_kinds() {
+        for kind in JobKind::ALL {
+            let p = program_for(kind);
+            assert_eq!(p.name(), kind.name());
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Single-source shortest paths in delta form, plus BFS as its
+//! unit-weight special case.
+//!
+//! The paper: "Node j is eligible for the next iteration only if D(j)
+//! has changed since the last iteration; priority is given to the node
+//! with smaller value of D(j)" — so `priority = −distance` and the
+//! combine operator is `min`.
+
+use super::traits::DeltaProgram;
+use crate::graph::Graph;
+
+pub const UNREACHED: f32 = f32::INFINITY;
+
+/// Δ-SSSP: value = best-known distance, delta = candidate distance.
+#[derive(Debug, Clone, Default)]
+pub struct Sssp;
+
+impl DeltaProgram for Sssp {
+    fn identity(&self) -> f32 {
+        UNREACHED
+    }
+
+    fn combine(&self, a: f32, b: f32) -> f32 {
+        a.min(b)
+    }
+
+    fn apply(&self, value: f32, delta: f32) -> f32 {
+        value.min(delta)
+    }
+
+    fn propagate(&self, delta: f32, _deg: usize, w: f32) -> f32 {
+        delta + w
+    }
+
+    fn is_active(&self, value: f32, delta: f32) -> bool {
+        delta < value
+    }
+
+    /// Smaller distances first ⇒ negate. Unreached candidates never get
+    /// here (is_active is false for ∞ vs ∞), but guard anyway.
+    fn priority(&self, _value: f32, delta: f32) -> f32 {
+        if delta.is_finite() {
+            -delta
+        } else {
+            f32::NEG_INFINITY
+        }
+    }
+
+    fn init(&self, g: &Graph, source: Option<u32>) -> (Vec<f32>, Vec<f32>) {
+        let n = g.num_vertices();
+        let mut deltas = vec![UNREACHED; n];
+        if n > 0 {
+            deltas[source.unwrap_or(0) as usize % n] = 0.0;
+        }
+        (vec![UNREACHED; n], deltas)
+    }
+
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn value_tolerance(&self) -> f32 {
+        1e-4
+    }
+}
+
+/// BFS = SSSP over unit weights (hop counts). Kept as its own program
+/// so the job mix in traces exercises a distinct code path and the
+/// priority is hop-based.
+#[derive(Debug, Clone, Default)]
+pub struct Bfs;
+
+impl DeltaProgram for Bfs {
+    fn identity(&self) -> f32 {
+        UNREACHED
+    }
+
+    fn combine(&self, a: f32, b: f32) -> f32 {
+        a.min(b)
+    }
+
+    fn apply(&self, value: f32, delta: f32) -> f32 {
+        value.min(delta)
+    }
+
+    fn propagate(&self, delta: f32, _deg: usize, _w: f32) -> f32 {
+        delta + 1.0
+    }
+
+    fn is_active(&self, value: f32, delta: f32) -> bool {
+        delta < value
+    }
+
+    fn priority(&self, _value: f32, delta: f32) -> f32 {
+        if delta.is_finite() {
+            -delta
+        } else {
+            f32::NEG_INFINITY
+        }
+    }
+
+    fn init(&self, g: &Graph, source: Option<u32>) -> (Vec<f32>, Vec<f32>) {
+        let n = g.num_vertices();
+        let mut deltas = vec![UNREACHED; n];
+        if n > 0 {
+            deltas[source.unwrap_or(0) as usize % n] = 0.0;
+        }
+        (vec![UNREACHED; n], deltas)
+    }
+
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+}
+
+/// Reference Dijkstra for correctness tests.
+pub fn dijkstra(g: &Graph, source: u32) -> Vec<f32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Cand(f32, u32);
+    impl Eq for Cand {}
+    impl PartialOrd for Cand {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Cand {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&other.0).unwrap().then(self.1.cmp(&other.1))
+        }
+    }
+
+    let n = g.num_vertices();
+    let mut dist = vec![UNREACHED; n];
+    let mut heap = BinaryHeap::new();
+    dist[source as usize] = 0.0;
+    heap.push(Reverse(Cand(0.0, source)));
+    while let Some(Reverse(Cand(d, v))) = heap.pop() {
+        if d > dist[v as usize] {
+            continue;
+        }
+        for (t, w) in g.out_edges(v) {
+            let nd = d + w;
+            if nd < dist[t as usize] {
+                dist[t as usize] = nd;
+                heap.push(Reverse(Cand(nd, t)));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::traits::testutil::run_to_fixpoint;
+    use crate::graph::{generate, GraphBuilder};
+
+    #[test]
+    fn sssp_matches_dijkstra_on_grid() {
+        let g = generate::road_grid(8, 8, 3);
+        let vals = run_to_fixpoint(&g, &Sssp, Some(0), 10_000);
+        let reference = dijkstra(&g, 0);
+        for (i, (a, b)) in vals.iter().zip(&reference).enumerate() {
+            assert!((a - b).abs() < 1e-4, "v{i}: delta-sssp {a} vs dijkstra {b}");
+        }
+    }
+
+    #[test]
+    fn sssp_matches_dijkstra_on_random_weighted() {
+        let base = generate::erdos_renyi(300, 2400, 7);
+        let g = generate::with_random_weights(&base, 1.0, 10.0, 8);
+        let vals = run_to_fixpoint(&g, &Sssp, Some(5), 10_000);
+        let reference = dijkstra(&g, 5);
+        for (a, b) in vals.iter().zip(&reference) {
+            if b.is_finite() {
+                assert!((a - b).abs() < 1e-3);
+            } else {
+                assert!(!a.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn unreachable_stays_infinite() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1)]).build();
+        let vals = run_to_fixpoint(&g, &Sssp, Some(0), 100);
+        assert_eq!(vals[0], 0.0);
+        assert_eq!(vals[1], 1.0);
+        assert!(!vals[2].is_finite());
+    }
+
+    #[test]
+    fn bfs_counts_hops() {
+        // path 0→1→2→3
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        let vals = run_to_fixpoint(&g, &Bfs, Some(0), 100);
+        assert_eq!(vals, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bfs_ignores_weights() {
+        let g = generate::road_grid(5, 5, 1); // weighted 1..10
+        let vals = run_to_fixpoint(&g, &Bfs, Some(0), 1000);
+        // manhattan distance on grid
+        assert_eq!(vals[4], 4.0); // (0,4)
+        assert_eq!(vals[24], 8.0); // (4,4)
+    }
+
+    #[test]
+    fn priority_prefers_smaller_distance() {
+        let s = Sssp;
+        assert!(s.priority(UNREACHED, 2.0) > s.priority(UNREACHED, 5.0));
+        assert!(s.priority(UNREACHED, UNREACHED) == f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn dijkstra_source_zero() {
+        let g = generate::road_grid(4, 4, 2);
+        let d = dijkstra(&g, 3);
+        assert_eq!(d[3], 0.0);
+        assert!(d.iter().filter(|x| x.is_finite()).count() == 16);
+    }
+}

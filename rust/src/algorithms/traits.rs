@@ -1,0 +1,101 @@
+//! Delta-based accumulative vertex programs.
+//!
+//! The paper (§4.4) implements graph algorithms "in delta-based
+//! accumulative iterative computation" (the PrIter/Maiter model) so that
+//! prioritized, partial iteration is sound: a vertex carries a value
+//! `P_v` and an accumulated delta `Δ_v`; processing a vertex folds the
+//! delta into the value and propagates an edge-transformed delta to its
+//! out-neighbors. Because the combine operator is associative and
+//! commutative with an identity element, vertices can be processed in
+//! *any* order and any subset at a time — exactly what MPDS exploits.
+
+use crate::graph::Graph;
+
+/// A delta-based accumulative vertex program.
+///
+/// Semantics of one vertex update at `v` (push/scatter form):
+/// ```text
+/// if is_active(P_v, Δ_v):
+///     d    := Δ_v
+///     Δ_v  := identity()
+///     P_v  := apply(P_v, d)
+///     for (t, w) in out_edges(v):
+///         Δ_t := combine(Δ_t, propagate(d, out_degree(v), w))
+/// ```
+pub trait DeltaProgram: Send + Sync {
+    /// Identity element of `combine` (0 for +, +∞ for min).
+    fn identity(&self) -> f32;
+
+    /// Associative, commutative accumulation of deltas (+ or min).
+    fn combine(&self, a: f32, b: f32) -> f32;
+
+    /// Fold a consumed delta into the vertex value.
+    fn apply(&self, value: f32, delta: f32) -> f32;
+
+    /// Edge function: transform the consumed delta for an out-edge with
+    /// weight `w` from a vertex of out-degree `deg`.
+    fn propagate(&self, delta: f32, deg: usize, w: f32) -> f32;
+
+    /// Whether the pending delta still changes the vertex (unconverged).
+    fn is_active(&self, value: f32, delta: f32) -> bool;
+
+    /// The paper's `De_In_Priority` per-node priority value: larger =
+    /// process sooner (PageRank: Δ itself; SSSP: −distance).
+    fn priority(&self, value: f32, delta: f32) -> f32;
+
+    /// Initial (values, deltas). `source` seeds traversal programs.
+    fn init(&self, g: &Graph, source: Option<u32>) -> (Vec<f32>, Vec<f32>);
+
+    /// Human-readable name (matches `trace::JobKind::name`).
+    fn name(&self) -> &'static str;
+
+    /// Whether the final values of two runs may be compared with exact
+    /// tolerance (traversals) or tolerance scaled to value magnitude
+    /// (PageRank-family).
+    fn value_tolerance(&self) -> f32 {
+        1e-4
+    }
+}
+
+/// Convergence threshold wrapper shared by programs that stop on
+/// `|Δ| < ε`.
+pub(crate) const DEFAULT_EPSILON: f32 = 1e-3;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::graph::Graph;
+
+    /// Exhaustively run a program to convergence with a simple global
+    /// worklist loop (no scheduling) — the reference fixpoint used by
+    /// algorithm unit tests.
+    pub fn run_to_fixpoint(
+        g: &Graph,
+        prog: &dyn DeltaProgram,
+        source: Option<u32>,
+        max_sweeps: usize,
+    ) -> Vec<f32> {
+        let (mut values, mut deltas) = prog.init(g, source);
+        for _ in 0..max_sweeps {
+            let mut any = false;
+            for v in 0..g.num_vertices() as u32 {
+                let (pv, dv) = (values[v as usize], deltas[v as usize]);
+                if !prog.is_active(pv, dv) {
+                    continue;
+                }
+                any = true;
+                deltas[v as usize] = prog.identity();
+                values[v as usize] = prog.apply(pv, dv);
+                let deg = g.out_degree(v);
+                for (t, w) in g.out_edges(v) {
+                    let p = prog.propagate(dv, deg, w);
+                    deltas[t as usize] = prog.combine(deltas[t as usize], p);
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        values
+    }
+}

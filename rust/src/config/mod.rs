@@ -1,0 +1,317 @@
+//! Typed run configuration with a TOML-subset parser.
+//!
+//! `serde`/`toml` are unavailable offline, so this module parses the
+//! subset the launcher needs: `[section]` headers, `key = value` lines
+//! (strings, numbers, booleans), `#` comments. Every knob has a
+//! default matching the paper's settings, so an empty config is valid.
+
+use crate::memsim::{CacheConfig, HierarchyConfig};
+use crate::scheduler::{SchedulerConfig, SchedulerKind};
+use std::collections::BTreeMap;
+
+/// How to obtain the input graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphSource {
+    /// R-MAT power-law generator: (scale, edge_factor).
+    Rmat { scale: u32, edge_factor: usize },
+    /// Erdős–Rényi: (vertices, edges).
+    ErdosRenyi { n: usize, m: usize },
+    /// Barabási–Albert: (vertices, attachment degree).
+    BarabasiAlbert { n: usize, k: usize },
+    /// Road grid: (rows, cols).
+    Grid { rows: usize, cols: usize },
+    /// Edge-list file (text) or binary snapshot (by extension `.bin`).
+    File(String),
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub graph: GraphSource,
+    pub graph_seed: u64,
+    /// Vertices per block; 0 = size by cache budget.
+    pub block_vertices: usize,
+    /// Cache budget for auto block sizing (bytes).
+    pub cache_budget: usize,
+    pub scheduler: SchedulerConfig,
+    pub hierarchy: HierarchyConfig,
+    pub max_concurrent: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            graph: GraphSource::Rmat { scale: 14, edge_factor: 8 },
+            graph_seed: 42,
+            block_vertices: 0,
+            cache_budget: 1 << 20,
+            scheduler: SchedulerConfig::new(SchedulerKind::TwoLevel),
+            hierarchy: HierarchyConfig::default(),
+            max_concurrent: 32,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config parse error at line {0}: {1}")]
+    Parse(usize, String),
+    #[error("invalid value for {0}: {1}")]
+    Invalid(&'static str, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Raw parsed `section.key -> value` strings.
+type RawConfig = BTreeMap<String, String>;
+
+fn parse_raw(text: &str) -> Result<RawConfig, ConfigError> {
+    let mut out = RawConfig::new();
+    let mut section = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = t
+            .split_once('=')
+            .ok_or_else(|| ConfigError::Parse(i + 1, "expected key = value".into()))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let mut val = v.trim().to_string();
+        // strip quotes and trailing comments
+        if let Some(idx) = find_unquoted_hash(&val) {
+            val = val[..idx].trim().to_string();
+        }
+        if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+            val = val[1..val.len() - 1].to_string();
+        }
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+fn find_unquoted_hash(s: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn get_parse<T: std::str::FromStr>(
+    raw: &RawConfig,
+    key: &'static str,
+    default: T,
+) -> Result<T, ConfigError> {
+    match raw.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| ConfigError::Invalid(key, v.clone())),
+    }
+}
+
+impl RunConfig {
+    pub fn from_str(text: &str) -> Result<Self, ConfigError> {
+        let raw = parse_raw(text)?;
+        let mut cfg = RunConfig::default();
+
+        // [graph]
+        let kind = raw.get("graph.kind").map(|s| s.as_str()).unwrap_or("rmat");
+        cfg.graph = match kind {
+            "rmat" => GraphSource::Rmat {
+                scale: get_parse(&raw, "graph.scale", 14u32)?,
+                edge_factor: get_parse(&raw, "graph.edge_factor", 8usize)?,
+            },
+            "erdos" => GraphSource::ErdosRenyi {
+                n: get_parse(&raw, "graph.n", 1usize << 14)?,
+                m: get_parse(&raw, "graph.m", 1usize << 17)?,
+            },
+            "ba" => GraphSource::BarabasiAlbert {
+                n: get_parse(&raw, "graph.n", 1usize << 14)?,
+                k: get_parse(&raw, "graph.k", 8usize)?,
+            },
+            "grid" => GraphSource::Grid {
+                rows: get_parse(&raw, "graph.rows", 128usize)?,
+                cols: get_parse(&raw, "graph.cols", 128usize)?,
+            },
+            "file" => GraphSource::File(
+                raw.get("graph.path")
+                    .cloned()
+                    .ok_or(ConfigError::Invalid("graph.path", "missing".into()))?,
+            ),
+            other => return Err(ConfigError::Invalid("graph.kind", other.into())),
+        };
+        cfg.graph_seed = get_parse(&raw, "graph.seed", 42u64)?;
+
+        // [partition]
+        cfg.block_vertices = get_parse(&raw, "partition.block_vertices", 0usize)?;
+        cfg.cache_budget = get_parse(&raw, "partition.cache_budget", 1usize << 20)?;
+
+        // [scheduler]
+        let kind = raw.get("scheduler.kind").map(|s| s.as_str()).unwrap_or("twolevel");
+        let skind = SchedulerKind::from_name(kind)
+            .ok_or_else(|| ConfigError::Invalid("scheduler.kind", kind.into()))?;
+        let mut s = SchedulerConfig::new(skind);
+        s.c = get_parse(&raw, "scheduler.c", s.c)?;
+        s.alpha = get_parse(&raw, "scheduler.alpha", s.alpha)?;
+        s.epsilon_frac = get_parse(&raw, "scheduler.epsilon", s.epsilon_frac)?;
+        s.samples = get_parse(&raw, "scheduler.samples", s.samples)?;
+        s.seed = get_parse(&raw, "scheduler.seed", s.seed)?;
+        let q = get_parse(&raw, "scheduler.q", 0usize)?;
+        s.q_override = if q == 0 { None } else { Some(q) };
+        cfg.scheduler = s;
+
+        // [memory]
+        let mut h = HierarchyConfig::default();
+        if raw.get("memory.preset").map(|s| s.as_str()) == Some("small") {
+            h = HierarchyConfig::small();
+        }
+        h.llc = CacheConfig {
+            capacity: get_parse(&raw, "memory.llc_bytes", h.llc.capacity)?,
+            ..h.llc
+        };
+        h.dram_latency = get_parse(&raw, "memory.dram_latency", h.dram_latency)?;
+        cfg.hierarchy = h;
+
+        // [coordinator]
+        cfg.max_concurrent = get_parse(&raw, "coordinator.max_concurrent", 32usize)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, ConfigError> {
+        Self::from_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Materialize the graph described by this config.
+    pub fn build_graph(&self) -> Result<crate::graph::Graph, ConfigError> {
+        use crate::graph::generate;
+        Ok(match &self.graph {
+            GraphSource::Rmat { scale, edge_factor } => {
+                generate::rmat(*scale, *edge_factor, self.graph_seed)
+            }
+            GraphSource::ErdosRenyi { n, m } => {
+                generate::erdos_renyi(*n, *m, self.graph_seed)
+            }
+            GraphSource::BarabasiAlbert { n, k } => {
+                generate::barabasi_albert(*n, *k, self.graph_seed)
+            }
+            GraphSource::Grid { rows, cols } => {
+                generate::road_grid(*rows, *cols, self.graph_seed)
+            }
+            GraphSource::File(path) => {
+                let p = std::path::Path::new(path);
+                if path.ends_with(".bin") {
+                    crate::graph::io::load_binary(p)
+                        .map_err(|e| ConfigError::Invalid("graph.path", e.to_string()))?
+                } else {
+                    crate::graph::io::load_edge_list(p, 0)
+                        .map_err(|e| ConfigError::Invalid("graph.path", e.to_string()))?
+                }
+            }
+        })
+    }
+
+    /// Partition the graph per this config (explicit size or cache
+    /// budget), given the expected concurrency level.
+    pub fn build_partition(
+        &self,
+        g: &crate::graph::Graph,
+        jobs: usize,
+    ) -> crate::graph::BlockPartition {
+        if self.block_vertices > 0 {
+            crate::graph::BlockPartition::by_vertex_count(g, self.block_vertices)
+        } else {
+            crate::graph::BlockPartition::by_cache_budget(g, self.cache_budget, jobs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_default() {
+        let cfg = RunConfig::from_str("").unwrap();
+        assert_eq!(cfg.graph, GraphSource::Rmat { scale: 14, edge_factor: 8 });
+        assert_eq!(cfg.scheduler.kind, SchedulerKind::TwoLevel);
+        assert_eq!(cfg.scheduler.alpha, 0.8);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"
+# run config
+[graph]
+kind = "erdos"
+n = 1000
+m = 5000
+seed = 7
+
+[partition]
+block_vertices = 128
+
+[scheduler]
+kind = "priter"   # baseline
+c = 50.0
+alpha = 0.6
+q = 12
+
+[memory]
+preset = "small"
+dram_latency = 300
+
+[coordinator]
+max_concurrent = 4
+"#;
+        let cfg = RunConfig::from_str(text).unwrap();
+        assert_eq!(cfg.graph, GraphSource::ErdosRenyi { n: 1000, m: 5000 });
+        assert_eq!(cfg.graph_seed, 7);
+        assert_eq!(cfg.block_vertices, 128);
+        assert_eq!(cfg.scheduler.kind, SchedulerKind::PrIterPerJob);
+        assert_eq!(cfg.scheduler.c, 50.0);
+        assert_eq!(cfg.scheduler.alpha, 0.6);
+        assert_eq!(cfg.scheduler.q_override, Some(12));
+        assert_eq!(cfg.hierarchy.dram_latency, 300);
+        assert_eq!(cfg.max_concurrent, 4);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        assert!(RunConfig::from_str("[scheduler]\nkind = \"bogus\"\n").is_err());
+        assert!(RunConfig::from_str("[graph]\nkind = \"rmat\"\nscale = x\n").is_err());
+        assert!(RunConfig::from_str("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn build_graph_from_config() {
+        let cfg = RunConfig::from_str("[graph]\nkind = \"grid\"\nrows = 4\ncols = 5\n").unwrap();
+        let g = cfg.build_graph().unwrap();
+        assert_eq!(g.num_vertices(), 20);
+        let part = cfg.build_partition(&g, 2);
+        part.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn file_source_requires_path() {
+        assert!(RunConfig::from_str("[graph]\nkind = \"file\"\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_quotes_stripped() {
+        let cfg =
+            RunConfig::from_str("[graph]\nkind = \"rmat\" # power law\nscale = 10\n").unwrap();
+        assert_eq!(cfg.graph, GraphSource::Rmat { scale: 10, edge_factor: 8 });
+    }
+}

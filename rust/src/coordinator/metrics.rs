@@ -1,0 +1,178 @@
+//! Coordinator metrics: per-job records and run-level aggregates,
+//! exportable as JSON for EXPERIMENTS.md scripting.
+
+use crate::scheduler::RoundStats;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// Lifecycle record of one job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: u64,
+    pub kind: &'static str,
+    /// Virtual seconds (trace time) or wall seconds, per run mode.
+    pub submitted_s: f64,
+    pub started_s: f64,
+    pub finished_s: f64,
+    pub rounds: u64,
+    pub updates: u64,
+    pub edges: u64,
+}
+
+impl JobRecord {
+    pub fn latency_s(&self) -> f64 {
+        self.finished_s - self.submitted_s
+    }
+
+    pub fn queueing_s(&self) -> f64 {
+        self.started_s - self.submitted_s
+    }
+}
+
+/// Aggregates over one coordinator run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub jobs: Vec<JobRecord>,
+    pub totals: RoundStats,
+    pub rounds: u64,
+    /// Wall-clock seconds spent in scheduling decisions (MPDS).
+    pub scheduling_s: f64,
+    /// Wall-clock seconds spent executing blocks (CAJS dispatch + engine).
+    pub execution_s: f64,
+    /// End-to-end wall seconds.
+    pub wall_s: f64,
+}
+
+impl RunMetrics {
+    pub fn completed(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Jobs per hour of (virtual or wall) time span.
+    pub fn throughput_per_hour(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        let span = self
+            .jobs
+            .iter()
+            .map(|j| j.finished_s)
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        self.jobs.len() as f64 * 3600.0 / span
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.latency_s()).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    pub fn p95_latency_s(&self) -> f64 {
+        let xs: Vec<f64> = self.jobs.iter().map(|j| j.latency_s()).collect();
+        percentile(&xs, 95.0)
+    }
+
+    /// Average number of jobs served per block load — the sharing
+    /// factor CAJS buys (1.0 = no sharing).
+    pub fn sharing_factor(&self) -> f64 {
+        if self.totals.block_loads == 0 {
+            return 0.0;
+        }
+        self.totals.dispatches as f64 / self.totals.block_loads as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::num(self.completed() as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("block_loads", Json::num(self.totals.block_loads as f64)),
+            ("dispatches", Json::num(self.totals.dispatches as f64)),
+            ("updates", Json::num(self.totals.updates as f64)),
+            ("edges", Json::num(self.totals.edges as f64)),
+            ("sharing_factor", Json::num(self.sharing_factor())),
+            ("throughput_per_hour", Json::num(self.throughput_per_hour())),
+            ("mean_latency_s", Json::num(self.mean_latency_s())),
+            ("p95_latency_s", Json::num(self.p95_latency_s())),
+            ("scheduling_s", Json::num(self.scheduling_s)),
+            ("execution_s", Json::num(self.execution_s)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "jobs",
+                Json::arr(self.jobs.iter().map(|j| {
+                    Json::obj(vec![
+                        ("id", Json::num(j.id as f64)),
+                        ("kind", Json::str(j.kind)),
+                        ("submitted_s", Json::num(j.submitted_s)),
+                        ("started_s", Json::num(j.started_s)),
+                        ("finished_s", Json::num(j.finished_s)),
+                        ("rounds", Json::num(j.rounds as f64)),
+                        ("updates", Json::num(j.updates as f64)),
+                        ("latency_s", Json::num(j.latency_s())),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, sub: f64, start: f64, fin: f64) -> JobRecord {
+        JobRecord {
+            id,
+            kind: "pagerank",
+            submitted_s: sub,
+            started_s: start,
+            finished_s: fin,
+            rounds: 3,
+            updates: 100,
+            edges: 500,
+        }
+    }
+
+    #[test]
+    fn latency_and_queueing() {
+        let r = rec(0, 10.0, 12.0, 20.0);
+        assert_eq!(r.latency_s(), 10.0);
+        assert_eq!(r.queueing_s(), 2.0);
+    }
+
+    #[test]
+    fn throughput_uses_span() {
+        let mut m = RunMetrics::default();
+        m.jobs = vec![rec(0, 0.0, 0.0, 1800.0), rec(1, 0.0, 0.0, 3600.0)];
+        assert!((m.throughput_per_hour() - 2.0).abs() < 1e-9);
+        assert_eq!(m.mean_latency_s(), 2700.0);
+    }
+
+    #[test]
+    fn sharing_factor_computation() {
+        let mut m = RunMetrics::default();
+        m.totals.block_loads = 10;
+        m.totals.dispatches = 35;
+        assert!((m.sharing_factor() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = RunMetrics::default();
+        m.jobs = vec![rec(0, 0.0, 1.0, 2.0)];
+        m.rounds = 5;
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("rounds").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(parsed.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = RunMetrics::default();
+        assert_eq!(m.throughput_per_hour(), 0.0);
+        assert_eq!(m.mean_latency_s(), 0.0);
+        assert_eq!(m.sharing_factor(), 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordinator: job admission, scheduling-round loop, trace replay
+//! and metrics — the operational shell around the two-level scheduler.
+
+pub mod controller;
+pub mod metrics;
+
+pub use controller::{Coordinator, CoordinatorConfig};
+pub use metrics::{JobRecord, RunMetrics};

@@ -1,0 +1,280 @@
+//! Block executor: the CPU hot path that processes one block for one
+//! job, optionally streaming every data touch through the cache
+//! simulator (the instrumentation behind Figs 4–5).
+//!
+//! Push/scatter form over out-edges: consuming vertex `v`'s delta
+//! reads the shared structure (offsets, targets, weights) and writes
+//! the job-private delta lane of each out-neighbor. The structure
+//! touches are the ones CAJS de-duplicates across jobs; the lane
+//! touches are inherently per-job.
+
+use crate::algorithms::DeltaProgram;
+use super::job::JobState;
+use crate::graph::{Block, Graph};
+use crate::memsim::{AddressMap, MemoryHierarchy, Region};
+
+/// Data-touch sink. `NoProbe` compiles to nothing on the fast path;
+/// `SimProbe` drives the memory-hierarchy simulator.
+pub trait Probe {
+    fn touch(&mut self, region: Region, index: u64);
+}
+
+/// Zero-cost probe for production runs.
+pub struct NoProbe;
+
+impl Probe for NoProbe {
+    #[inline(always)]
+    fn touch(&mut self, _region: Region, _index: u64) {}
+}
+
+/// Probe that maps touches to simulated addresses and replays them
+/// through the cache hierarchy.
+pub struct SimProbe<'a> {
+    pub map: &'a AddressMap,
+    pub mem: &'a mut MemoryHierarchy,
+}
+
+impl Probe for SimProbe<'_> {
+    #[inline]
+    fn touch(&mut self, region: Region, index: u64) {
+        self.mem.access(self.map.addr(region, index));
+    }
+}
+
+/// Counters from one block execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockRunStats {
+    /// Vertices whose delta was consumed.
+    pub updates: u64,
+    /// Out-edges traversed while scattering.
+    pub edges: u64,
+}
+
+impl BlockRunStats {
+    pub fn add(&mut self, other: BlockRunStats) {
+        self.updates += other.updates;
+        self.edges += other.edges;
+    }
+}
+
+/// Process every active vertex of `block` for one job: consume deltas,
+/// fold into values, scatter to out-neighbors. Returns work counters.
+///
+/// The probe sees, per active vertex: delta + value lane reads/writes,
+/// structure reads (offset, targets, weights), and the target delta
+/// lane writes. Inactive vertices still cost a delta-lane read (the
+/// scan), as on real hardware.
+pub fn process_block<P: Probe>(
+    g: &Graph,
+    block: &Block,
+    job: &mut JobState,
+    probe: &mut P,
+) -> BlockRunStats {
+    let prog = job.program.clone();
+    let mut stats = BlockRunStats::default();
+    let weighted = g.is_weighted();
+    let jid = job.id;
+    // Incremental summary maintenance (perf pass, EXPERIMENTS.md §Perf):
+    // taken out of the job so the lanes can be borrowed mutably below.
+    let mut tracking = job.tracking.take();
+    for v in block.vertices() {
+        let vi = v as usize;
+        probe.touch(Region::Deltas(jid), v as u64);
+        let dv = job.deltas[vi];
+        probe.touch(Region::Values(jid), v as u64);
+        let pv = job.values[vi];
+        if !prog.is_active(pv, dv) {
+            continue;
+        }
+        job.deltas[vi] = prog.identity();
+        job.values[vi] = prog.apply(pv, dv);
+        if let Some(t) = &mut tracking {
+            // v was active and is now inactive (delta = identity is
+            // inactive for every program).
+            let b = t.block_of[vi] as usize;
+            t.node_un[b] -= 1;
+            t.p_sum[b] -= prog.priority(pv, dv) as f64;
+        }
+        stats.updates += 1;
+        // structure reads
+        probe.touch(Region::OutOffsets, v as u64);
+        probe.touch(Region::OutOffsets, v as u64 + 1);
+        let start = g.out_offsets[vi] as usize;
+        let end = g.out_offsets[vi + 1] as usize;
+        let deg = end - start;
+        if deg == 0 {
+            continue;
+        }
+        for e in start..end {
+            probe.touch(Region::OutTargets, e as u64);
+            let t = g.out_targets[e];
+            let w = if weighted {
+                probe.touch(Region::OutWeights, e as u64);
+                g.out_weights[e]
+            } else {
+                1.0
+            };
+            let p = prog.propagate(dv, deg, w);
+            let ti = t as usize;
+            probe.touch(Region::Deltas(jid), t as u64);
+            let old_delta = job.deltas[ti];
+            let new_delta = prog.combine(old_delta, p);
+            job.deltas[ti] = new_delta;
+            if let Some(tr) = &mut tracking {
+                if new_delta != old_delta {
+                    let tv = job.values[ti];
+                    let b = tr.block_of[ti] as usize;
+                    let was = prog.is_active(tv, old_delta);
+                    let is = prog.is_active(tv, new_delta);
+                    if was {
+                        tr.p_sum[b] -= prog.priority(tv, old_delta) as f64;
+                    }
+                    if is {
+                        tr.p_sum[b] += prog.priority(tv, new_delta) as f64;
+                    }
+                    match (was, is) {
+                        (false, true) => tr.node_un[b] += 1,
+                        (true, false) => tr.node_un[b] -= 1,
+                        _ => {}
+                    }
+                }
+            }
+        }
+        stats.edges += deg as u64;
+    }
+    job.tracking = tracking;
+    job.updates += stats.updates;
+    job.edges += stats.edges;
+    stats
+}
+
+/// One full sweep over all blocks in order (the unscheduled baseline's
+/// inner loop). Returns aggregate counters.
+pub fn full_sweep<P: Probe>(
+    g: &Graph,
+    blocks: &[Block],
+    job: &mut JobState,
+    probe: &mut P,
+) -> BlockRunStats {
+    let mut total = BlockRunStats::default();
+    for b in blocks {
+        total.add(process_block(g, b, job, probe));
+    }
+    job.rounds += 1;
+    total
+}
+
+/// Run a single job to convergence with plain full sweeps (no
+/// scheduling) — the reference execution used by tests and by the
+/// single-job fast path of the coordinator.
+pub fn run_single_to_convergence(
+    g: &Graph,
+    blocks: &[Block],
+    job: &mut JobState,
+    max_sweeps: usize,
+) -> usize {
+    let mut probe = NoProbe;
+    for sweep in 0..max_sweeps {
+        let s = full_sweep(g, blocks, job, &mut probe);
+        if s.updates == 0 {
+            job.converged = true;
+            return sweep;
+        }
+    }
+    job.check_converged();
+    max_sweeps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::job::JobSpec;
+    use crate::graph::{generate, BlockPartition};
+    use crate::memsim::HierarchyConfig;
+    use crate::trace::JobKind;
+
+    #[test]
+    fn block_execution_reaches_same_fixpoint_as_global_loop() {
+        let g = generate::erdos_renyi(200, 1200, 42);
+        let part = BlockPartition::by_vertex_count(&g, 37); // odd size on purpose
+        let mut job = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        run_single_to_convergence(&g, &part.blocks, &mut job, 10_000);
+        assert!(job.converged);
+
+        let reference = crate::algorithms::traits::testutil::run_to_fixpoint(
+            &g,
+            &crate::algorithms::program_for(JobKind::PageRank),
+            None,
+            10_000,
+        );
+        let tol = job.program.value_tolerance();
+        for (a, b) in job.values.iter().zip(&reference) {
+            assert!((a - b).abs() < tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sssp_block_execution_matches_dijkstra() {
+        let g = generate::road_grid(10, 10, 5);
+        let part = BlockPartition::by_vertex_count(&g, 16);
+        let mut job = JobState::new(0, JobSpec::new(JobKind::Sssp, 0), &g);
+        run_single_to_convergence(&g, &part.blocks, &mut job, 10_000);
+        let reference = crate::algorithms::sssp::dijkstra(&g, 0);
+        for (a, b) in job.values.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn probe_sees_structure_touches() {
+        let g = generate::erdos_renyi(128, 512, 7);
+        let part = BlockPartition::by_vertex_count(&g, 128);
+        let map = AddressMap::new(&g);
+        let mut mem = MemoryHierarchy::new(HierarchyConfig::small());
+        let mut job = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        let mut probe = SimProbe { map: &map, mem: &mut mem };
+        let stats = process_block(&g, &part.blocks[0], &mut job, &mut probe);
+        assert!(stats.updates > 0);
+        let h = mem.stats();
+        assert!(h.l1.accesses > stats.updates * 3, "delta+value+structure touches");
+        assert!(h.dram_accesses > 0, "cold caches must miss");
+    }
+
+    #[test]
+    fn noprobe_and_simprobe_same_numerics() {
+        let g = generate::erdos_renyi(100, 600, 9);
+        let part = BlockPartition::by_vertex_count(&g, 25);
+        let mut j1 = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        let mut j2 = JobState::new(1, JobSpec::new(JobKind::PageRank, 0), &g);
+        let map = AddressMap::new(&g);
+        let mut mem = MemoryHierarchy::new(HierarchyConfig::small());
+        let mut sim = SimProbe { map: &map, mem: &mut mem };
+        let mut no = NoProbe;
+        for b in &part.blocks {
+            process_block(&g, b, &mut j1, &mut no);
+            process_block(&g, b, &mut j2, &mut sim);
+        }
+        assert_eq!(j1.values, j2.values);
+        assert_eq!(j1.deltas, j2.deltas);
+    }
+
+    #[test]
+    fn updates_counter_accumulates_on_job() {
+        let g = generate::erdos_renyi(64, 256, 11);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut job = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        let s = full_sweep(&g, &part.blocks, &mut job, &mut NoProbe);
+        assert_eq!(job.updates, s.updates);
+        assert_eq!(job.rounds, 1);
+        assert_eq!(s.updates, 64, "first sweep consumes every vertex");
+    }
+
+    #[test]
+    fn empty_block_is_noop() {
+        let g = generate::erdos_renyi(10, 30, 13);
+        let b = crate::graph::Block { id: 0, start: 5, end: 5, in_edges: 0, out_edges: 0 };
+        let mut job = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        let s = process_block(&g, &b, &mut job, &mut NoProbe);
+        assert_eq!(s, BlockRunStats::default());
+    }
+}

@@ -1,0 +1,246 @@
+//! Per-job state: the private half of the Seraph-style decoupled data
+//! model. The graph structure is shared and immutable; each job owns
+//! its value and delta lanes plus bookkeeping counters.
+
+use crate::algorithms::{DeltaProgram, Program};
+use crate::graph::{Block, Graph};
+use crate::trace::JobKind;
+use std::sync::Arc;
+
+/// Identifier of a job inside one coordinator run.
+pub type JobId = u32;
+
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub kind: JobKind,
+    /// Source vertex for traversal programs; ignored by PageRank/WCC.
+    pub source: u32,
+}
+
+impl JobSpec {
+    pub fn new(kind: JobKind, source: u32) -> Self {
+        JobSpec { kind, source }
+    }
+}
+
+/// Block-level convergence summary for one job — the ⟨Node_un, P̄⟩
+/// ingredients of the paper's §4.2.1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockSummary {
+    /// Number of unconverged (active) vertices in the block.
+    pub node_un: u32,
+    /// Sum of per-node priority values over active vertices.
+    pub p_sum: f64,
+}
+
+impl BlockSummary {
+    pub const ZERO: BlockSummary = BlockSummary { node_un: 0, p_sum: 0.0 };
+
+    /// Mean active-node priority (paper's P̄_value); 0 when empty.
+    pub fn p_mean(&self) -> f64 {
+        if self.node_un == 0 {
+            0.0
+        } else {
+            self.p_sum / self.node_un as f64
+        }
+    }
+}
+
+/// Incrementally-maintained per-block summaries (the perf-pass
+/// optimization recorded in EXPERIMENTS.md §Perf): instead of scanning
+/// every block's delta lane each round (O(V_N) per job per round), the
+/// executor updates ⟨Node_un, ΣP⟩ on every delta transition, making
+/// MPDS planning O(B_N).
+pub struct SummaryTracking {
+    /// vertex → block id, shared across jobs of one partition.
+    pub block_of: Arc<[u32]>,
+    /// Per-block active-vertex count.
+    pub node_un: Vec<u32>,
+    /// Per-block sum of active-vertex priorities (f64 to bound drift).
+    pub p_sum: Vec<f64>,
+}
+
+/// Mutable state of one running job.
+pub struct JobState {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub program: Program,
+    /// Per-vertex accumulated value lane.
+    pub values: Vec<f32>,
+    /// Per-vertex pending delta lane.
+    pub deltas: Vec<f32>,
+    /// Iterations (scheduling rounds) this job participated in.
+    pub rounds: u64,
+    /// Total vertex updates performed.
+    pub updates: u64,
+    /// Total edges traversed.
+    pub edges: u64,
+    /// Set once a full convergence check passes.
+    pub converged: bool,
+    /// Incremental block summaries (None = scan on demand).
+    pub tracking: Option<SummaryTracking>,
+}
+
+impl JobState {
+    pub fn new(id: JobId, spec: JobSpec, g: &Graph) -> Self {
+        let program = crate::algorithms::program_for(spec.kind);
+        let (values, deltas) = program.init(g, Some(spec.source));
+        JobState {
+            id,
+            spec,
+            program,
+            values,
+            deltas,
+            rounds: 0,
+            updates: 0,
+            edges: 0,
+            converged: false,
+            tracking: None,
+        }
+    }
+
+    /// `initPtable` from the paper's API (§4.4): reset the job's lanes
+    /// to the program's initial state (used when a job is re-admitted).
+    pub fn init_ptable(&mut self, g: &Graph) {
+        let (values, deltas) = self.program.init(g, Some(self.spec.source));
+        self.values = values;
+        self.deltas = deltas;
+        self.rounds = 0;
+        self.updates = 0;
+        self.edges = 0;
+        self.converged = false;
+        if let Some(t) = self.tracking.take() {
+            self.enable_tracking(t.block_of, t.node_un.len());
+        }
+    }
+
+    /// Enable incremental block summaries against a partition's
+    /// vertex→block map (see [`SummaryTracking`]). Builds the initial
+    /// summaries with one full scan; the executor keeps them exact from
+    /// then on.
+    pub fn enable_tracking(&mut self, block_of: Arc<[u32]>, num_blocks: usize) {
+        debug_assert_eq!(block_of.len(), self.values.len());
+        let mut node_un = vec![0u32; num_blocks];
+        let mut p_sum = vec![0f64; num_blocks];
+        for v in 0..self.values.len() {
+            let (pv, dv) = (self.values[v], self.deltas[v]);
+            if self.program.is_active(pv, dv) {
+                let b = block_of[v] as usize;
+                node_un[b] += 1;
+                p_sum[b] += self.program.priority(pv, dv) as f64;
+            }
+        }
+        self.tracking = Some(SummaryTracking { block_of, node_un, p_sum });
+    }
+
+    /// Tracked summary of one block (O(1)); falls back to a scan when
+    /// tracking is disabled.
+    pub fn summary_of(&self, block: &Block) -> BlockSummary {
+        match &self.tracking {
+            Some(t) => {
+                let node_un = t.node_un[block.id as usize];
+                if node_un == 0 {
+                    // clamp away f64 accumulation drift on empty blocks
+                    BlockSummary::ZERO
+                } else {
+                    BlockSummary { node_un, p_sum: t.p_sum[block.id as usize] }
+                }
+            }
+            None => self.block_summary(block),
+        }
+    }
+
+    /// Tracked global active count (O(B_N)); falls back to the O(n)
+    /// scan when tracking is disabled.
+    pub fn active_count_fast(&self) -> usize {
+        match &self.tracking {
+            Some(t) => t.node_un.iter().map(|&c| c as usize).sum(),
+            None => self.active_count(),
+        }
+    }
+
+    /// Scan one block's delta lane and produce its ⟨Node_un, ΣP⟩
+    /// summary. O(V_B); the scheduler calls this once per block per
+    /// round, mirroring the paper's "calculate the priority values of
+    /// graph data for each job" step (workflow step ②).
+    pub fn block_summary(&self, block: &Block) -> BlockSummary {
+        let mut node_un = 0u32;
+        let mut p_sum = 0f64;
+        for v in block.vertices() {
+            let (pv, dv) = (self.values[v as usize], self.deltas[v as usize]);
+            if self.program.is_active(pv, dv) {
+                node_un += 1;
+                p_sum += self.program.priority(pv, dv) as f64;
+            }
+        }
+        BlockSummary { node_un, p_sum }
+    }
+
+    /// Number of active vertices across the whole graph. O(n).
+    pub fn active_count(&self) -> usize {
+        self.values
+            .iter()
+            .zip(&self.deltas)
+            .filter(|(v, d)| self.program.is_active(**v, **d))
+            .count()
+    }
+
+    /// Full convergence check. O(n).
+    pub fn check_converged(&mut self) -> bool {
+        self.converged = self.active_count() == 0;
+        self.converged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, BlockPartition};
+
+    #[test]
+    fn new_job_starts_active() {
+        let g = generate::erdos_renyi(100, 500, 1);
+        let mut j = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        assert!(j.active_count() == 100, "all vertices active at init");
+        assert!(!j.check_converged());
+    }
+
+    #[test]
+    fn sssp_starts_with_one_active() {
+        let g = generate::road_grid(5, 5, 2);
+        let j = JobState::new(1, JobSpec::new(JobKind::Sssp, 12), &g);
+        assert_eq!(j.active_count(), 1);
+    }
+
+    #[test]
+    fn block_summary_counts_active() {
+        let g = generate::erdos_renyi(256, 1000, 3);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let j = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        let total: u32 = part.blocks.iter().map(|b| j.block_summary(b).node_un).sum();
+        assert_eq!(total as usize, j.active_count());
+        let s = j.block_summary(&part.blocks[0]);
+        assert!(s.p_mean() > 0.0);
+    }
+
+    #[test]
+    fn summary_zero_for_converged_block() {
+        let g = generate::erdos_renyi(64, 200, 4);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut j = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        j.deltas.fill(0.0); // force convergence
+        assert_eq!(j.block_summary(&part.blocks[0]), BlockSummary::ZERO);
+        assert!(j.check_converged());
+    }
+
+    #[test]
+    fn init_ptable_resets() {
+        let g = generate::erdos_renyi(50, 200, 5);
+        let mut j = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        j.deltas.fill(0.0);
+        j.updates = 99;
+        j.init_ptable(&g);
+        assert_eq!(j.updates, 0);
+        assert_eq!(j.active_count(), 50);
+    }
+}

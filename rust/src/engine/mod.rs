@@ -1,0 +1,12 @@
+//! Execution engine: per-job state (private value/delta lanes over the
+//! shared CSR) and the block executor, instrumented for the cache
+//! simulator.
+
+pub mod exec;
+pub mod job;
+
+pub use exec::{
+    full_sweep, process_block, run_single_to_convergence, BlockRunStats, NoProbe, Probe,
+    SimProbe,
+};
+pub use job::{BlockSummary, JobId, JobSpec, JobState};

@@ -1,0 +1,231 @@
+//! Edge-list → CSR construction.
+//!
+//! Counting-sort based: two passes over the edge list, no comparison
+//! sort, O(n + m). Handles unsorted input, optional weights, and
+//! (optionally) duplicate-edge removal.
+
+use super::csr::{Graph, VertexId};
+
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    weights: Vec<f32>,
+    dedupe: bool,
+    /// True once any weighted edge was pushed; controls whether weight
+    /// arrays are materialized in the built graph.
+    weights_used: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        GraphBuilder { n: num_vertices, ..Default::default() }
+    }
+
+    /// Remove duplicate (src, dst) pairs before building (keeps first
+    /// occurrence's weight).
+    pub fn dedupe(mut self) -> Self {
+        self.dedupe = true;
+        self
+    }
+
+    pub fn edge(mut self, src: VertexId, dst: VertexId) -> Self {
+        self.push_edge(src, dst, 1.0);
+        self
+    }
+
+    pub fn edges(mut self, es: &[(VertexId, VertexId)]) -> Self {
+        for &(s, d) in es {
+            self.push_edge(s, d, 1.0);
+        }
+        self
+    }
+
+    pub fn weighted_edges(mut self, es: &[(VertexId, VertexId, f32)]) -> Self {
+        for &(s, d, w) in es {
+            self.push_edge(s, d, w);
+        }
+        self.weights_used = true;
+        self
+    }
+
+    pub fn push_weighted(&mut self, src: VertexId, dst: VertexId, w: f32) {
+        self.push_edge(src, dst, w);
+        self.weights_used = true;
+    }
+
+    pub fn push(&mut self, src: VertexId, dst: VertexId) {
+        self.push_edge(src, dst, 1.0);
+    }
+
+    fn push_edge(&mut self, src: VertexId, dst: VertexId, w: f32) {
+        assert!(
+            (src as usize) < self.n && (dst as usize) < self.n,
+            "edge ({src},{dst}) out of range for n={}",
+            self.n
+        );
+        self.edges.push((src, dst));
+        self.weights.push(w);
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn build(mut self) -> Graph {
+        if self.dedupe {
+            self.run_dedupe();
+        }
+        let n = self.n;
+        let m = self.edges.len();
+        let weighted = self.weights_used;
+
+        // Out-CSR by counting sort on src.
+        let mut out_offsets = vec![0u64; n + 1];
+        for &(s, _) in &self.edges {
+            out_offsets[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            out_offsets[i + 1] += out_offsets[i];
+        }
+        let mut out_targets = vec![0 as VertexId; m];
+        let mut out_weights = if weighted { vec![0f32; m] } else { Vec::new() };
+        let mut cursor = out_offsets.clone();
+        for (i, &(s, d)) in self.edges.iter().enumerate() {
+            let pos = cursor[s as usize] as usize;
+            out_targets[pos] = d;
+            if weighted {
+                out_weights[pos] = self.weights[i];
+            }
+            cursor[s as usize] += 1;
+        }
+        // Sort each row's targets for deterministic layout + binary search.
+        for v in 0..n {
+            let s = out_offsets[v] as usize;
+            let e = out_offsets[v + 1] as usize;
+            if weighted {
+                let mut pairs: Vec<(VertexId, f32)> = (s..e)
+                    .map(|i| (out_targets[i], out_weights[i]))
+                    .collect();
+                pairs.sort_unstable_by_key(|p| p.0);
+                for (k, (t, w)) in pairs.into_iter().enumerate() {
+                    out_targets[s + k] = t;
+                    out_weights[s + k] = w;
+                }
+            } else {
+                out_targets[s..e].sort_unstable();
+            }
+        }
+
+        // In-CSR by counting sort on dst, walking the (now canonical)
+        // out-CSR so in-rows inherit the deterministic order.
+        let mut in_offsets = vec![0u64; n + 1];
+        for &t in &out_targets {
+            in_offsets[t as usize + 1] += 1;
+        }
+        for i in 0..n {
+            in_offsets[i + 1] += in_offsets[i];
+        }
+        let mut in_sources = vec![0 as VertexId; m];
+        let mut in_weights = if weighted { vec![0f32; m] } else { Vec::new() };
+        let mut cursor = in_offsets.clone();
+        for v in 0..n as u32 {
+            let s = out_offsets[v as usize] as usize;
+            let e = out_offsets[v as usize + 1] as usize;
+            for i in s..e {
+                let t = out_targets[i] as usize;
+                let pos = cursor[t] as usize;
+                in_sources[pos] = v;
+                if weighted {
+                    in_weights[pos] = out_weights[i];
+                }
+                cursor[t] += 1;
+            }
+        }
+
+        let g = Graph { out_offsets, out_targets, in_offsets, in_sources, out_weights, in_weights };
+        debug_assert_eq!(g.validate(), Ok(()));
+        g
+    }
+
+    fn run_dedupe(&mut self) {
+        let mut seen = std::collections::HashSet::with_capacity(self.edges.len());
+        let mut edges = Vec::with_capacity(self.edges.len());
+        let mut weights = Vec::with_capacity(self.weights.len());
+        for (i, &e) in self.edges.iter().enumerate() {
+            if seen.insert(e) {
+                edges.push(e);
+                weights.push(self.weights[i]);
+            }
+        }
+        self.edges = edges;
+        self.weights = weights;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_sorted_rows_from_unsorted_input() {
+        let g = GraphBuilder::new(4).edges(&[(0, 3), (0, 1), (0, 2), (2, 0)]).build();
+        assert_eq!(g.out_neighbors(0), &[1, 2, 3]);
+        assert_eq!(g.in_neighbors(0), &[2]);
+    }
+
+    #[test]
+    fn dedupe_removes_repeats() {
+        let g = GraphBuilder::new(3)
+            .dedupe()
+            .edges(&[(0, 1), (0, 1), (1, 2), (0, 1)])
+            .build();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(5).build();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn self_loops_allowed() {
+        let g = GraphBuilder::new(2).edges(&[(0, 0), (0, 1)]).build();
+        assert_eq!(g.out_neighbors(0), &[0, 1]);
+        assert_eq!(g.in_neighbors(0), &[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics() {
+        GraphBuilder::new(2).edge(0, 5);
+    }
+
+    #[test]
+    fn weights_follow_edges_through_both_csrs() {
+        let g = GraphBuilder::new(3)
+            .weighted_edges(&[(0, 2, 7.0), (0, 1, 3.0), (1, 2, 9.0)])
+            .build();
+        let out0: Vec<_> = g.out_edges(0).collect();
+        assert_eq!(out0, vec![(1, 3.0), (2, 7.0)]);
+        let in2: Vec<_> = g.in_edges(2).collect();
+        assert_eq!(in2, vec![(0, 7.0), (1, 9.0)]);
+    }
+
+    #[test]
+    fn incremental_push_api() {
+        let mut b = GraphBuilder::new(3);
+        b.push(0, 1);
+        b.push_weighted(1, 2, 4.0);
+        assert_eq!(b.num_edges(), 2);
+        let g = b.build();
+        // push_weighted marks the graph weighted; unweighted pushes get 1.0
+        let e: Vec<_> = g.out_edges(0).collect();
+        assert_eq!(e, vec![(1, 1.0)]);
+        let e: Vec<_> = g.out_edges(1).collect();
+        assert_eq!(e, vec![(2, 4.0)]);
+    }
+}

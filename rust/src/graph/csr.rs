@@ -1,0 +1,196 @@
+//! Compressed sparse row graph representation.
+//!
+//! The shared, immutable substrate every concurrent job reads (the
+//! Seraph-style "decoupled data model" the paper builds on): structure is
+//! stored once; per-job values live in `engine::JobState`.
+//!
+//! Both out-edge CSR (push-style scatter) and in-edge CSR (pull-style
+//! gather, what the delta-PageRank kernel consumes) are materialized.
+
+pub type VertexId = u32;
+
+/// Immutable directed graph in CSR form, with optional edge weights.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Out-edge row offsets, length `n + 1`.
+    pub out_offsets: Vec<u64>,
+    /// Out-edge targets, length `m`.
+    pub out_targets: Vec<VertexId>,
+    /// In-edge row offsets, length `n + 1`.
+    pub in_offsets: Vec<u64>,
+    /// In-edge sources, length `m`.
+    pub in_sources: Vec<VertexId>,
+    /// Per-out-edge weights (parallel to `out_targets`); empty ⇒ unweighted.
+    pub out_weights: Vec<f32>,
+    /// Per-in-edge weights (parallel to `in_sources`); empty ⇒ unweighted.
+    pub in_weights: Vec<f32>,
+}
+
+impl Graph {
+    pub fn num_vertices(&self) -> usize {
+        self.out_offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.out_targets.len()
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        !self.out_weights.is_empty()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        (self.out_offsets[v as usize + 1] - self.out_offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        (self.in_offsets[v as usize + 1] - self.in_offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.out_offsets[v as usize] as usize;
+        let e = self.out_offsets[v as usize + 1] as usize;
+        &self.out_targets[s..e]
+    }
+
+    #[inline]
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.in_offsets[v as usize] as usize;
+        let e = self.in_offsets[v as usize + 1] as usize;
+        &self.in_sources[s..e]
+    }
+
+    /// Out-edges of `v` with weights; weight defaults to 1.0 when
+    /// unweighted.
+    #[inline]
+    pub fn out_edges(&self, v: VertexId) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+        let s = self.out_offsets[v as usize] as usize;
+        let e = self.out_offsets[v as usize + 1] as usize;
+        (s..e).map(move |i| {
+            let w = if self.out_weights.is_empty() { 1.0 } else { self.out_weights[i] };
+            (self.out_targets[i], w)
+        })
+    }
+
+    #[inline]
+    pub fn in_edges(&self, v: VertexId) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+        let s = self.in_offsets[v as usize] as usize;
+        let e = self.in_offsets[v as usize + 1] as usize;
+        (s..e).map(move |i| {
+            let w = if self.in_weights.is_empty() { 1.0 } else { self.in_weights[i] };
+            (self.in_sources[i], w)
+        })
+    }
+
+    /// Approximate resident bytes of the structure arrays — what the
+    /// block partitioner budgets against cache capacity.
+    pub fn structure_bytes(&self) -> usize {
+        self.out_offsets.len() * 8
+            + self.out_targets.len() * 4
+            + self.in_offsets.len() * 8
+            + self.in_sources.len() * 4
+            + (self.out_weights.len() + self.in_weights.len()) * 4
+    }
+
+    /// Internal consistency check (used by tests and the loader):
+    /// offsets monotone, ids in range, in/out edge multisets match.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_vertices();
+        let m = self.num_edges();
+        if self.in_offsets.len() != n + 1 {
+            return Err("in/out offset length mismatch".into());
+        }
+        if self.in_sources.len() != m {
+            return Err("in/out edge count mismatch".into());
+        }
+        for w in self.out_offsets.windows(2) {
+            if w[0] > w[1] {
+                return Err("out_offsets not monotone".into());
+            }
+        }
+        for w in self.in_offsets.windows(2) {
+            if w[0] > w[1] {
+                return Err("in_offsets not monotone".into());
+            }
+        }
+        if *self.out_offsets.last().unwrap() as usize != m {
+            return Err("out_offsets tail != m".into());
+        }
+        if *self.in_offsets.last().unwrap() as usize != m {
+            return Err("in_offsets tail != m".into());
+        }
+        if self.out_targets.iter().any(|&t| (t as usize) >= n) {
+            return Err("out target out of range".into());
+        }
+        if self.in_sources.iter().any(|&s| (s as usize) >= n) {
+            return Err("in source out of range".into());
+        }
+        if !self.out_weights.is_empty() && self.out_weights.len() != m {
+            return Err("out_weights length mismatch".into());
+        }
+        if !self.in_weights.is_empty() && self.in_weights.len() != m {
+            return Err("in_weights length mismatch".into());
+        }
+        // Degree-sum cross-check (cheap proxy for multiset equality).
+        let out_sum: u64 = (0..n as u32).map(|v| self.out_degree(v) as u64).sum();
+        let in_sum: u64 = (0..n as u32).map(|v| self.in_degree(v) as u64).sum();
+        if out_sum != in_sum {
+            return Err("in/out degree sums differ".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::builder::GraphBuilder;
+
+    fn diamond() -> crate::graph::Graph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        GraphBuilder::new(4).edges(&[(0, 1), (0, 2), (1, 3), (2, 3)]).build()
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(3), 2);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.in_neighbors(3), &[1, 2]);
+        assert_eq!(g.out_neighbors(3), &[] as &[u32]);
+    }
+
+    #[test]
+    fn validate_passes_on_wellformed() {
+        diamond().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = diamond();
+        g.out_targets[0] = 99;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn weighted_edges_iterate_with_weights() {
+        let g = GraphBuilder::new(3)
+            .weighted_edges(&[(0, 1, 2.5), (1, 2, 0.5)])
+            .build();
+        let e: Vec<_> = g.out_edges(0).collect();
+        assert_eq!(e, vec![(1, 2.5)]);
+        let e: Vec<_> = g.in_edges(2).collect();
+        assert_eq!(e, vec![(1, 0.5)]);
+    }
+
+    #[test]
+    fn unweighted_edges_default_weight_one() {
+        let g = diamond();
+        assert!(g.out_edges(0).all(|(_, w)| w == 1.0));
+    }
+}

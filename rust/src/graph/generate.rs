@@ -1,0 +1,217 @@
+//! Synthetic graph generators.
+//!
+//! The paper evaluates on a proprietary power-law dataset ("sd1-arc");
+//! we substitute generators whose degree structure drives the same cache
+//! behaviour (DESIGN.md §4): RMAT and Barabási–Albert for power-law,
+//! Erdős–Rényi as a locality-free control, and a 2-D road grid for the
+//! route-planning (SSSP) workload from the paper's Didi motivation.
+
+use super::builder::GraphBuilder;
+use super::csr::Graph;
+use crate::util::rng::Pcg32;
+
+/// R-MAT recursive-matrix generator (Chakrabarti et al. 2004) with the
+/// canonical (a,b,c,d) = (0.57, 0.19, 0.19, 0.05) parameters — gives a
+/// power-law out-degree distribution similar to social graphs.
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> Graph {
+    rmat_with(scale, edge_factor, seed, 0.57, 0.19, 0.19)
+}
+
+pub fn rmat_with(scale: u32, edge_factor: usize, seed: u64, a: f64, b: f64, c: f64) -> Graph {
+    assert!(scale <= 26, "scale {scale} too large for this testbed");
+    assert!(a + b + c < 1.0);
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Pcg32::new(seed, 0xa);
+    let mut builder = GraphBuilder::new(n).dedupe();
+    for _ in 0..m {
+        let (mut lo_s, mut lo_d) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            let r = rng.gen_f64();
+            if r < a {
+                // top-left: neither bit set
+            } else if r < a + b {
+                lo_d += half;
+            } else if r < a + b + c {
+                lo_s += half;
+            } else {
+                lo_s += half;
+                lo_d += half;
+            }
+            half >>= 1;
+        }
+        builder.push(lo_s as u32, lo_d as u32);
+    }
+    builder.build()
+}
+
+/// Erdős–Rényi G(n, m): m edges sampled uniformly (with replacement,
+/// then deduped).
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::new(seed, 0xb);
+    let mut builder = GraphBuilder::new(n).dedupe();
+    for _ in 0..m {
+        let s = rng.gen_index(n) as u32;
+        let d = rng.gen_index(n) as u32;
+        builder.push(s, d);
+    }
+    builder.build()
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches
+/// `k` out-edges to targets sampled proportionally to current degree
+/// (implemented with the repeated-endpoint trick). Directed edges point
+/// from the new vertex to the chosen target, plus a reciprocal edge so
+/// in-degree also follows the power law.
+pub fn barabasi_albert(n: usize, k: usize, seed: u64) -> Graph {
+    assert!(n > k && k >= 1);
+    let mut rng = Pcg32::new(seed, 0xc);
+    let mut builder = GraphBuilder::new(n).dedupe();
+    // endpoint pool: every time an edge (u,v) is added, push u and v, so
+    // sampling uniformly from the pool = degree-proportional sampling.
+    let mut pool: Vec<u32> = Vec::with_capacity(2 * n * k);
+    // seed clique over the first k+1 vertices
+    for i in 0..=(k as u32) {
+        for j in 0..=(k as u32) {
+            if i != j {
+                builder.push(i, j);
+                pool.push(i);
+                pool.push(j);
+            }
+        }
+    }
+    for v in (k + 1)..n {
+        let mut chosen = std::collections::HashSet::new();
+        while chosen.len() < k {
+            let t = pool[rng.gen_index(pool.len())];
+            if (t as usize) < v {
+                chosen.insert(t);
+            }
+        }
+        for t in chosen {
+            builder.push(v as u32, t);
+            builder.push(t, v as u32);
+            pool.push(v as u32);
+            pool.push(t);
+        }
+    }
+    builder.build()
+}
+
+/// 2-D grid "road network": `rows × cols` vertices, 4-neighborhood,
+/// bidirectional weighted edges (uniform [1, 10) travel cost). The SSSP
+/// workload from the route-planning example runs on this.
+pub fn road_grid(rows: usize, cols: usize, seed: u64) -> Graph {
+    let n = rows * cols;
+    let mut rng = Pcg32::new(seed, 0xd);
+    let mut builder = GraphBuilder::new(n);
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                let w = 1.0 + 9.0 * rng.gen_f32();
+                builder.push_weighted(id(r, c), id(r, c + 1), w);
+                builder.push_weighted(id(r, c + 1), id(r, c), w);
+            }
+            if r + 1 < rows {
+                let w = 1.0 + 9.0 * rng.gen_f32();
+                builder.push_weighted(id(r, c), id(r + 1, c), w);
+                builder.push_weighted(id(r + 1, c), id(r, c), w);
+            }
+        }
+    }
+    builder.build()
+}
+
+/// Attach uniform random weights in `[lo, hi)` to an unweighted graph
+/// (same weight on the out- and in-edge views of each edge).
+pub fn with_random_weights(g: &Graph, lo: f32, hi: f32, seed: u64) -> Graph {
+    let mut rng = Pcg32::new(seed, 0xe);
+    let mut builder = GraphBuilder::new(g.num_vertices());
+    for v in 0..g.num_vertices() as u32 {
+        for t in g.out_neighbors(v) {
+            builder.push_weighted(v, *t, lo + (hi - lo) * rng.gen_f32());
+        }
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape_and_determinism() {
+        let g1 = rmat(10, 8, 42);
+        let g2 = rmat(10, 8, 42);
+        assert_eq!(g1.num_vertices(), 1024);
+        assert!(g1.num_edges() > 1024 * 4, "dedupe should retain most edges");
+        assert_eq!(g1.out_targets, g2.out_targets);
+        g1.validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(12, 16, 7);
+        let n = g.num_vertices();
+        let mut degs: Vec<usize> = (0..n as u32).map(|v| g.out_degree(v)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        let top1pct: usize = degs[..n / 100].iter().sum();
+        let total: usize = degs.iter().sum();
+        assert!(
+            top1pct as f64 > 0.10 * total as f64,
+            "top 1% of vertices should own >10% of edges (power law), got {:.3}",
+            top1pct as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn erdos_renyi_roughly_uniform() {
+        let g = erdos_renyi(1000, 10_000, 3);
+        g.validate().unwrap();
+        let max_deg = (0..1000u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_deg < 40, "ER should not have power-law hubs, max={max_deg}");
+    }
+
+    #[test]
+    fn ba_degree_sum_and_powerlaw() {
+        let g = barabasi_albert(2000, 4, 5);
+        g.validate().unwrap();
+        let max_deg = (0..2000u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_deg > 40, "BA should grow hubs, max={max_deg}");
+    }
+
+    #[test]
+    fn road_grid_structure() {
+        let g = road_grid(10, 20, 1);
+        assert_eq!(g.num_vertices(), 200);
+        // interior vertex has 4 out-edges
+        let interior = (5 * 20 + 10) as u32;
+        assert_eq!(g.out_degree(interior), 4);
+        // corner has 2
+        assert_eq!(g.out_degree(0), 2);
+        assert!(g.is_weighted());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn road_grid_weights_symmetric() {
+        let g = road_grid(4, 4, 9);
+        for v in 0..16u32 {
+            for (t, w) in g.out_edges(v) {
+                let back = g.out_edges(t).find(|&(u, _)| u == v).unwrap();
+                assert_eq!(back.1, w, "edge {v}->{t} weight asymmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn with_random_weights_preserves_structure() {
+        let g = erdos_renyi(200, 1000, 11);
+        let w = with_random_weights(&g, 1.0, 5.0, 12);
+        assert_eq!(g.out_targets, w.out_targets);
+        assert!(w.is_weighted());
+        assert!(w.out_weights.iter().all(|&x| (1.0..5.0).contains(&x)));
+    }
+}

@@ -1,0 +1,247 @@
+//! Graph file IO: whitespace-separated edge-list text (the de-facto
+//! SNAP/KONECT format) and a compact binary CSR snapshot for fast
+//! reload in benches.
+
+use super::builder::GraphBuilder;
+use super::csr::Graph;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum IoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {0}: {1}")]
+    Parse(usize, String),
+    #[error("bad magic / truncated binary graph")]
+    BadBinary,
+}
+
+/// Load a text edge list: lines of `src dst [weight]`, `#` comments.
+/// Vertex ids are 0-based; the vertex count is `max id + 1` unless
+/// `min_vertices` raises it.
+pub fn load_edge_list(path: &Path, min_vertices: usize) -> Result<Graph, IoError> {
+    let f = std::fs::File::open(path)?;
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    let mut weighted = false;
+    let mut max_id = 0u32;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let s: u32 = it
+            .next()
+            .ok_or_else(|| IoError::Parse(lineno + 1, "missing src".into()))?
+            .parse()
+            .map_err(|e| IoError::Parse(lineno + 1, format!("src: {e}")))?;
+        let d: u32 = it
+            .next()
+            .ok_or_else(|| IoError::Parse(lineno + 1, "missing dst".into()))?
+            .parse()
+            .map_err(|e| IoError::Parse(lineno + 1, format!("dst: {e}")))?;
+        let w = match it.next() {
+            Some(ws) => {
+                weighted = true;
+                ws.parse::<f32>()
+                    .map_err(|e| IoError::Parse(lineno + 1, format!("weight: {e}")))?
+            }
+            None => 1.0,
+        };
+        max_id = max_id.max(s).max(d);
+        edges.push((s, d, w));
+    }
+    let n = (max_id as usize + 1).max(min_vertices).max(1);
+    let mut b = GraphBuilder::new(n);
+    for (s, d, w) in edges {
+        if weighted {
+            b.push_weighted(s, d, w);
+        } else {
+            b.push(s, d);
+        }
+    }
+    Ok(b.build())
+}
+
+pub fn save_edge_list(g: &Graph, path: &Path) -> Result<(), IoError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# tlsched edge list: {} vertices {} edges", g.num_vertices(), g.num_edges())?;
+    for v in 0..g.num_vertices() as u32 {
+        for (t, wt) in g.out_edges(v) {
+            if g.is_weighted() {
+                writeln!(w, "{v} {t} {wt}")?;
+            } else {
+                writeln!(w, "{v} {t}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+const MAGIC: &[u8; 8] = b"TLSGRAF1";
+
+/// Binary snapshot: magic, n, m, weighted flag, then the raw CSR arrays
+/// (little-endian). ~10x faster to load than text for bench graphs.
+pub fn save_binary(g: &Graph, path: &Path) -> Result<(), IoError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    w.write_all(&[g.is_weighted() as u8])?;
+    let write_u64s = |w: &mut BufWriter<std::fs::File>, xs: &[u64]| -> std::io::Result<()> {
+        for x in xs {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    };
+    let write_u32s = |w: &mut BufWriter<std::fs::File>, xs: &[u32]| -> std::io::Result<()> {
+        for x in xs {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    };
+    let write_f32s = |w: &mut BufWriter<std::fs::File>, xs: &[f32]| -> std::io::Result<()> {
+        for x in xs {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    };
+    write_u64s(&mut w, &g.out_offsets)?;
+    write_u32s(&mut w, &g.out_targets)?;
+    write_u64s(&mut w, &g.in_offsets)?;
+    write_u32s(&mut w, &g.in_sources)?;
+    if g.is_weighted() {
+        write_f32s(&mut w, &g.out_weights)?;
+        write_f32s(&mut w, &g.in_weights)?;
+    }
+    Ok(())
+}
+
+pub fn load_binary(path: &Path) -> Result<Graph, IoError> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, len: usize| -> Result<&[u8], IoError> {
+        if *pos + len > buf.len() {
+            return Err(IoError::BadBinary);
+        }
+        let s = &buf[*pos..*pos + len];
+        *pos += len;
+        Ok(s)
+    };
+    if take(&mut pos, 8)? != MAGIC {
+        return Err(IoError::BadBinary);
+    }
+    let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let m = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let weighted = take(&mut pos, 1)?[0] != 0;
+    let read_u64s = |pos: &mut usize, count: usize| -> Result<Vec<u64>, IoError> {
+        let s = take_slice(&buf, pos, count * 8)?;
+        Ok(s.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    };
+    let read_u32s = |pos: &mut usize, count: usize| -> Result<Vec<u32>, IoError> {
+        let s = take_slice(&buf, pos, count * 4)?;
+        Ok(s.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    };
+    let read_f32s = |pos: &mut usize, count: usize| -> Result<Vec<f32>, IoError> {
+        let s = take_slice(&buf, pos, count * 4)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    };
+    let out_offsets = read_u64s(&mut pos, n + 1)?;
+    let out_targets = read_u32s(&mut pos, m)?;
+    let in_offsets = read_u64s(&mut pos, n + 1)?;
+    let in_sources = read_u32s(&mut pos, m)?;
+    let (out_weights, in_weights) = if weighted {
+        (read_f32s(&mut pos, m)?, read_f32s(&mut pos, m)?)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let g = Graph { out_offsets, out_targets, in_offsets, in_sources, out_weights, in_weights };
+    g.validate().map_err(|_| IoError::BadBinary)?;
+    Ok(g)
+}
+
+fn take_slice<'a>(buf: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8], IoError> {
+    if *pos + len > buf.len() {
+        return Err(IoError::BadBinary);
+    }
+    let s = &buf[*pos..*pos + len];
+    *pos += len;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("tlsched-io-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn text_roundtrip_unweighted() {
+        let g = generate::erdos_renyi(100, 400, 1);
+        let p = tmpdir().join("t1.txt");
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p, 100).unwrap();
+        assert_eq!(g.out_targets, g2.out_targets);
+        assert_eq!(g.out_offsets, g2.out_offsets);
+    }
+
+    #[test]
+    fn text_roundtrip_weighted() {
+        let g = generate::road_grid(5, 5, 2);
+        let p = tmpdir().join("t2.txt");
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p, 0).unwrap();
+        assert_eq!(g.out_targets, g2.out_targets);
+        for (a, b) in g.out_weights.iter().zip(&g2.out_weights) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = generate::rmat(8, 8, 3);
+        let p = tmpdir().join("t3.bin");
+        save_binary(&g, &p).unwrap();
+        let g2 = load_binary(&p).unwrap();
+        assert_eq!(g.out_offsets, g2.out_offsets);
+        assert_eq!(g.out_targets, g2.out_targets);
+        assert_eq!(g.in_sources, g2.in_sources);
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmpdir().join("t4.bin");
+        std::fs::write(&p, b"not a graph").unwrap();
+        assert!(matches!(load_binary(&p), Err(IoError::BadBinary)));
+    }
+
+    #[test]
+    fn text_skips_comments_and_blank_lines() {
+        let p = tmpdir().join("t5.txt");
+        std::fs::write(&p, "# c\n\n0 1\n% k\n1 2\n").unwrap();
+        let g = load_edge_list(&p, 0).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn text_parse_error_has_line_number() {
+        let p = tmpdir().join("t6.txt");
+        std::fs::write(&p, "0 1\nx y\n").unwrap();
+        match load_edge_list(&p, 0) {
+            Err(IoError::Parse(line, _)) => assert_eq!(line, 2),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: immutable CSR structure shared by all concurrent
+//! jobs, edge-list/binary IO, synthetic generators, and the block
+//! partitioner the two-level scheduler operates on.
+
+pub mod builder;
+pub mod csr;
+pub mod generate;
+pub mod io;
+pub mod partition;
+
+pub use builder::GraphBuilder;
+pub use csr::{Graph, VertexId};
+pub use partition::{Block, BlockPartition};

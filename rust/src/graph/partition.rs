@@ -1,0 +1,214 @@
+//! Block partitioner.
+//!
+//! The paper schedules data in *blocks* — "a block can be placed in the
+//! Cache" (§3). We partition the vertex space into contiguous ranges
+//! whose resident footprint (structure + one value/delta lane per job)
+//! fits a configurable cache budget, and record per-block edge extents
+//! so the executor and the cache simulator can reason about exactly
+//! which bytes a block touches.
+
+use super::csr::{Graph, VertexId};
+
+/// One contiguous vertex-range block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Block {
+    pub id: u32,
+    /// First vertex (inclusive).
+    pub start: VertexId,
+    /// Last vertex (exclusive).
+    pub end: VertexId,
+    /// Number of in-edges landing on this block's vertices.
+    pub in_edges: u64,
+    /// Number of out-edges leaving this block's vertices.
+    pub out_edges: u64,
+}
+
+impl Block {
+    pub fn num_vertices(&self) -> usize {
+        (self.end - self.start) as usize
+    }
+
+    pub fn vertices(&self) -> std::ops::Range<u32> {
+        self.start..self.end
+    }
+
+    pub fn contains(&self, v: VertexId) -> bool {
+        (self.start..self.end).contains(&v)
+    }
+
+    /// Structure bytes touched when a job processes this block with the
+    /// pull (in-edge) executor: in-offsets, in-sources, plus one f32
+    /// value lane read per in-source and one value+delta lane for the
+    /// block's own vertices.
+    pub fn structure_bytes(&self) -> u64 {
+        (self.num_vertices() as u64 + 1) * 8 + self.in_edges * 4
+    }
+}
+
+/// Partition of a graph into blocks.
+#[derive(Debug, Clone)]
+pub struct BlockPartition {
+    pub blocks: Vec<Block>,
+    /// Maps vertex → block id (dense, length n).
+    pub vertex_block: Vec<u32>,
+    /// Target vertices-per-block used to build this partition.
+    pub target_vertices: usize,
+}
+
+impl BlockPartition {
+    /// Partition into blocks of exactly `vertices_per_block` vertices
+    /// (last block may be smaller). This matches the paper's V_B knob.
+    pub fn by_vertex_count(g: &Graph, vertices_per_block: usize) -> Self {
+        assert!(vertices_per_block >= 1);
+        let n = g.num_vertices();
+        let mut blocks = Vec::new();
+        let mut vertex_block = vec![0u32; n];
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + vertices_per_block).min(n);
+            let id = blocks.len() as u32;
+            let in_edges: u64 = (start..end).map(|v| g.in_degree(v as u32) as u64).sum();
+            let out_edges: u64 = (start..end).map(|v| g.out_degree(v as u32) as u64).sum();
+            for v in start..end {
+                vertex_block[v] = id;
+            }
+            blocks.push(Block {
+                id,
+                start: start as u32,
+                end: end as u32,
+                in_edges,
+                out_edges,
+            });
+            start = end;
+        }
+        if blocks.is_empty() {
+            // n == 0: keep one empty block so downstream code has ≥1 block.
+            blocks.push(Block { id: 0, start: 0, end: 0, in_edges: 0, out_edges: 0 });
+        }
+        BlockPartition { blocks, vertex_block, target_vertices: vertices_per_block }
+    }
+
+    /// Partition sized for a cache budget: choose vertices-per-block so
+    /// the average block's structure footprint + `jobs` value lanes fits
+    /// `cache_bytes`. This is the paper's "a block can be placed in the
+    /// Cache" sizing rule made explicit.
+    pub fn by_cache_budget(g: &Graph, cache_bytes: usize, jobs: usize) -> Self {
+        let n = g.num_vertices().max(1);
+        let m = g.num_edges().max(1);
+        let avg_in_deg = m as f64 / n as f64;
+        // per-vertex bytes: 8 (offset) + 4*deg (sources) + 4*deg (source
+        // value lane reads) + jobs * 8 (value + delta lanes for the block)
+        let per_vertex =
+            8.0 + 8.0 * avg_in_deg + (jobs.max(1) as f64) * 8.0;
+        let vb = ((cache_bytes as f64 / per_vertex).floor() as usize).clamp(64.min(n), n);
+        Self::by_vertex_count(g, vb)
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    #[inline]
+    pub fn block_of(&self, v: VertexId) -> u32 {
+        self.vertex_block[v as usize]
+    }
+
+    pub fn block(&self, id: u32) -> &Block {
+        &self.blocks[id as usize]
+    }
+
+    /// Verify the partition covers every vertex exactly once, in order.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        let n = g.num_vertices();
+        if self.vertex_block.len() != n {
+            return Err("vertex_block length mismatch".into());
+        }
+        let mut covered = 0usize;
+        let mut prev_end = 0u32;
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.id as usize != i {
+                return Err(format!("block {i} has id {}", b.id));
+            }
+            if b.start != prev_end {
+                return Err(format!("gap/overlap before block {i}"));
+            }
+            if b.end < b.start {
+                return Err(format!("block {i} inverted range"));
+            }
+            prev_end = b.end;
+            covered += b.num_vertices();
+            for v in b.vertices() {
+                if self.vertex_block[v as usize] != b.id {
+                    return Err(format!("vertex {v} not mapped to block {}", b.id));
+                }
+            }
+        }
+        if covered != n {
+            return Err(format!("covered {covered} of {n} vertices"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn exact_block_sizes() {
+        let g = generate::erdos_renyi(1000, 4000, 1);
+        let p = BlockPartition::by_vertex_count(&g, 128);
+        assert_eq!(p.num_blocks(), 8); // ceil(1000/128)
+        assert_eq!(p.blocks[0].num_vertices(), 128);
+        assert_eq!(p.blocks[7].num_vertices(), 1000 - 7 * 128);
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn edge_counts_sum_to_m() {
+        let g = generate::rmat(10, 8, 2);
+        let p = BlockPartition::by_vertex_count(&g, 100);
+        let in_sum: u64 = p.blocks.iter().map(|b| b.in_edges).sum();
+        let out_sum: u64 = p.blocks.iter().map(|b| b.out_edges).sum();
+        assert_eq!(in_sum, g.num_edges() as u64);
+        assert_eq!(out_sum, g.num_edges() as u64);
+    }
+
+    #[test]
+    fn block_of_matches_ranges() {
+        let g = generate::erdos_renyi(500, 1000, 3);
+        let p = BlockPartition::by_vertex_count(&g, 64);
+        for v in 0..500u32 {
+            let b = p.block(p.block_of(v));
+            assert!(b.contains(v));
+        }
+    }
+
+    #[test]
+    fn cache_budget_shrinks_blocks_with_more_jobs() {
+        let g = generate::rmat(12, 8, 4);
+        let p1 = BlockPartition::by_cache_budget(&g, 1 << 20, 1);
+        let p16 = BlockPartition::by_cache_budget(&g, 1 << 20, 16);
+        assert!(p16.target_vertices <= p1.target_vertices);
+        p1.validate(&g).unwrap();
+        p16.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn single_block_when_budget_huge() {
+        let g = generate::erdos_renyi(100, 200, 5);
+        let p = BlockPartition::by_cache_budget(&g, 1 << 30, 1);
+        assert_eq!(p.num_blocks(), 1);
+        assert_eq!(p.blocks[0].num_vertices(), 100);
+    }
+
+    #[test]
+    fn structure_bytes_scale_with_edges() {
+        let g = generate::rmat(10, 8, 6);
+        let p = BlockPartition::by_vertex_count(&g, 256);
+        for b in &p.blocks {
+            assert!(b.structure_bytes() >= b.in_edges * 4);
+        }
+    }
+}

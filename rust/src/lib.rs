@@ -1,0 +1,28 @@
+//! # tlsched — two-level scheduling for concurrent graph processing
+//!
+//! Production-shaped reproduction of *"Efficient Two-Level Scheduling
+//! for Concurrent Graph Processing"* (Jin Zhao, 2018): many analytics
+//! jobs share one in-memory graph; **MPDS** schedules *data* (cache-
+//! sized blocks, block-grained priorities merged into a global queue)
+//! and **CAJS** schedules *jobs* (every unconverged job processes the
+//! hot block back-to-back), eliminating redundant DRAM traffic and
+//! accelerating convergence.
+//!
+//! Architecture (three layers, python never on the request path):
+//! * L3 (this crate): coordinator, scheduler, engine, substrates.
+//! * L2 (python/compile/model.py): batched multi-job block update in
+//!   JAX, AOT-lowered to HLO text under `artifacts/`.
+//! * L1 (python/compile/kernels/): Pallas block kernels.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod algorithms;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod graph;
+pub mod memsim;
+pub mod runtime;
+pub mod scheduler;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,380 @@
+//! `tlsched` launcher: run concurrent graph-processing workloads under
+//! the two-level scheduler (or a baseline) and report metrics.
+//!
+//! Subcommands (first positional argument):
+//! * `run`      — batch: run N jobs of mixed kinds to convergence.
+//! * `replay`   — trace replay through the coordinator.
+//! * `gen`      — generate a workload trace (JSONL) or a graph file.
+//! * `info`     — print graph/partition/queue statistics.
+//! * `xla`      — run the batched XLA backend (requires artifacts).
+//!
+//! Examples:
+//! ```text
+//! tlsched run --graph rmat --scale 12 --jobs 8 --scheduler twolevel
+//! tlsched replay --days 0.2 --time-scale 600 --report out.json
+//! tlsched gen --trace trace.jsonl --days 7
+//! tlsched xla --jobs 4
+//! ```
+
+use tlsched::config::{GraphSource, RunConfig};
+use tlsched::coordinator::{Coordinator, CoordinatorConfig};
+use tlsched::engine::JobSpec;
+use tlsched::graph::BlockPartition;
+use tlsched::scheduler::{Scheduler, SchedulerConfig, SchedulerKind};
+use tlsched::trace::{self, JobKind, TraceConfig};
+use tlsched::util::args::ArgSpec;
+use tlsched::util::logging;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let code = match cmd {
+        "run" => cmd_run(&rest),
+        "replay" => cmd_replay(&rest),
+        "gen" => cmd_gen(&rest),
+        "info" => cmd_info(&rest),
+        "xla" => cmd_xla(&rest),
+        _ => {
+            println!(
+                "tlsched — two-level scheduling for concurrent graph processing\n\n\
+                 USAGE: tlsched <run|replay|gen|info|xla> [options]\n\
+                 Run `tlsched <cmd> --help` for per-command options."
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn common_spec(bin: &'static str, about: &'static str) -> ArgSpec {
+    ArgSpec::new(bin, about)
+        .opt("config", "", "config file (TOML subset); flags override")
+        .opt("graph", "rmat", "graph kind: rmat|erdos|ba|grid|file")
+        .opt("scale", "12", "rmat scale (2^scale vertices)")
+        .opt("edge-factor", "8", "rmat edges per vertex")
+        .opt("n", "16384", "vertices (erdos/ba)")
+        .opt("m", "131072", "edges (erdos)")
+        .opt("k", "8", "attachment degree (ba)")
+        .opt("rows", "128", "grid rows")
+        .opt("cols", "128", "grid cols")
+        .opt("path", "", "graph file path (kind=file)")
+        .opt("seed", "42", "graph seed")
+        .opt("block-vertices", "0", "vertices per block (0 = cache budget)")
+        .opt("cache-budget", "1048576", "cache budget bytes for block sizing")
+        .opt("scheduler", "twolevel", "independent|priter|roundrobin|twolevel")
+        .opt("c", "100", "queue-length constant C (Eq. 4)")
+        .opt("alpha", "0.8", "global-queue reserved split")
+        .opt("epsilon", "0.2", "CBP tie-band fraction")
+        .opt("q", "0", "queue length override (0 = Eq. 4)")
+}
+
+fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
+    let mut cfg = if a.str("config").is_empty() {
+        RunConfig::default()
+    } else {
+        RunConfig::from_file(std::path::Path::new(a.str("config"))).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+    };
+    // Precedence: explicit flags > config file > flag defaults.
+    if a.was_set("graph")
+        || a.str("config").is_empty()
+        || a.was_set("scale")
+        || a.was_set("n")
+        || a.was_set("rows")
+    {
+        cfg.graph = match a.str("graph") {
+        "rmat" => GraphSource::Rmat {
+            scale: a.parse("scale"),
+            edge_factor: a.usize("edge-factor"),
+        },
+        "erdos" => GraphSource::ErdosRenyi { n: a.usize("n"), m: a.usize("m") },
+        "ba" => GraphSource::BarabasiAlbert { n: a.usize("n"), k: a.usize("k") },
+        "grid" => GraphSource::Grid { rows: a.usize("rows"), cols: a.usize("cols") },
+        "file" => GraphSource::File(a.str("path").to_string()),
+        other => {
+            eprintln!("unknown graph kind '{other}'");
+            std::process::exit(2);
+        }
+        };
+    }
+    if a.was_set("seed") || a.str("config").is_empty() {
+        cfg.graph_seed = a.u64("seed");
+    }
+    if a.was_set("block-vertices") || a.str("config").is_empty() {
+        cfg.block_vertices = a.usize("block-vertices");
+    }
+    if a.was_set("cache-budget") || a.str("config").is_empty() {
+        cfg.cache_budget = a.usize("cache-budget");
+    }
+    if a.was_set("scheduler") || a.str("config").is_empty() {
+        let kind = SchedulerKind::from_name(a.str("scheduler")).unwrap_or_else(|| {
+            eprintln!("unknown scheduler '{}'", a.str("scheduler"));
+            std::process::exit(2);
+        });
+        let mut s = SchedulerConfig::new(kind);
+        s.c = cfg.scheduler.c;
+        s.alpha = cfg.scheduler.alpha;
+        s.epsilon_frac = cfg.scheduler.epsilon_frac;
+        s.q_override = cfg.scheduler.q_override;
+        s.samples = cfg.scheduler.samples;
+        cfg.scheduler = s;
+    }
+    if a.was_set("c") {
+        cfg.scheduler.c = a.f64("c");
+    }
+    if a.was_set("alpha") {
+        cfg.scheduler.alpha = a.f64("alpha");
+    }
+    if a.was_set("epsilon") {
+        cfg.scheduler.epsilon_frac = a.f64("epsilon");
+    }
+    if a.was_set("q") {
+        let q = a.usize("q");
+        cfg.scheduler.q_override = if q == 0 { None } else { Some(q) };
+    }
+    cfg
+}
+
+fn cmd_run(argv: &[String]) -> i32 {
+    let spec = common_spec("tlsched run", "run a batch of concurrent jobs to convergence")
+        .opt("jobs", "8", "number of concurrent jobs")
+        .opt("mix", "pagerank,sssp,wcc,bfs,ppr", "job-kind rotation")
+        .opt("report", "", "write metrics JSON to this path");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let cfg = build_config(&a);
+    let g = cfg.build_graph().expect("graph");
+    let jobs = a.usize("jobs");
+    let part = cfg.build_partition(&g, jobs);
+    log::info!(
+        "graph: {} vertices {} edges; {} blocks of {} vertices",
+        g.num_vertices(),
+        g.num_edges(),
+        part.num_blocks(),
+        part.target_vertices
+    );
+    let kinds: Vec<JobKind> = a
+        .list::<String>("mix")
+        .iter()
+        .filter_map(|s| JobKind::from_name(s))
+        .collect();
+    if kinds.is_empty() {
+        eprintln!("--mix must name at least one of pagerank,sssp,wcc,bfs,ppr");
+        return 2;
+    }
+    let specs: Vec<JobSpec> = (0..jobs)
+        .map(|i| JobSpec::new(kinds[i % kinds.len()], (i * 97) as u32 % g.num_vertices() as u32))
+        .collect();
+    let mut coord = Coordinator::new(&g, &part, CoordinatorConfig::new(cfg.scheduler.clone()));
+    let m = coord.run_batch(&specs);
+    println!(
+        "scheduler={} jobs={} rounds={} block_loads={} dispatches={} sharing={:.2} wall={:.2}s sched={:.3}s",
+        cfg.scheduler.kind.name(),
+        m.completed(),
+        m.rounds,
+        m.totals.block_loads,
+        m.totals.dispatches,
+        m.sharing_factor(),
+        m.wall_s,
+        m.scheduling_s,
+    );
+    write_report(a.str("report"), &m);
+    0
+}
+
+fn cmd_replay(argv: &[String]) -> i32 {
+    let spec = common_spec("tlsched replay", "replay an arrival trace through the coordinator")
+        .opt("trace", "", "trace JSONL path (empty = generate)")
+        .opt("days", "0.05", "generated trace length")
+        .opt("rate", "38", "mean arrivals per hour")
+        .opt("time-scale", "600", "virtual seconds per wall second")
+        .opt("max-concurrent", "32", "admission limit")
+        .opt("report", "", "write metrics JSON to this path");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let cfg = build_config(&a);
+    let g = cfg.build_graph().expect("graph");
+    let part = cfg.build_partition(&g, a.usize("max-concurrent"));
+    let jobs = if a.str("trace").is_empty() {
+        let tc = TraceConfig {
+            days: a.f64("days"),
+            mean_rate_per_hour: a.f64("rate"),
+            num_vertices: g.num_vertices() as u32,
+            ..Default::default()
+        };
+        trace::generate(&tc)
+    } else {
+        trace::from_jsonl(&std::fs::read_to_string(a.str("trace")).expect("trace file"))
+            .expect("trace parse")
+    };
+    log::info!("replaying {} jobs", jobs.len());
+    let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
+    ccfg.max_concurrent = a.usize("max-concurrent");
+    let mut coord = Coordinator::new(&g, &part, ccfg);
+    let m = coord.run_trace(&jobs, a.f64("time-scale"));
+    println!(
+        "scheduler={} completed={} throughput={:.1} jobs/h mean_latency={:.1}s p95={:.1}s sharing={:.2}",
+        cfg.scheduler.kind.name(),
+        m.completed(),
+        m.throughput_per_hour(),
+        m.mean_latency_s(),
+        m.p95_latency_s(),
+        m.sharing_factor(),
+    );
+    write_report(a.str("report"), &m);
+    0
+}
+
+fn cmd_gen(argv: &[String]) -> i32 {
+    let spec = ArgSpec::new("tlsched gen", "generate traces and graph files")
+        .opt("trace", "", "write a workload trace (JSONL) here")
+        .opt("days", "7", "trace length in days")
+        .opt("rate", "38", "mean arrivals/hour")
+        .opt("seed", "2018", "trace seed")
+        .opt("graph-out", "", "write a graph here (.bin or .txt)")
+        .opt("graph", "rmat", "graph kind")
+        .opt("scale", "14", "rmat scale")
+        .opt("edge-factor", "8", "rmat edge factor");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    if !a.str("trace").is_empty() {
+        let tc = TraceConfig {
+            days: a.f64("days"),
+            mean_rate_per_hour: a.f64("rate"),
+            seed: a.u64("seed"),
+            ..Default::default()
+        };
+        let jobs = trace::generate(&tc);
+        std::fs::write(a.str("trace"), trace::to_jsonl(&jobs)).expect("write trace");
+        let stats = trace::analyze(&jobs, tc.days * 86_400.0);
+        println!(
+            "wrote {} jobs to {} (peak={} mean={:.1} P(>=2)={:.3})",
+            jobs.len(),
+            a.str("trace"),
+            stats.peak_concurrency,
+            stats.mean_concurrency,
+            stats.p_at_least(2),
+        );
+    }
+    if !a.str("graph-out").is_empty() {
+        let g =
+            tlsched::graph::generate::rmat(a.parse("scale"), a.usize("edge-factor"), a.u64("seed"));
+        let p = std::path::Path::new(a.str("graph-out"));
+        if a.str("graph-out").ends_with(".bin") {
+            tlsched::graph::io::save_binary(&g, p).expect("save graph");
+        } else {
+            tlsched::graph::io::save_edge_list(&g, p).expect("save graph");
+        }
+        println!(
+            "wrote {} vertices {} edges to {}",
+            g.num_vertices(),
+            g.num_edges(),
+            p.display()
+        );
+    }
+    0
+}
+
+fn cmd_info(argv: &[String]) -> i32 {
+    let spec = common_spec("tlsched info", "print graph / partition / queue statistics")
+        .opt("jobs", "8", "expected concurrency for partition sizing");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let cfg = build_config(&a);
+    let g = cfg.build_graph().expect("graph");
+    let part = cfg.build_partition(&g, a.usize("jobs"));
+    let q = tlsched::scheduler::optimal_queue_length(
+        cfg.scheduler.c,
+        part.num_blocks(),
+        g.num_vertices(),
+    );
+    println!("vertices:        {}", g.num_vertices());
+    println!("edges:           {}", g.num_edges());
+    println!("weighted:        {}", g.is_weighted());
+    println!("structure bytes: {}", g.structure_bytes());
+    println!("blocks:          {}", part.num_blocks());
+    println!("block vertices:  {}", part.target_vertices);
+    println!("queue length q:  {q}  (Eq. 4, C={})", cfg.scheduler.c);
+    let max_deg =
+        (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap_or(0);
+    println!("max out-degree:  {max_deg}");
+    0
+}
+
+fn cmd_xla(argv: &[String]) -> i32 {
+    let spec =
+        ArgSpec::new("tlsched xla", "run the batched XLA backend (needs `make artifacts`)")
+            .opt("jobs", "4", "concurrent pagerank jobs (<= manifest J)")
+            .opt("scale", "9", "rmat scale (2^scale vertices <= manifest N)")
+            .opt("block-vertices", "64", "vertices per block")
+            .opt("artifacts", "", "artifact dir (default ./artifacts)");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let dir = if a.str("artifacts").is_empty() {
+        tlsched::runtime::Manifest::default_dir()
+    } else {
+        std::path::PathBuf::from(a.str("artifacts"))
+    };
+    let mut rt = match tlsched::runtime::XlaRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime error: {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    let g = tlsched::graph::generate::rmat(a.parse("scale"), 8, 11);
+    let part = BlockPartition::by_vertex_count(&g, a.usize("block-vertices"));
+    let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    let t0 = std::time::Instant::now();
+    let res = tlsched::runtime::run_pagerank_batch(
+        &mut rt,
+        &g,
+        &part,
+        &mut sched,
+        a.usize("jobs"),
+        1e-3,
+        100_000,
+    )
+    .expect("xla run");
+    println!(
+        "xla pagerank: jobs={} rounds={} blocks_scheduled={} xla_time={:.2}s wall={:.2}s",
+        a.usize("jobs"),
+        res.rounds,
+        res.blocks_scheduled,
+        res.xla_s,
+        t0.elapsed().as_secs_f64(),
+    );
+    0
+}
+
+fn write_report(path: &str, m: &tlsched::coordinator::RunMetrics) {
+    if path.is_empty() {
+        return;
+    }
+    std::fs::write(path, m.to_json().to_string()).expect("write report");
+    log::info!("report written to {path}");
+}
+
+fn usage_err(spec: &ArgSpec, e: tlsched::util::args::ArgError) -> i32 {
+    if matches!(e, tlsched::util::args::ArgError::Help) {
+        println!("{}", spec.usage());
+        0
+    } else {
+        eprintln!("error: {e}\n\n{}", spec.usage());
+        2
+    }
+}

@@ -1,0 +1,166 @@
+//! Address mapping: graph-data touches → simulated byte addresses.
+//!
+//! Gives every logical array of the shared graph + per-job state a
+//! distinct region of a flat simulated address space, so the cache
+//! simulator sees the same spatial locality the real arrays would have.
+//! Per-job value/delta lanes get separate regions (they are separate
+//! allocations in the engine), which is exactly why concurrent jobs
+//! evict each other's graph lines — the redundancy the paper targets.
+
+use crate::graph::Graph;
+
+/// Region ids of the simulated layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    InOffsets,
+    InSources,
+    InWeights,
+    OutOffsets,
+    OutTargets,
+    OutWeights,
+    /// Per-job vertex value lane.
+    Values(u32),
+    /// Per-job vertex delta lane.
+    Deltas(u32),
+}
+
+/// Maps (region, element index) to a byte address.
+#[derive(Debug, Clone)]
+pub struct AddressMap {
+    n: u64,
+    m: u64,
+    // region base offsets
+    in_offsets: u64,
+    in_sources: u64,
+    in_weights: u64,
+    out_offsets: u64,
+    out_targets: u64,
+    out_weights: u64,
+    job_lanes: u64,
+    /// bytes per job lane pair (values + deltas), aligned.
+    lane_stride: u64,
+}
+
+const ALIGN: u64 = 4096;
+
+fn align_up(x: u64) -> u64 {
+    (x + ALIGN - 1) / ALIGN * ALIGN
+}
+
+impl AddressMap {
+    pub fn new(g: &Graph) -> Self {
+        let n = g.num_vertices() as u64;
+        let m = g.num_edges() as u64;
+        let mut cursor = 0u64;
+        let mut place = |bytes: u64| {
+            let base = cursor;
+            cursor += align_up(bytes);
+            base
+        };
+        let in_offsets = place((n + 1) * 8);
+        let in_sources = place(m * 4);
+        let in_weights = place(m * 4);
+        let out_offsets = place((n + 1) * 8);
+        let out_targets = place(m * 4);
+        let out_weights = place(m * 4);
+        let job_lanes = cursor;
+        let lane_stride = align_up(n * 4) * 2;
+        AddressMap {
+            n,
+            m,
+            in_offsets,
+            in_sources,
+            in_weights,
+            out_offsets,
+            out_targets,
+            out_weights,
+            job_lanes,
+            lane_stride,
+        }
+    }
+
+    #[inline]
+    pub fn addr(&self, region: Region, index: u64) -> u64 {
+        match region {
+            Region::InOffsets => {
+                debug_assert!(index <= self.n);
+                self.in_offsets + index * 8
+            }
+            Region::InSources => {
+                debug_assert!(index < self.m.max(1));
+                self.in_sources + index * 4
+            }
+            Region::InWeights => self.in_weights + index * 4,
+            Region::OutOffsets => self.out_offsets + index * 8,
+            Region::OutTargets => self.out_targets + index * 4,
+            Region::OutWeights => self.out_weights + index * 4,
+            Region::Values(job) => {
+                self.job_lanes + job as u64 * self.lane_stride + index * 4
+            }
+            Region::Deltas(job) => {
+                self.job_lanes
+                    + job as u64 * self.lane_stride
+                    + self.lane_stride / 2
+                    + index * 4
+            }
+        }
+    }
+
+    /// Total simulated footprint for `jobs` concurrent jobs.
+    pub fn footprint_bytes(&self, jobs: u32) -> u64 {
+        self.job_lanes + jobs as u64 * self.lane_stride
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn regions_do_not_overlap() {
+        let g = generate::erdos_renyi(1000, 5000, 1);
+        let map = AddressMap::new(&g);
+        let n = g.num_vertices() as u64;
+        let m = g.num_edges() as u64;
+        // collect (start, end) of every region, check pairwise disjoint
+        let spans = vec![
+            (map.addr(Region::InOffsets, 0), map.addr(Region::InOffsets, n)),
+            (map.addr(Region::InSources, 0), map.addr(Region::InSources, m - 1) + 4),
+            (map.addr(Region::OutOffsets, 0), map.addr(Region::OutOffsets, n)),
+            (map.addr(Region::OutTargets, 0), map.addr(Region::OutTargets, m - 1) + 4),
+            (map.addr(Region::Values(0), 0), map.addr(Region::Values(0), n - 1) + 4),
+            (map.addr(Region::Deltas(0), 0), map.addr(Region::Deltas(0), n - 1) + 4),
+            (map.addr(Region::Values(1), 0), map.addr(Region::Values(1), n - 1) + 4),
+        ];
+        for (i, a) in spans.iter().enumerate() {
+            for b in spans.iter().skip(i + 1) {
+                assert!(a.1 <= b.0 || b.1 <= a.0, "regions overlap: {a:?} {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_elements_are_adjacent() {
+        let g = generate::erdos_renyi(100, 500, 2);
+        let map = AddressMap::new(&g);
+        assert_eq!(
+            map.addr(Region::InSources, 1) - map.addr(Region::InSources, 0),
+            4
+        );
+        assert_eq!(
+            map.addr(Region::InOffsets, 1) - map.addr(Region::InOffsets, 0),
+            8
+        );
+    }
+
+    #[test]
+    fn job_lanes_are_distinct() {
+        let g = generate::erdos_renyi(100, 500, 3);
+        let map = AddressMap::new(&g);
+        let a = map.addr(Region::Values(0), 50);
+        let b = map.addr(Region::Values(1), 50);
+        assert_ne!(a, b);
+        assert!(map.footprint_bytes(4) > map.footprint_bytes(2));
+    }
+}

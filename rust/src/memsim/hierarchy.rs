@@ -1,0 +1,260 @@
+//! Multi-level memory hierarchy: L1 → L2 → LLC → DRAM, with a cycle
+//! stall model.
+//!
+//! The engine maps its graph-data touches to byte addresses
+//! (`access.rs`) and drives them through this hierarchy; Fig 4 reads
+//! the LLC miss rate and Fig 5 the stall share from the resulting
+//! counters. Latencies follow common Skylake-class numbers and are
+//! configurable.
+
+use super::cache::{Cache, CacheConfig, CacheStats};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HierarchyConfig {
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+    /// DRAM access latency in cycles.
+    pub dram_latency: u64,
+    /// Cycles of useful work the CPU performs per data touch (the
+    /// "execution" half of Fig 5); stalls are added on top.
+    pub work_cycles_per_access: u64,
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        HierarchyConfig {
+            l1: CacheConfig { capacity: 32 << 10, line_size: 64, assoc: 8, hit_latency: 4 },
+            l2: CacheConfig { capacity: 256 << 10, line_size: 64, assoc: 8, hit_latency: 12 },
+            llc: CacheConfig { capacity: 8 << 20, line_size: 64, assoc: 16, hit_latency: 40 },
+            dram_latency: 200,
+            work_cycles_per_access: 6,
+        }
+    }
+}
+
+impl HierarchyConfig {
+    /// A deliberately small hierarchy for unit tests and quick benches
+    /// (so working sets overflow at laptop-scale graph sizes).
+    pub fn small() -> Self {
+        HierarchyConfig {
+            l1: CacheConfig { capacity: 8 << 10, line_size: 64, assoc: 4, hit_latency: 4 },
+            l2: CacheConfig { capacity: 64 << 10, line_size: 64, assoc: 8, hit_latency: 12 },
+            llc: CacheConfig { capacity: 1 << 20, line_size: 64, assoc: 16, hit_latency: 40 },
+            dram_latency: 200,
+            work_cycles_per_access: 6,
+        }
+    }
+
+    /// The structure-overflow regime used by the Fig 4/5 benches: LLC
+    /// smaller than the bench graph's structure arrays, so redundant
+    /// cross-job traffic actually reaches DRAM (as on the paper's
+    /// testbed, where sd1-arc dwarfed the LLC).
+    pub fn tiny() -> Self {
+        HierarchyConfig {
+            l1: CacheConfig { capacity: 8 << 10, line_size: 64, assoc: 4, hit_latency: 4 },
+            l2: CacheConfig { capacity: 32 << 10, line_size: 64, assoc: 8, hit_latency: 12 },
+            llc: CacheConfig { capacity: 128 << 10, line_size: 64, assoc: 16, hit_latency: 40 },
+            dram_latency: 200,
+            work_cycles_per_access: 6,
+        }
+    }
+}
+
+/// Aggregated hierarchy counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HierarchyStats {
+    pub l1: CacheStats,
+    pub l2: CacheStats,
+    pub llc: CacheStats,
+    pub dram_accesses: u64,
+    /// Cycles spent waiting for data (miss penalties beyond L1 hits).
+    pub stall_cycles: u64,
+    /// Cycles of useful execution.
+    pub work_cycles: u64,
+}
+
+impl HierarchyStats {
+    /// The metric Fig 4 plots: miss rate at the last-level cache.
+    pub fn llc_miss_rate(&self) -> f64 {
+        self.llc.miss_rate()
+    }
+
+    /// The metric Fig 5 plots: fraction of total cycles stalled on the
+    /// memory system.
+    pub fn stall_share(&self) -> f64 {
+        let total = self.stall_cycles + self.work_cycles;
+        if total == 0 {
+            0.0
+        } else {
+            self.stall_cycles as f64 / total as f64
+        }
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.stall_cycles + self.work_cycles
+    }
+
+    /// DRAM traffic in bytes (line-granular).
+    pub fn dram_bytes(&self, line_size: usize) -> u64 {
+        self.dram_accesses * line_size as u64
+    }
+}
+
+/// Inclusive three-level hierarchy with DRAM backing.
+pub struct MemoryHierarchy {
+    cfg: HierarchyConfig,
+    l1: Cache,
+    l2: Cache,
+    llc: Cache,
+    dram_accesses: u64,
+    stall_cycles: u64,
+    work_cycles: u64,
+}
+
+impl MemoryHierarchy {
+    pub fn new(cfg: HierarchyConfig) -> Self {
+        MemoryHierarchy {
+            l1: Cache::new(cfg.l1),
+            l2: Cache::new(cfg.l2),
+            llc: Cache::new(cfg.llc),
+            cfg,
+            dram_accesses: 0,
+            stall_cycles: 0,
+            work_cycles: 0,
+        }
+    }
+
+    pub fn config(&self) -> &HierarchyConfig {
+        &self.cfg
+    }
+
+    /// One data touch at `addr`. Probes L1→L2→LLC→DRAM, installing the
+    /// line at every level on the way back (inclusive). Accumulates
+    /// work + stall cycles.
+    #[inline]
+    pub fn access(&mut self, addr: u64) {
+        self.work_cycles += self.cfg.work_cycles_per_access;
+        if self.l1.access(addr) {
+            // L1 hit cost is part of the pipeline; no stall.
+            return;
+        }
+        if self.l2.access(addr) {
+            self.stall_cycles += self.cfg.l2.hit_latency;
+            return;
+        }
+        if self.llc.access(addr) {
+            self.stall_cycles += self.cfg.llc.hit_latency;
+            return;
+        }
+        self.dram_accesses += 1;
+        self.stall_cycles += self.cfg.dram_latency;
+    }
+
+    /// Touch a byte range (line-granular expansion).
+    pub fn access_range(&mut self, addr: u64, bytes: u64) {
+        let line = self.cfg.l1.line_size as u64;
+        let first = addr / line;
+        let last = (addr + bytes.max(1) - 1) / line;
+        for l in first..=last {
+            self.access(l * line);
+        }
+    }
+
+    pub fn stats(&self) -> HierarchyStats {
+        HierarchyStats {
+            l1: self.l1.stats,
+            l2: self.l2.stats,
+            llc: self.llc.stats,
+            dram_accesses: self.dram_accesses,
+            stall_cycles: self.stall_cycles,
+            work_cycles: self.work_cycles,
+        }
+    }
+
+    pub fn flush(&mut self) {
+        self.l1.flush();
+        self.l2.flush();
+        self.llc.flush();
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.l1.reset_stats();
+        self.l2.reset_stats();
+        self.llc.reset_stats();
+        self.dram_accesses = 0;
+        self.stall_cycles = 0;
+        self.work_cycles = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inclusive_fill_path() {
+        let mut h = MemoryHierarchy::new(HierarchyConfig::small());
+        h.access(0);
+        let s = h.stats();
+        assert_eq!(s.l1.misses, 1);
+        assert_eq!(s.l2.misses, 1);
+        assert_eq!(s.llc.misses, 1);
+        assert_eq!(s.dram_accesses, 1);
+        // second touch: pure L1 hit, no stall increase
+        let stall_before = s.stall_cycles;
+        h.access(32);
+        let s2 = h.stats();
+        assert_eq!(s2.l1.hits, 1);
+        assert_eq!(s2.stall_cycles, stall_before);
+    }
+
+    #[test]
+    fn stall_share_increases_with_thrashing() {
+        let cfg = HierarchyConfig::small();
+        let mut h = MemoryHierarchy::new(cfg);
+        // sequential working set much larger than LLC → mostly DRAM
+        let llc_lines = (cfg.llc.capacity / cfg.llc.line_size) as u64;
+        for _ in 0..2 {
+            for i in 0..(llc_lines * 4) {
+                h.access(i * 64);
+            }
+        }
+        let big = h.stats().stall_share();
+
+        let mut h2 = MemoryHierarchy::new(cfg);
+        // tiny working set → mostly L1 hits
+        for _ in 0..10_000 {
+            for i in 0..8u64 {
+                h2.access(i * 64);
+            }
+        }
+        let small = h2.stats().stall_share();
+        assert!(big > small + 0.3, "big={big} small={small}");
+    }
+
+    #[test]
+    fn access_range_touches_all_lines() {
+        let mut h = MemoryHierarchy::new(HierarchyConfig::small());
+        h.access_range(10, 200); // spans lines 0..3
+        assert_eq!(h.stats().l1.accesses, 4);
+    }
+
+    #[test]
+    fn reset_and_flush() {
+        let mut h = MemoryHierarchy::new(HierarchyConfig::small());
+        h.access(0);
+        h.reset_stats();
+        assert_eq!(h.stats().total_cycles(), 0);
+        h.flush();
+        h.access(0);
+        assert_eq!(h.stats().dram_accesses, 1);
+    }
+
+    #[test]
+    fn dram_bytes_line_granular() {
+        let mut h = MemoryHierarchy::new(HierarchyConfig::small());
+        h.access(0);
+        assert_eq!(h.stats().dram_bytes(64), 64);
+    }
+}

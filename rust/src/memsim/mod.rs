@@ -1,0 +1,14 @@
+//! Cache/memory-hierarchy simulator substrate.
+//!
+//! Replaces the hardware performance counters the paper measured
+//! (Figs 4–5) with a set-associative LRU model driven by the engine's
+//! actual address stream. See DESIGN.md §4 for why this substitution
+//! preserves the relevant behaviour.
+
+pub mod access;
+pub mod cache;
+pub mod hierarchy;
+
+pub use access::{AddressMap, Region};
+pub use cache::{Cache, CacheConfig, CacheStats};
+pub use hierarchy::{HierarchyConfig, HierarchyStats, MemoryHierarchy};

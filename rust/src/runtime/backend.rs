@@ -1,0 +1,302 @@
+//! Batched XLA execution backend: the L2/L1 compute path driven by the
+//! L3 scheduler.
+//!
+//! Per scheduling round the coordinator asks MPDS for the global block
+//! queue, expands it to a vertex mask, and executes one masked
+//! synchronous step for **all J jobs at once** — the jobs-batched
+//! formulation of CAJS (one fetch of the block-structured operand
+//! serves every job lane; see DESIGN.md §Hardware-Adaptation).
+//!
+//! Semantics note: the rust CPU engine processes scheduled blocks
+//! *sequentially* (Gauss–Seidel flavour — later blocks see earlier
+//! blocks' freshly propagated deltas), the XLA step processes them
+//! *synchronously* (Jacobi). Both converge to the same fixpoint of the
+//! delta-accumulative operator; trajectories differ. Tests compare
+//! fixpoints, not trajectories.
+
+use super::client::{literal_f32, literal_to_vec, RuntimeError, XlaRuntime};
+use crate::engine::{JobSpec, JobState};
+use crate::graph::{BlockPartition, Graph};
+use crate::scheduler::Scheduler;
+use crate::trace::JobKind;
+
+/// The finite +inf stand-in shared with python (`ref.BIG`).
+pub const BIG: f32 = 3.0e38;
+
+/// Dense operands built once per (graph, manifest) pair.
+pub struct DenseOperands {
+    /// Padded vertex count (manifest N).
+    pub n: usize,
+    /// Row-major [N, N]: d/outdeg(u) at (u, v) per edge.
+    pub adj_norm: Vec<f32>,
+    /// Row-major [N, N]: edge weight at (u, v), BIG elsewhere.
+    pub weights: Vec<f32>,
+}
+
+impl DenseOperands {
+    /// Densify a graph. Requires `g.num_vertices() <= n_pad`.
+    pub fn build(g: &Graph, n_pad: usize, damping: f32) -> Self {
+        let n = g.num_vertices();
+        assert!(
+            n <= n_pad,
+            "graph has {n} vertices but artifacts are compiled for N={n_pad}; \
+             regenerate with `make artifacts AOT_N=<larger>`"
+        );
+        let mut adj_norm = vec![0f32; n_pad * n_pad];
+        let mut weights = vec![BIG; n_pad * n_pad];
+        for u in 0..n as u32 {
+            let deg = g.out_degree(u);
+            if deg == 0 {
+                continue;
+            }
+            let share = damping / deg as f32;
+            for (v, w) in g.out_edges(u) {
+                let idx = u as usize * n_pad + v as usize;
+                adj_norm[idx] += share;
+                if w < weights[idx] {
+                    weights[idx] = w;
+                }
+            }
+        }
+        DenseOperands { n: n_pad, adj_norm, weights }
+    }
+}
+
+/// Result of a batched run.
+#[derive(Debug, Clone)]
+pub struct BatchRunResult {
+    /// Final per-job vertex values (length = real vertex count).
+    pub values: Vec<Vec<f32>>,
+    pub rounds: usize,
+    /// Scheduled blocks across all rounds (the MPDS queue consumption).
+    pub blocks_scheduled: u64,
+    /// Wall seconds inside XLA execute calls.
+    pub xla_s: f64,
+}
+
+/// Expand a set of scheduled blocks into a [N]-length f32 vertex mask.
+fn block_mask(part: &BlockPartition, blocks: &[u32], n_pad: usize) -> Vec<f32> {
+    let mut mask = vec![0f32; n_pad];
+    for &b in blocks {
+        let blk = part.block(b);
+        for v in blk.vertices() {
+            mask[v as usize] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Run J concurrent delta-PageRank jobs to convergence on the XLA
+/// backend, with MPDS choosing the masked blocks each round.
+///
+/// `epsilon` is the per-vertex delta convergence threshold (matches
+/// `PageRank::epsilon` on the CPU path).
+pub fn run_pagerank_batch(
+    rt: &mut XlaRuntime,
+    g: &Graph,
+    part: &BlockPartition,
+    sched: &mut Scheduler,
+    num_jobs: usize,
+    epsilon: f32,
+    max_rounds: usize,
+) -> Result<BatchRunResult, RuntimeError> {
+    let j = rt.manifest.jobs;
+    let n_pad = rt.manifest.n;
+    assert!(num_jobs <= j, "artifacts compiled for J={j}, requested {num_jobs}");
+    let n = g.num_vertices();
+    let damping = 0.85f32;
+    let ops = DenseOperands::build(g, n_pad, damping);
+    let adj_lit = literal_f32(&ops.adj_norm, &[n_pad as i64, n_pad as i64])?;
+
+    // Job lanes: real jobs get the delta-PR init; padding lanes are zero.
+    let mut values = vec![0f32; j * n_pad];
+    let mut deltas = vec![0f32; j * n_pad];
+    for lane in 0..num_jobs {
+        for v in 0..n {
+            deltas[lane * n_pad + v] = 1.0 - damping;
+        }
+    }
+    // Shadow JobStates so the (unchanged) scheduler can plan from lanes.
+    let mut shadow: Vec<JobState> = (0..num_jobs)
+        .map(|i| JobState::new(i as u32, JobSpec::new(JobKind::PageRank, 0), g))
+        .collect();
+
+    let mut rounds = 0usize;
+    let mut blocks_scheduled = 0u64;
+    let mut xla_s = 0.0f64;
+    while rounds < max_rounds {
+        // sync lanes -> shadow states for planning
+        for (i, js) in shadow.iter_mut().enumerate() {
+            js.values.copy_from_slice(&values[i * n_pad..i * n_pad + n]);
+            js.deltas.copy_from_slice(&deltas[i * n_pad..i * n_pad + n]);
+            js.converged = js.active_count() == 0;
+        }
+        if shadow.iter().all(|s| s.converged) {
+            break;
+        }
+        let plan = sched.plan_global_queue(g, part, &shadow);
+        if plan.is_empty() {
+            break;
+        }
+        let blocks: Vec<u32> = plan.iter().map(|e| e.block).collect();
+        blocks_scheduled += blocks.len() as u64;
+        let mask = block_mask(part, &blocks, n_pad);
+
+        let t0 = std::time::Instant::now();
+        let out = rt.execute(
+            "pagerank_step",
+            &[
+                literal_f32(&values, &[j as i64, n_pad as i64])?,
+                literal_f32(&deltas, &[j as i64, n_pad as i64])?,
+                adj_lit.clone(),
+                literal_f32(&mask, &[n_pad as i64])?,
+            ],
+        )?;
+        xla_s += t0.elapsed().as_secs_f64();
+        values = literal_to_vec(&out[0])?;
+        deltas = literal_to_vec(&out[1])?;
+        // clamp sub-epsilon deltas of *masked* vertices is unnecessary:
+        // convergence is defined by |delta| <= epsilon below.
+        rounds += 1;
+
+        // convergence on the real lanes
+        let all_small = (0..num_jobs).all(|lane| {
+            deltas[lane * n_pad..lane * n_pad + n].iter().all(|d| d.abs() <= epsilon)
+        });
+        if all_small {
+            break;
+        }
+    }
+
+    let out_values = (0..num_jobs)
+        .map(|lane| values[lane * n_pad..lane * n_pad + n].to_vec())
+        .collect();
+    Ok(BatchRunResult { values: out_values, rounds, blocks_scheduled, xla_s })
+}
+
+/// Run J concurrent SSSP jobs (one source each) to convergence on the
+/// XLA backend with full-graph masks (synchronous Bellman-Ford,
+/// batched over jobs). Returns hop-weighted distances.
+pub fn run_sssp_batch(
+    rt: &mut XlaRuntime,
+    g: &Graph,
+    part: &BlockPartition,
+    sched: &mut Scheduler,
+    sources: &[u32],
+    max_rounds: usize,
+) -> Result<BatchRunResult, RuntimeError> {
+    let j = rt.manifest.jobs;
+    let n_pad = rt.manifest.n;
+    assert!(sources.len() <= j);
+    let n = g.num_vertices();
+    let ops = DenseOperands::build(g, n_pad, 0.85);
+    let w_lit = literal_f32(&ops.weights, &[n_pad as i64, n_pad as i64])?;
+
+    let mut dist = vec![BIG; j * n_pad];
+    for (lane, &s) in sources.iter().enumerate() {
+        dist[lane * n_pad + s as usize] = 0.0;
+    }
+    // Shadow states: values = previous dist, deltas = current dist, so
+    // is_active (delta < value) flags exactly the vertices that improved
+    // last round and MPDS prioritizes the moving frontier.
+    let mut shadow: Vec<JobState> = sources
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| JobState::new(i as u32, JobSpec::new(JobKind::Sssp, s), g))
+        .collect();
+    for (lane, js) in shadow.iter_mut().enumerate() {
+        js.values.fill(f32::INFINITY);
+        js.deltas.fill(f32::INFINITY);
+        js.deltas[sources[lane] as usize] = 0.0;
+    }
+
+    let mut rounds = 0usize;
+    let mut blocks_scheduled = 0u64;
+    let mut xla_s = 0.0f64;
+    while rounds < max_rounds {
+        if shadow.iter().all(|s| s.active_count() == 0) {
+            break;
+        }
+        let plan = sched.plan_global_queue(g, part, &shadow);
+        if plan.is_empty() {
+            break;
+        }
+        // For SSSP relaxation the mask marks *sources to relax from*:
+        // the union of scheduled blocks (where frontiers live).
+        let blocks: Vec<u32> = plan.iter().map(|e| e.block).collect();
+        blocks_scheduled += blocks.len() as u64;
+        let mask = block_mask(part, &blocks, n_pad);
+
+        let t0 = std::time::Instant::now();
+        let out = rt.execute(
+            "sssp_step",
+            &[
+                literal_f32(&dist, &[j as i64, n_pad as i64])?,
+                w_lit.clone(),
+                literal_f32(&mask, &[n_pad as i64])?,
+            ],
+        )?;
+        xla_s += t0.elapsed().as_secs_f64();
+        let new_dist = literal_to_vec(&out[0])?;
+        // update shadows: improved = new < old
+        for (lane, js) in shadow.iter_mut().enumerate() {
+            let off = lane * n_pad;
+            for v in 0..n {
+                let old = dist[off + v];
+                let new = new_dist[off + v];
+                js.values[v] = if old >= BIG { f32::INFINITY } else { old };
+                js.deltas[v] = if new < old { new } else { f32::INFINITY };
+            }
+        }
+        dist = new_dist;
+        rounds += 1;
+    }
+
+    let out_values = (0..sources.len())
+        .map(|lane| {
+            dist[lane * n_pad..lane * n_pad + n]
+                .iter()
+                .map(|&d| if d >= BIG * 0.99 { f32::INFINITY } else { d })
+                .collect()
+        })
+        .collect();
+    Ok(BatchRunResult { values: out_values, rounds, blocks_scheduled, xla_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn dense_operands_shape_and_content() {
+        let g = generate::road_grid(4, 4, 1);
+        let ops = DenseOperands::build(&g, 32, 0.85);
+        assert_eq!(ops.adj_norm.len(), 32 * 32);
+        // vertex 0 has out-degree 2 → each edge share = 0.425
+        let row0: f32 = ops.adj_norm[0..32].iter().sum();
+        assert!((row0 - 0.85).abs() < 1e-5, "row sums to damping, got {row0}");
+        // weights finite exactly on edges
+        let finite = ops.weights.iter().filter(|w| **w < BIG).count();
+        assert_eq!(finite, g.num_edges());
+    }
+
+    #[test]
+    #[should_panic(expected = "compiled for N")]
+    fn oversized_graph_rejected() {
+        let g = generate::erdos_renyi(100, 300, 2);
+        DenseOperands::build(&g, 64, 0.85);
+    }
+
+    #[test]
+    fn block_mask_marks_exact_vertices() {
+        let g = generate::erdos_renyi(128, 512, 3);
+        let part = crate::graph::BlockPartition::by_vertex_count(&g, 32);
+        let mask = block_mask(&part, &[1, 3], 256);
+        for v in 0..128u32 {
+            let expect = part.block_of(v) == 1 || part.block_of(v) == 3;
+            assert_eq!(mask[v as usize] > 0.0, expect);
+        }
+        assert!(mask[128..].iter().all(|&m| m == 0.0));
+    }
+}

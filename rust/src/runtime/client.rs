@@ -1,0 +1,109 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT). Executables
+//! are compiled on first use and cached by entry name; the request path
+//! is pure rust — python never runs here.
+
+use super::manifest::{Manifest, ManifestError};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error(transparent)]
+    Manifest(#[from] ManifestError),
+    #[error("entry {0}: expected {1} outputs, got {2}")]
+    Arity(String, usize, usize),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Compile-once, execute-many PJRT session over an artifact directory.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest. Compilation is
+    /// lazy (per entry, on first execute).
+    pub fn new(artifact_dir: &Path) -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            artifact_dir.display()
+        );
+        Ok(XlaRuntime { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Create from the default artifact directory.
+    pub fn from_default_dir() -> Result<Self, RuntimeError> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    /// Compile (or fetch cached) an entry's executable.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        if !self.executables.contains_key(name) {
+            let entry = self.manifest.entry(name)?;
+            let path = entry.file.clone();
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("artifact path utf-8"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            log::info!("compiled {name} in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an entry with the given input literals; returns the
+    /// flattened tuple elements (AOT lowers with `return_tuple=True`).
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let expected_outputs = self.manifest.entry(name)?.outputs;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != expected_outputs {
+            return Err(RuntimeError::Arity(name.to_string(), expected_outputs, parts.len()));
+        }
+        Ok(parts)
+    }
+
+    /// Force-compile every manifest entry (startup warm-up).
+    pub fn warmup(&mut self) -> Result<(), RuntimeError> {
+        let names: Vec<String> =
+            self.manifest.entries.iter().map(|e| e.name.clone()).collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat row-major slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, RuntimeError> {
+    let expected: i64 = dims.iter().product();
+    assert_eq!(expected as usize, data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Read back an f32 literal into a Vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>, RuntimeError> {
+    Ok(lit.to_vec::<f32>()?)
+}

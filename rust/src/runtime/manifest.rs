@@ -1,0 +1,161 @@
+//! AOT artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py`. The rust runtime never guesses shapes — it
+//! reads them from here.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: usize,
+    pub outputs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// J: job lanes baked into the artifacts.
+    pub jobs: usize,
+    /// N: padded vertex count.
+    pub n: usize,
+    /// Kernel tile size (documentation / perf estimation).
+    pub tile: usize,
+    pub entries: Vec<Entry>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest parse: {0}")]
+    Parse(String),
+    #[error("missing field {0}")]
+    Missing(&'static str),
+    #[error("entry {0} not found in manifest")]
+    NoEntry(String),
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Json::parse(&text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let jobs = v.get("jobs").and_then(Json::as_usize).ok_or(ManifestError::Missing("jobs"))?;
+        let n = v.get("n").and_then(Json::as_usize).ok_or(ManifestError::Missing("n"))?;
+        let tile = v.get("tile").and_then(Json::as_usize).ok_or(ManifestError::Missing("tile"))?;
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or(ManifestError::Missing("entries"))?
+        {
+            entries.push(Entry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or(ManifestError::Missing("entries[].name"))?
+                    .to_string(),
+                file: dir.join(
+                    e.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or(ManifestError::Missing("entries[].file"))?,
+                ),
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_usize)
+                    .ok_or(ManifestError::Missing("entries[].inputs"))?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_usize)
+                    .ok_or(ManifestError::Missing("entries[].outputs"))?,
+            });
+        }
+        Ok(Manifest { jobs, n, tile, entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry, ManifestError> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| ManifestError::NoEntry(name.to_string()))
+    }
+
+    /// Default artifact dir: `$TLSCHED_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TLSCHED_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if artifacts exist (used by tests to skip gracefully before
+    /// `make artifacts` has run).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tlsched-man-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn parses_wellformed_manifest() {
+        let dir = tmp("ok");
+        write_manifest(
+            &dir,
+            r#"{"jobs": 8, "n": 1024, "tile": 256,
+                "entries": [{"name": "pagerank_step", "file": "p.hlo.txt",
+                             "inputs": 4, "outputs": 2, "hlo_bytes": 100}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.jobs, 8);
+        assert_eq!(m.n, 1024);
+        let e = m.entry("pagerank_step").unwrap();
+        assert_eq!(e.inputs, 4);
+        assert_eq!(e.outputs, 2);
+        assert!(e.file.ends_with("p.hlo.txt"));
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let dir = tmp("bad");
+        write_manifest(&dir, r#"{"jobs": 8}"#);
+        assert!(matches!(Manifest::load(&dir), Err(ManifestError::Missing(_))));
+    }
+
+    #[test]
+    fn availability_check() {
+        let dir = tmp("avail");
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        assert!(!Manifest::available(&dir));
+        write_manifest(&dir, "{}");
+        assert!(Manifest::available(&dir));
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if !Manifest::available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entry("pagerank_step").is_ok());
+        assert!(m.entry("sssp_step").is_ok());
+        for e in &m.entries {
+            assert!(e.file.exists(), "artifact file missing: {:?}", e.file);
+        }
+    }
+}

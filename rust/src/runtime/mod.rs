@@ -1,0 +1,12 @@
+//! Runtime layer: AOT artifact manifest, PJRT client wrapper
+//! (compile-once / execute-many) and the batched XLA backend that runs
+//! the L1/L2 kernels under L3 scheduling. Python never executes here —
+//! artifacts are produced once by `make artifacts`.
+
+pub mod backend;
+pub mod client;
+pub mod manifest;
+
+pub use backend::{run_pagerank_batch, run_sssp_batch, BatchRunResult, DenseOperands, BIG};
+pub use client::{literal_f32, literal_to_vec, RuntimeError, XlaRuntime};
+pub use manifest::{Entry, Manifest, ManifestError};

@@ -1,0 +1,108 @@
+//! CAJS — convergence-aware job scheduling (paper §4.3, workflow
+//! step ④).
+//!
+//! The job-level half of two-level scheduling: once MPDS has chosen a
+//! block, the job controller dispatches *every* job that is still
+//! unconverged on that block to process it back-to-back, while the
+//! block's structure data is hot in cache. One memory fetch of the
+//! block then serves N jobs instead of N fetches at N different times
+//! (the paper's Fig. 8 concurrent access model).
+
+use crate::engine::{process_block, JobState, Probe};
+use crate::graph::{BlockPartition, Graph};
+
+/// Counters for one dispatched block.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DispatchStats {
+    /// Jobs that processed the block in this dispatch.
+    pub jobs_dispatched: u64,
+    /// Vertex updates across those jobs.
+    pub updates: u64,
+    /// Edges traversed across those jobs.
+    pub edges: u64,
+}
+
+/// Dispatch one block to all unconverged jobs (those with at least one
+/// active vertex in the block). Jobs process the block sequentially —
+/// the cache-residency model of the paper; the simulated (and real)
+/// reuse comes from consecutive accesses to the same structure data.
+///
+/// Returns per-dispatch stats; `jobs_dispatched == 0` means the block
+/// was converged for everyone and the caller should not count it as a
+/// load.
+pub fn dispatch_block<P: Probe>(
+    g: &Graph,
+    part: &BlockPartition,
+    block: u32,
+    jobs: &mut [JobState],
+    probe: &mut P,
+) -> DispatchStats {
+    let b = part.block(block);
+    let mut stats = DispatchStats::default();
+    for job in jobs.iter_mut() {
+        if job.converged {
+            continue;
+        }
+        // convergence-awareness: skip jobs with nothing to do here
+        // (O(1) with tracking, scan otherwise)
+        if job.summary_of(b).node_un == 0 {
+            continue;
+        }
+        let s = process_block(g, b, job, probe);
+        stats.jobs_dispatched += 1;
+        stats.updates += s.updates;
+        stats.edges += s.edges;
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{JobSpec, JobState, NoProbe};
+    use crate::graph::{generate, BlockPartition};
+    use crate::trace::JobKind;
+
+    #[test]
+    fn dispatches_only_unconverged_jobs() {
+        let g = generate::erdos_renyi(128, 512, 1);
+        let part = BlockPartition::by_vertex_count(&g, 32);
+        let mut jobs = vec![
+            JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g),
+            JobState::new(1, JobSpec::new(JobKind::Sssp, 5), &g),
+        ];
+        // At init, only the SSSP source's block is active for job 1, so
+        // a different block dispatches just the PageRank job. Check the
+        // far block FIRST — processing the source block would scatter
+        // SSSP deltas into other blocks.
+        let b = part.block_of(5);
+        let far = if b == 0 { part.num_blocks() as u32 - 1 } else { 0 };
+        let s2 = dispatch_block(&g, &part, far, &mut jobs, &mut NoProbe);
+        assert_eq!(s2.jobs_dispatched, 1, "only pagerank active in far block");
+        let s = dispatch_block(&g, &part, b, &mut jobs, &mut NoProbe);
+        assert_eq!(s.jobs_dispatched, 2, "both jobs active in source block");
+    }
+
+    #[test]
+    fn converged_jobs_skipped_entirely() {
+        let g = generate::erdos_renyi(64, 256, 2);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut jobs = vec![JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g)];
+        jobs[0].converged = true;
+        let s = dispatch_block(&g, &part, 0, &mut jobs, &mut NoProbe);
+        assert_eq!(s.jobs_dispatched, 0);
+        assert_eq!(s.updates, 0);
+    }
+
+    #[test]
+    fn dispatch_accumulates_stats_across_jobs() {
+        let g = generate::erdos_renyi(64, 256, 3);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut jobs: Vec<JobState> = (0..4)
+            .map(|i| JobState::new(i, JobSpec::new(JobKind::PageRank, 0), &g))
+            .collect();
+        let s = dispatch_block(&g, &part, 0, &mut jobs, &mut NoProbe);
+        assert_eq!(s.jobs_dispatched, 4);
+        assert_eq!(s.updates, 4 * 64);
+    }
+}

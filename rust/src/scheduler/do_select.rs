@@ -1,0 +1,211 @@
+//! The DO ("dual-factors order") selection algorithm — paper Function 2.
+//!
+//! Extracting a job's top-q priority blocks must not cost a full
+//! O(B_N log B_N) sort. The heuristic: sample `s` (default 500) pairs,
+//! sort the sample descending, estimate the q-th priority threshold as
+//! the `⌈q·s/B_N⌉`-th sample, take every block beating the threshold,
+//! and sort only that subset. Expected cost O(B_N) + O(q log q)
+//! (paper Eq. 2).
+
+use super::pair::{Cbp, PriorityPair};
+use crate::util::rng::Pcg32;
+
+/// Default sample-set size from §4.2.2 ("default 500").
+pub const DEFAULT_SAMPLES: usize = 500;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DoSelector {
+    pub cbp: Cbp,
+    pub samples: usize,
+}
+
+impl Default for DoSelector {
+    fn default() -> Self {
+        DoSelector { cbp: Cbp::default(), samples: DEFAULT_SAMPLES }
+    }
+}
+
+impl DoSelector {
+    pub fn new(cbp: Cbp, samples: usize) -> Self {
+        assert!(samples >= 1);
+        DoSelector { cbp, samples }
+    }
+
+    /// Function 2: approximately select the top-`q` pairs of `ptable`
+    /// in priority-descending order. Converged blocks are never
+    /// returned. The result length is *approximately* q (that is the
+    /// point of the heuristic); callers must not rely on exactness.
+    pub fn select_top_q(
+        &self,
+        ptable: &[PriorityPair],
+        q: usize,
+        rng: &mut Pcg32,
+    ) -> Vec<PriorityPair> {
+        let b_n = ptable.len();
+        if b_n == 0 || q == 0 {
+            return Vec::new();
+        }
+        // Small tables: exact sort is cheaper than sampling machinery.
+        if b_n <= self.samples || b_n <= q {
+            let mut all: Vec<PriorityPair> =
+                ptable.iter().copied().filter(|p| !p.is_converged()).collect();
+            self.cbp.sort_desc(&mut all);
+            all.truncate(q);
+            return all;
+        }
+        // 1-2: sample s pairs, sort descending.
+        let mut samples: Vec<PriorityPair> = rng
+            .sample_indices(b_n, self.samples)
+            .into_iter()
+            .map(|i| ptable[i])
+            .collect();
+        self.cbp.sort_desc(&mut samples);
+        // 3-4: threshold = (q*s/B_N)-th sample.
+        let cutindex = (q * self.samples / b_n).min(samples.len() - 1);
+        let thresh = samples[cutindex];
+        // 5-11: single pass, keep pairs beating the threshold.
+        let mut queue: Vec<PriorityPair> = ptable
+            .iter()
+            .copied()
+            .filter(|r| !r.is_converged() && self.cbp.higher(r, &thresh))
+            .collect();
+        // 12: sort the (≈q-sized) queue.
+        self.cbp.sort_desc(&mut queue);
+        // Guard against pathological threshold estimates producing much
+        // more than q — cap at 2q to bound downstream cost (the paper
+        // only needs "approximately q").
+        queue.truncate(2 * q);
+        // Guard the opposite tail: if the estimate returned nothing but
+        // active blocks exist, fall back to the sorted sample's top.
+        if queue.is_empty() {
+            queue = samples.into_iter().filter(|p| !p.is_converged()).take(q).collect();
+        }
+        queue
+    }
+
+    /// Exact top-q by full sort — the comparison baseline for the
+    /// do_algorithm bench and recall tests.
+    pub fn exact_top_q(&self, ptable: &[PriorityPair], q: usize) -> Vec<PriorityPair> {
+        let mut all: Vec<PriorityPair> =
+            ptable.iter().copied().filter(|p| !p.is_converged()).collect();
+        self.cbp.sort_desc(&mut all);
+        all.truncate(q);
+        all
+    }
+}
+
+/// The paper's queue-length rule (Eq. 4): q = C · B_N / √V_N with
+/// C = 100 by default, derived from PrIter's node-grained
+/// Q = C·√V_N divided by the block size V_B.
+pub fn optimal_queue_length(c: f64, num_blocks: usize, num_vertices: usize) -> usize {
+    if num_vertices == 0 || num_blocks == 0 {
+        return 1;
+    }
+    let q = c * num_blocks as f64 / (num_vertices as f64).sqrt();
+    (q.round() as usize).clamp(1, num_blocks)
+}
+
+/// Default C from §5.1.
+pub const DEFAULT_C: f64 = 100.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_table(n: usize, seed: u64) -> Vec<PriorityPair> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|i| {
+                PriorityPair::new(i as u32, rng.gen_range(100), rng.gen_f64() * 10.0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_tables_are_exact() {
+        let table = make_table(50, 1);
+        let sel = DoSelector::default();
+        let mut rng = Pcg32::seeded(2);
+        let approx = sel.select_top_q(&table, 10, &mut rng);
+        let exact = sel.exact_top_q(&table, 10);
+        assert_eq!(approx.len(), 10);
+        for (a, b) in approx.iter().zip(&exact) {
+            assert_eq!(a.block, b.block);
+        }
+    }
+
+    #[test]
+    fn recall_on_large_tables() {
+        let table = make_table(20_000, 3);
+        let sel = DoSelector::default();
+        let mut rng = Pcg32::seeded(4);
+        let q = 200;
+        let approx = sel.select_top_q(&table, q, &mut rng);
+        let exact = sel.exact_top_q(&table, q);
+        let approx_ids: std::collections::HashSet<u32> =
+            approx.iter().map(|p| p.block).collect();
+        let hits = exact.iter().filter(|p| approx_ids.contains(&p.block)).count();
+        let recall = hits as f64 / q as f64;
+        assert!(recall > 0.6, "recall {recall} too low");
+        // and the selected set is ranked
+        for w in approx.windows(2) {
+            assert!(!sel.cbp.higher(&w[1], &w[0]), "output must be descending");
+        }
+    }
+
+    #[test]
+    fn output_size_near_q() {
+        let table = make_table(10_000, 5);
+        let sel = DoSelector::default();
+        let mut rng = Pcg32::seeded(6);
+        let q = 100;
+        let approx = sel.select_top_q(&table, q, &mut rng);
+        assert!(
+            approx.len() >= q / 4 && approx.len() <= 2 * q,
+            "len {} should be near q={q}",
+            approx.len()
+        );
+    }
+
+    #[test]
+    fn converged_blocks_never_selected() {
+        let mut table = make_table(5000, 7);
+        for p in table.iter_mut().take(4000) {
+            p.node_un = 0;
+            p.p_mean = 0.0;
+        }
+        let sel = DoSelector::default();
+        let mut rng = Pcg32::seeded(8);
+        let out = sel.select_top_q(&table, 50, &mut rng);
+        assert!(!out.is_empty());
+        assert!(out.iter().all(|p| p.node_un > 0));
+    }
+
+    #[test]
+    fn all_converged_gives_empty() {
+        let table: Vec<PriorityPair> =
+            (0..1000).map(|i| PriorityPair::new(i, 0, 0.0)).collect();
+        let sel = DoSelector::default();
+        let mut rng = Pcg32::seeded(9);
+        assert!(sel.select_top_q(&table, 10, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn q_zero_and_empty_table() {
+        let sel = DoSelector::default();
+        let mut rng = Pcg32::seeded(10);
+        assert!(sel.select_top_q(&[], 10, &mut rng).is_empty());
+        let table = make_table(100, 11);
+        assert!(sel.select_top_q(&table, 0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn optimal_queue_length_formula() {
+        // q = C * B_N / sqrt(V_N): 100 * 256 / sqrt(65536) = 100
+        assert_eq!(optimal_queue_length(100.0, 256, 65_536), 100);
+        // clamps to [1, B_N]
+        assert_eq!(optimal_queue_length(100.0, 4, 65_536), 2);
+        assert_eq!(optimal_queue_length(1000.0, 16, 256), 16);
+        assert_eq!(optimal_queue_length(0.0001, 100, 1 << 20), 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! De_Gl_Priority — merging per-job queues into the global priority
+//! queue (paper §4.2.3, Fig. 7, workflow step ③).
+//!
+//! Each job queue assigns ranks Pri = q..1 top-to-bottom; a block's
+//! global score is the sum of its ranks across all job queues. The top
+//! α·q blocks by cumulative rank fill most of the global queue; the
+//! remaining (1−α)·q slots are *reserved* for blocks that are the top
+//! priority of some individual job but did not make the cumulative
+//! cut — the paper's gain-vs-individual-cost trade-off.
+
+use super::individual::JobQueue;
+use std::collections::HashMap;
+
+/// Default reserved-split threshold α from §4.2.3 ("set the α default
+/// to 0.8").
+pub const DEFAULT_ALPHA: f64 = 0.8;
+
+/// One entry of the global queue with its provenance (for metrics and
+/// tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GlobalEntry {
+    pub block: u32,
+    /// Cumulative rank Σ Pri over job queues.
+    pub score: u64,
+    /// Number of job queues containing this block.
+    pub jobs: u32,
+    /// True if admitted through the reserved individual-top slots.
+    pub reserved: bool,
+}
+
+/// De_Gl_Priority: synthesize the global queue of length ≤ q.
+///
+/// `alpha ∈ (0, 1]` splits the queue: ⌈α·q⌉ cumulative-score slots,
+/// the rest reserved for individual-top blocks missing from the cut.
+/// If no such blocks exist the reserved slots fall back to cumulative
+/// order (the queue is never artificially truncated).
+pub fn de_gl_priority(queues: &[JobQueue], q: usize, alpha: f64) -> Vec<GlobalEntry> {
+    assert!((0.0..=1.0).contains(&alpha) && alpha > 0.0, "alpha in (0,1]");
+    if q == 0 || queues.is_empty() {
+        return Vec::new();
+    }
+    // Accumulate Σ Pri and occurrence counts.
+    let mut scores: HashMap<u32, (u64, u32)> = HashMap::new();
+    for jq in queues {
+        for (pos, pair) in jq.queue.iter().enumerate() {
+            let e = scores.entry(pair.block).or_insert((0, 0));
+            e.0 += jq.rank_of_position(pos);
+            e.1 += 1;
+        }
+    }
+    let mut by_score: Vec<GlobalEntry> = scores
+        .iter()
+        .map(|(&block, &(score, jobs))| GlobalEntry { block, score, jobs, reserved: false })
+        .collect();
+    // Descending score; ties by block id for determinism.
+    by_score.sort_by(|a, b| b.score.cmp(&a.score).then(a.block.cmp(&b.block)));
+
+    let main_slots = ((alpha * q as f64).ceil() as usize).min(q);
+    let mut global: Vec<GlobalEntry> = by_score.iter().copied().take(main_slots).collect();
+    let mut present: std::collections::HashSet<u32> =
+        global.iter().map(|e| e.block).collect();
+
+    // Reserved slots: walk each job's queue top-down, admitting the
+    // highest-priority block of each job that is not yet present.
+    let mut reserved_candidates: Vec<GlobalEntry> = Vec::new();
+    for jq in queues {
+        for pair in jq.queue.iter() {
+            if !present.contains(&pair.block) {
+                let (score, jobs) = scores[&pair.block];
+                reserved_candidates.push(GlobalEntry {
+                    block: pair.block,
+                    score,
+                    jobs,
+                    reserved: true,
+                });
+                present.insert(pair.block);
+                break; // only the top missing block per job
+            }
+        }
+    }
+    // Highest cumulative score among candidates first.
+    reserved_candidates.sort_by(|a, b| b.score.cmp(&a.score).then(a.block.cmp(&b.block)));
+    for e in reserved_candidates {
+        if global.len() >= q {
+            break;
+        }
+        global.push(e);
+    }
+    // Fall back to cumulative order if reserved slots remain unused.
+    if global.len() < q {
+        for e in by_score.iter().skip(main_slots) {
+            if global.len() >= q {
+                break;
+            }
+            if present.insert(e.block) {
+                global.push(*e);
+            }
+        }
+    }
+    global
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::pair::PriorityPair;
+
+    fn jq(job: u32, blocks: &[u32]) -> JobQueue {
+        JobQueue {
+            job,
+            queue: blocks
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| PriorityPair::new(b, 10 - i as u32, 1.0))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn cumulative_rank_example_from_fig7() {
+        // Two jobs with queues of length 3. Block D appears at position
+        // 0 in job0 (Pri=3) and position 1 in job1 (Pri=2) → score 5.
+        let queues = vec![jq(0, &[13, 7, 2]), jq(1, &[9, 13, 2])];
+        let global = de_gl_priority(&queues, 3, 1.0);
+        // 13: 3 + 2 = 5; 9: 3; 7: 2; 2: 1 + 1 = 2
+        assert_eq!(global[0].block, 13);
+        assert_eq!(global[0].score, 5);
+        assert_eq!(global[0].jobs, 2);
+        assert_eq!(global[1].block, 9);
+    }
+
+    #[test]
+    fn reserved_slots_admit_individual_tops() {
+        // job2's top block (99) is in no other queue and scores low
+        // globally; α = 0.5 of q = 4 leaves 2 reserved slots.
+        let queues = vec![
+            jq(0, &[1, 2, 3, 4]),
+            jq(1, &[1, 2, 3, 4]),
+            jq(2, &[99, 1, 2, 3]),
+        ];
+        let global = de_gl_priority(&queues, 4, 0.5);
+        assert!(global.len() == 4);
+        let blocks: Vec<u32> = global.iter().map(|e| e.block).collect();
+        assert!(blocks.contains(&99), "reserved slot must admit job2's top: {blocks:?}");
+        let e99 = global.iter().find(|e| e.block == 99).unwrap();
+        assert!(e99.reserved);
+    }
+
+    #[test]
+    fn alpha_one_is_pure_cumulative() {
+        let queues = vec![jq(0, &[1, 2, 3]), jq(1, &[4, 5, 6])];
+        let global = de_gl_priority(&queues, 4, 1.0);
+        assert_eq!(global.len(), 4);
+        assert!(global.iter().all(|e| !e.reserved));
+        // ties broken by id: 1 and 4 both score 3 → 1 first
+        assert_eq!(global[0].block, 1);
+        assert_eq!(global[1].block, 4);
+    }
+
+    #[test]
+    fn queue_never_exceeds_q() {
+        let queues = vec![jq(0, &[1, 2, 3, 4, 5, 6, 7, 8])];
+        assert_eq!(de_gl_priority(&queues, 3, 0.8).len(), 3);
+    }
+
+    #[test]
+    fn fills_from_cumulative_when_no_reserved_needed() {
+        // single job: its top is always in the main cut, reserved slots
+        // fall back to cumulative order
+        let queues = vec![jq(0, &[5, 6, 7, 8])];
+        let global = de_gl_priority(&queues, 4, 0.5);
+        assert_eq!(global.len(), 4);
+        let blocks: Vec<u32> = global.iter().map(|e| e.block).collect();
+        assert_eq!(blocks, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(de_gl_priority(&[], 5, 0.8).is_empty());
+        let queues = vec![JobQueue { job: 0, queue: vec![] }];
+        assert!(de_gl_priority(&queues, 5, 0.8).is_empty());
+        let queues = vec![jq(0, &[1])];
+        assert!(de_gl_priority(&queues, 0, 0.8).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn alpha_zero_rejected() {
+        de_gl_priority(&[jq(0, &[1])], 2, 0.0);
+    }
+
+    #[test]
+    fn no_duplicate_blocks_in_global_queue() {
+        let queues = vec![
+            jq(0, &[1, 2, 3, 4, 5]),
+            jq(1, &[5, 4, 3, 2, 1]),
+            jq(2, &[9, 1, 5, 3, 7]),
+        ];
+        let global = de_gl_priority(&queues, 8, 0.6);
+        let mut seen = std::collections::HashSet::new();
+        for e in &global {
+            assert!(seen.insert(e.block), "duplicate block {} in queue", e.block);
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Block priority pairs and the CBP comparator (paper Function 1,
+//! Table 1).
+//!
+//! A block's priority is the pair ⟨Node_un, P̄_value⟩: the number of
+//! unconverged nodes and their mean priority value. CBP ("Compare two
+//! Blocks' Priority") orders two pairs:
+//!
+//! * If the means differ by more than the ε tie-band, the larger mean
+//!   wins (cases 1, 3, 4 of Table 1).
+//! * Inside the band (case 2, means close), fall back to the *total*
+//!   priority `Node_un × P̄` — a block with many moderately-active
+//!   nodes outranks one with few similarly-active nodes.
+//!
+//! The paper sets ε = 0.2 × P̄ of the larger-mean block.
+
+use crate::engine::BlockSummary;
+
+/// ε coefficient from §4.2.2: "we set ε = 0.2 × P̄_value_a".
+pub const DEFAULT_EPSILON_FRAC: f64 = 0.2;
+
+/// Priority pair of one block for one job (or globally).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriorityPair {
+    pub block: u32,
+    pub node_un: u32,
+    pub p_mean: f64,
+}
+
+impl PriorityPair {
+    pub fn new(block: u32, node_un: u32, p_mean: f64) -> Self {
+        PriorityPair { block, node_un, p_mean }
+    }
+
+    pub fn from_summary(block: u32, s: &BlockSummary) -> Self {
+        PriorityPair { block, node_un: s.node_un, p_mean: s.p_mean() }
+    }
+
+    /// Total priority `Node_un × P̄` (the case-2 tiebreak quantity).
+    pub fn total(&self) -> f64 {
+        self.node_un as f64 * self.p_mean
+    }
+
+    /// A block with zero unconverged nodes never needs scheduling.
+    pub fn is_converged(&self) -> bool {
+        self.node_un == 0
+    }
+}
+
+/// CBP comparator with configurable ε fraction.
+#[derive(Debug, Clone, Copy)]
+pub struct Cbp {
+    pub epsilon_frac: f64,
+}
+
+impl Default for Cbp {
+    fn default() -> Self {
+        Cbp { epsilon_frac: DEFAULT_EPSILON_FRAC }
+    }
+}
+
+impl Cbp {
+    pub fn new(epsilon_frac: f64) -> Self {
+        assert!(epsilon_frac >= 0.0);
+        Cbp { epsilon_frac }
+    }
+
+    /// Disable the tie-band entirely (ablation: pure mean ordering).
+    pub fn mean_only() -> Self {
+        Cbp { epsilon_frac: 0.0 }
+    }
+
+    /// Function 1: is the priority of `a` higher than `b`?
+    ///
+    /// Follows the paper's pseudo-code: normalize so `a` has the larger
+    /// mean (tracking a negation flag), then when `a` has *fewer*
+    /// unconverged nodes and the means are within ε while the total
+    /// priority says otherwise, flip the verdict.
+    pub fn higher(&self, a: &PriorityPair, b: &PriorityPair) -> bool {
+        // Converged blocks always lose (not in the paper's pseudo-code,
+        // but required for well-defined behaviour at the tail).
+        match (a.is_converged(), b.is_converged()) {
+            (true, true) => return false,
+            (true, false) => return false,
+            (false, true) => return true,
+            _ => {}
+        }
+        let mut state = true;
+        let (hi, lo) = if a.p_mean < b.p_mean {
+            state = !state;
+            (b, a)
+        } else {
+            (a, b)
+        };
+        // hi has the larger (or equal) mean. Case 2 check: hi has fewer
+        // unconverged nodes, means within ε, totals inverted.
+        if hi.node_un < lo.node_un {
+            let eps = self.epsilon_frac * hi.p_mean;
+            if hi.p_mean - lo.p_mean < eps && hi.total() < lo.total() {
+                state = !state;
+            }
+        }
+        state
+    }
+
+    /// Total-order comparator for sorts: `a` before `b` iff
+    /// `higher(a, b)`. Ties (equal pairs) break by block id for
+    /// determinism.
+    pub fn cmp(&self, a: &PriorityPair, b: &PriorityPair) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        if a.node_un == b.node_un && a.p_mean == b.p_mean {
+            return a.block.cmp(&b.block);
+        }
+        if self.higher(a, b) {
+            Ordering::Less
+        } else if self.higher(b, a) {
+            Ordering::Greater
+        } else {
+            // mutual non-dominance (exactly equal under CBP): stable id order
+            a.block.cmp(&b.block)
+        }
+    }
+
+    /// Sort pairs in priority-descending order (highest priority first).
+    ///
+    /// CBP is *not* transitive in general — the ε tie-band can create
+    /// preference cycles (A ≻ B ≻ C ≻ A), which is inherent to the
+    /// paper's Function 1, so `slice::sort_by` (which panics on total-
+    /// order violations) cannot be used. The paper just "adds Function 1
+    /// to the sorting algorithm"; we do the same with a stable bottom-up
+    /// merge sort, which is well-defined for any comparator: the output
+    /// is some deterministic order consistent with most pairwise
+    /// preferences.
+    pub fn sort_desc(&self, pairs: &mut [PriorityPair]) {
+        merge_sort_by(pairs, |a, b| self.cmp(a, b) != std::cmp::Ordering::Greater);
+    }
+}
+
+/// Stable bottom-up merge sort with a boolean "a precedes-or-ties b"
+/// predicate. Never panics regardless of predicate consistency (unlike
+/// `slice::sort_by`), which CBP's intransitive ε-band requires.
+fn merge_sort_by<F: Fn(&PriorityPair, &PriorityPair) -> bool>(xs: &mut [PriorityPair], le: F) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    let mut buf = xs.to_vec();
+    let mut width = 1usize;
+    while width < n {
+        let mut lo = 0usize;
+        while lo < n {
+            let mid = (lo + width).min(n);
+            let hi = (lo + 2 * width).min(n);
+            // merge xs[lo..mid] and xs[mid..hi] into buf[lo..hi]
+            let (mut i, mut j, mut k) = (lo, mid, lo);
+            while i < mid && j < hi {
+                if le(&xs[i], &xs[j]) {
+                    buf[k] = xs[i];
+                    i += 1;
+                } else {
+                    buf[k] = xs[j];
+                    j += 1;
+                }
+                k += 1;
+            }
+            buf[k..k + (mid - i)].copy_from_slice(&xs[i..mid]);
+            let k2 = k + (mid - i);
+            buf[k2..k2 + (hi - j)].copy_from_slice(&xs[j..hi]);
+            lo = hi;
+        }
+        xs.copy_from_slice(&buf);
+        width <<= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(node_un: u32, p_mean: f64) -> PriorityPair {
+        PriorityPair::new(0, node_un, p_mean)
+    }
+
+    // Table 1, case 1: P̄_a > P̄_b and Node_a > Node_b ⇒ P_a > P_b
+    #[test]
+    fn table1_case1() {
+        let cbp = Cbp::default();
+        assert!(cbp.higher(&pair(10, 5.0), &pair(5, 3.0)));
+        assert!(!cbp.higher(&pair(5, 3.0), &pair(10, 5.0)));
+    }
+
+    // Table 1, case 3: equal means, more unconverged nodes wins
+    #[test]
+    fn table1_case3() {
+        let cbp = Cbp::default();
+        // equal means → band is triggered only when node_un differs and
+        // totals invert: a has fewer nodes, same mean → lower total → flip
+        assert!(cbp.higher(&pair(10, 4.0), &pair(5, 4.0)));
+        assert!(!cbp.higher(&pair(5, 4.0), &pair(10, 4.0)));
+    }
+
+    // Table 1, case 4: equal node counts, larger mean wins
+    #[test]
+    fn table1_case4() {
+        let cbp = Cbp::default();
+        assert!(cbp.higher(&pair(8, 5.0), &pair(8, 3.0)));
+        assert!(!cbp.higher(&pair(8, 3.0), &pair(8, 5.0)));
+    }
+
+    // Table 1, case 2 inside the ε band: totals decide
+    #[test]
+    fn table1_case2_within_band_total_decides() {
+        let cbp = Cbp::default();
+        // a: mean 5.0, 2 nodes → total 10; b: mean 4.5, 10 nodes → total 45
+        // means differ by 0.5 < ε = 1.0 → fall back to totals → b wins
+        let a = pair(2, 5.0);
+        let b = pair(10, 4.5);
+        assert!(cbp.higher(&b, &a));
+        assert!(!cbp.higher(&a, &b));
+    }
+
+    // Case 2 outside the ε band: mean decides despite totals
+    #[test]
+    fn table1_case2_outside_band_mean_decides() {
+        let cbp = Cbp::default();
+        // a: mean 10, 1 node (total 10); b: mean 2, 100 nodes (total 200)
+        // means differ by 8 > ε = 2 → a wins on mean
+        let a = pair(1, 10.0);
+        let b = pair(100, 2.0);
+        assert!(cbp.higher(&a, &b));
+        assert!(!cbp.higher(&b, &a));
+    }
+
+    #[test]
+    fn converged_blocks_always_lose() {
+        let cbp = Cbp::default();
+        assert!(cbp.higher(&pair(1, 0.001), &pair(0, 0.0)));
+        assert!(!cbp.higher(&pair(0, 0.0), &pair(1, 100.0)));
+        assert!(!cbp.higher(&pair(0, 0.0), &pair(0, 0.0)));
+    }
+
+    #[test]
+    fn mean_only_ablation_ignores_totals() {
+        let cbp = Cbp::mean_only();
+        let a = pair(2, 5.0);
+        let b = pair(10, 4.5);
+        // with ε = 0 the band never triggers → a wins on mean
+        assert!(cbp.higher(&a, &b));
+    }
+
+    #[test]
+    fn antisymmetric_on_random_pairs() {
+        let mut rng = crate::util::rng::Pcg32::seeded(99);
+        for _ in 0..2000 {
+            let a = pair(rng.gen_range(20), rng.gen_f64() * 10.0);
+            let b = pair(rng.gen_range(20), rng.gen_f64() * 10.0);
+            let cbp = Cbp::default();
+            if a.node_un == 0 && b.node_un == 0 {
+                continue;
+            }
+            // exactly one of higher(a,b) / higher(b,a) unless equal pairs
+            if (a.node_un, a.p_mean) != (b.node_un, b.p_mean) {
+                assert_ne!(
+                    cbp.higher(&a, &b),
+                    cbp.higher(&b, &a),
+                    "CBP must be antisymmetric for {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sort_desc_is_deterministic_and_ranked() {
+        let cbp = Cbp::default();
+        let mut pairs = vec![
+            PriorityPair::new(0, 0, 0.0),
+            PriorityPair::new(1, 10, 4.5),
+            PriorityPair::new(2, 2, 5.0),
+            PriorityPair::new(3, 8, 5.0),
+        ];
+        cbp.sort_desc(&mut pairs);
+        // case-2 band: block 1 (mean 4.5, total 45) beats both blocks
+        // with mean 5.0 (totals 10 and 40) — the band favours totals.
+        assert_eq!(pairs[0].block, 1);
+        // equal means 5.0: more unconverged nodes wins (case 3)
+        assert_eq!(pairs[1].block, 3);
+        assert_eq!(pairs[2].block, 2);
+        assert_eq!(pairs.last().unwrap().block, 0); // converged last
+    }
+
+    #[test]
+    fn total_and_helpers() {
+        let p = pair(4, 2.5);
+        assert_eq!(p.total(), 10.0);
+        assert!(!p.is_converged());
+        assert!(pair(0, 0.0).is_converged());
+    }
+}

@@ -1,0 +1,550 @@
+//! Scheduling policies: the paper's two-level scheduler and the three
+//! baselines it is evaluated against.
+//!
+//! * `Independent` — the "current mode" of Fig. 3: every job sweeps the
+//!   whole graph on its own schedule (job-major), maximizing redundant
+//!   memory traffic.
+//! * `PrIterPerJob` — PrIter-style prioritized iteration, per job: each
+//!   job processes its own top-q blocks, still job-major (priority but
+//!   no cross-job sharing).
+//! * `RoundRobinBlocks` — CAJS without MPDS: block-major dispatch with
+//!   cache sharing but no prioritization (ablation).
+//! * `TwoLevel` — the paper: MPDS chooses blocks (per-job DO queues →
+//!   global queue), CAJS dispatches all unconverged jobs per block.
+
+use super::cajs::dispatch_block;
+use super::do_select::{optimal_queue_length, DoSelector, DEFAULT_C};
+use super::global::{de_gl_priority, DEFAULT_ALPHA};
+use super::individual::{de_in_priority, JobQueue};
+use super::pair::Cbp;
+use crate::engine::{process_block, JobState, Probe};
+use crate::graph::{BlockPartition, Graph};
+use crate::util::rng::Pcg32;
+
+/// Which policy the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Independent,
+    PrIterPerJob,
+    RoundRobinBlocks,
+    TwoLevel,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 4] = [
+        SchedulerKind::Independent,
+        SchedulerKind::PrIterPerJob,
+        SchedulerKind::RoundRobinBlocks,
+        SchedulerKind::TwoLevel,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Independent => "independent",
+            SchedulerKind::PrIterPerJob => "priter",
+            SchedulerKind::RoundRobinBlocks => "roundrobin",
+            SchedulerKind::TwoLevel => "twolevel",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SchedulerKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// Tunables of the two-level scheduler (paper defaults).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub kind: SchedulerKind,
+    /// Queue-length constant C (Eq. 4), default 100.
+    pub c: f64,
+    /// Global-queue reserved split α, default 0.8.
+    pub alpha: f64,
+    /// CBP tie-band fraction ε, default 0.2.
+    pub epsilon_frac: f64,
+    /// DO sample-set size, default 500.
+    pub samples: usize,
+    /// Override q directly (None ⇒ Eq. 4).
+    pub q_override: Option<usize>,
+    /// Maintain per-block summaries incrementally in the executor
+    /// instead of rescanning lanes each round. Wins in the long-tail
+    /// regime (many rounds, few active vertices); costs ~2 extra
+    /// comparisons per edge. See EXPERIMENTS.md §Perf for the
+    /// measurement behind the default.
+    pub incremental_summaries: bool,
+    pub seed: u64,
+}
+
+impl SchedulerConfig {
+    pub fn new(kind: SchedulerKind) -> Self {
+        SchedulerConfig {
+            kind,
+            c: DEFAULT_C,
+            alpha: DEFAULT_ALPHA,
+            epsilon_frac: super::pair::DEFAULT_EPSILON_FRAC,
+            samples: super::do_select::DEFAULT_SAMPLES,
+            q_override: None,
+            incremental_summaries: false,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Aggregate counters of one scheduling round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundStats {
+    /// Block loads: distinct (visit) transfers of a block toward the
+    /// CPU. The redundancy metric: independent execution loads a block
+    /// once per job; CAJS once per round.
+    pub block_loads: u64,
+    /// (job, block) executions.
+    pub dispatches: u64,
+    pub updates: u64,
+    pub edges: u64,
+}
+
+impl RoundStats {
+    pub fn merge(&mut self, o: RoundStats) {
+        self.block_loads += o.block_loads;
+        self.dispatches += o.dispatches;
+        self.updates += o.updates;
+        self.edges += o.edges;
+    }
+}
+
+/// Policy executor. Owns the RNG used by DO sampling so rounds are
+/// deterministic given the config seed.
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    selector: DoSelector,
+    rng: Pcg32,
+    /// Wall seconds spent in MPDS planning (De_In/De_Gl), accumulated
+    /// across rounds; drained by `take_plan_seconds`.
+    plan_seconds: f64,
+    /// Cached vertex→block map for enabling incremental job tracking
+    /// (perf pass): rebuilt when the partition changes.
+    block_map: Option<std::sync::Arc<[u32]>>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        let selector = DoSelector::new(Cbp::new(cfg.epsilon_frac), cfg.samples);
+        let rng = Pcg32::new(cfg.seed, 0x5c);
+        Scheduler { cfg, selector, rng, plan_seconds: 0.0, block_map: None }
+    }
+
+    /// Ensure every job carries incremental block summaries against
+    /// this partition (EXPERIMENTS.md §Perf: turns MPDS planning from
+    /// O(V_N) to O(B_N) per job per round).
+    fn ensure_tracking(&mut self, part: &BlockPartition, jobs: &mut [JobState]) {
+        let stale = match &self.block_map {
+            Some(m) => m.len() != part.vertex_block.len(),
+            None => true,
+        };
+        if stale {
+            self.block_map = Some(std::sync::Arc::from(part.vertex_block.as_slice()));
+        }
+        let map = self.block_map.as_ref().unwrap();
+        for j in jobs.iter_mut() {
+            let ok = j
+                .tracking
+                .as_ref()
+                .is_some_and(|t| std::sync::Arc::ptr_eq(&t.block_of, map));
+            if !ok {
+                j.enable_tracking(map.clone(), part.num_blocks());
+            }
+        }
+    }
+
+    /// Drain the accumulated MPDS planning time (scheduling overhead
+    /// metric for EXPERIMENTS.md §Perf).
+    pub fn take_plan_seconds(&mut self) -> f64 {
+        std::mem::take(&mut self.plan_seconds)
+    }
+
+    /// Queue length for the current graph/partition (Eq. 4 unless
+    /// overridden).
+    pub fn queue_length(&self, part: &BlockPartition, num_vertices: usize) -> usize {
+        self.cfg
+            .q_override
+            .unwrap_or_else(|| optimal_queue_length(self.cfg.c, part.num_blocks(), num_vertices))
+    }
+
+    /// Execute one scheduling round for all jobs. Converged jobs are
+    /// skipped. Returns work counters; `updates == 0` implies every job
+    /// has fully converged (checked by the caller via
+    /// `JobState::check_converged`).
+    pub fn round<P: Probe>(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        probe: &mut P,
+    ) -> RoundStats {
+        // Independent never reads summaries — tracking is pure cost there.
+        if self.cfg.incremental_summaries && self.cfg.kind != SchedulerKind::Independent {
+            self.ensure_tracking(part, jobs);
+        }
+        let stats = match self.cfg.kind {
+            SchedulerKind::Independent => self.round_independent(g, part, jobs, probe),
+            SchedulerKind::PrIterPerJob => self.round_priter(g, part, jobs, probe),
+            SchedulerKind::RoundRobinBlocks => self.round_roundrobin(g, part, jobs, probe),
+            SchedulerKind::TwoLevel => self.round_twolevel(g, part, jobs, probe),
+        };
+        for j in jobs.iter_mut() {
+            if !j.converged {
+                j.rounds += 1;
+            }
+        }
+        stats
+    }
+
+    /// Baseline: job-major full sweeps. Every active job traverses all
+    /// blocks before the next job starts — the maximal-redundancy
+    /// "current mode" of the paper's Fig. 3.
+    fn round_independent<P: Probe>(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        probe: &mut P,
+    ) -> RoundStats {
+        let mut stats = RoundStats::default();
+        for job in jobs.iter_mut() {
+            if job.converged {
+                continue;
+            }
+            for b in &part.blocks {
+                let s = process_block(g, b, job, probe);
+                stats.block_loads += 1;
+                stats.dispatches += 1;
+                stats.updates += s.updates;
+                stats.edges += s.edges;
+            }
+        }
+        stats
+    }
+
+    /// Baseline: PrIter-style per-job prioritized iteration, job-major.
+    /// Each job extracts its own top-q blocks (DO) and processes them,
+    /// independently of other jobs.
+    fn round_priter<P: Probe>(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        probe: &mut P,
+    ) -> RoundStats {
+        let q = self.queue_length(part, g.num_vertices());
+        let mut stats = RoundStats::default();
+        for job in jobs.iter_mut() {
+            if job.converged {
+                continue;
+            }
+            let t0 = std::time::Instant::now();
+            let jq = de_in_priority(job, part, &self.selector, q, &mut self.rng);
+            self.plan_seconds += t0.elapsed().as_secs_f64();
+            for pair in &jq.queue {
+                let b = part.block(pair.block);
+                let s = process_block(g, b, job, probe);
+                stats.block_loads += 1;
+                stats.dispatches += 1;
+                stats.updates += s.updates;
+                stats.edges += s.edges;
+            }
+        }
+        stats
+    }
+
+    /// Ablation: CAJS sharing without MPDS priorities — walk all blocks
+    /// in id order, dispatching every unconverged job per block.
+    fn round_roundrobin<P: Probe>(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        probe: &mut P,
+    ) -> RoundStats {
+        let mut stats = RoundStats::default();
+        for id in 0..part.num_blocks() as u32 {
+            let d = dispatch_block(g, part, id, jobs, probe);
+            if d.jobs_dispatched > 0 {
+                stats.block_loads += 1;
+                stats.dispatches += d.jobs_dispatched;
+                stats.updates += d.updates;
+                stats.edges += d.edges;
+            }
+        }
+        stats
+    }
+
+    /// The paper: MPDS (per-job DO queues → global queue with α split)
+    /// + CAJS (block-major dispatch of all unconverged jobs per block,
+    /// in global priority order).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): the per-job pair tables built
+    /// for step ② are *reused* as the convergence-awareness check of
+    /// step ④ — re-scanning each block's delta lane per dispatched job
+    /// was the second-largest cost of a round. The table is one step
+    /// stale for blocks activated mid-round; those are picked up next
+    /// round (same semantics as the paper's per-iteration planning).
+    fn round_twolevel<P: Probe>(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        probe: &mut P,
+    ) -> RoundStats {
+        let q = self.queue_length(part, g.num_vertices());
+        let t0 = std::time::Instant::now();
+        // Step ②: De_In_Priority per job (keeping the pair tables).
+        let mut live: Vec<usize> = Vec::with_capacity(jobs.len());
+        let mut ptables: Vec<Vec<super::pair::PriorityPair>> = Vec::new();
+        let mut queues: Vec<JobQueue> = Vec::new();
+        for (ji, j) in jobs.iter().enumerate() {
+            if j.converged {
+                continue;
+            }
+            let ptable = super::individual::build_ptable(j, part);
+            let queue = self.selector.select_top_q(&ptable, q, &mut self.rng);
+            queues.push(JobQueue { job: j.id, queue });
+            ptables.push(ptable);
+            live.push(ji);
+        }
+        // Step ③: De_Gl_Priority.
+        let global = de_gl_priority(&queues, q, self.cfg.alpha);
+        self.plan_seconds += t0.elapsed().as_secs_f64();
+        // Step ④: CAJS dispatch in global priority order, using the
+        // step-② tables as the convergence-awareness filter.
+        let mut stats = RoundStats::default();
+        for entry in &global {
+            let mut jobs_dispatched = 0u64;
+            for (k, &ji) in live.iter().enumerate() {
+                if ptables[k][entry.block as usize].node_un == 0 {
+                    continue;
+                }
+                let s = process_block(g, part.block(entry.block), &mut jobs[ji], probe);
+                jobs_dispatched += 1;
+                stats.updates += s.updates;
+                stats.edges += s.edges;
+            }
+            if jobs_dispatched > 0 {
+                stats.block_loads += 1;
+                stats.dispatches += jobs_dispatched;
+            }
+        }
+        stats
+    }
+
+    /// Expose the global queue MPDS would produce right now (used by
+    /// tests, metrics and the runtime backend to prefetch blocks).
+    pub fn plan_global_queue(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &[JobState],
+    ) -> Vec<super::global::GlobalEntry> {
+        let q = self.queue_length(part, g.num_vertices());
+        let queues: Vec<JobQueue> = jobs
+            .iter()
+            .filter(|j| !j.converged)
+            .map(|j| de_in_priority(j, part, &self.selector, q, &mut self.rng))
+            .collect();
+        de_gl_priority(&queues, q, self.cfg.alpha)
+    }
+}
+
+/// Run `jobs` to convergence under a policy, returning
+/// (rounds, aggregate stats). The workhorse of the convergence and
+/// throughput benches.
+pub fn run_to_convergence<P: Probe>(
+    sched: &mut Scheduler,
+    g: &Graph,
+    part: &BlockPartition,
+    jobs: &mut [JobState],
+    probe: &mut P,
+    max_rounds: usize,
+) -> (usize, RoundStats) {
+    let mut total = RoundStats::default();
+    let mut updates_before: Vec<u64> = jobs.iter().map(|j| j.updates).collect();
+    for round in 0..max_rounds {
+        let s = sched.round(g, part, jobs, probe);
+        total.merge(s);
+        let mut all_done = true;
+        for (ji, j) in jobs.iter_mut().enumerate() {
+            if !j.converged {
+                // Lazy convergence check (perf pass): a job that consumed
+                // vertices this round is almost always still live — skip
+                // its O(n) scan and re-check next round once it goes
+                // quiet. A globally zero-update round is definitive.
+                let quiet = j.updates == updates_before[ji];
+                if s.updates == 0 || (quiet && j.active_count_fast() == 0) {
+                    j.converged = true;
+                }
+                all_done &= j.converged;
+            }
+            updates_before[ji] = j.updates;
+        }
+        if all_done {
+            return (round + 1, total);
+        }
+    }
+    (max_rounds, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::DeltaProgram;
+    use crate::engine::{JobSpec, JobState, NoProbe};
+    use crate::graph::{generate, BlockPartition};
+    use crate::trace::JobKind;
+
+    fn mixed_jobs(g: &crate::graph::Graph, n: usize) -> Vec<JobState> {
+        (0..n)
+            .map(|i| {
+                let kind = match i % 3 {
+                    0 => JobKind::PageRank,
+                    1 => JobKind::Sssp,
+                    _ => JobKind::Bfs,
+                };
+                JobState::new(i as u32, JobSpec::new(kind, (i * 37) as u32), g)
+            })
+            .collect()
+    }
+
+    /// All four policies must reach the same per-job fixpoints.
+    #[test]
+    fn all_policies_reach_same_fixpoint() {
+        let g = generate::rmat(9, 8, 21);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for kind in SchedulerKind::ALL {
+            let mut jobs = mixed_jobs(&g, 3);
+            let mut sched = Scheduler::new(SchedulerConfig::new(kind));
+            let (_rounds, stats) =
+                run_to_convergence(&mut sched, &g, &part, &mut jobs, &mut NoProbe, 100_000);
+            assert!(stats.updates > 0);
+            assert!(jobs.iter().all(|j| j.converged), "{} did not converge", kind.name());
+            let values: Vec<Vec<f32>> = jobs.iter().map(|j| j.values.clone()).collect();
+            match &reference {
+                None => reference = Some(values),
+                Some(r) => {
+                    for (ji, (a, b)) in r.iter().zip(&values).enumerate() {
+                        let tol = jobs[ji].program.value_tolerance();
+                        for (x, y) in a.iter().zip(b) {
+                            let (xf, yf) = (x.is_finite(), y.is_finite());
+                            assert_eq!(xf, yf, "{}", kind.name());
+                            if xf {
+                                assert!(
+                                    (x - y).abs() < tol,
+                                    "{}: job {ji}: {x} vs {y}",
+                                    kind.name()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn twolevel_loads_fewer_blocks_than_independent() {
+        let g = generate::rmat(10, 8, 31);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+
+        let mut jobs_a = mixed_jobs(&g, 6);
+        let mut ind = Scheduler::new(SchedulerConfig::new(SchedulerKind::Independent));
+        let (_, sa) =
+            run_to_convergence(&mut ind, &g, &part, &mut jobs_a, &mut NoProbe, 100_000);
+
+        let mut jobs_b = mixed_jobs(&g, 6);
+        let mut two = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let (_, sb) =
+            run_to_convergence(&mut two, &g, &part, &mut jobs_b, &mut NoProbe, 100_000);
+
+        assert!(
+            sb.block_loads < sa.block_loads,
+            "two-level {} loads vs independent {}",
+            sb.block_loads,
+            sa.block_loads
+        );
+        // sharing: two-level serves >1 job per load on average
+        let share_two = sb.dispatches as f64 / sb.block_loads as f64;
+        assert!(share_two > 1.2, "sharing factor {share_two}");
+    }
+
+    #[test]
+    fn prioritized_policies_work_is_comparable_or_less() {
+        // NOTE: Eq. 4 gives q >= B_N for graphs under ~10k vertices, so
+        // force a selective queue to exercise the prioritized path. The
+        // headline win is measured by the convergence bench; this test
+        // asserts prioritization does not blow up total work.
+        let g = generate::rmat(10, 8, 41);
+        let part = BlockPartition::by_vertex_count(&g, 32);
+
+        let mut jobs_a = vec![JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g)];
+        let mut ind = Scheduler::new(SchedulerConfig::new(SchedulerKind::Independent));
+        let (_, sa) =
+            run_to_convergence(&mut ind, &g, &part, &mut jobs_a, &mut NoProbe, 100_000);
+
+        let mut jobs_b = vec![JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g)];
+        let mut cfg = SchedulerConfig::new(SchedulerKind::PrIterPerJob);
+        cfg.q_override = Some(part.num_blocks() / 4);
+        let mut pri = Scheduler::new(cfg);
+        let (_, sb) =
+            run_to_convergence(&mut pri, &g, &part, &mut jobs_b, &mut NoProbe, 100_000);
+
+        assert!(jobs_b[0].converged);
+        assert!(
+            (sb.updates as f64) < (sa.updates as f64) * 1.25,
+            "priter updates {} vs independent {}",
+            sb.updates,
+            sa.updates
+        );
+    }
+
+    #[test]
+    fn round_counts_rounds_on_jobs() {
+        let g = generate::erdos_renyi(128, 512, 51);
+        let part = BlockPartition::by_vertex_count(&g, 32);
+        let mut jobs = mixed_jobs(&g, 2);
+        let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        sched.round(&g, &part, &mut jobs, &mut NoProbe);
+        assert!(jobs.iter().all(|j| j.rounds == 1));
+    }
+
+    #[test]
+    fn plan_global_queue_orders_by_score() {
+        let g = generate::rmat(9, 8, 61);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let jobs = mixed_jobs(&g, 4);
+        let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let plan = sched.plan_global_queue(&g, &part, &jobs);
+        assert!(!plan.is_empty());
+        for w in plan.windows(2) {
+            if !w[0].reserved && !w[1].reserved {
+                assert!(w[0].score >= w[1].score);
+            }
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SchedulerKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn q_override_respected() {
+        let g = generate::erdos_renyi(1024, 4096, 71);
+        let part = BlockPartition::by_vertex_count(&g, 32);
+        let mut cfg = SchedulerConfig::new(SchedulerKind::TwoLevel);
+        cfg.q_override = Some(3);
+        let sched = Scheduler::new(cfg);
+        assert_eq!(sched.queue_length(&part, 1024), 3);
+    }
+}

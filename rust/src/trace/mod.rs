@@ -1,0 +1,375 @@
+//! Workload traces: synthetic substitute for the paper's one-month
+//! production trace from "a social network company" (Figs 1–2).
+//!
+//! Jobs arrive by an inhomogeneous Poisson process whose rate follows a
+//! diurnal curve (two daily peaks, weekday/weekend modulation), with
+//! log-normal-ish service times. The calibration targets the paper's
+//! published summary statistics: peak concurrency > 20, mean
+//! concurrency ≈ 8.7 jobs, and ≥ 2 concurrent jobs ≈ 83.4% of time.
+
+use crate::util::rng::Pcg32;
+use crate::util::stats::Histogram;
+
+/// Kind of analytics job, matching the algorithms the engine implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    PageRank,
+    Sssp,
+    Wcc,
+    Bfs,
+    Ppr,
+}
+
+impl JobKind {
+    pub const ALL: [JobKind; 5] =
+        [JobKind::PageRank, JobKind::Sssp, JobKind::Wcc, JobKind::Bfs, JobKind::Ppr];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::PageRank => "pagerank",
+            JobKind::Sssp => "sssp",
+            JobKind::Wcc => "wcc",
+            JobKind::Bfs => "bfs",
+            JobKind::Ppr => "ppr",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// One job arrival in the trace.
+#[derive(Debug, Clone)]
+pub struct TraceJob {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Nominal service time in seconds (used for concurrency stats and
+    /// by replay when jobs are simulated rather than executed).
+    pub service_s: f64,
+    pub kind: JobKind,
+    /// Source vertex for traversal jobs (SSSP/BFS/PPR).
+    pub source: u32,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Trace length in days.
+    pub days: f64,
+    /// Mean arrival rate (jobs/hour) averaged over the diurnal cycle.
+    pub mean_rate_per_hour: f64,
+    /// Peak-to-trough ratio of the diurnal modulation.
+    pub diurnal_depth: f64,
+    /// Mean service time in seconds.
+    pub mean_service_s: f64,
+    /// Dispersion of service times (sigma of log-normal).
+    pub service_sigma: f64,
+    /// Overnight base level of the diurnal curve (relative to bump
+    /// height); lower = deeper trough = more near-idle seconds.
+    pub trough_base: f64,
+    /// Number of vertices (for sampling job sources).
+    pub num_vertices: u32,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    /// Calibrated to reproduce the paper's Fig 1–2 summary stats; see
+    /// the fig1_fig2_workload bench and EXPERIMENTS.md.
+    fn default() -> Self {
+        TraceConfig {
+            days: 7.0,
+            mean_rate_per_hour: 40.0,
+            diurnal_depth: 6.0,
+            mean_service_s: 820.0,
+            service_sigma: 0.8,
+            trough_base: 0.02,
+            num_vertices: 1 << 16,
+            seed: 2018,
+        }
+    }
+}
+
+/// Unnormalized diurnal shape: a small overnight base plus two gaussian
+/// bumps (morning ~10h, evening ~20h). The deep trough is what produces
+/// the paper's ~17% of seconds with fewer than two concurrent jobs.
+fn diurnal_raw(hour: f64, depth: f64, base: f64) -> f64 {
+    let bump = |center: f64, width: f64| {
+        let d = (hour - center).abs().min(24.0 - (hour - center).abs());
+        (-0.5 * (d / width).powi(2)).exp()
+    };
+    base + depth * (0.9 * bump(10.5, 2.25) + 1.0 * bump(19.5, 2.8))
+}
+
+/// Diurnal rate multiplier at time `t` seconds, normalized numerically
+/// to mean 1 over 24h so `mean_rate_per_hour` stays the true mean.
+fn diurnal_factor(t_s: f64, depth: f64, base: f64) -> f64 {
+    let hour = (t_s / 3600.0) % 24.0;
+    let mean: f64 =
+        (0..1440).map(|i| diurnal_raw(i as f64 / 60.0, depth, base)).sum::<f64>() / 1440.0;
+    diurnal_raw(hour, depth, base) / mean
+}
+
+/// Generate a job-arrival trace by thinning a homogeneous Poisson
+/// process against the diurnal curve.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceJob> {
+    let mut rng = Pcg32::new(cfg.seed, 0x77);
+    let horizon_s = cfg.days * 86_400.0;
+    let base_rate_s = cfg.mean_rate_per_hour / 3600.0;
+    // thinning needs a majorant: diurnal factor max
+    let max_factor = (0..2400)
+        .map(|i| diurnal_factor(i as f64 * 36.0, cfg.diurnal_depth, cfg.trough_base))
+        .fold(0.0f64, f64::max);
+    let lambda_max = base_rate_s * max_factor;
+    let mut jobs = Vec::new();
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    while t < horizon_s {
+        t += rng.gen_exp(lambda_max);
+        if t >= horizon_s {
+            break;
+        }
+        let accept =
+            diurnal_factor(t, cfg.diurnal_depth, cfg.trough_base) * base_rate_s / lambda_max;
+        if !rng.gen_bool(accept) {
+            continue;
+        }
+        // log-normal service time with mean cfg.mean_service_s
+        let mu = cfg.mean_service_s.ln() - cfg.service_sigma * cfg.service_sigma / 2.0;
+        let service = (mu + cfg.service_sigma * rng.gen_normal()).exp();
+        let kind = JobKind::ALL[rng.gen_index(JobKind::ALL.len())];
+        jobs.push(TraceJob {
+            id,
+            arrival_s: t,
+            service_s: service.clamp(5.0, 6.0 * 3600.0),
+            kind,
+            source: rng.gen_range(cfg.num_vertices.max(1)),
+        });
+        id += 1;
+    }
+    jobs
+}
+
+/// Summary statistics over a trace — the quantities the paper reports.
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    /// Hourly arrival counts (Fig 1 series).
+    pub hourly_counts: Vec<u32>,
+    /// Max concurrency observed at any 1s sample.
+    pub peak_concurrency: u32,
+    /// Mean concurrency over 1s samples.
+    pub mean_concurrency: f64,
+    /// Fraction of 1s samples with at least `k` concurrent jobs, k=1..32
+    /// (Fig 2 CCDF).
+    pub concurrency_ccdf: Vec<(u32, f64)>,
+}
+
+/// Compute concurrency statistics by sweeping arrival/departure events.
+pub fn analyze(jobs: &[TraceJob], horizon_s: f64) -> TraceStats {
+    // hourly arrivals
+    let hours = (horizon_s / 3600.0).ceil() as usize;
+    let mut hourly = vec![0u32; hours.max(1)];
+    for j in jobs {
+        let h = (j.arrival_s / 3600.0) as usize;
+        if h < hourly.len() {
+            hourly[h] += 1;
+        }
+    }
+    // concurrency via event sweep sampled each second
+    let mut events: Vec<(f64, i32)> = Vec::with_capacity(jobs.len() * 2);
+    for j in jobs {
+        events.push((j.arrival_s, 1));
+        events.push((j.arrival_s + j.service_s, -1));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut hist = Histogram::new(0.0, 64.0, 64);
+    let mut cur = 0i64;
+    let mut peak = 0i64;
+    let mut ei = 0usize;
+    let total_samples = horizon_s as u64;
+    let mut sum = 0f64;
+    for s in 0..total_samples {
+        let t = s as f64;
+        while ei < events.len() && events[ei].0 <= t {
+            cur += events[ei].1 as i64;
+            ei += 1;
+        }
+        peak = peak.max(cur);
+        sum += cur as f64;
+        hist.push(cur as f64);
+    }
+    let mean = sum / total_samples.max(1) as f64;
+    let ccdf_raw = hist.ccdf();
+    let concurrency_ccdf: Vec<(u32, f64)> =
+        ccdf_raw.iter().map(|&(edge, p)| (edge as u32, p)).take(33).collect();
+    TraceStats {
+        hourly_counts: hourly,
+        peak_concurrency: peak as u32,
+        mean_concurrency: mean,
+        concurrency_ccdf,
+    }
+}
+
+impl TraceStats {
+    /// P(concurrency >= k).
+    pub fn p_at_least(&self, k: u32) -> f64 {
+        self.concurrency_ccdf
+            .iter()
+            .find(|&&(edge, _)| edge == k)
+            .map(|&(_, p)| p)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Serialize a trace to JSON-lines for record/replay.
+pub fn to_jsonl(jobs: &[TraceJob]) -> String {
+    use crate::util::json::Json;
+    let mut out = String::new();
+    for j in jobs {
+        out.push_str(
+            &Json::obj(vec![
+                ("id", Json::num(j.id as f64)),
+                ("arrival_s", Json::num(j.arrival_s)),
+                ("service_s", Json::num(j.service_s)),
+                ("kind", Json::str(j.kind.name())),
+                ("source", Json::num(j.source as f64)),
+            ])
+            .to_string(),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+pub fn from_jsonl(s: &str) -> Result<Vec<TraceJob>, String> {
+    use crate::util::json::Json;
+    let mut out = Vec::new();
+    for (i, line) in s.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let get = |k: &str| v.get(k).ok_or_else(|| format!("line {}: missing {k}", i + 1));
+        out.push(TraceJob {
+            id: get("id")?.as_u64().ok_or("id")?,
+            arrival_s: get("arrival_s")?.as_f64().ok_or("arrival_s")?,
+            service_s: get("service_s")?.as_f64().ok_or("service_s")?,
+            kind: JobKind::from_name(get("kind")?.as_str().ok_or("kind")?)
+                .ok_or_else(|| format!("line {}: bad kind", i + 1))?,
+            source: get("source")?.as_u64().ok_or("source")? as u32,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_jobs_in_horizon() {
+        let cfg = TraceConfig { days: 1.0, ..Default::default() };
+        let jobs = generate(&cfg);
+        assert!(!jobs.is_empty());
+        assert!(jobs.iter().all(|j| j.arrival_s < 86_400.0));
+        assert!(jobs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        // roughly mean_rate * 24 arrivals
+        let expected = cfg.mean_rate_per_hour * 24.0;
+        assert!((jobs.len() as f64) > expected * 0.6 && (jobs.len() as f64) < expected * 1.6);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = TraceConfig { days: 0.5, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].arrival_s, b[0].arrival_s);
+    }
+
+    #[test]
+    fn diurnal_peaks_exist() {
+        let depth = 6.0;
+        let at = |h: f64| diurnal_factor(h * 3600.0, depth, 0.04);
+        assert!(at(10.0) > 2.0 * at(3.0), "peak {} trough {}", at(10.0), at(3.0));
+    }
+
+    #[test]
+    fn calibration_matches_paper_stats() {
+        // The paper: peak > 20, mean 8.7, P(>=2) = 83.4%
+        let cfg = TraceConfig { days: 7.0, ..Default::default() };
+        let jobs = generate(&cfg);
+        let stats = analyze(&jobs, cfg.days * 86_400.0);
+        assert!(stats.peak_concurrency > 20, "peak={}", stats.peak_concurrency);
+        assert!(
+            (stats.mean_concurrency - 8.7).abs() < 0.7,
+            "mean={}",
+            stats.mean_concurrency
+        );
+        let p2 = stats.p_at_least(2);
+        assert!((p2 - 0.834).abs() < 0.04, "P(>=2)={p2}");
+    }
+
+    #[test]
+    fn ccdf_monotone_nonincreasing() {
+        let cfg = TraceConfig { days: 1.0, ..Default::default() };
+        let jobs = generate(&cfg);
+        let stats = analyze(&jobs, 86_400.0);
+        for w in stats.concurrency_ccdf.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        assert!((stats.p_at_least(0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let cfg = TraceConfig { days: 0.1, ..Default::default() };
+        let jobs = generate(&cfg);
+        let s = to_jsonl(&jobs);
+        let back = from_jsonl(&s).unwrap();
+        assert_eq!(jobs.len(), back.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.kind, b.kind);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn job_kind_names_roundtrip() {
+        for k in JobKind::ALL {
+            assert_eq!(JobKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(JobKind::from_name("nope"), None);
+    }
+}
+
+#[cfg(test)]
+mod calib {
+    use super::*;
+
+    #[test]
+    #[ignore]
+    fn sweep() {
+        for (w1, w2) in [(2.5, 3.0), (2.0, 2.5), (1.8, 2.2)] {
+            for base in [0.02, 0.04] {
+                for sigma in [0.6, 0.8] {
+                    // temporarily monkey-patch via env is not possible; inline variant:
+                    let cfg = TraceConfig {
+                        service_sigma: sigma,
+                        trough_base: base,
+                        ..Default::default()
+                    };
+                    let _ = (w1, w2);
+                    let jobs = generate(&cfg);
+                    let s = analyze(&jobs, cfg.days * 86_400.0);
+                    println!(
+                        "base={base} sigma={sigma}: peak={} mean={:.2} p2={:.3}",
+                        s.peak_concurrency, s.mean_concurrency, s.p_at_least(2)
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Tiny declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, required options, typed access, and auto-generated `--help`.
+//! Used by the launcher binary, examples and every bench target.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+    required: bool,
+}
+
+/// Declarative argument set. Build with [`ArgSpec::new`], then
+/// [`ArgSpec::parse_env`] or [`ArgSpec::parse_from`].
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    bin: &'static str,
+    about: &'static str,
+    opts: Vec<Spec>,
+    positionals: Vec<Spec>,
+}
+
+/// Parse result with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Names that appeared explicitly on the command line (vs defaults).
+    explicit: std::collections::BTreeSet<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown argument '{0}'")]
+    Unknown(String),
+    #[error("missing value for '--{0}'")]
+    MissingValue(String),
+    #[error("missing required argument '--{0}'")]
+    MissingRequired(String),
+    #[error("invalid value '{1}' for '--{0}': {2}")]
+    Invalid(String, String, String),
+    #[error("help requested")]
+    Help,
+}
+
+impl ArgSpec {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        ArgSpec { bin, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Spec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Spec { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    /// Boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Spec { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    /// Positional argument with default.
+    pub fn pos(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.positionals.push(Spec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [OPTIONS]", self.bin, self.about, self.bin);
+        for p in &self.positionals {
+            s.push_str(&format!(" [{}]", p.name));
+        }
+        s.push_str("\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("--{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("--{} <v> (default {})", o.name, d)
+            } else {
+                format!("--{} <v> (required)", o.name)
+            };
+            s.push_str(&format!("  {left:<38} {}\n", o.help));
+        }
+        for p in &self.positionals {
+            s.push_str(&format!(
+                "  {:<38} {} (default {})\n",
+                p.name,
+                p.help,
+                p.default.as_deref().unwrap_or("-")
+            ));
+        }
+        s
+    }
+
+    /// Parse `std::env::args`, printing usage and exiting on `--help` or error.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(ArgError::Help) => {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn parse_from(&self, argv: &[String]) -> Result<Args, ArgError> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut explicit = std::collections::BTreeSet::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.to_string(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        for p in &self.positionals {
+            if let Some(d) = &p.default {
+                values.insert(p.name.to_string(), d.clone());
+            }
+        }
+
+        let mut pos_idx = 0;
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(ArgError::Help);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| ArgError::Unknown(a.clone()))?;
+                if spec.is_flag {
+                    flags.insert(name.to_string(), true);
+                    explicit.insert(name.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError::MissingValue(name.to_string()))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                    explicit.insert(name.to_string());
+                }
+            } else {
+                let spec = self
+                    .positionals
+                    .get(pos_idx)
+                    .ok_or_else(|| ArgError::Unknown(a.clone()))?;
+                values.insert(spec.name.to_string(), a.clone());
+                explicit.insert(spec.name.to_string());
+                pos_idx += 1;
+            }
+            i += 1;
+        }
+
+        for o in &self.opts {
+            if o.required && !values.contains_key(o.name) {
+                return Err(ArgError::MissingRequired(o.name.to_string()));
+            }
+        }
+        Ok(Args { values, flags, explicit })
+    }
+}
+
+impl Args {
+    /// True when the user explicitly passed this argument (as opposed
+    /// to it holding its declared default) — used for config-file vs
+    /// flag precedence.
+    pub fn was_set(&self, name: &str) -> bool {
+        self.explicit.contains(name)
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("argument '{name}' not declared or missing"))
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse(name)
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name);
+        raw.parse().unwrap_or_else(|e| panic!("--{name}={raw}: {e}"))
+    }
+
+    /// Comma-separated list of T.
+    pub fn list<T: std::str::FromStr>(&self, name: &str) -> Vec<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name);
+        if raw.is_empty() {
+            return Vec::new();
+        }
+        raw.split(',')
+            .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}={raw}: {e}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("jobs", "8", "number of jobs")
+            .opt("graph", "rmat", "graph kind")
+            .flag("verbose", "chatty")
+            .req("out", "output path")
+            .pos("input", "default.txt", "input file")
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse_from(&argv(&["--out", "x.json"])).unwrap();
+        assert_eq!(a.usize("jobs"), 8);
+        assert_eq!(a.str("graph"), "rmat");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.str("out"), "x.json");
+        assert_eq!(a.str("input"), "default.txt");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(
+            spec().parse_from(&argv(&[])),
+            Err(ArgError::MissingRequired(n)) if n == "out"
+        ));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = spec()
+            .parse_from(&argv(&["--jobs=16", "--verbose", "--out=o", "in.txt"]))
+            .unwrap();
+        assert_eq!(a.usize("jobs"), 16);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str("input"), "in.txt");
+    }
+
+    #[test]
+    fn unknown_arg_rejected() {
+        assert!(matches!(
+            spec().parse_from(&argv(&["--nope", "--out", "o"])),
+            Err(ArgError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert!(matches!(spec().parse_from(&argv(&["-h"])), Err(ArgError::Help)));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let s = ArgSpec::new("t", "t").opt("ns", "1,2,4", "sweep");
+        let a = s.parse_from(&argv(&[])).unwrap();
+        assert_eq!(a.list::<usize>("ns"), vec![1, 2, 4]);
+        let a = s.parse_from(&argv(&["--ns", "8, 16"])).unwrap();
+        assert_eq!(a.list::<usize>("ns"), vec![8, 16]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            spec().parse_from(&argv(&["--out"])),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+}

@@ -1,0 +1,231 @@
+//! Minimal benchmarking harness (criterion substitute).
+//!
+//! Each bench target is a `harness = false` binary that uses
+//! [`Bench::run`] for timed microbenchmarks and [`Table`] for printing
+//! paper-style result tables. Results are also exported as JSON lines so
+//! EXPERIMENTS.md numbers are scriptable.
+
+use super::stats::{percentile, Running};
+use std::time::{Duration, Instant};
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Sample {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Benchmark runner: warms up, then measures a target number of
+/// iterations (adaptive to hit ~`target_time` total).
+pub struct Bench {
+    warmup: Duration,
+    target_time: Duration,
+    max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            target_time: Duration::from_secs(1),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(300),
+            max_iters: 100_000,
+        }
+    }
+
+    pub fn with_target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Time `f`, returning aggregate stats. `f` is called repeatedly; use
+    /// `std::hint::black_box` inside to defeat dead-code elimination.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Sample {
+        // Warmup and single-shot estimate.
+        let wstart = Instant::now();
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / warm_iters as f64;
+        // Choose batch count so each timed batch is ≥ ~1µs (timer noise floor).
+        let batch = ((1_000.0 / per_iter).ceil() as u64).clamp(1, 10_000);
+        let mut durations_ns: Vec<f64> = Vec::new();
+        let mut total = Duration::ZERO;
+        let mut iters = 0u64;
+        while total < self.target_time && iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            durations_ns.push(dt.as_nanos() as f64 / batch as f64);
+            total += dt;
+            iters += batch;
+        }
+        let mut r = Running::new();
+        for &d in &durations_ns {
+            r.push(d);
+        }
+        Sample {
+            name: name.to_string(),
+            iters,
+            mean_ns: r.mean(),
+            p50_ns: percentile(&durations_ns, 50.0),
+            p95_ns: percentile(&durations_ns, 95.0),
+            stddev_ns: r.stddev(),
+        }
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Aligned table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>width$}  ", c, width = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// JSON-lines export for scripted consumption (EXPERIMENTS.md numbers).
+    pub fn to_jsonl(&self, experiment: &str) -> String {
+        use super::json::Json;
+        let mut out = String::new();
+        for row in &self.rows {
+            let mut obj = vec![("experiment", Json::str(experiment))];
+            for (h, c) in self.headers.iter().zip(row) {
+                let v = c
+                    .parse::<f64>()
+                    .map(Json::Num)
+                    .unwrap_or_else(|_| Json::str(c.clone()));
+                obj.push((h.as_str(), v));
+            }
+            out.push_str(&Json::obj(obj).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Append JSONL rows to `target/bench_results.jsonl` (best effort).
+pub fn export_jsonl(content: &str) {
+    let _ = std::fs::create_dir_all("target");
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("target/bench_results.jsonl")
+    {
+        let _ = f.write_all(content.as_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench::quick();
+        let s = b.run("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p95_ns >= s.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(12e9).ends_with('s'));
+    }
+
+    #[test]
+    fn table_jsonl_roundtrip() {
+        let mut t = Table::new(&["jobs", "miss_rate"]);
+        t.row(&["4".into(), "0.35".into()]);
+        let jl = t.to_jsonl("fig4");
+        let v = crate::util::json::Json::parse(jl.trim()).unwrap();
+        assert_eq!(v.get("experiment").unwrap().as_str().unwrap(), "fig4");
+        assert_eq!(v.get("jobs").unwrap().as_f64().unwrap(), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

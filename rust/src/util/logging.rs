@@ -1,0 +1,58 @@
+//! Minimal logger backend for the `log` facade.
+//!
+//! Prints `LEVEL target: message` to stderr, filtered by `TLSCHED_LOG`
+//! (error|warn|info|debug|trace, default info). Install once from
+//! binaries with [`init`].
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("{lvl} {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger. Idempotent — later calls are no-ops.
+pub fn init() {
+    let level = match std::env::var("TLSCHED_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging initialized twice without panic");
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utility substrate: RNG, stats, JSON, CLI args, thread
+//! pool, bench harness and logging. These replace the external crates
+//! (`rand`, `serde_json`, `clap`, `rayon`/`tokio`, `criterion`,
+//! `tracing-subscriber`) that are unavailable in the offline build
+//! environment — see DESIGN.md §3.
+
+pub mod args;
+pub mod benchkit;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

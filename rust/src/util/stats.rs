@@ -1,0 +1,186 @@
+//! Small descriptive-statistics helpers shared by metrics, benches and
+//! the cache simulator: running summaries, percentiles, histograms and
+//! a fixed-point formatter for aligned table output.
+
+/// Online running summary (Welford) — O(1) memory, numerically stable.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a sample set (nearest-rank on a sorted copy).
+/// Fine for bench-sized samples; not for per-access hot paths.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Fixed-bucket histogram over `[lo, hi)` with saturating edge buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Self {
+        assert!(hi > lo && nbuckets > 0);
+        Histogram { lo, hi, buckets: vec![0; nbuckets], total: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.buckets.len();
+        let idx = if x < self.lo {
+            0
+        } else if x >= self.hi {
+            n - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * n as f64) as usize
+        };
+        self.buckets[idx.min(n - 1)] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Complementary CDF at bucket upper-edges: P(X >= edge). This is the
+    /// curve Figure 2 of the paper plots over concurrency levels.
+    pub fn ccdf(&self) -> Vec<(f64, f64)> {
+        let n = self.buckets.len();
+        let width = (self.hi - self.lo) / n as f64;
+        let mut out = Vec::with_capacity(n);
+        let mut tail: u64 = self.total;
+        for i in 0..n {
+            let edge = self.lo + i as f64 * width;
+            out.push((edge, if self.total == 0 { 0.0 } else { tail as f64 / self.total as f64 }));
+            tail -= self.buckets[i];
+        }
+        out
+    }
+}
+
+/// Right-align a float with `prec` decimals in a `width` field — used by
+/// the bench harness to print paper-style tables without `format!` churn
+/// at call sites.
+pub fn fmt_f(x: f64, width: usize, prec: usize) -> String {
+    format!("{:>width$.prec$}", x, width = width, prec = prec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_closed_form() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 5);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert!((r.variance() - 2.5).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 5.0);
+    }
+
+    #[test]
+    fn running_empty_is_nan_mean() {
+        let r = Running::new();
+        assert!(r.mean().is_nan());
+        assert_eq!(r.count(), 0);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_ccdf_monotone() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..100 {
+            h.push((i % 10) as f64);
+        }
+        let ccdf = h.ccdf();
+        assert_eq!(ccdf[0].1, 1.0);
+        for w in ccdf.windows(2) {
+            assert!(w[0].1 >= w[1].1, "ccdf must be non-increasing");
+        }
+    }
+
+    #[test]
+    fn histogram_saturates_edges() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-5.0);
+        h.push(5.0);
+        assert_eq!(h.bucket_counts()[0], 1);
+        assert_eq!(h.bucket_counts()[3], 1);
+    }
+}

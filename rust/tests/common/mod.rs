@@ -1,0 +1,75 @@
+//! Mini property-testing framework (proptest substitute — see DESIGN.md
+//! §3). Runs a seeded closure over many generated cases; on failure it
+//! reports the case index and seed so the exact input can be replayed
+//! with `TLSCHED_PROP_SEED=<seed> TLSCHED_PROP_CASE=<i>`.
+
+use tlsched::util::rng::Pcg32;
+
+#[allow(dead_code)]
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `body` over `cases` generated inputs. `body` receives a fresh,
+/// deterministic RNG per case and returns `Err(description)` to fail.
+pub fn prop_check<F>(name: &str, cases: usize, mut body: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let seed: u64 = std::env::var("TLSCHED_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfeed_2018);
+    let only_case: Option<usize> =
+        std::env::var("TLSCHED_PROP_CASE").ok().and_then(|s| s.parse().ok());
+    for case in 0..cases {
+        if let Some(c) = only_case {
+            if case != c {
+                continue;
+            }
+        }
+        let mut rng = Pcg32::new(seed, case as u64);
+        if let Err(msg) = body(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay with \
+                 TLSCHED_PROP_SEED={seed} TLSCHED_PROP_CASE={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random graph for property tests: mixes generator families and sizes.
+#[allow(dead_code)]
+pub fn random_graph(rng: &mut Pcg32) -> tlsched::graph::Graph {
+    use tlsched::graph::generate;
+    let seed = rng.next_u64();
+    match rng.gen_range(4) {
+        0 => {
+            let n = 16 + rng.gen_index(400);
+            let m = n * (1 + rng.gen_index(8));
+            generate::erdos_renyi(n, m, seed)
+        }
+        1 => {
+            let scale = 5 + rng.gen_range(4);
+            generate::rmat(scale, 4 + rng.gen_index(8), seed)
+        }
+        2 => {
+            let n = 20 + rng.gen_index(300);
+            generate::barabasi_albert(n, 2 + rng.gen_index(3), seed)
+        }
+        _ => {
+            let r = 3 + rng.gen_index(12);
+            let c = 3 + rng.gen_index(12);
+            generate::road_grid(r, c, seed)
+        }
+    }
+}
+
+/// Random block partition of a graph.
+#[allow(dead_code)]
+pub fn random_partition(
+    g: &tlsched::graph::Graph,
+    rng: &mut Pcg32,
+) -> tlsched::graph::BlockPartition {
+    let n = g.num_vertices().max(1);
+    let vb = 1 + rng.gen_index(n);
+    tlsched::graph::BlockPartition::by_vertex_count(g, vb)
+}

@@ -1,0 +1,153 @@
+//! Integration tests over the coordinator: mixed workloads, trace
+//! replay, cache-simulated runs, report export and the memory-
+//! redundancy claim end-to-end.
+
+mod common;
+
+use common::prop_check;
+use tlsched::coordinator::{Coordinator, CoordinatorConfig};
+use tlsched::engine::{JobSpec, SimProbe};
+use tlsched::graph::{generate, BlockPartition};
+use tlsched::memsim::{AddressMap, HierarchyConfig, MemoryHierarchy};
+use tlsched::scheduler::{SchedulerConfig, SchedulerKind};
+use tlsched::trace::{self, JobKind, TraceConfig};
+use tlsched::util::json::Json;
+
+#[test]
+fn mixed_batch_all_kinds_all_policies() {
+    let g = generate::rmat(10, 8, 9);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    for kind in SchedulerKind::ALL {
+        let specs: Vec<JobSpec> = JobKind::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, k)| JobSpec::new(*k, (i * 173) as u32))
+            .collect();
+        let mut coord =
+            Coordinator::new(&g, &part, CoordinatorConfig::new(SchedulerConfig::new(kind)));
+        let m = coord.run_batch(&specs);
+        assert_eq!(m.completed(), 5, "{}", kind.name());
+        assert!(m.totals.updates > 0);
+        assert!(m.rounds > 0);
+    }
+}
+
+#[test]
+fn report_json_parses_and_has_all_jobs() {
+    let g = generate::erdos_renyi(512, 2048, 4);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let mut coord = Coordinator::new(
+        &g,
+        &part,
+        CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel)),
+    );
+    let m = coord.run_batch(&[
+        JobSpec::new(JobKind::PageRank, 0),
+        JobSpec::new(JobKind::Bfs, 7),
+    ]);
+    let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+    assert_eq!(parsed.get("completed").unwrap().as_u64().unwrap(), 2);
+    assert_eq!(parsed.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+    assert!(parsed.get("sharing_factor").unwrap().as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn trace_replay_preserves_job_results() {
+    // jobs executed via trace replay must produce the same fixpoints as
+    // batch execution
+    let g = generate::road_grid(20, 20, 3);
+    let part = BlockPartition::by_vertex_count(&g, 50);
+    let tc = TraceConfig {
+        days: 0.0005, // ~43 virtual seconds
+        mean_rate_per_hour: 2000.0,
+        mean_service_s: 5.0,
+        num_vertices: g.num_vertices() as u32,
+        ..Default::default()
+    };
+    let jobs = trace::generate(&tc);
+    if jobs.is_empty() {
+        return;
+    }
+    let mut coord = Coordinator::new(
+        &g,
+        &part,
+        CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel)),
+    );
+    let m = coord.run_trace(&jobs, 2000.0);
+    assert_eq!(m.completed(), jobs.len());
+    for rec in &m.jobs {
+        assert!(rec.rounds > 0);
+        assert!(rec.finished_s >= rec.submitted_s);
+    }
+}
+
+#[test]
+fn memory_redundancy_claim_end_to_end() {
+    // The paper's core claim, end to end: with >= 4 concurrent jobs on a
+    // structure-overflow hierarchy, two-level DRAM traffic is lower than
+    // independent execution's.
+    let g = generate::rmat(12, 8, 77);
+    let part = BlockPartition::by_vertex_count(&g, 256);
+    let specs: Vec<JobSpec> =
+        (0..8).map(|i| JobSpec::new(JobKind::ALL[i % 5], (i * 431) as u32)).collect();
+    let mut dram = Vec::new();
+    for kind in [SchedulerKind::Independent, SchedulerKind::TwoLevel] {
+        let map = AddressMap::new(&g);
+        let mut mem = MemoryHierarchy::new(HierarchyConfig::tiny());
+        let mut probe = SimProbe { map: &map, mem: &mut mem };
+        let mut ccfg = CoordinatorConfig::new(SchedulerConfig::new(kind));
+        ccfg.max_rounds_per_job = 40;
+        let mut coord = Coordinator::new(&g, &part, ccfg);
+        let _ = coord.run_batch_probed(&specs, &mut probe);
+        dram.push(mem.stats().dram_accesses);
+    }
+    assert!(
+        (dram[1] as f64) < (dram[0] as f64) * 0.8,
+        "two-level DRAM {} must be <80% of independent {}",
+        dram[1],
+        dram[0]
+    );
+}
+
+#[test]
+fn prop_admission_limit_never_exceeded() {
+    prop_check("admission limit", 8, |rng| {
+        let g = generate::erdos_renyi(256, 1024, rng.next_u64());
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let limit = 1 + rng.gen_index(4);
+        let mut ccfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        ccfg.max_concurrent = limit;
+        let trace: Vec<trace::TraceJob> = (0..6)
+            .map(|i| trace::TraceJob {
+                id: i,
+                arrival_s: 0.0,
+                service_s: 1.0,
+                kind: JobKind::ALL[rng.gen_index(5)],
+                source: rng.gen_index(256) as u32,
+            })
+            .collect();
+        let mut coord = Coordinator::new(&g, &part, ccfg);
+        let m = coord.run_trace(&trace, 5000.0);
+        if m.completed() != 6 {
+            return Err(format!("completed {} of 6", m.completed()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduling_overhead_is_reported() {
+    let g = generate::rmat(11, 8, 21);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let mut coord = Coordinator::new(
+        &g,
+        &part,
+        CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel)),
+    );
+    let m = coord.run_batch(&[
+        JobSpec::new(JobKind::PageRank, 0),
+        JobSpec::new(JobKind::Wcc, 0),
+    ]);
+    assert!(m.scheduling_s > 0.0, "MPDS planning time must be tracked");
+    assert!(m.scheduling_s < m.wall_s, "planning cannot exceed wall time");
+}

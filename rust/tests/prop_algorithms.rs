@@ -1,0 +1,260 @@
+//! Property tests for the algorithm layer: every delta program's
+//! block-scheduled fixpoint must equal its classical reference,
+//! independent of partition and scheduling policy.
+
+mod common;
+
+use tlsched::algorithms::DeltaProgram;
+use common::{prop_check, random_graph, random_partition};
+use tlsched::algorithms::sssp::dijkstra;
+use tlsched::algorithms::wcc::union_find_components;
+use tlsched::engine::{JobSpec, JobState, NoProbe};
+use tlsched::scheduler::{run_to_convergence, Scheduler, SchedulerConfig, SchedulerKind};
+use tlsched::trace::JobKind;
+
+fn random_policy(rng: &mut tlsched::util::rng::Pcg32) -> SchedulerConfig {
+    let kind = SchedulerKind::ALL[rng.gen_index(4)];
+    let mut cfg = SchedulerConfig::new(kind);
+    cfg.alpha = 0.2 + rng.gen_f64() * 0.8;
+    cfg.epsilon_frac = rng.gen_f64() * 0.5;
+    cfg.seed = rng.next_u64();
+    if rng.gen_bool(0.5) {
+        cfg.q_override = Some(1 + rng.gen_index(32));
+    }
+    cfg
+}
+
+#[test]
+fn prop_sssp_any_schedule_matches_dijkstra() {
+    prop_check("sssp vs dijkstra", 40, |rng| {
+        let g = random_graph(rng);
+        if g.num_vertices() == 0 {
+            return Ok(());
+        }
+        let part = random_partition(&g, rng);
+        let source = rng.gen_index(g.num_vertices()) as u32;
+        let mut jobs = vec![JobState::new(0, JobSpec::new(JobKind::Sssp, source), &g)];
+        let mut sched = Scheduler::new(random_policy(rng));
+        run_to_convergence(&mut sched, &g, &part, &mut jobs, &mut NoProbe, 1_000_000);
+        if !jobs[0].converged {
+            return Err("did not converge".into());
+        }
+        let reference = dijkstra(&g, source);
+        for (v, (a, b)) in jobs[0].values.iter().zip(&reference).enumerate() {
+            match (a.is_finite(), b.is_finite()) {
+                (true, true) => {
+                    if (a - b).abs() > 1e-3 {
+                        return Err(format!("v{v}: {a} vs dijkstra {b}"));
+                    }
+                }
+                (fa, fb) if fa != fb => {
+                    return Err(format!("v{v}: reachability mismatch {a} vs {b}"))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bfs_hops_lower_bound_weighted_distance() {
+    prop_check("bfs <= sssp/minw", 30, |rng| {
+        let g = random_graph(rng);
+        if g.num_vertices() == 0 || !g.is_weighted() {
+            return Ok(());
+        }
+        let part = random_partition(&g, rng);
+        let source = rng.gen_index(g.num_vertices()) as u32;
+        let run = |kind: JobKind| {
+            let mut jobs = vec![JobState::new(0, JobSpec::new(kind, source), &g)];
+            let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+            run_to_convergence(&mut sched, &g, &part, &mut jobs, &mut NoProbe, 1_000_000);
+            jobs.remove(0).values
+        };
+        let hops = run(JobKind::Bfs);
+        let dist = run(JobKind::Sssp);
+        // min edge weight ≥ 1.0 in road grids → dist >= hops
+        for (v, (h, d)) in hops.iter().zip(&dist).enumerate() {
+            if h.is_finite() != d.is_finite() {
+                return Err(format!("v{v}: reachability mismatch"));
+            }
+            if h.is_finite() && *d + 1e-3 < *h {
+                return Err(format!("v{v}: weighted {d} < hops {h}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wcc_matches_union_find_on_symmetric_graphs() {
+    prop_check("wcc vs union-find", 30, |rng| {
+        // road grids and BA graphs are built symmetric
+        let g = match rng.gen_range(2) {
+            0 => tlsched::graph::generate::road_grid(
+                3 + rng.gen_index(10),
+                3 + rng.gen_index(10),
+                rng.next_u64(),
+            ),
+            _ => tlsched::graph::generate::barabasi_albert(
+                20 + rng.gen_index(200),
+                2 + rng.gen_index(3),
+                rng.next_u64(),
+            ),
+        };
+        let part = random_partition(&g, rng);
+        let mut jobs = vec![JobState::new(0, JobSpec::new(JobKind::Wcc, 0), &g)];
+        let mut sched = Scheduler::new(random_policy(rng));
+        run_to_convergence(&mut sched, &g, &part, &mut jobs, &mut NoProbe, 1_000_000);
+        let labels = &jobs[0].values;
+        let uf = union_find_components(&g);
+        let n = g.num_vertices();
+        for v in 0..n {
+            for u in [0, n / 2, n - 1] {
+                let same_uf = uf[v] == uf[u];
+                let same_label = (labels[v] - labels[u]).abs() < 0.5;
+                if same_uf != same_label {
+                    return Err(format!("partition mismatch at ({v},{u})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pagerank_mass_bounded_and_nonnegative() {
+    prop_check("pagerank mass", 30, |rng| {
+        let g = random_graph(rng);
+        let n = g.num_vertices();
+        if n == 0 {
+            return Ok(());
+        }
+        let part = random_partition(&g, rng);
+        let mut jobs = vec![JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g)];
+        let mut sched = Scheduler::new(random_policy(rng));
+        run_to_convergence(&mut sched, &g, &part, &mut jobs, &mut NoProbe, 1_000_000);
+        let total: f64 = jobs[0].values.iter().map(|v| *v as f64).sum();
+        // fixpoint mass: n when no dangling vertices, less otherwise;
+        // never exceeds n (plus epsilon slack)
+        if total > n as f64 * 1.01 + 1.0 {
+            return Err(format!("mass {total} exceeds n={n}"));
+        }
+        if jobs[0].values.iter().any(|v| *v < 0.0) {
+            return Err("negative pagerank".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tracked_summaries_match_scans() {
+    // The perf-pass invariant: incremental ⟨Node_un, ΣP⟩ tracking must
+    // equal a fresh scan after any amount of scheduled execution.
+    prop_check("tracking consistency", 24, |rng| {
+        let g = random_graph(rng);
+        if g.num_vertices() == 0 {
+            return Ok(());
+        }
+        let part = random_partition(&g, rng);
+        let kind = JobKind::ALL[rng.gen_index(5)];
+        let source = rng.gen_index(g.num_vertices()) as u32;
+        let mut jobs = vec![JobState::new(0, JobSpec::new(kind, source), &g)];
+        let mut cfg = random_policy(rng);
+        cfg.incremental_summaries = true;
+        if cfg.kind == SchedulerKind::Independent {
+            cfg.kind = SchedulerKind::TwoLevel; // independent skips tracking
+        }
+        let mut sched = Scheduler::new(cfg);
+        // run a few rounds (not to convergence — mid-flight state is the
+        // interesting case)
+        let rounds = 1 + rng.gen_index(5);
+        for _ in 0..rounds {
+            sched.round(&g, &part, &mut jobs, &mut NoProbe);
+        }
+        let job = &jobs[0];
+        if job.tracking.is_none() {
+            return Err("tracking was not enabled".into());
+        }
+        for b in &part.blocks {
+            let scanned = job.block_summary(b);
+            let tracked = job.summary_of(b);
+            if tracked.node_un != scanned.node_un {
+                return Err(format!(
+                    "block {}: tracked node_un {} vs scanned {} ({})",
+                    b.id,
+                    tracked.node_un,
+                    scanned.node_un,
+                    job.program.name()
+                ));
+            }
+            let tol = 1e-3 * (1.0 + scanned.p_sum.abs());
+            if (tracked.p_sum - scanned.p_sum).abs() > tol {
+                return Err(format!(
+                    "block {}: tracked p_sum {} vs scanned {} ({})",
+                    b.id,
+                    tracked.p_sum,
+                    scanned.p_sum,
+                    job.program.name()
+                ));
+            }
+        }
+        if job.active_count_fast() != job.active_count() {
+            return Err("active_count_fast mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_policies_agree_pairwise() {
+    prop_check("policy invariance", 16, |rng| {
+        let g = random_graph(rng);
+        if g.num_vertices() < 4 {
+            return Ok(());
+        }
+        let part = random_partition(&g, rng);
+        let kinds = [JobKind::PageRank, JobKind::Sssp, JobKind::Bfs];
+        let specs: Vec<JobSpec> = (0..3)
+            .map(|i| JobSpec::new(kinds[i], rng.gen_index(g.num_vertices()) as u32))
+            .collect();
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for kind in SchedulerKind::ALL {
+            let mut jobs: Vec<JobState> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| JobState::new(i as u32, s.clone(), &g))
+                .collect();
+            let mut sched = Scheduler::new(SchedulerConfig::new(kind));
+            run_to_convergence(&mut sched, &g, &part, &mut jobs, &mut NoProbe, 1_000_000);
+            if !jobs.iter().all(|j| j.converged) {
+                return Err(format!("{} failed to converge", kind.name()));
+            }
+            let values: Vec<Vec<f32>> = jobs.iter().map(|j| j.values.clone()).collect();
+            match &reference {
+                None => reference = Some(values),
+                Some(r) => {
+                    for (ji, (a, b)) in r.iter().zip(&values).enumerate() {
+                        let tol = jobs[ji].program.value_tolerance();
+                        for (vi, (x, y)) in a.iter().zip(b).enumerate() {
+                            if x.is_finite() != y.is_finite() {
+                                return Err(format!(
+                                    "{}: job {ji} v{vi} reachability mismatch",
+                                    kind.name()
+                                ));
+                            }
+                            if x.is_finite() && (x - y).abs() > tol * 4.0 {
+                                return Err(format!(
+                                    "{}: job {ji} v{vi}: {x} vs {y}",
+                                    kind.name()
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

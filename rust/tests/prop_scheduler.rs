@@ -1,0 +1,248 @@
+//! Property tests for the scheduler layer: CBP (Function 1 / Table 1),
+//! the DO algorithm (Function 2), De_Gl_Priority (α split) and the
+//! block partitioner.
+
+mod common;
+
+use common::{prop_check, random_graph, random_partition, DEFAULT_CASES};
+use tlsched::scheduler::{
+    de_gl_priority, Cbp, DoSelector, JobQueue, PriorityPair,
+};
+use tlsched::util::rng::Pcg32;
+
+fn random_pair(rng: &mut Pcg32, id: u32) -> PriorityPair {
+    PriorityPair::new(id, rng.gen_range(100), rng.gen_f64() * 10.0)
+}
+
+#[test]
+fn prop_cbp_antisymmetric_on_distinct_pairs() {
+    prop_check("cbp antisymmetry", 2000, |rng| {
+        let cbp = Cbp::new(rng.gen_f64() * 0.5);
+        let a = random_pair(rng, 0);
+        let b = random_pair(rng, 1);
+        if (a.node_un, a.p_mean) == (b.node_un, b.p_mean) {
+            return Ok(());
+        }
+        if a.is_converged() && b.is_converged() {
+            return Ok(());
+        }
+        if cbp.higher(&a, &b) == cbp.higher(&b, &a) {
+            return Err(format!("higher not antisymmetric for {a:?} / {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cbp_table1_always_cases() {
+    prop_check("table1 cases 1/3/4", 2000, |rng| {
+        let cbp = Cbp::default();
+        let mean = 0.1 + rng.gen_f64() * 9.0;
+        let lo_mean = mean * (0.1 + rng.gen_f64() * 0.8);
+        let n_hi = 2 + rng.gen_range(50);
+        let n_lo = 1 + rng.gen_range(n_hi - 1);
+        // case 1: larger mean AND more unconverged
+        let a = PriorityPair::new(0, n_hi, mean);
+        let b = PriorityPair::new(1, n_lo, lo_mean);
+        if !cbp.higher(&a, &b) {
+            return Err(format!("case 1 violated: {a:?} vs {b:?}"));
+        }
+        // case 3: equal means, more nodes wins
+        let c = PriorityPair::new(2, n_hi, mean);
+        let d = PriorityPair::new(3, n_lo, mean);
+        if !cbp.higher(&c, &d) {
+            return Err(format!("case 3 violated: {c:?} vs {d:?}"));
+        }
+        // case 4: equal nodes, larger mean wins
+        let e = PriorityPair::new(4, n_hi, mean);
+        let f = PriorityPair::new(5, n_hi, lo_mean);
+        if !cbp.higher(&e, &f) {
+            return Err(format!("case 4 violated: {e:?} vs {f:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cbp_converged_always_loses() {
+    prop_check("converged loses", 500, |rng| {
+        let cbp = Cbp::default();
+        let live = PriorityPair::new(0, 1 + rng.gen_range(50), 0.001 + rng.gen_f64());
+        let dead = PriorityPair::new(1, 0, 0.0);
+        if !cbp.higher(&live, &dead) || cbp.higher(&dead, &live) {
+            return Err(format!("converged pair won against {live:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_do_select_output_ranked_and_unconverged() {
+    prop_check("do output ranked", DEFAULT_CASES, |rng| {
+        let b_n = 100 + rng.gen_index(5000);
+        let table: Vec<PriorityPair> = (0..b_n)
+            .map(|i| {
+                let mut p = random_pair(rng, i as u32);
+                if rng.gen_bool(0.3) {
+                    p.node_un = 0; // converged
+                    p.p_mean = 0.0;
+                }
+                p
+            })
+            .collect();
+        let q = 1 + rng.gen_index(b_n / 2 + 1);
+        let sel = DoSelector::default();
+        let out = sel.select_top_q(&table, q, rng);
+        if out.len() > 2 * q {
+            return Err(format!("output {} exceeds 2q={}", out.len(), 2 * q));
+        }
+        if out.iter().any(|p| p.is_converged()) {
+            return Err("converged block selected".into());
+        }
+        for w in out.windows(2) {
+            if sel.cbp.higher(&w[1], &w[0]) {
+                return Err(format!("not descending: {:?} before {:?}", w[0], w[1]));
+            }
+        }
+        // distinct blocks
+        let mut seen = std::collections::HashSet::new();
+        for p in &out {
+            if !seen.insert(p.block) {
+                return Err(format!("duplicate block {}", p.block));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_do_select_recall_floor() {
+    prop_check("do recall", 24, |rng| {
+        let b_n = 2000 + rng.gen_index(20_000);
+        let table: Vec<PriorityPair> =
+            (0..b_n).map(|i| random_pair(rng, i as u32)).collect();
+        let q = 50 + rng.gen_index(b_n / 20);
+        let sel = DoSelector::default();
+        let approx = sel.select_top_q(&table, q, rng);
+        let exact = sel.exact_top_q(&table, q);
+        let ids: std::collections::HashSet<u32> = approx.iter().map(|p| p.block).collect();
+        let hits = exact.iter().filter(|p| ids.contains(&p.block)).count();
+        let recall = hits as f64 / q as f64;
+        if recall < 0.4 {
+            return Err(format!("recall {recall:.3} below floor (B_N={b_n}, q={q})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_global_queue_invariants() {
+    prop_check("global queue", DEFAULT_CASES, |rng| {
+        let njobs = 1 + rng.gen_index(8);
+        let qlen = 2 + rng.gen_index(20);
+        let universe = 10 + rng.gen_index(200);
+        let queues: Vec<JobQueue> = (0..njobs)
+            .map(|j| {
+                let mut blocks: Vec<u32> =
+                    rng.sample_indices(universe, qlen).iter().map(|&b| b as u32).collect();
+                rng.shuffle(&mut blocks);
+                JobQueue {
+                    job: j as u32,
+                    queue: blocks
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &b)| {
+                            PriorityPair::new(b, (qlen - i) as u32, 1.0 + rng.gen_f64())
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        let alpha = 0.1 + rng.gen_f64() * 0.9;
+        let global = de_gl_priority(&queues, qlen, alpha);
+        if global.len() > qlen {
+            return Err(format!("global queue len {} > q {}", global.len(), qlen));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for e in &global {
+            if !seen.insert(e.block) {
+                return Err(format!("duplicate block {}", e.block));
+            }
+        }
+        // every entry must come from some job queue
+        for e in &global {
+            if !queues.iter().any(|jq| jq.contains_block(e.block)) {
+                return Err(format!("block {} not in any job queue", e.block));
+            }
+        }
+        // main (non-reserved) prefix is score-sorted
+        let main: Vec<_> = global.iter().filter(|e| !e.reserved).collect();
+        for w in main.windows(2) {
+            if w[0].score < w[1].score {
+                return Err("main slots not score-descending".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_global_queue_reserved_covers_individual_tops() {
+    prop_check("reserved slots", DEFAULT_CASES, |rng| {
+        // construct: shared hot blocks + one unique top per job
+        let njobs = 2 + rng.gen_index(5);
+        let qlen = 6;
+        let queues: Vec<JobQueue> = (0..njobs)
+            .map(|j| {
+                let mut blocks = vec![1000 + j as u32]; // unique top
+                blocks.extend(0..(qlen as u32 - 1)); // shared tail
+                JobQueue {
+                    job: j as u32,
+                    queue: blocks
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &b)| PriorityPair::new(b, (qlen - i) as u32, 1.0))
+                        .collect(),
+                }
+            })
+            .collect();
+        let global = de_gl_priority(&queues, qlen, 0.5);
+        // with α=0.5, at least one unique individual top must be admitted
+        let reserved_tops = global
+            .iter()
+            .filter(|e| e.block >= 1000)
+            .count();
+        if reserved_tops == 0 {
+            return Err("no individual-top block admitted through reserved slots".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_covers_exactly_once() {
+    prop_check("partition coverage", DEFAULT_CASES, |rng| {
+        let g = random_graph(rng);
+        let part = random_partition(&g, rng);
+        part.validate(&g).map_err(|e| e.to_string())?;
+        let in_sum: u64 = part.blocks.iter().map(|b| b.in_edges).sum();
+        if in_sum != g.num_edges() as u64 {
+            return Err(format!("in-edge sum {} != m {}", in_sum, g.num_edges()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_queue_length_bounds() {
+    prop_check("eq4 bounds", 500, |rng| {
+        let blocks = 1 + rng.gen_index(100_000);
+        let vertices = blocks * (1 + rng.gen_index(1000));
+        let c = rng.gen_f64() * 500.0;
+        let q = tlsched::scheduler::optimal_queue_length(c, blocks, vertices);
+        if q < 1 || q > blocks {
+            return Err(format!("q={q} out of [1, {blocks}]"));
+        }
+        Ok(())
+    });
+}

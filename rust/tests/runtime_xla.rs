@@ -1,0 +1,123 @@
+//! Integration: AOT artifacts → PJRT runtime → batched backend, checked
+//! against the pure-rust CPU engine. Skips (with a notice) when
+//! `make artifacts` has not run.
+
+use tlsched::engine::{JobSpec, JobState};
+use tlsched::graph::{generate, BlockPartition};
+use tlsched::runtime::{Manifest, XlaRuntime};
+use tlsched::scheduler::{Scheduler, SchedulerConfig, SchedulerKind};
+use tlsched::trace::JobKind;
+
+fn artifacts_or_skip() -> Option<XlaRuntime> {
+    let dir = Manifest::default_dir();
+    if !Manifest::available(&dir) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaRuntime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn pagerank_xla_matches_cpu_engine() {
+    let Some(mut rt) = artifacts_or_skip() else { return };
+    let g = generate::rmat(9, 8, 123); // 512 vertices <= N
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    let epsilon = 1e-3f32;
+    let res = tlsched::runtime::run_pagerank_batch(
+        &mut rt, &g, &part, &mut sched, 3, epsilon, 10_000,
+    )
+    .expect("xla run");
+    assert!(res.rounds > 0);
+    assert!(res.blocks_scheduled > 0);
+
+    // CPU reference: single job to fixpoint
+    let mut job = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+    tlsched::engine::run_single_to_convergence(&g, &part.blocks, &mut job, 100_000);
+
+    // All three XLA lanes ran the same program → compare to the CPU
+    // fixpoint. Both paths stop with per-vertex residual deltas below
+    // epsilon, but the *unapplied* residual mass compounds differently
+    // along each trajectory (Jacobi vs Gauss–Seidel), so the tolerance
+    // is relative for hub vertices.
+    for lane in 0..3 {
+        for (v, (a, b)) in res.values[lane].iter().zip(&job.values).enumerate() {
+            let tol = (0.02f32).max(0.01 * b.abs());
+            assert!((a - b).abs() < tol, "lane {lane} vertex {v}: xla {a} vs cpu {b}");
+        }
+    }
+}
+
+#[test]
+fn sssp_xla_matches_dijkstra() {
+    let Some(mut rt) = artifacts_or_skip() else { return };
+    let g = generate::road_grid(16, 16, 7); // 256 vertices, weighted
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    let sources = [0u32, 100, 255];
+    let res =
+        tlsched::runtime::run_sssp_batch(&mut rt, &g, &part, &mut sched, &sources, 10_000)
+            .expect("xla run");
+    for (lane, &s) in sources.iter().enumerate() {
+        let reference = tlsched::algorithms::sssp::dijkstra(&g, s);
+        for (v, (a, b)) in res.values[lane].iter().zip(&reference).enumerate() {
+            if b.is_finite() {
+                assert!((a - b).abs() < 1e-2, "lane {lane} v{v}: xla {a} vs dijkstra {b}");
+            } else {
+                assert!(!a.is_finite(), "lane {lane} v{v}: expected unreachable");
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_and_reference_artifacts_agree() {
+    let Some(mut rt) = artifacts_or_skip() else { return };
+    let j = rt.manifest.jobs;
+    let n = rt.manifest.n;
+    // random-ish small inputs built deterministically
+    let mut rng = tlsched::util::rng::Pcg32::seeded(5);
+    let values: Vec<f32> = (0..j * n).map(|_| rng.gen_f32()).collect();
+    let deltas: Vec<f32> = (0..j * n).map(|_| rng.gen_f32() * 0.1).collect();
+    let mut adj = vec![0f32; n * n];
+    for u in 0..n {
+        // ~4 random out-edges per vertex
+        let deg = 4;
+        for _ in 0..deg {
+            let v = rng.gen_index(n);
+            adj[u * n + v] += 0.85 / deg as f32;
+        }
+    }
+    let mask: Vec<f32> = (0..n).map(|_| if rng.gen_bool(0.5) { 1.0 } else { 0.0 }).collect();
+
+    let mk = |data: &[f32], dims: &[i64]| tlsched::runtime::literal_f32(data, dims).unwrap();
+    let dims_lane = [j as i64, n as i64];
+    let dims_mat = [n as i64, n as i64];
+    let dims_mask = [n as i64];
+
+    let out_k = rt
+        .execute(
+            "pagerank_step",
+            &[mk(&values, &dims_lane), mk(&deltas, &dims_lane), mk(&adj, &dims_mat), mk(&mask, &dims_mask)],
+        )
+        .unwrap();
+    let out_r = rt
+        .execute(
+            "pagerank_step_ref",
+            &[mk(&values, &dims_lane), mk(&deltas, &dims_lane), mk(&adj, &dims_mat), mk(&mask, &dims_mask)],
+        )
+        .unwrap();
+    for (a, b) in out_k.iter().zip(&out_r) {
+        let va = tlsched::runtime::literal_to_vec(a).unwrap();
+        let vb = tlsched::runtime::literal_to_vec(b).unwrap();
+        for (x, y) in va.iter().zip(&vb) {
+            assert!((x - y).abs() < 1e-4, "kernel {x} vs ref {y}");
+        }
+    }
+}
+
+#[test]
+fn warmup_compiles_all_entries() {
+    let Some(mut rt) = artifacts_or_skip() else { return };
+    rt.warmup().expect("warmup");
+}
