@@ -59,6 +59,7 @@ fn main() {
     for kind in SchedulerKind::ALL {
         let mut ccfg = CoordinatorConfig::new(SchedulerConfig::new(kind));
         ccfg.max_concurrent = 16;
+        ccfg.workers = 0; // fused kernel + parallel rounds on all cores
         let mut coord = Coordinator::new(&graph, &partition, ccfg);
         let m = coord.run_trace(&jobs, 120.0);
         table.row(&[

@@ -28,9 +28,13 @@ fn main() {
         JobSpec::new(JobKind::Wcc, 0),
     ];
 
-    // 4. Run them under two-level scheduling (CAJS + MPDS).
+    // 4. Run them under two-level scheduling (CAJS + MPDS). Rounds
+    //    execute through the fused multi-job kernel — one walk of each
+    //    block's structure serves every job — spread across one worker
+    //    per core (cfg.workers = 0 means auto).
     let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
     let mut coordinator = Coordinator::new(&graph, &partition, cfg);
+    println!("round execution on {} worker(s)", coordinator.workers());
     let metrics = coordinator.run_batch(&jobs);
 
     // 5. Inspect the outcome.

@@ -18,7 +18,10 @@ fn main() {
         .opt("minutes", "8", "virtual trace length (minutes)")
         .opt("rate", "1800", "arrivals per hour")
         .opt("time-scale", "240", "virtual seconds per wall second")
-        .opt("max-concurrent", "16", "admission limit");
+        .opt("max-concurrent", "16", "admission limit")
+        .opt("fused-scale", "14", "rmat scale for the fused-vs-per-job A/B")
+        .opt("fused-jobs", "8", "concurrent jobs for the fused-vs-per-job A/B")
+        .opt("fused-out", "BENCH_fused.json", "where to write the fused A/B report");
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let a = spec.parse_from(&argv).unwrap_or_else(|_| spec.parse_from(&[]).unwrap());
 
@@ -152,4 +155,85 @@ fn main() {
     }
     t3.print("simulated-cycle throughput: batch convergence, independent vs two-level");
     export_jsonl(&t3.to_jsonl("throughput_simulated_cycles"));
+
+    // ---- fused multi-job kernel + parallel rounds vs seed path ----------
+    // The perf-tracking experiment behind BENCH_fused.json: one batch of
+    // mixed concurrent jobs run to convergence under two-level scheduling
+    // through (a) the seed sequential per-job dispatch (`fused = false`,
+    // one structure walk per job per block), (b) the fused kernel
+    // sequentially, and (c) the fused kernel with parallel rounds on all
+    // cores. CI records the JSON so the perf trajectory is scriptable.
+    use tlsched::engine::{JobSpec, JobState, NoProbe};
+    use tlsched::scheduler::{run_to_convergence, run_to_convergence_parallel, Scheduler};
+    use tlsched::util::json::Json;
+    use tlsched::util::threadpool::ThreadPool;
+
+    let fscale: u32 = a.parse("fused-scale");
+    let fjobs = a.usize("fused-jobs");
+    let gf = generate::rmat(fscale, 8, 2018);
+    let partf = BlockPartition::by_vertex_count(&gf, a.usize("block-vertices"));
+    let make_jobs = || -> Vec<JobState> {
+        (0..fjobs)
+            .map(|i| {
+                JobState::new(
+                    i as u32,
+                    JobSpec::new(
+                        tlsched::trace::JobKind::ALL[i % 5],
+                        (i as u32 * 131) % gf.num_vertices() as u32,
+                    ),
+                    &gf,
+                )
+            })
+            .collect()
+    };
+    let time_case = |fused: bool, workers: usize| -> (f64, u64) {
+        let mut jobs = make_jobs();
+        let mut cfg = SchedulerConfig::new(SchedulerKind::TwoLevel);
+        cfg.fused = fused;
+        let mut sched = Scheduler::new(cfg);
+        let t0 = std::time::Instant::now();
+        let (_, stats) = if workers <= 1 {
+            run_to_convergence(&mut sched, &gf, &partf, &mut jobs, &mut NoProbe, 1_000_000)
+        } else {
+            let pool = ThreadPool::new(workers);
+            run_to_convergence_parallel(&mut sched, &gf, &partf, &mut jobs, &pool, 1_000_000)
+        };
+        assert!(jobs.iter().all(|j| j.converged), "fused A/B did not converge");
+        (t0.elapsed().as_secs_f64(), stats.updates)
+    };
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (seed_s, seed_updates) = time_case(false, 1);
+    let (fused_s, _) = time_case(true, 1);
+    let (par_s, _) = time_case(true, workers);
+
+    let mut t4 = Table::new(&["path", "wall_s", "speedup_vs_seed"]);
+    t4.row(&["seed_perjob_seq".into(), format!("{seed_s:.3}"), "1.00".into()]);
+    t4.row(&[
+        "fused_seq".into(),
+        format!("{fused_s:.3}"),
+        format!("{:.2}", seed_s / fused_s.max(1e-9)),
+    ]);
+    t4.row(&[
+        "fused_parallel".into(),
+        format!("{par_s:.3}"),
+        format!("{:.2}", seed_s / par_s.max(1e-9)),
+    ]);
+    t4.print("fused multi-job kernel + parallel rounds vs seed per-job dispatch");
+    export_jsonl(&t4.to_jsonl("throughput_fused"));
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("fused_vs_perjob")),
+        ("scale", Json::num(fscale as f64)),
+        ("jobs", Json::num(fjobs as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("updates", Json::num(seed_updates as f64)),
+        ("seed_perjob_seq_s", Json::num(seed_s)),
+        ("fused_seq_s", Json::num(fused_s)),
+        ("fused_parallel_s", Json::num(par_s)),
+        ("speedup_fused_seq", Json::num(seed_s / fused_s.max(1e-9))),
+        ("speedup_fused_parallel", Json::num(seed_s / par_s.max(1e-9))),
+    ]);
+    let out = a.str("fused-out");
+    std::fs::write(out, report.to_string()).expect("write BENCH_fused.json");
+    eprintln!("fused A/B report written to {out}");
 }

@@ -36,6 +36,8 @@ pub struct RunConfig {
     pub scheduler: SchedulerConfig,
     pub hierarchy: HierarchyConfig,
     pub max_concurrent: usize,
+    /// Round-execution worker threads (0 = one per available core).
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -48,6 +50,7 @@ impl Default for RunConfig {
             scheduler: SchedulerConfig::new(SchedulerKind::TwoLevel),
             hierarchy: HierarchyConfig::default(),
             max_concurrent: 32,
+            workers: 0,
         }
     }
 }
@@ -170,6 +173,9 @@ impl RunConfig {
         s.seed = get_parse(&raw, "scheduler.seed", s.seed)?;
         let q = get_parse(&raw, "scheduler.q", 0usize)?;
         s.q_override = if q == 0 { None } else { Some(q) };
+        s.incremental_summaries =
+            get_parse(&raw, "scheduler.incremental", s.incremental_summaries)?;
+        s.fused = get_parse(&raw, "scheduler.fused", s.fused)?;
         cfg.scheduler = s;
 
         // [memory]
@@ -186,6 +192,7 @@ impl RunConfig {
 
         // [coordinator]
         cfg.max_concurrent = get_parse(&raw, "coordinator.max_concurrent", 32usize)?;
+        cfg.workers = get_parse(&raw, "coordinator.workers", 0usize)?;
         Ok(cfg)
     }
 
@@ -285,6 +292,22 @@ max_concurrent = 4
         assert_eq!(cfg.scheduler.q_override, Some(12));
         assert_eq!(cfg.hierarchy.dram_latency, 300);
         assert_eq!(cfg.max_concurrent, 4);
+    }
+
+    #[test]
+    fn executor_knobs_parse() {
+        let cfg = RunConfig::from_str(
+            "[scheduler]\nincremental = false\nfused = false\n\n[coordinator]\nworkers = 3\n",
+        )
+        .unwrap();
+        assert!(!cfg.scheduler.incremental_summaries);
+        assert!(!cfg.scheduler.fused);
+        assert_eq!(cfg.workers, 3);
+        // defaults: fused + incremental on, workers auto
+        let d = RunConfig::from_str("").unwrap();
+        assert!(d.scheduler.incremental_summaries);
+        assert!(d.scheduler.fused);
+        assert_eq!(d.workers, 0);
     }
 
     #[test]

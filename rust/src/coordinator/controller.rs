@@ -3,6 +3,12 @@
 //! metrics. This is the paper's `Con_processing` surface (§4.4) plus
 //! the operational shell a deployment needs (admission control, trace
 //! replay, reporting).
+//!
+//! Rounds on the request path (`run_batch`, `run_trace`) execute
+//! through [`Scheduler::round_parallel`] over a worker pool sized by
+//! `CoordinatorConfig::workers` — deterministic for any worker count.
+//! Cache-simulated runs (`run_batch_probed`) keep the sequential round
+//! so the probe sees the canonical serialized address stream.
 
 use crate::algorithms::DeltaProgram;
 use super::metrics::{JobRecord, RunMetrics};
@@ -10,6 +16,7 @@ use crate::engine::{JobState, JobSpec, NoProbe, Probe};
 use crate::graph::{BlockPartition, Graph};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::trace::TraceJob;
+use crate::util::threadpool::ThreadPool;
 use std::time::Instant;
 
 /// Coordinator-level configuration.
@@ -20,11 +27,23 @@ pub struct CoordinatorConfig {
     pub max_concurrent: usize,
     /// Safety valve for non-converging programs.
     pub max_rounds_per_job: usize,
+    /// Worker threads for round execution (0 = one per available
+    /// core). `1` runs inline (no threads spawned) but still uses the
+    /// deterministic staged round engine — block-major rounds defer
+    /// cross-block scatters within a round, so round counts differ
+    /// from the sequential probed path (`run_batch_probed`), while
+    /// fixpoints are identical.
+    pub workers: usize,
 }
 
 impl CoordinatorConfig {
     pub fn new(scheduler: SchedulerConfig) -> Self {
-        CoordinatorConfig { scheduler, max_concurrent: 32, max_rounds_per_job: 500_000 }
+        CoordinatorConfig {
+            scheduler,
+            max_concurrent: 32,
+            max_rounds_per_job: 500_000,
+            workers: 0,
+        }
     }
 }
 
@@ -34,13 +53,24 @@ pub struct Coordinator<'g> {
     pub part: &'g BlockPartition,
     pub cfg: CoordinatorConfig,
     sched: Scheduler,
+    pool: ThreadPool,
     next_job_id: u32,
 }
 
 impl<'g> Coordinator<'g> {
     pub fn new(g: &'g Graph, part: &'g BlockPartition, cfg: CoordinatorConfig) -> Self {
         let sched = Scheduler::new(cfg.scheduler.clone());
-        Coordinator { g, part, cfg, sched, next_job_id: 0 }
+        let pool = if cfg.workers == 0 {
+            ThreadPool::auto()
+        } else {
+            ThreadPool::new(cfg.workers)
+        };
+        Coordinator { g, part, cfg, sched, pool, next_job_id: 0 }
+    }
+
+    /// Number of round-execution workers this coordinator runs with.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     fn new_job(&mut self, spec: JobSpec) -> JobState {
@@ -50,36 +80,55 @@ impl<'g> Coordinator<'g> {
     }
 
     /// `Con_processing` batch mode: admit all jobs at once and run
-    /// scheduling rounds until every job converges. Times are wall
-    /// seconds from run start.
+    /// scheduling rounds until every job converges, with rounds spread
+    /// across the worker pool. Times are wall seconds from run start.
     pub fn run_batch(&mut self, specs: &[JobSpec]) -> RunMetrics {
-        self.run_batch_probed(specs, &mut NoProbe)
+        self.run_batch_inner(specs, &mut NoProbe, true)
     }
 
-    /// Batch mode with a data-touch probe (cache simulation).
+    /// Batch mode with a data-touch probe (cache simulation). Rounds
+    /// run sequentially so the probe observes the canonical serialized
+    /// address stream.
     pub fn run_batch_probed<P: Probe>(
         &mut self,
         specs: &[JobSpec],
         probe: &mut P,
     ) -> RunMetrics {
+        self.run_batch_inner(specs, probe, false)
+    }
+
+    fn run_batch_inner<P: Probe>(
+        &mut self,
+        specs: &[JobSpec],
+        probe: &mut P,
+        parallel: bool,
+    ) -> RunMetrics {
         let t0 = Instant::now();
         let mut metrics = RunMetrics::default();
+        let base_id = self.next_job_id;
         let mut active: Vec<JobState> =
             specs.iter().map(|s| self.new_job(s.clone())).collect();
         let mut done: Vec<JobState> = Vec::new();
-        let mut updates_before: std::collections::HashMap<u32, u64> =
-            active.iter().map(|j| (j.id, j.updates)).collect();
+        // Job ids are dense per run (base_id..base_id + n): plain
+        // Vec bookkeeping indexed by (id - base_id), no hashing in the
+        // round loop.
+        let mut updates_before: Vec<u64> = active.iter().map(|j| j.updates).collect();
         let mut rounds = 0u64;
         while !active.is_empty() && rounds < self.cfg.max_rounds_per_job as u64 {
-            let s = self.sched.round(self.g, self.part, &mut active, probe);
+            let s = if parallel {
+                self.sched.round_parallel(self.g, self.part, &mut active, &self.pool)
+            } else {
+                self.sched.round(self.g, self.part, &mut active, probe)
+            };
             metrics.totals.merge(s);
             rounds += 1;
             let now = t0.elapsed().as_secs_f64();
             // retire converged jobs (lazy check: scan only quiet jobs)
             let mut i = 0;
             while i < active.len() {
-                let quiet = active[i].updates == updates_before[&active[i].id];
-                updates_before.insert(active[i].id, active[i].updates);
+                let idx = (active[i].id - base_id) as usize;
+                let quiet = active[i].updates == updates_before[idx];
+                updates_before[idx] = active[i].updates;
                 let job_done = active[i].converged
                     || s.updates == 0
                     || (quiet && active[i].active_count_fast() == 0);
@@ -122,10 +171,11 @@ impl<'g> Coordinator<'g> {
         let mut metrics = RunMetrics::default();
         let mut pending: std::collections::VecDeque<&TraceJob> = trace.iter().collect();
         let mut active: Vec<JobState> = Vec::new();
-        let mut started_at: std::collections::HashMap<u32, (f64, f64)> =
-            std::collections::HashMap::new();
-        let mut updates_before: std::collections::HashMap<u32, u64> =
-            std::collections::HashMap::new();
+        // Job ids are assigned densely in admission order: Vec
+        // bookkeeping indexed by (id - base_id), grown on admit.
+        let base_id = self.next_job_id;
+        let mut started_at: Vec<(f64, f64)> = Vec::new();
+        let mut updates_before: Vec<u64> = Vec::new();
         let mut rounds = 0u64;
         loop {
             // admit everything that has arrived, up to the limit
@@ -136,7 +186,13 @@ impl<'g> Coordinator<'g> {
                         let tj = pending.pop_front().unwrap();
                         let spec = JobSpec::new(tj.kind, tj.source);
                         let job = self.new_job(spec);
-                        started_at.insert(job.id, (tj.arrival_s, now));
+                        debug_assert_eq!(
+                            (job.id - base_id) as usize,
+                            started_at.len(),
+                            "dense admission order"
+                        );
+                        started_at.push((tj.arrival_s, now));
+                        updates_before.push(job.updates);
                         active.push(job);
                     }
                     _ => break,
@@ -145,29 +201,34 @@ impl<'g> Coordinator<'g> {
             if active.is_empty() {
                 match pending.front() {
                     // idle: nothing active, next arrival in the future —
-                    // virtual clock is wall-driven, so just spin-admit on
-                    // the next loop; avoid busy-wait with a short sleep.
-                    Some(_) => {
-                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    // compute its wall-clock deadline from the time
+                    // scale and sleep once until then (no busy-wait).
+                    Some(tj) => {
+                        let wait_s = (tj.arrival_s - vnow(&t0)) / time_scale;
+                        if wait_s > 0.0 {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(
+                                wait_s + 1e-4,
+                            ));
+                        }
                         continue;
                     }
                     None => break,
                 }
             }
-            let s = self.sched.round(self.g, self.part, &mut active, &mut NoProbe);
+            let s = self.sched.round_parallel(self.g, self.part, &mut active, &self.pool);
             metrics.totals.merge(s);
             rounds += 1;
             let now = vnow(&t0);
             let mut i = 0;
             while i < active.len() {
-                let quiet =
-                    updates_before.get(&active[i].id) == Some(&active[i].updates);
-                updates_before.insert(active[i].id, active[i].updates);
+                let idx = (active[i].id - base_id) as usize;
+                let quiet = active[i].updates == updates_before[idx];
+                updates_before[idx] = active[i].updates;
                 let job_done =
                     s.updates == 0 || (quiet && active[i].active_count_fast() == 0);
                 if job_done || active[i].rounds >= self.cfg.max_rounds_per_job as u64 {
                     let j = active.swap_remove(i);
-                    let (submitted, started) = started_at[&j.id];
+                    let (submitted, started) = started_at[(j.id - base_id) as usize];
                     metrics.jobs.push(JobRecord {
                         id: j.id as u64,
                         kind: j.program.name(),
@@ -238,6 +299,32 @@ mod tests {
     }
 
     #[test]
+    fn batch_results_independent_of_worker_count() {
+        // The request path must be deterministic: the same batch on 1
+        // and 4 workers produces identical per-job work counters.
+        let (g, part) = setup();
+        let specs = [
+            JobSpec::new(JobKind::PageRank, 0),
+            JobSpec::new(JobKind::Sssp, 10),
+            JobSpec::new(JobKind::Bfs, 3),
+        ];
+        let mut per_worker: Vec<Vec<(u64, u64)>> = Vec::new();
+        for workers in [1usize, 4] {
+            let mut cfg =
+                CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+            cfg.workers = workers;
+            let mut coord = Coordinator::new(&g, &part, cfg);
+            let m = coord.run_batch(&specs);
+            assert_eq!(m.completed(), 3);
+            let mut recs: Vec<(u64, u64)> =
+                m.jobs.iter().map(|j| (j.id, j.updates)).collect();
+            recs.sort_unstable();
+            per_worker.push(recs);
+        }
+        assert_eq!(per_worker[0], per_worker[1]);
+    }
+
+    #[test]
     fn trace_replay_admits_and_completes() {
         let (g, part) = setup();
         let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
@@ -259,6 +346,27 @@ mod tests {
             assert!(j.started_s >= j.submitted_s);
         }
         assert!(m.throughput_per_hour() > 0.0);
+    }
+
+    #[test]
+    fn trace_idle_gap_sleeps_until_arrival() {
+        // One job arriving 200 virtual seconds in: at time_scale 1000
+        // that is a 0.2 wall-second idle gap the coordinator must sleep
+        // through (in one sleep, not a 100µs poll loop) and still admit
+        // the job afterwards.
+        let (g, part) = setup();
+        let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let trace = vec![TraceJob {
+            id: 0,
+            arrival_s: 200.0,
+            service_s: 1.0,
+            kind: JobKind::Bfs,
+            source: 5,
+        }];
+        let m = coord.run_trace(&trace, 1000.0);
+        assert_eq!(m.completed(), 1);
+        assert!(m.jobs[0].started_s >= 200.0);
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Fused multi-job block executor: the CAJS hot path.
+//!
+//! [`process_block`](super::exec::process_block) realizes the paper's
+//! cache sharing only *temporally*: dispatching a block to k jobs walks
+//! the shared CSR structure k times back-to-back, counting on cache
+//! residency to de-duplicate the DRAM traffic. This kernel makes the
+//! sharing *structural*: it walks the block's offsets/targets/weights
+//! **once** and, per active vertex and per edge, applies every
+//! unconverged job's [`DeltaProgram`] against its private value/delta
+//! lanes. Structure touches are charged to the probe once per block
+//! instead of once per (job, block) — which also makes the Fig-4
+//! cache-miss instrumentation exact rather than cache-lucky.
+//!
+//! Numerics are bit-identical to running [`process_block`] per job:
+//! jobs own disjoint lanes, so hoisting the job loop inside the vertex
+//! loop preserves each job's exact sequence of f32 operations
+//! (vertices ascending, edges ascending). The parity suite
+//! (`tests/fused_parity.rs`) asserts this for every `JobKind` — which
+//! is also why this kernel deliberately shares no code with
+//! [`process_block`]: the reference must stay an independent
+//! implementation for the comparison to mean anything.
+
+use crate::algorithms::DeltaProgram;
+use super::exec::Probe;
+use super::job::JobState;
+use crate::graph::{Block, Graph};
+use crate::memsim::Region;
+
+/// Counters from one fused block execution.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FusedStats {
+    /// Jobs that consumed at least one vertex in the block.
+    pub jobs_dispatched: u64,
+    /// Vertex updates across all jobs.
+    pub updates: u64,
+    /// Edges traversed across all jobs (an edge walked once for the
+    /// structure still counts once per job that scatters over it — the
+    /// lane work is inherently per-job).
+    pub edges: u64,
+}
+
+impl FusedStats {
+    pub fn merge(&mut self, o: FusedStats) {
+        self.jobs_dispatched += o.jobs_dispatched;
+        self.updates += o.updates;
+        self.edges += o.edges;
+    }
+}
+
+/// Fused execution of one block for every unconverged job in `jobs`.
+///
+/// Convenience wrapper over [`process_block_fused_on`] that considers
+/// all non-converged jobs. Schedulers that already know which jobs are
+/// active in the block (CAJS convergence-awareness) should call the
+/// `_on` variant with a pre-filtered index set instead.
+pub fn process_block_fused<P: Probe>(
+    g: &Graph,
+    block: &Block,
+    jobs: &mut [JobState],
+    probe: &mut P,
+) -> FusedStats {
+    let active: Vec<usize> = jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, j)| !j.converged)
+        .map(|(ji, _)| ji)
+        .collect();
+    process_block_fused_on(g, block, jobs, &active, probe)
+}
+
+/// Fused execution of one block for the jobs named by `active_idx`
+/// (indices into `jobs`; the caller is responsible for filtering out
+/// converged jobs).
+///
+/// Per vertex: every listed job's delta/value lane is scanned (each a
+/// per-job probe touch, as on real hardware); if at least one job is
+/// active at the vertex, the structure row (offset pair, targets,
+/// weights) is read **once** and each consuming job's propagate/combine
+/// runs against it. Per-job `updates`/`edges` counters and incremental
+/// summary tracking are maintained exactly as in `process_block`.
+pub fn process_block_fused_on<P: Probe>(
+    g: &Graph,
+    block: &Block,
+    jobs: &mut [JobState],
+    active_idx: &[usize],
+    probe: &mut P,
+) -> FusedStats {
+    let mut stats = FusedStats::default();
+    if active_idx.is_empty() || block.num_vertices() == 0 {
+        return stats;
+    }
+    let weighted = g.is_weighted();
+    // Two O(k) buffers (k = active jobs, bounded by the admission
+    // limit) allocated per block call — deliberately not threaded
+    // through the public API as caller scratch; the per-round O(B_N)
+    // allocations live in the scheduler's RoundScratch instead.
+    // (job index, consumed delta) of the jobs active at the current vertex.
+    let mut consumers: Vec<(usize, f32)> = Vec::with_capacity(active_idx.len());
+    let mut touched = vec![false; active_idx.len()];
+    for v in block.vertices() {
+        let vi = v as usize;
+        consumers.clear();
+        for (k, &ji) in active_idx.iter().enumerate() {
+            let job = &mut jobs[ji];
+            probe.touch(Region::Deltas(job.id), v as u64);
+            let dv = job.deltas[vi];
+            probe.touch(Region::Values(job.id), v as u64);
+            let pv = job.values[vi];
+            if !job.program.is_active(pv, dv) {
+                continue;
+            }
+            job.deltas[vi] = job.program.identity();
+            job.values[vi] = job.program.apply(pv, dv);
+            if let Some(t) = &mut job.tracking {
+                // v was active and is now inactive (delta = identity is
+                // inactive for every program).
+                let b = t.block_of[vi] as usize;
+                t.node_un[b] -= 1;
+                t.p_sum[b] -= job.program.priority(pv, dv) as f64;
+            }
+            job.updates += 1;
+            touched[k] = true;
+            stats.updates += 1;
+            consumers.push((ji, dv));
+        }
+        if consumers.is_empty() {
+            continue;
+        }
+        // Structure reads — charged once for all consuming jobs.
+        probe.touch(Region::OutOffsets, v as u64);
+        probe.touch(Region::OutOffsets, v as u64 + 1);
+        let start = g.out_offsets[vi] as usize;
+        let end = g.out_offsets[vi + 1] as usize;
+        let deg = end - start;
+        if deg == 0 {
+            continue;
+        }
+        for &(ji, _) in consumers.iter() {
+            jobs[ji].edges += deg as u64;
+        }
+        stats.edges += (deg * consumers.len()) as u64;
+        for e in start..end {
+            probe.touch(Region::OutTargets, e as u64);
+            let t = g.out_targets[e];
+            let w = if weighted {
+                probe.touch(Region::OutWeights, e as u64);
+                g.out_weights[e]
+            } else {
+                1.0
+            };
+            let ti = t as usize;
+            for &(ji, dv) in consumers.iter() {
+                let job = &mut jobs[ji];
+                let p = job.program.propagate(dv, deg, w);
+                probe.touch(Region::Deltas(job.id), t as u64);
+                let old_delta = job.deltas[ti];
+                let new_delta = job.program.combine(old_delta, p);
+                job.deltas[ti] = new_delta;
+                if new_delta != old_delta {
+                    if let Some(tr) = &mut job.tracking {
+                        let tv = job.values[ti];
+                        let b = tr.block_of[ti] as usize;
+                        let was = job.program.is_active(tv, old_delta);
+                        let is = job.program.is_active(tv, new_delta);
+                        if was {
+                            tr.p_sum[b] -= job.program.priority(tv, old_delta) as f64;
+                        }
+                        if is {
+                            tr.p_sum[b] += job.program.priority(tv, new_delta) as f64;
+                        }
+                        match (was, is) {
+                            (false, true) => tr.node_un[b] += 1,
+                            (true, false) => tr.node_un[b] -= 1,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+    stats.jobs_dispatched = touched.iter().filter(|&&t| t).count() as u64;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{process_block, JobSpec, NoProbe};
+    use crate::graph::{generate, BlockPartition};
+    use crate::trace::JobKind;
+
+    fn mixed_jobs(g: &Graph, n: usize) -> Vec<JobState> {
+        (0..n)
+            .map(|i| {
+                let kind = JobKind::ALL[i % 5];
+                JobState::new(i as u32, JobSpec::new(kind, (i * 31) as u32), g)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_matches_per_job_reference_bitwise() {
+        let g = generate::rmat(9, 8, 3);
+        let part = BlockPartition::by_vertex_count(&g, 37);
+        let mut a = mixed_jobs(&g, 5);
+        let mut b = mixed_jobs(&g, 5);
+        for _sweep in 0..3 {
+            for blk in &part.blocks {
+                for j in a.iter_mut() {
+                    process_block(&g, blk, j, &mut NoProbe);
+                }
+                process_block_fused(&g, blk, &mut b, &mut NoProbe);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.values, y.values, "values diverge in block {}", blk.id);
+                    assert_eq!(x.deltas, y.deltas, "deltas diverge in block {}", blk.id);
+                    assert_eq!(x.updates, y.updates);
+                    assert_eq!(x.edges, y.edges);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_counts_jobs_dispatched() {
+        let g = generate::erdos_renyi(64, 256, 7);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut jobs = mixed_jobs(&g, 4);
+        let s = process_block_fused(&g, &part.blocks[0], &mut jobs, &mut NoProbe);
+        assert!(s.jobs_dispatched >= 1);
+        assert!(s.updates > 0);
+    }
+
+    #[test]
+    fn fused_empty_block_is_noop() {
+        let g = generate::erdos_renyi(10, 30, 13);
+        let blk = Block { id: 0, start: 5, end: 5, in_edges: 0, out_edges: 0 };
+        let mut jobs = mixed_jobs(&g, 3);
+        let s = process_block_fused(&g, &blk, &mut jobs, &mut NoProbe);
+        assert_eq!(s, FusedStats::default());
+    }
+
+    #[test]
+    fn fused_skips_converged_jobs() {
+        let g = generate::erdos_renyi(64, 256, 17);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut jobs = mixed_jobs(&g, 2);
+        jobs[0].converged = true;
+        let before_v = jobs[0].values.clone();
+        let before_d = jobs[0].deltas.clone();
+        process_block_fused(&g, &part.blocks[0], &mut jobs, &mut NoProbe);
+        assert_eq!(jobs[0].values, before_v);
+        assert_eq!(jobs[0].deltas, before_d);
+        assert_eq!(jobs[0].updates, 0);
+    }
+
+    #[test]
+    fn fused_structure_touches_charged_once() {
+        use crate::engine::SimProbe;
+        use crate::memsim::{AddressMap, HierarchyConfig, MemoryHierarchy};
+        let g = generate::erdos_renyi(128, 512, 21);
+        let part = BlockPartition::by_vertex_count(&g, 128);
+        let map = AddressMap::new(&g);
+        // per-job dispatch: structure stream replayed once per job
+        let mut mem_ref = MemoryHierarchy::new(HierarchyConfig::small());
+        let mut jobs_a: Vec<JobState> = (0..4)
+            .map(|i| JobState::new(i, JobSpec::new(JobKind::PageRank, 0), &g))
+            .collect();
+        {
+            let mut probe = SimProbe { map: &map, mem: &mut mem_ref };
+            for j in jobs_a.iter_mut() {
+                process_block(&g, &part.blocks[0], j, &mut probe);
+            }
+        }
+        // fused: structure stream replayed once for all jobs
+        let mut mem_fused = MemoryHierarchy::new(HierarchyConfig::small());
+        let mut jobs_b: Vec<JobState> = (0..4)
+            .map(|i| JobState::new(i, JobSpec::new(JobKind::PageRank, 0), &g))
+            .collect();
+        {
+            let mut probe = SimProbe { map: &map, mem: &mut mem_fused };
+            process_block_fused(&g, &part.blocks[0], &mut jobs_b, &mut probe);
+        }
+        assert!(
+            mem_fused.stats().l1.accesses < mem_ref.stats().l1.accesses,
+            "fused must issue fewer total touches than 4x per-job dispatch"
+        );
+        for (x, y) in jobs_a.iter().zip(&jobs_b) {
+            assert_eq!(x.values, y.values);
+            assert_eq!(x.deltas, y.deltas);
+        }
+    }
+}

@@ -1,12 +1,16 @@
 //! Execution engine: per-job state (private value/delta lanes over the
-//! shared CSR) and the block executor, instrumented for the cache
-//! simulator.
+//! shared CSR) and the block executors — the per-job reference kernel
+//! (`exec`) and the fused multi-job kernel (`fused`) that walks the
+//! shared structure once for all concurrent jobs — instrumented for
+//! the cache simulator.
 
 pub mod exec;
+pub mod fused;
 pub mod job;
 
 pub use exec::{
     full_sweep, process_block, run_single_to_convergence, BlockRunStats, NoProbe, Probe,
     SimProbe,
 };
+pub use fused::{process_block_fused, process_block_fused_on, FusedStats};
 pub use job::{BlockSummary, JobId, JobSpec, JobState};

@@ -68,6 +68,9 @@ fn common_spec(bin: &'static str, about: &'static str) -> ArgSpec {
         .opt("alpha", "0.8", "global-queue reserved split")
         .opt("epsilon", "0.2", "CBP tie-band fraction")
         .opt("q", "0", "queue length override (0 = Eq. 4)")
+        .opt("incremental-summaries", "true", "maintain block summaries incrementally")
+        .opt("fused", "true", "fuse all jobs into one structure walk per block")
+        .opt("workers", "0", "round-execution workers (0 = all cores)")
 }
 
 fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
@@ -136,6 +139,15 @@ fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
         let q = a.usize("q");
         cfg.scheduler.q_override = if q == 0 { None } else { Some(q) };
     }
+    if a.was_set("incremental-summaries") {
+        cfg.scheduler.incremental_summaries = a.parse("incremental-summaries");
+    }
+    if a.was_set("fused") {
+        cfg.scheduler.fused = a.parse("fused");
+    }
+    if a.was_set("workers") {
+        cfg.workers = a.usize("workers");
+    }
     cfg
 }
 
@@ -171,7 +183,10 @@ fn cmd_run(argv: &[String]) -> i32 {
     let specs: Vec<JobSpec> = (0..jobs)
         .map(|i| JobSpec::new(kinds[i % kinds.len()], (i * 97) as u32 % g.num_vertices() as u32))
         .collect();
-    let mut coord = Coordinator::new(&g, &part, CoordinatorConfig::new(cfg.scheduler.clone()));
+    let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
+    ccfg.workers = cfg.workers;
+    let mut coord = Coordinator::new(&g, &part, ccfg);
+    log::info!("round execution on {} worker(s), fused={}", coord.workers(), cfg.scheduler.fused);
     let m = coord.run_batch(&specs);
     println!(
         "scheduler={} jobs={} rounds={} block_loads={} dispatches={} sharing={:.2} wall={:.2}s sched={:.3}s",
@@ -218,6 +233,7 @@ fn cmd_replay(argv: &[String]) -> i32 {
     log::info!("replaying {} jobs", jobs.len());
     let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
     ccfg.max_concurrent = a.usize("max-concurrent");
+    ccfg.workers = cfg.workers;
     let mut coord = Coordinator::new(&g, &part, ccfg);
     let m = coord.run_trace(&jobs, a.f64("time-scale"));
     println!(

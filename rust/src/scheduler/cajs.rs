@@ -8,7 +8,7 @@
 //! block then serves N jobs instead of N fetches at N different times
 //! (the paper's Fig. 8 concurrent access model).
 
-use crate::engine::{process_block, JobState, Probe};
+use crate::engine::{process_block, process_block_fused_on, JobState, Probe};
 use crate::graph::{BlockPartition, Graph};
 
 /// Counters for one dispatched block.
@@ -22,10 +22,49 @@ pub struct DispatchStats {
     pub edges: u64,
 }
 
+/// CAJS dispatch of one block to a pre-filtered set of job indices —
+/// the single implementation behind every block-major dispatch path
+/// (the `Scheduler` policies pass their convergence-awareness filter
+/// and `SchedulerConfig::fused` here).
+///
+/// `fused = true` walks the block's structure once for all jobs
+/// ([`crate::engine::fused`]); `false` dispatches the per-job
+/// reference kernel back-to-back. Numerics are bit-identical either
+/// way.
+pub fn dispatch_block_on<P: Probe>(
+    g: &Graph,
+    part: &BlockPartition,
+    block: u32,
+    jobs: &mut [JobState],
+    active: &[usize],
+    fused: bool,
+    probe: &mut P,
+) -> DispatchStats {
+    let b = part.block(block);
+    if fused {
+        let s = process_block_fused_on(g, b, jobs, active, probe);
+        DispatchStats {
+            jobs_dispatched: s.jobs_dispatched,
+            updates: s.updates,
+            edges: s.edges,
+        }
+    } else {
+        let mut stats = DispatchStats::default();
+        for &ji in active {
+            let r = process_block(g, b, &mut jobs[ji], probe);
+            stats.jobs_dispatched += 1;
+            stats.updates += r.updates;
+            stats.edges += r.edges;
+        }
+        stats
+    }
+}
+
 /// Dispatch one block to all unconverged jobs (those with at least one
-/// active vertex in the block). Jobs process the block sequentially —
-/// the cache-residency model of the paper; the simulated (and real)
-/// reuse comes from consecutive accesses to the same structure data.
+/// active vertex in the block) through the fused kernel: one walk of
+/// the block's structure serves every job, per vertex and per edge —
+/// the cache-residency model of the paper made structural instead of
+/// merely temporal (see [`crate::engine::fused`]).
 ///
 /// Returns per-dispatch stats; `jobs_dispatched == 0` means the block
 /// was converged for everyone and the caller should not count it as a
@@ -38,22 +77,15 @@ pub fn dispatch_block<P: Probe>(
     probe: &mut P,
 ) -> DispatchStats {
     let b = part.block(block);
-    let mut stats = DispatchStats::default();
-    for job in jobs.iter_mut() {
-        if job.converged {
-            continue;
-        }
-        // convergence-awareness: skip jobs with nothing to do here
-        // (O(1) with tracking, scan otherwise)
-        if job.summary_of(b).node_un == 0 {
-            continue;
-        }
-        let s = process_block(g, b, job, probe);
-        stats.jobs_dispatched += 1;
-        stats.updates += s.updates;
-        stats.edges += s.edges;
-    }
-    stats
+    // convergence-awareness: skip jobs with nothing to do here
+    // (O(1) with tracking, scan otherwise)
+    let active: Vec<usize> = jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, job)| !job.converged && job.summary_of(b).node_un > 0)
+        .map(|(ji, _)| ji)
+        .collect();
+    dispatch_block_on(g, part, block, jobs, &active, true, probe)
 }
 
 #[cfg(test)]

@@ -34,10 +34,21 @@ impl JobQueue {
 /// Build the pair table for one job: one ⟨Node_un, P̄⟩ per block.
 /// O(B_N) when the job carries incremental tracking, O(V_N) otherwise.
 pub fn build_ptable(job: &JobState, part: &BlockPartition) -> Vec<PriorityPair> {
-    part.blocks
-        .iter()
-        .map(|b| PriorityPair::from_summary(b.id, &job.summary_of(b)))
-        .collect()
+    let mut out = Vec::new();
+    build_ptable_into(job, part, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`build_ptable`]: fills `out` in place so
+/// the scheduler's `RoundScratch` can reuse one B_N-sized table per
+/// live job across rounds instead of reallocating it every round.
+pub fn build_ptable_into(job: &JobState, part: &BlockPartition, out: &mut Vec<PriorityPair>) {
+    out.clear();
+    out.extend(
+        part.blocks
+            .iter()
+            .map(|b| PriorityPair::from_summary(b.id, &job.summary_of(b))),
+    );
 }
 
 /// De_In_Priority for one job: pair table + DO selection.

@@ -5,22 +5,26 @@
 //!   Function 1 / Table 1), `do_select` (DO algorithm, Function 2 /
 //!   Eq. 2/4), `individual` (De_In_Priority), `global`
 //!   (De_Gl_Priority, Fig. 7).
-//! * Level 2 — jobs (**CAJS**, §4.3): `cajs` (block-hot dispatch).
+//! * Level 2 — jobs (**CAJS**, §4.3): `cajs` (block-hot dispatch
+//!   through the fused multi-job kernel).
 //! * `policies` wires both levels into a `Scheduler` with the paper's
-//!   policy plus the three baselines.
+//!   policy plus the three baselines; `parallel` is the deterministic
+//!   staged engine behind `Scheduler::round_parallel`.
 
 pub mod cajs;
 pub mod do_select;
 pub mod global;
 pub mod individual;
 pub mod pair;
+pub mod parallel;
 pub mod policies;
 
-pub use cajs::{dispatch_block, DispatchStats};
+pub use cajs::{dispatch_block, dispatch_block_on, DispatchStats};
 pub use do_select::{optimal_queue_length, DoSelector, DEFAULT_C, DEFAULT_SAMPLES};
 pub use global::{de_gl_priority, GlobalEntry, DEFAULT_ALPHA};
-pub use individual::{build_ptable, de_in_priority, JobQueue};
+pub use individual::{build_ptable, build_ptable_into, de_in_priority, JobQueue};
 pub use pair::{Cbp, PriorityPair, DEFAULT_EPSILON_FRAC};
 pub use policies::{
-    run_to_convergence, RoundStats, Scheduler, SchedulerConfig, SchedulerKind,
+    run_to_convergence, run_to_convergence_parallel, RoundStats, Scheduler,
+    SchedulerConfig, SchedulerKind,
 };

@@ -1,0 +1,289 @@
+//! Deterministic intra-round parallelism for block-major policies.
+//!
+//! The sequential round engine processes the global queue's blocks one
+//! after another; this module partitions those block entries across the
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool) workers. Because
+//! blocks scatter into overlapping target vertices, naive sharing of
+//! the per-job lanes would race — and even lock-protected races would
+//! make results depend on worker timing. The design here is
+//! **deterministic for any worker count**:
+//!
+//! * **Phase 1 (parallel, read-only over shared state):** each block
+//!   task copies the block's slice of every active job's value/delta
+//!   lanes into task-local buffers and processes the block against
+//!   them with the fused access pattern (structure read once per
+//!   vertex/edge, all consuming jobs applied — see
+//!   [`crate::engine::fused`]). Scatters *within* the block apply
+//!   immediately to the local
+//!   copy (Gauss–Seidel inside a block, exactly like the sequential
+//!   kernel); scatters that cross the block boundary are *staged* as an
+//!   ordered `(target, contribution)` list. Tasks read the pre-round
+//!   lanes only and write nothing shared, so `scope_map` needs no
+//!   locks.
+//! * **Phase 2 (sequential merge):** block-local lanes are copied back
+//!   (disjoint vertex ranges — order irrelevant), then every staged
+//!   contribution is folded in with the job's `combine`, walking blocks
+//!   in queue order and contributions in (vertex, edge) order. The
+//!   merge order is a pure function of the plan, never of thread
+//!   timing, so a round with 8 workers is bit-identical to the same
+//!   round with 1 worker.
+//!
+//! Relative to the sequential engine the only semantic difference is
+//! that cross-block propagation becomes Jacobi within a round (a
+//! block processed later in the queue no longer sees scatters produced
+//! earlier in the *same* round — it picks them up next round). The
+//! delta-accumulative model makes that reordering safe: `combine` is
+//! associative and commutative and contributions are never lost, so
+//! fixpoints are unchanged (asserted by `tests/fused_parity.rs`).
+//!
+//! Incremental ⟨Node_un, ΣP⟩ summaries stay exact: each task returns
+//! the net summary change of its own block (consumptions + intra-block
+//! transitions, accumulated in task order), and the merge applies
+//! staged-contribution transitions one by one, mirroring the
+//! sequential executor.
+
+use crate::algorithms::DeltaProgram;
+use super::policies::RoundStats;
+use crate::engine::JobState;
+use crate::graph::{BlockPartition, Graph};
+use crate::util::threadpool::ThreadPool;
+
+/// One block entry of the parallel plan: which block, and which jobs
+/// (indices into the round's job slice) are active in it. Built by the
+/// policy from round-start summaries, so phase-1 tasks never need to
+/// re-derive activity from shared mutable state.
+pub(crate) struct BlockTaskSpec {
+    pub block: u32,
+    pub active: Vec<usize>,
+}
+
+/// Phase-1 output for one (block, job) pair.
+struct JobBlockOut {
+    /// Index into the round's job slice.
+    ji: usize,
+    /// The block's value lane after local processing.
+    values: Vec<f32>,
+    /// The block's delta lane after local processing.
+    deltas: Vec<f32>,
+    /// Net change to the block's tracked active-vertex count.
+    node_un_delta: i64,
+    /// Net change to the block's tracked priority sum (accumulated in
+    /// task order, so the merge result is deterministic).
+    p_sum_delta: f64,
+    /// Cross-block scatter contributions in (vertex, edge) order.
+    staged: Vec<(u32, f32)>,
+    updates: u64,
+    edges: u64,
+}
+
+/// Phase 1 for one block: pure function of the pre-round job state.
+///
+/// `fused = true` runs one [`block_pass`] over all active jobs
+/// (structure read once per vertex/edge); `false` runs a separate pass
+/// per job — the per-job reference access pattern for A/B runs. Per
+/// job the (vertex, edge) operation sequence is identical either way,
+/// so the flag changes memory behavior only, never numerics.
+fn run_block_task(
+    g: &Graph,
+    part: &BlockPartition,
+    jobs: &[JobState],
+    spec: &BlockTaskSpec,
+    fused: bool,
+) -> Vec<JobBlockOut> {
+    if fused {
+        block_pass(g, part, jobs, spec.block, &spec.active)
+    } else {
+        let mut outs = Vec::with_capacity(spec.active.len());
+        for &ji in &spec.active {
+            outs.extend(block_pass(g, part, jobs, spec.block, &[ji]));
+        }
+        outs
+    }
+}
+
+/// One staged pass over a block for the given job indices, with the
+/// fused access pattern of [`crate::engine::fused`]: the block's
+/// structure (offset row, targets, weights) is read **once** per
+/// vertex/edge and applied to every consuming job's local lanes —
+/// vertex-major with the job loop innermost.
+///
+/// This deliberately does not share code with the engine kernels: the
+/// parity suite checks this implementation, `process_block_fused_on`
+/// and the reference `process_block` against each other bit-for-bit,
+/// which only means something while they stay independent.
+fn block_pass(
+    g: &Graph,
+    part: &BlockPartition,
+    jobs: &[JobState],
+    block: u32,
+    active: &[usize],
+) -> Vec<JobBlockOut> {
+    let b = part.block(block);
+    let start = b.start as usize;
+    let nb = b.num_vertices();
+    let weighted = g.is_weighted();
+    // Task-local lane copies for every active job, up front.
+    let mut outs: Vec<JobBlockOut> = active
+        .iter()
+        .map(|&ji| JobBlockOut {
+            ji,
+            values: jobs[ji].values[start..start + nb].to_vec(),
+            deltas: jobs[ji].deltas[start..start + nb].to_vec(),
+            node_un_delta: 0,
+            p_sum_delta: 0.0,
+            staged: Vec::new(),
+            updates: 0,
+            edges: 0,
+        })
+        .collect();
+    // (index into outs, consumed delta) of jobs active at the vertex.
+    let mut consumers: Vec<(usize, f32)> = Vec::with_capacity(outs.len());
+    for lv in 0..nb {
+        consumers.clear();
+        for (oi, out) in outs.iter_mut().enumerate() {
+            let job = &jobs[out.ji];
+            let dv = out.deltas[lv];
+            let pv = out.values[lv];
+            if !job.program.is_active(pv, dv) {
+                continue;
+            }
+            out.deltas[lv] = job.program.identity();
+            out.values[lv] = job.program.apply(pv, dv);
+            if job.tracking.is_some() {
+                out.node_un_delta -= 1;
+                out.p_sum_delta -= job.program.priority(pv, dv) as f64;
+            }
+            out.updates += 1;
+            consumers.push((oi, dv));
+        }
+        if consumers.is_empty() {
+            continue;
+        }
+        // Structure reads — once for all consuming jobs.
+        let vi = start + lv;
+        let es = g.out_offsets[vi] as usize;
+        let ee = g.out_offsets[vi + 1] as usize;
+        let deg = ee - es;
+        for &(oi, _) in consumers.iter() {
+            outs[oi].edges += deg as u64;
+        }
+        if deg == 0 {
+            continue;
+        }
+        for e in es..ee {
+            let t = g.out_targets[e];
+            let w = if weighted { g.out_weights[e] } else { 1.0 };
+            let intra = t >= b.start && t < b.end;
+            for &(oi, dv) in consumers.iter() {
+                let out = &mut outs[oi];
+                let prog = &jobs[out.ji].program;
+                let p = prog.propagate(dv, deg, w);
+                if intra {
+                    // intra-block: apply to the local copy immediately
+                    let li = (t - b.start) as usize;
+                    let old = out.deltas[li];
+                    let new = prog.combine(old, p);
+                    out.deltas[li] = new;
+                    if new != old && jobs[out.ji].tracking.is_some() {
+                        let tv = out.values[li];
+                        let was = prog.is_active(tv, old);
+                        let is = prog.is_active(tv, new);
+                        if was {
+                            out.p_sum_delta -= prog.priority(tv, old) as f64;
+                        }
+                        if is {
+                            out.p_sum_delta += prog.priority(tv, new) as f64;
+                        }
+                        match (was, is) {
+                            (false, true) => out.node_un_delta += 1,
+                            (true, false) => out.node_un_delta -= 1,
+                            _ => {}
+                        }
+                    }
+                } else {
+                    out.staged.push((t, p));
+                }
+            }
+        }
+    }
+    // Jobs the block turned out converged for contribute nothing.
+    outs.retain(|o| o.updates > 0);
+    outs
+}
+
+/// Execute a planned set of block entries across the pool and merge the
+/// results deterministically. See the module docs for the two-phase
+/// scheme and its determinism argument.
+pub(crate) fn execute_blocks_staged(
+    g: &Graph,
+    part: &BlockPartition,
+    jobs: &mut [JobState],
+    specs: &[BlockTaskSpec],
+    fused: bool,
+    pool: &ThreadPool,
+) -> RoundStats {
+    let jobs_ro: &[JobState] = jobs;
+    let results: Vec<Vec<JobBlockOut>> =
+        pool.scope_map(specs, |_, spec| run_block_task(g, part, jobs_ro, spec, fused));
+
+    let mut stats = RoundStats::default();
+    // Phase 2a: copy block-local lanes back (disjoint vertex ranges)
+    // and apply each block's net summary change.
+    for (spec, outs) in specs.iter().zip(&results) {
+        let b = part.block(spec.block);
+        let start = b.start as usize;
+        for out in outs {
+            let job = &mut jobs[out.ji];
+            let n = out.values.len();
+            job.values[start..start + n].copy_from_slice(&out.values);
+            job.deltas[start..start + n].copy_from_slice(&out.deltas);
+            if let Some(tr) = &mut job.tracking {
+                let bi = b.id as usize;
+                tr.node_un[bi] = (tr.node_un[bi] as i64 + out.node_un_delta) as u32;
+                tr.p_sum[bi] += out.p_sum_delta;
+            }
+            job.updates += out.updates;
+            job.edges += out.edges;
+            stats.updates += out.updates;
+            stats.edges += out.edges;
+        }
+        if !outs.is_empty() {
+            stats.block_loads += 1;
+            stats.dispatches += outs.len() as u64;
+        }
+    }
+    // Phase 2b: fold staged cross-block contributions, blocks in queue
+    // order, contributions in (vertex, edge) order — the canonical
+    // sequence the sequential (workers = 1) execution also produces.
+    for outs in &results {
+        for out in outs {
+            let job = &mut jobs[out.ji];
+            for &(t, p) in &out.staged {
+                let ti = t as usize;
+                let old = job.deltas[ti];
+                let new = job.program.combine(old, p);
+                job.deltas[ti] = new;
+                if new != old {
+                    if let Some(tr) = &mut job.tracking {
+                        let tv = job.values[ti];
+                        let bi = tr.block_of[ti] as usize;
+                        let was = job.program.is_active(tv, old);
+                        let is = job.program.is_active(tv, new);
+                        if was {
+                            tr.p_sum[bi] -= job.program.priority(tv, old) as f64;
+                        }
+                        if is {
+                            tr.p_sum[bi] += job.program.priority(tv, new) as f64;
+                        }
+                        match (was, is) {
+                            (false, true) => tr.node_un[bi] += 1,
+                            (true, false) => tr.node_un[bi] -= 1,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+    stats
+}

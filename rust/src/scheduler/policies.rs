@@ -11,15 +11,27 @@
 //!   cache sharing but no prioritization (ablation).
 //! * `TwoLevel` — the paper: MPDS chooses blocks (per-job DO queues →
 //!   global queue), CAJS dispatches all unconverged jobs per block.
+//!
+//! Block-major policies execute through the **fused kernel**
+//! ([`crate::engine::fused`]) by default — one structure walk per block
+//! serves every unconverged job — with the per-job reference kernel
+//! kept behind `SchedulerConfig::fused = false` for A/B benches and the
+//! parity suite. [`Scheduler::round_parallel`] additionally spreads a
+//! round's work across a [`ThreadPool`] with deterministic results (see
+//! [`super::parallel`]).
 
-use super::cajs::dispatch_block;
+use super::cajs::{dispatch_block_on, DispatchStats};
 use super::do_select::{optimal_queue_length, DoSelector, DEFAULT_C};
-use super::global::{de_gl_priority, DEFAULT_ALPHA};
-use super::individual::{de_in_priority, JobQueue};
-use super::pair::Cbp;
-use crate::engine::{process_block, JobState, Probe};
+use super::global::{de_gl_priority, GlobalEntry, DEFAULT_ALPHA};
+use super::individual::{build_ptable_into, de_in_priority, JobQueue};
+use super::pair::{Cbp, PriorityPair};
+use super::parallel::{execute_blocks_staged, BlockTaskSpec};
+use crate::engine::{process_block, BlockRunStats, JobState, NoProbe, Probe};
 use crate::graph::{BlockPartition, Graph};
 use crate::util::rng::Pcg32;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Mutex;
+use std::time::Instant;
 
 /// Which policy the coordinator runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,11 +79,16 @@ pub struct SchedulerConfig {
     /// Override q directly (None ⇒ Eq. 4).
     pub q_override: Option<usize>,
     /// Maintain per-block summaries incrementally in the executor
-    /// instead of rescanning lanes each round. Wins in the long-tail
-    /// regime (many rounds, few active vertices); costs ~2 extra
-    /// comparisons per edge. See EXPERIMENTS.md §Perf for the
-    /// measurement behind the default.
+    /// instead of rescanning lanes each round. Default **true**: the
+    /// fused executor maintains them in the same pass, turning MPDS
+    /// planning into O(B_N) per job per round at ~2 extra comparisons
+    /// per edge.
     pub incremental_summaries: bool,
+    /// Execute block-major dispatch through the fused multi-job kernel
+    /// (one structure walk per block for all jobs). `false` restores
+    /// the per-job reference kernel — same numerics bit-for-bit, used
+    /// by the parity suite and the fused-vs-per-job bench.
+    pub fused: bool,
     pub seed: u64,
 }
 
@@ -84,14 +101,15 @@ impl SchedulerConfig {
             epsilon_frac: super::pair::DEFAULT_EPSILON_FRAC,
             samples: super::do_select::DEFAULT_SAMPLES,
             q_override: None,
-            incremental_summaries: false,
+            incremental_summaries: true,
+            fused: true,
             seed: 0x5eed,
         }
     }
 }
 
 /// Aggregate counters of one scheduling round.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct RoundStats {
     /// Block loads: distinct (visit) transfers of a block toward the
     /// CPU. The redundancy metric: independent execution loads a block
@@ -112,6 +130,22 @@ impl RoundStats {
     }
 }
 
+/// Per-round scratch owned by the scheduler so the steady-state round
+/// loop performs no B_N-sized allocations: pair tables, DO queues and
+/// the per-block active-job index buffer are all reused across rounds
+/// (inner `Vec`s keep their capacity).
+#[derive(Default)]
+struct RoundScratch {
+    /// Indices of unconverged jobs, in job-slice order.
+    live: Vec<usize>,
+    /// Per-live-job ⟨Node_un, P̄⟩ tables (parallel to `live`).
+    ptables: Vec<Vec<PriorityPair>>,
+    /// Per-live-job DO queues (parallel to `live`).
+    queues: Vec<JobQueue>,
+    /// Active-job indices for the block currently being dispatched.
+    active_idx: Vec<usize>,
+}
+
 /// Policy executor. Owns the RNG used by DO sampling so rounds are
 /// deterministic given the config seed.
 pub struct Scheduler {
@@ -124,13 +158,22 @@ pub struct Scheduler {
     /// Cached vertex→block map for enabling incremental job tracking
     /// (perf pass): rebuilt when the partition changes.
     block_map: Option<std::sync::Arc<[u32]>>,
+    /// Reused per-round buffers (perf pass: no steady-state allocs).
+    scratch: RoundScratch,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
         let selector = DoSelector::new(Cbp::new(cfg.epsilon_frac), cfg.samples);
         let rng = Pcg32::new(cfg.seed, 0x5c);
-        Scheduler { cfg, selector, rng, plan_seconds: 0.0, block_map: None }
+        Scheduler {
+            cfg,
+            selector,
+            rng,
+            plan_seconds: 0.0,
+            block_map: None,
+            scratch: RoundScratch::default(),
+        }
     }
 
     /// Ensure every job carries incremental block summaries against
@@ -199,6 +242,43 @@ impl Scheduler {
         stats
     }
 
+    /// Execute one scheduling round with the round's work spread across
+    /// `pool`'s workers. Results are **deterministic for any worker
+    /// count** (bit-identical to `workers = 1`): job-major policies
+    /// parallelize over jobs (jobs own disjoint lanes, so this is also
+    /// bit-identical to the sequential [`Scheduler::round`]);
+    /// block-major policies partition the global queue's block entries
+    /// across workers with staged cross-block scatters merged in
+    /// canonical queue order (see [`super::parallel`] — same fixpoints,
+    /// Jacobi instead of Gauss–Seidel across blocks within one round).
+    ///
+    /// No probe parameter: the cache simulator needs the serialized
+    /// address stream of the sequential engine; cache-simulated runs go
+    /// through [`Scheduler::round`].
+    pub fn round_parallel(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        pool: &ThreadPool,
+    ) -> RoundStats {
+        if self.cfg.incremental_summaries && self.cfg.kind != SchedulerKind::Independent {
+            self.ensure_tracking(part, jobs);
+        }
+        let stats = match self.cfg.kind {
+            SchedulerKind::Independent => self.par_round_independent(g, part, jobs, pool),
+            SchedulerKind::PrIterPerJob => self.par_round_priter(g, part, jobs, pool),
+            SchedulerKind::RoundRobinBlocks => self.par_round_roundrobin(g, part, jobs, pool),
+            SchedulerKind::TwoLevel => self.par_round_twolevel(g, part, jobs, pool),
+        };
+        for j in jobs.iter_mut() {
+            if !j.converged {
+                j.rounds += 1;
+            }
+        }
+        stats
+    }
+
     /// Baseline: job-major full sweeps. Every active job traverses all
     /// blocks before the next job starts — the maximal-redundancy
     /// "current mode" of the paper's Fig. 3.
@@ -237,14 +317,20 @@ impl Scheduler {
     ) -> RoundStats {
         let q = self.queue_length(part, g.num_vertices());
         let mut stats = RoundStats::default();
+        if self.scratch.ptables.is_empty() {
+            self.scratch.ptables.push(Vec::new());
+        }
         for job in jobs.iter_mut() {
             if job.converged {
                 continue;
             }
-            let t0 = std::time::Instant::now();
-            let jq = de_in_priority(job, part, &self.selector, q, &mut self.rng);
+            let t0 = Instant::now();
+            build_ptable_into(job, part, &mut self.scratch.ptables[0]);
+            let queue =
+                self.selector
+                    .select_top_q(&self.scratch.ptables[0], q, &mut self.rng);
             self.plan_seconds += t0.elapsed().as_secs_f64();
-            for pair in &jq.queue {
+            for pair in &queue {
                 let b = part.block(pair.block);
                 let s = process_block(g, b, job, probe);
                 stats.block_loads += 1;
@@ -267,7 +353,18 @@ impl Scheduler {
     ) -> RoundStats {
         let mut stats = RoundStats::default();
         for id in 0..part.num_blocks() as u32 {
-            let d = dispatch_block(g, part, id, jobs, probe);
+            let b = part.block(id);
+            // convergence-awareness filter (O(1) per job with tracking)
+            self.scratch.active_idx.clear();
+            for (ji, job) in jobs.iter().enumerate() {
+                if !job.converged && job.summary_of(b).node_un > 0 {
+                    self.scratch.active_idx.push(ji);
+                }
+            }
+            if self.scratch.active_idx.is_empty() {
+                continue;
+            }
+            let d = self.dispatch_active(g, part, id, jobs, probe);
             if d.jobs_dispatched > 0 {
                 stats.block_loads += 1;
                 stats.dispatches += d.jobs_dispatched;
@@ -296,44 +393,226 @@ impl Scheduler {
         probe: &mut P,
     ) -> RoundStats {
         let q = self.queue_length(part, g.num_vertices());
-        let t0 = std::time::Instant::now();
-        // Step ②: De_In_Priority per job (keeping the pair tables).
-        let mut live: Vec<usize> = Vec::with_capacity(jobs.len());
-        let mut ptables: Vec<Vec<super::pair::PriorityPair>> = Vec::new();
-        let mut queues: Vec<JobQueue> = Vec::new();
-        for (ji, j) in jobs.iter().enumerate() {
-            if j.converged {
-                continue;
-            }
-            let ptable = super::individual::build_ptable(j, part);
-            let queue = self.selector.select_top_q(&ptable, q, &mut self.rng);
-            queues.push(JobQueue { job: j.id, queue });
-            ptables.push(ptable);
-            live.push(ji);
-        }
-        // Step ③: De_Gl_Priority.
-        let global = de_gl_priority(&queues, q, self.cfg.alpha);
+        let t0 = Instant::now();
+        let global = self.plan_twolevel(part, jobs, q);
         self.plan_seconds += t0.elapsed().as_secs_f64();
         // Step ④: CAJS dispatch in global priority order, using the
         // step-② tables as the convergence-awareness filter.
         let mut stats = RoundStats::default();
         for entry in &global {
-            let mut jobs_dispatched = 0u64;
-            for (k, &ji) in live.iter().enumerate() {
-                if ptables[k][entry.block as usize].node_un == 0 {
-                    continue;
+            self.scratch.active_idx.clear();
+            for (k, &ji) in self.scratch.live.iter().enumerate() {
+                if self.scratch.ptables[k][entry.block as usize].node_un > 0 {
+                    self.scratch.active_idx.push(ji);
                 }
-                let s = process_block(g, part.block(entry.block), &mut jobs[ji], probe);
-                jobs_dispatched += 1;
-                stats.updates += s.updates;
-                stats.edges += s.edges;
             }
-            if jobs_dispatched > 0 {
+            if self.scratch.active_idx.is_empty() {
+                continue;
+            }
+            let d = self.dispatch_active(g, part, entry.block, jobs, probe);
+            if d.jobs_dispatched > 0 {
                 stats.block_loads += 1;
-                stats.dispatches += jobs_dispatched;
+                stats.dispatches += d.jobs_dispatched;
+                stats.updates += d.updates;
+                stats.edges += d.edges;
             }
         }
         stats
+    }
+
+    /// Dispatch one block to the jobs in `scratch.active_idx` through
+    /// the shared CAJS entry point, honoring `cfg.fused`.
+    fn dispatch_active<P: Probe>(
+        &self,
+        g: &Graph,
+        part: &BlockPartition,
+        block: u32,
+        jobs: &mut [JobState],
+        probe: &mut P,
+    ) -> DispatchStats {
+        dispatch_block_on(
+            g,
+            part,
+            block,
+            jobs,
+            &self.scratch.active_idx,
+            self.cfg.fused,
+            probe,
+        )
+    }
+
+    /// Steps ②/③ of a two-level round: build per-job pair tables and DO
+    /// queues into the reusable scratch, then merge the global queue.
+    /// `scratch.live`/`scratch.ptables`/`scratch.queues` are left
+    /// populated for the dispatch step.
+    fn plan_twolevel(
+        &mut self,
+        part: &BlockPartition,
+        jobs: &[JobState],
+        q: usize,
+    ) -> Vec<GlobalEntry> {
+        self.scratch.live.clear();
+        self.scratch.queues.clear();
+        let mut k = 0usize;
+        for (ji, j) in jobs.iter().enumerate() {
+            if j.converged {
+                continue;
+            }
+            if self.scratch.ptables.len() == k {
+                self.scratch.ptables.push(Vec::new());
+            }
+            build_ptable_into(j, part, &mut self.scratch.ptables[k]);
+            let queue =
+                self.selector
+                    .select_top_q(&self.scratch.ptables[k], q, &mut self.rng);
+            self.scratch.queues.push(JobQueue { job: j.id, queue });
+            self.scratch.live.push(ji);
+            k += 1;
+        }
+        de_gl_priority(&self.scratch.queues, q, self.cfg.alpha)
+    }
+
+    // ---- parallel round variants --------------------------------------
+
+    /// Independent, parallel: jobs own disjoint lanes, so running each
+    /// job's full sweep on its own worker is bit-identical to the
+    /// sequential job-major loop.
+    fn par_round_independent(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        pool: &ThreadPool,
+    ) -> RoundStats {
+        let tasks: Vec<Mutex<&mut JobState>> =
+            jobs.iter_mut().filter(|j| !j.converged).map(Mutex::new).collect();
+        let per: Vec<BlockRunStats> = pool.scope_map(&tasks, |_, m| {
+            let mut guard = m.lock().unwrap();
+            let mut s = BlockRunStats::default();
+            for b in &part.blocks {
+                s.add(process_block(g, b, &mut **guard, &mut NoProbe));
+            }
+            s
+        });
+        let mut stats = RoundStats::default();
+        for s in per {
+            stats.block_loads += part.num_blocks() as u64;
+            stats.dispatches += part.num_blocks() as u64;
+            stats.updates += s.updates;
+            stats.edges += s.edges;
+        }
+        stats
+    }
+
+    /// PrIter, parallel: queues are planned sequentially (same RNG
+    /// sequence as the sequential path — a job's plan depends only on
+    /// its own lanes), then each job processes its queue on its own
+    /// worker. Bit-identical to the sequential path.
+    fn par_round_priter(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        pool: &ThreadPool,
+    ) -> RoundStats {
+        let q = self.queue_length(part, g.num_vertices());
+        let t0 = Instant::now();
+        if self.scratch.ptables.is_empty() {
+            self.scratch.ptables.push(Vec::new());
+        }
+        let mut queues_by_ji: Vec<Option<Vec<PriorityPair>>> = Vec::new();
+        queues_by_ji.resize_with(jobs.len(), || None);
+        for (ji, job) in jobs.iter().enumerate() {
+            if job.converged {
+                continue;
+            }
+            build_ptable_into(job, part, &mut self.scratch.ptables[0]);
+            let queue =
+                self.selector
+                    .select_top_q(&self.scratch.ptables[0], q, &mut self.rng);
+            queues_by_ji[ji] = Some(queue);
+        }
+        self.plan_seconds += t0.elapsed().as_secs_f64();
+        let tasks: Vec<Mutex<(&mut JobState, Vec<PriorityPair>)>> = jobs
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(ji, j)| queues_by_ji[ji].take().map(|qv| Mutex::new((j, qv))))
+            .collect();
+        let per: Vec<(u64, BlockRunStats)> = pool.scope_map(&tasks, |_, m| {
+            let mut guard = m.lock().unwrap();
+            let (job, queue) = &mut *guard;
+            let mut s = BlockRunStats::default();
+            for pair in queue.iter() {
+                s.add(process_block(g, part.block(pair.block), &mut **job, &mut NoProbe));
+            }
+            (queue.len() as u64, s)
+        });
+        let mut stats = RoundStats::default();
+        for (loads, s) in per {
+            stats.block_loads += loads;
+            stats.dispatches += loads;
+            stats.updates += s.updates;
+            stats.edges += s.edges;
+        }
+        stats
+    }
+
+    /// RoundRobin, parallel: all blocks, activity filtered from
+    /// round-start summaries, executed via the staged block engine.
+    fn par_round_roundrobin(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        pool: &ThreadPool,
+    ) -> RoundStats {
+        let mut specs: Vec<BlockTaskSpec> = Vec::with_capacity(part.num_blocks());
+        for id in 0..part.num_blocks() as u32 {
+            let b = part.block(id);
+            let active: Vec<usize> = jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| !j.converged && j.summary_of(b).node_un > 0)
+                .map(|(ji, _)| ji)
+                .collect();
+            if !active.is_empty() {
+                specs.push(BlockTaskSpec { block: id, active });
+            }
+        }
+        execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool)
+    }
+
+    /// TwoLevel, parallel: MPDS planning stays sequential (it is cheap
+    /// and RNG-ordered); the global queue's block entries are then
+    /// executed via the staged block engine.
+    fn par_round_twolevel(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        pool: &ThreadPool,
+    ) -> RoundStats {
+        let q = self.queue_length(part, g.num_vertices());
+        let t0 = Instant::now();
+        let global = self.plan_twolevel(part, jobs, q);
+        self.plan_seconds += t0.elapsed().as_secs_f64();
+        let mut specs: Vec<BlockTaskSpec> = Vec::with_capacity(global.len());
+        for entry in &global {
+            let active: Vec<usize> = self
+                .scratch
+                .live
+                .iter()
+                .enumerate()
+                .filter(|(k, _)| {
+                    self.scratch.ptables[*k][entry.block as usize].node_un > 0
+                })
+                .map(|(_, &ji)| ji)
+                .collect();
+            if !active.is_empty() {
+                specs.push(BlockTaskSpec { block: entry.block, active });
+            }
+        }
+        execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool)
     }
 
     /// Expose the global queue MPDS would produce right now (used by
@@ -370,26 +649,56 @@ pub fn run_to_convergence<P: Probe>(
     for round in 0..max_rounds {
         let s = sched.round(g, part, jobs, probe);
         total.merge(s);
-        let mut all_done = true;
-        for (ji, j) in jobs.iter_mut().enumerate() {
-            if !j.converged {
-                // Lazy convergence check (perf pass): a job that consumed
-                // vertices this round is almost always still live — skip
-                // its O(n) scan and re-check next round once it goes
-                // quiet. A globally zero-update round is definitive.
-                let quiet = j.updates == updates_before[ji];
-                if s.updates == 0 || (quiet && j.active_count_fast() == 0) {
-                    j.converged = true;
-                }
-                all_done &= j.converged;
-            }
-            updates_before[ji] = j.updates;
-        }
-        if all_done {
+        if converged_after_round(jobs, &mut updates_before, s.updates) {
             return (round + 1, total);
         }
     }
     (max_rounds, total)
+}
+
+/// Parallel-round counterpart of [`run_to_convergence`]: drives
+/// [`Scheduler::round_parallel`] over `pool` until every job converges.
+pub fn run_to_convergence_parallel(
+    sched: &mut Scheduler,
+    g: &Graph,
+    part: &BlockPartition,
+    jobs: &mut [JobState],
+    pool: &ThreadPool,
+    max_rounds: usize,
+) -> (usize, RoundStats) {
+    let mut total = RoundStats::default();
+    let mut updates_before: Vec<u64> = jobs.iter().map(|j| j.updates).collect();
+    for round in 0..max_rounds {
+        let s = sched.round_parallel(g, part, jobs, pool);
+        total.merge(s);
+        if converged_after_round(jobs, &mut updates_before, s.updates) {
+            return (round + 1, total);
+        }
+    }
+    (max_rounds, total)
+}
+
+/// Shared lazy convergence check (perf pass): a job that consumed
+/// vertices this round is almost always still live — skip its O(n)
+/// scan and re-check next round once it goes quiet. A globally
+/// zero-update round is definitive.
+fn converged_after_round(
+    jobs: &mut [JobState],
+    updates_before: &mut [u64],
+    round_updates: u64,
+) -> bool {
+    let mut all_done = true;
+    for (ji, j) in jobs.iter_mut().enumerate() {
+        if !j.converged {
+            let quiet = j.updates == updates_before[ji];
+            if round_updates == 0 || (quiet && j.active_count_fast() == 0) {
+                j.converged = true;
+            }
+            all_done &= j.converged;
+        }
+        updates_before[ji] = j.updates;
+    }
+    all_done
 }
 
 #[cfg(test)]
@@ -516,6 +825,24 @@ mod tests {
     }
 
     #[test]
+    fn parallel_round_counts_rounds_and_converges() {
+        let g = generate::rmat(9, 8, 53);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let pool = ThreadPool::new(2);
+        for kind in SchedulerKind::ALL {
+            let mut jobs = mixed_jobs(&g, 3);
+            let mut sched = Scheduler::new(SchedulerConfig::new(kind));
+            sched.round_parallel(&g, &part, &mut jobs, &pool);
+            assert!(jobs.iter().all(|j| j.rounds == 1), "{}", kind.name());
+            let (_, stats) = run_to_convergence_parallel(
+                &mut sched, &g, &part, &mut jobs, &pool, 100_000,
+            );
+            assert!(stats.updates > 0, "{}", kind.name());
+            assert!(jobs.iter().all(|j| j.converged), "{}", kind.name());
+        }
+    }
+
+    #[test]
     fn plan_global_queue_orders_by_score() {
         let g = generate::rmat(9, 8, 61);
         let part = BlockPartition::by_vertex_count(&g, 64);
@@ -546,5 +873,29 @@ mod tests {
         cfg.q_override = Some(3);
         let sched = Scheduler::new(cfg);
         assert_eq!(sched.queue_length(&part, 1024), 3);
+    }
+
+    #[test]
+    fn fused_and_unfused_rounds_bit_identical() {
+        let g = generate::rmat(9, 8, 81);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        for kind in [SchedulerKind::RoundRobinBlocks, SchedulerKind::TwoLevel] {
+            let mut jobs_a = mixed_jobs(&g, 4);
+            let mut jobs_b = mixed_jobs(&g, 4);
+            let cfg_a = SchedulerConfig::new(kind);
+            let mut cfg_b = SchedulerConfig::new(kind);
+            cfg_b.fused = false;
+            let mut sa = Scheduler::new(cfg_a);
+            let mut sb = Scheduler::new(cfg_b);
+            for round in 0..5 {
+                let ra = sa.round(&g, &part, &mut jobs_a, &mut NoProbe);
+                let rb = sb.round(&g, &part, &mut jobs_b, &mut NoProbe);
+                assert_eq!(ra, rb, "{} round {round} stats", kind.name());
+                for (x, y) in jobs_a.iter().zip(&jobs_b) {
+                    assert_eq!(x.values, y.values, "{} round {round}", kind.name());
+                    assert_eq!(x.deltas, y.deltas, "{} round {round}", kind.name());
+                }
+            }
+        }
     }
 }

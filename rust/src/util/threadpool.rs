@@ -6,7 +6,7 @@
 //! `workers == 1` (no threads spawned, closures run inline).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, Once};
 use std::thread;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
@@ -17,25 +17,52 @@ enum Msg {
 }
 
 /// A fixed pool of worker threads accepting boxed closures.
+///
+/// Persistent workers back the fire-and-forget [`ThreadPool::execute`]
+/// API and are spawned **lazily on first use** — a pool driven only
+/// through the scoped [`ThreadPool::scope_map`] API (the scheduler's
+/// round engine) never keeps idle threads alive.
 pub struct ThreadPool {
     tx: mpsc::Sender<Msg>,
-    handles: Vec<thread::JoinHandle<()>>,
+    rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    spawn_once: Once,
     inflight: Arc<(Mutex<usize>, Condvar)>,
     workers: usize,
 }
 
 impl ThreadPool {
+    /// Pool sized to the machine: one worker per available core
+    /// (`std::thread::available_parallelism`, min 1).
+    pub fn auto() -> Self {
+        Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
     /// `workers == 1` means inline execution (no threads).
     pub fn new(workers: usize) -> Self {
         assert!(workers >= 1);
         let (tx, rx) = mpsc::channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
-        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let mut handles = Vec::new();
-        if workers > 1 {
-            for i in 0..workers {
-                let rx = Arc::clone(&rx);
-                let inflight = Arc::clone(&inflight);
+        ThreadPool {
+            tx,
+            rx: Arc::new(Mutex::new(rx)),
+            handles: Mutex::new(Vec::new()),
+            spawn_once: Once::new(),
+            inflight: Arc::new((Mutex::new(0usize), Condvar::new())),
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Spawn the persistent workers backing `execute` (idempotent).
+    fn ensure_workers(&self) {
+        self.spawn_once.call_once(|| {
+            let mut handles = self.handles.lock().unwrap();
+            for i in 0..self.workers {
+                let rx = Arc::clone(&self.rx);
+                let inflight = Arc::clone(&self.inflight);
                 handles.push(
                     thread::Builder::new()
                         .name(format!("tlsched-worker-{i}"))
@@ -57,12 +84,7 @@ impl ThreadPool {
                         .expect("spawn worker"),
                 );
             }
-        }
-        ThreadPool { tx, handles, inflight, workers }
-    }
-
-    pub fn workers(&self) -> usize {
-        self.workers
+        });
     }
 
     /// Submit a task. With a single worker the task runs inline.
@@ -71,6 +93,7 @@ impl ThreadPool {
             f();
             return;
         }
+        self.ensure_workers();
         {
             let (lock, _) = &*self.inflight;
             *lock.lock().unwrap() += 1;
@@ -93,6 +116,14 @@ impl ThreadPool {
     /// Fork-join map over items: applies `f(index, &item)` for each item,
     /// collecting results in input order. Uses scoped threads so `f` may
     /// borrow from the caller.
+    ///
+    /// Deliberate trade-off: each call spawns `workers` scoped threads
+    /// (~tens of µs each) rather than routing the borrows through the
+    /// persistent `execute` workers, which would require unsafe
+    /// lifetime erasure plus panic-deadlock handling. Per scheduling
+    /// round the spawn cost is small against the block work; revisit
+    /// (ROADMAP open item) if profiling shows it on top for tiny
+    /// graphs.
     pub fn scope_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
     where
         T: Sync,
@@ -126,10 +157,11 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.handles {
+        let handles = self.handles.get_mut().unwrap();
+        for _ in handles.iter() {
             let _ = self.tx.send(Msg::Shutdown);
         }
-        for h in self.handles.drain(..) {
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }

@@ -1,0 +1,353 @@
+//! Parity suite for the fused multi-job kernel and the parallel round
+//! engine.
+//!
+//! Three layers of guarantees, each asserted bit-for-bit on the f32
+//! value/delta lanes:
+//!
+//! 1. **Kernel parity** — `process_block_fused` produces exactly the
+//!    lanes of per-job `process_block` dispatch, for every `JobKind`,
+//!    mixed job sets, and the empty-block edge case. (Jobs own disjoint
+//!    lanes, so hoisting the job loop inside the vertex loop preserves
+//!    each job's f32 op sequence.)
+//! 2. **Scheduler parity** — a sequential round with `fused = true` is
+//!    bit-identical to the per-job reference round (`fused = false`)
+//!    for every `SchedulerKind`.
+//! 3. **Parallel determinism** — `round_parallel` is bit-identical
+//!    across worker counts for every `SchedulerKind` (the sequential
+//!    reference of the staged engine is the same code at `workers =
+//!    1`); job-major policies are additionally bit-identical to the
+//!    sequential `round`, and every parallel run converges to the same
+//!    fixpoint as the sequential engine within program tolerance.
+
+mod common;
+
+use tlsched::algorithms::DeltaProgram;
+use tlsched::engine::{
+    process_block, process_block_fused, JobSpec, JobState, NoProbe,
+};
+use tlsched::graph::{generate, Block, BlockPartition, Graph};
+use tlsched::scheduler::{
+    run_to_convergence, run_to_convergence_parallel, Scheduler, SchedulerConfig,
+    SchedulerKind,
+};
+use tlsched::trace::JobKind;
+use tlsched::util::threadpool::ThreadPool;
+
+fn mixed_jobs(g: &Graph, n: usize) -> Vec<JobState> {
+    (0..n)
+        .map(|i| {
+            let kind = JobKind::ALL[i % 5];
+            JobState::new(
+                i as u32,
+                JobSpec::new(kind, (i as u32 * 131) % g.num_vertices() as u32),
+                g,
+            )
+        })
+        .collect()
+}
+
+fn same_kind_jobs(g: &Graph, kind: JobKind, n: usize) -> Vec<JobState> {
+    (0..n)
+        .map(|i| {
+            JobState::new(
+                i as u32,
+                JobSpec::new(kind, (i as u32 * 97) % g.num_vertices() as u32),
+                g,
+            )
+        })
+        .collect()
+}
+
+fn assert_lanes_eq(a: &[JobState], b: &[JobState], ctx: &str) {
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.values, y.values, "values diverge: {ctx} (job {})", x.id);
+        assert_eq!(x.deltas, y.deltas, "deltas diverge: {ctx} (job {})", x.id);
+        assert_eq!(x.updates, y.updates, "updates diverge: {ctx} (job {})", x.id);
+        assert_eq!(x.edges, y.edges, "edges diverge: {ctx} (job {})", x.id);
+    }
+}
+
+// ---- 1. kernel parity -------------------------------------------------
+
+#[test]
+fn kernel_parity_every_kind() {
+    for kind in JobKind::ALL {
+        // rmat (power-law) and road grid (weighted) exercise both edge
+        // regimes
+        for g in [generate::rmat(9, 8, 11), generate::road_grid(16, 16, 5)] {
+            let part = BlockPartition::by_vertex_count(&g, 41); // odd size
+            let mut a = same_kind_jobs(&g, kind, 4);
+            let mut b = same_kind_jobs(&g, kind, 4);
+            for _sweep in 0..3 {
+                for blk in &part.blocks {
+                    for j in a.iter_mut() {
+                        process_block(&g, blk, j, &mut NoProbe);
+                    }
+                    process_block_fused(&g, blk, &mut b, &mut NoProbe);
+                    assert_lanes_eq(&a, &b, &format!("{} block {}", kind.name(), blk.id));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_parity_mixed_kinds() {
+    let g = generate::rmat(10, 8, 23);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let mut a = mixed_jobs(&g, 8);
+    let mut b = mixed_jobs(&g, 8);
+    for _sweep in 0..4 {
+        for blk in &part.blocks {
+            for j in a.iter_mut() {
+                process_block(&g, blk, j, &mut NoProbe);
+            }
+            process_block_fused(&g, blk, &mut b, &mut NoProbe);
+        }
+        assert_lanes_eq(&a, &b, "mixed sweep");
+    }
+}
+
+#[test]
+fn kernel_empty_block_edge_case() {
+    let g = generate::erdos_renyi(32, 100, 3);
+    let empty = Block { id: 0, start: 7, end: 7, in_edges: 0, out_edges: 0 };
+    let mut jobs = mixed_jobs(&g, 3);
+    let before: Vec<(Vec<f32>, Vec<f32>)> =
+        jobs.iter().map(|j| (j.values.clone(), j.deltas.clone())).collect();
+    let s = process_block_fused(&g, &empty, &mut jobs, &mut NoProbe);
+    assert_eq!(s.updates, 0);
+    assert_eq!(s.jobs_dispatched, 0);
+    for (j, (v, d)) in jobs.iter().zip(&before) {
+        assert_eq!(&j.values, v);
+        assert_eq!(&j.deltas, d);
+    }
+}
+
+// ---- 2. scheduler parity: fused vs per-job reference ------------------
+
+#[test]
+fn scheduler_fused_matches_reference_every_policy() {
+    let g = generate::rmat(10, 8, 37);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    for kind in SchedulerKind::ALL {
+        let mut jobs_fused = mixed_jobs(&g, 6);
+        let mut jobs_ref = mixed_jobs(&g, 6);
+        let cfg_fused = SchedulerConfig::new(kind);
+        let mut cfg_ref = SchedulerConfig::new(kind);
+        cfg_ref.fused = false;
+        let mut sf = Scheduler::new(cfg_fused);
+        let mut sr = Scheduler::new(cfg_ref);
+        for round in 0..6 {
+            let a = sf.round(&g, &part, &mut jobs_fused, &mut NoProbe);
+            let b = sr.round(&g, &part, &mut jobs_ref, &mut NoProbe);
+            assert_eq!(a, b, "{} round {round} stats", kind.name());
+            assert_lanes_eq(
+                &jobs_fused,
+                &jobs_ref,
+                &format!("{} round {round}", kind.name()),
+            );
+        }
+    }
+}
+
+// ---- 3. parallel rounds -----------------------------------------------
+
+#[test]
+fn parallel_rounds_bit_identical_across_worker_counts() {
+    let g = generate::rmat(10, 8, 41);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    for kind in SchedulerKind::ALL {
+        let mut runs: Vec<(Vec<JobState>, Vec<tlsched::scheduler::RoundStats>)> = pools
+            .iter()
+            .map(|pool| {
+                let mut jobs = mixed_jobs(&g, 6);
+                let mut sched = Scheduler::new(SchedulerConfig::new(kind));
+                let stats: Vec<_> = (0..6)
+                    .map(|_| sched.round_parallel(&g, &part, &mut jobs, pool))
+                    .collect();
+                (jobs, stats)
+            })
+            .collect();
+        let (ref_jobs, ref_stats) = runs.remove(0);
+        for (w, (jobs, stats)) in runs.iter().enumerate() {
+            assert_eq!(&ref_stats, stats, "{} stats differ at pool {w}", kind.name());
+            assert_lanes_eq(&ref_jobs, jobs, &format!("{} pool {w}", kind.name()));
+        }
+    }
+}
+
+#[test]
+fn parallel_fused_and_reference_kernels_bit_identical() {
+    // The request path honors `fused = false` too: the staged engine
+    // with per-job passes must equal the fused staged engine exactly.
+    let g = generate::rmat(9, 8, 67);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let pool = ThreadPool::new(4);
+    for kind in [SchedulerKind::RoundRobinBlocks, SchedulerKind::TwoLevel] {
+        let mut jobs_fused = mixed_jobs(&g, 5);
+        let mut jobs_ref = mixed_jobs(&g, 5);
+        let cfg_fused = SchedulerConfig::new(kind);
+        let mut cfg_ref = SchedulerConfig::new(kind);
+        cfg_ref.fused = false;
+        let mut sf = Scheduler::new(cfg_fused);
+        let mut sr = Scheduler::new(cfg_ref);
+        for round in 0..5 {
+            let a = sf.round_parallel(&g, &part, &mut jobs_fused, &pool);
+            let b = sr.round_parallel(&g, &part, &mut jobs_ref, &pool);
+            assert_eq!(a, b, "{} round {round}", kind.name());
+            assert_lanes_eq(
+                &jobs_fused,
+                &jobs_ref,
+                &format!("{} parallel round {round}", kind.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_job_major_policies_match_sequential_bitwise() {
+    // Independent and PrIter parallelize over jobs with disjoint lanes:
+    // the parallel round must equal the sequential round exactly.
+    let g = generate::rmat(9, 8, 47);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let pool = ThreadPool::new(4);
+    for kind in [SchedulerKind::Independent, SchedulerKind::PrIterPerJob] {
+        let mut jobs_seq = mixed_jobs(&g, 5);
+        let mut jobs_par = mixed_jobs(&g, 5);
+        let mut ss = Scheduler::new(SchedulerConfig::new(kind));
+        let mut sp = Scheduler::new(SchedulerConfig::new(kind));
+        for round in 0..5 {
+            let a = ss.round(&g, &part, &mut jobs_seq, &mut NoProbe);
+            let b = sp.round_parallel(&g, &part, &mut jobs_par, &pool);
+            assert_eq!(a, b, "{} round {round}", kind.name());
+            assert_lanes_eq(
+                &jobs_seq,
+                &jobs_par,
+                &format!("{} round {round}", kind.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_fixpoints_match_sequential_every_policy() {
+    // Block-major parallel rounds reorder cross-block propagation
+    // (Jacobi within a round), so convergence paths differ — but the
+    // delta-accumulative model guarantees the same fixpoints.
+    let g = generate::rmat(10, 8, 53);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let pool = ThreadPool::new(4);
+    for kind in SchedulerKind::ALL {
+        let mut jobs_seq = mixed_jobs(&g, 5);
+        let mut ss = Scheduler::new(SchedulerConfig::new(kind));
+        run_to_convergence(&mut ss, &g, &part, &mut jobs_seq, &mut NoProbe, 1_000_000);
+        assert!(jobs_seq.iter().all(|j| j.converged), "{} seq", kind.name());
+
+        let mut jobs_par = mixed_jobs(&g, 5);
+        let mut sp = Scheduler::new(SchedulerConfig::new(kind));
+        run_to_convergence_parallel(&mut sp, &g, &part, &mut jobs_par, &pool, 1_000_000);
+        assert!(jobs_par.iter().all(|j| j.converged), "{} par", kind.name());
+
+        for (a, b) in jobs_seq.iter().zip(&jobs_par) {
+            let tol = a.program.value_tolerance();
+            for (vi, (x, y)) in a.values.iter().zip(&b.values).enumerate() {
+                assert_eq!(
+                    x.is_finite(),
+                    y.is_finite(),
+                    "{}: job {} v{vi} reachability",
+                    kind.name(),
+                    a.id
+                );
+                if x.is_finite() {
+                    assert!(
+                        (x - y).abs() < tol * 4.0,
+                        "{}: job {} v{vi}: {x} vs {y}",
+                        kind.name(),
+                        a.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_rounds_keep_tracking_exact() {
+    // Incremental ⟨Node_un, ΣP⟩ summaries must stay exact through the
+    // staged merge (net-delta application + per-contribution
+    // transitions).
+    let g = generate::rmat(9, 8, 59);
+    let part = BlockPartition::by_vertex_count(&g, 32);
+    let pool = ThreadPool::new(4);
+    for kind in [SchedulerKind::RoundRobinBlocks, SchedulerKind::TwoLevel] {
+        let mut jobs = mixed_jobs(&g, 4);
+        let mut sched = Scheduler::new(SchedulerConfig::new(kind));
+        for _ in 0..4 {
+            sched.round_parallel(&g, &part, &mut jobs, &pool);
+        }
+        for job in &jobs {
+            assert!(job.tracking.is_some(), "{}", kind.name());
+            for b in &part.blocks {
+                let scanned = job.block_summary(b);
+                let tracked = job.summary_of(b);
+                assert_eq!(
+                    tracked.node_un,
+                    scanned.node_un,
+                    "{}: job {} block {} node_un",
+                    kind.name(),
+                    job.id,
+                    b.id
+                );
+                let tol = 1e-3 * (1.0 + scanned.p_sum.abs());
+                assert!(
+                    (tracked.p_sum - scanned.p_sum).abs() < tol,
+                    "{}: job {} block {} p_sum {} vs {}",
+                    kind.name(),
+                    job.id,
+                    b.id,
+                    tracked.p_sum,
+                    scanned.p_sum
+                );
+            }
+            assert_eq!(job.active_count_fast(), job.active_count());
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_twolevel_deterministic_on_random_graphs() {
+    common::prop_check("parallel determinism", 10, |rng| {
+        let g = common::random_graph(rng);
+        if g.num_vertices() < 8 {
+            return Ok(());
+        }
+        let part = common::random_partition(&g, rng);
+        let seed = rng.next_u64();
+        let kinds = [JobKind::PageRank, JobKind::Sssp, JobKind::Bfs, JobKind::Wcc];
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|i| JobSpec::new(kinds[i], rng.gen_index(g.num_vertices()) as u32))
+            .collect();
+        let mut lanes: Vec<Vec<Vec<f32>>> = Vec::new();
+        for workers in [1usize, 3] {
+            let pool = ThreadPool::new(workers);
+            let mut jobs: Vec<JobState> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| JobState::new(i as u32, s.clone(), &g))
+                .collect();
+            let mut cfg = SchedulerConfig::new(SchedulerKind::TwoLevel);
+            cfg.seed = seed;
+            let mut sched = Scheduler::new(cfg);
+            for _ in 0..5 {
+                sched.round_parallel(&g, &part, &mut jobs, &pool);
+            }
+            lanes.push(jobs.iter().map(|j| j.deltas.clone()).collect());
+        }
+        if lanes[0] != lanes[1] {
+            return Err("worker count changed round results".into());
+        }
+        Ok(())
+    });
+}
