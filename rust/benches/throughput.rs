@@ -21,9 +21,23 @@ fn main() {
         .opt("max-concurrent", "16", "admission limit")
         .opt("fused-scale", "14", "rmat scale for the fused-vs-per-job A/B")
         .opt("fused-jobs", "8", "concurrent jobs for the fused-vs-per-job A/B")
-        .opt("fused-out", "BENCH_fused.json", "where to write the fused A/B report");
+        .opt("fused-out", "BENCH_fused.json", "where to write the fused A/B report")
+        .opt(
+            "check-against",
+            "",
+            "baseline BENCH json; exit nonzero on >20% fused-speedup regression",
+        );
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
-    let a = spec.parse_from(&argv).unwrap_or_else(|_| spec.parse_from(&[]).unwrap());
+    // fail loudly on bad flags: a silently-defaulted run would skip the
+    // --check-against regression gate while the CI job stays green
+    let a = spec.parse_from(&argv).unwrap_or_else(|e| {
+        if matches!(e, tlsched::util::args::ArgError::Help) {
+            println!("{}", spec.usage());
+            std::process::exit(0);
+        }
+        eprintln!("throughput bench: {e}\n\n{}", spec.usage());
+        std::process::exit(2);
+    });
 
     let g = generate::rmat(a.parse("scale"), 8, 99);
     let part = BlockPartition::by_vertex_count(&g, a.usize("block-vertices"));
@@ -236,4 +250,48 @@ fn main() {
     let out = a.str("fused-out");
     std::fs::write(out, report.to_string()).expect("write BENCH_fused.json");
     eprintln!("fused A/B report written to {out}");
+
+    // ---- bench regression gate ------------------------------------------
+    // Compare the *speedup ratios* against a committed baseline: they are
+    // same-machine A/Bs within this run, so the gate is insensitive to
+    // runner speed but catches the fused/parallel path losing ground
+    // against the seed per-job dispatch. >20% relative drop fails.
+    let baseline_path = a.str("check-against");
+    if !baseline_path.is_empty() {
+        let text = std::fs::read_to_string(baseline_path)
+            .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+        let baseline = Json::parse(&text).expect("parse baseline json");
+        let get = |j: &Json, key: &str| -> f64 {
+            j.get(key).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("missing {key}"))
+        };
+        let mut failed = false;
+        for key in ["speedup_fused_seq", "speedup_fused_parallel"] {
+            let base = get(&baseline, key);
+            let cur = get(&report, key);
+            let floor = base * 0.8;
+            if cur < floor {
+                eprintln!(
+                    "REGRESSION: {key} = {cur:.3} is below 80% of baseline {base:.3} \
+                     (floor {floor:.3})"
+                );
+                failed = true;
+            } else {
+                eprintln!("bench gate: {key} = {cur:.3} vs baseline {base:.3} — ok");
+            }
+        }
+        // total converged work is deterministic for fixed scale/jobs:
+        // a mismatch means the kernels changed semantics, not speed
+        let base_updates = get(&baseline, "updates");
+        if base_updates > 0.0 && (seed_updates as f64 - base_updates).abs() > 0.5 {
+            eprintln!(
+                "REGRESSION: updates = {seed_updates} differs from baseline {base_updates} \
+                 (work-to-convergence changed)"
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        eprintln!("bench gate passed against {baseline_path}");
+    }
 }

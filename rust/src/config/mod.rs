@@ -5,6 +5,7 @@
 //! (strings, numbers, booleans), `#` comments. Every knob has a
 //! default matching the paper's settings, so an empty config is valid.
 
+use crate::coordinator::{AdmissionConfig, AdmissionPolicy};
 use crate::memsim::{CacheConfig, HierarchyConfig};
 use crate::scheduler::{SchedulerConfig, SchedulerKind};
 use std::collections::BTreeMap;
@@ -38,6 +39,22 @@ pub struct RunConfig {
     pub max_concurrent: usize,
     /// Round-execution worker threads (0 = one per available core).
     pub workers: usize,
+    /// Serving-mode settings (`[serve]` section).
+    pub serve: ServeSettings,
+}
+
+/// Settings of the live serving front-end (`tlsched serve`).
+#[derive(Debug, Clone)]
+pub struct ServeSettings {
+    pub admission: AdmissionConfig,
+    /// Periodic metrics-report cadence in run-clock seconds (0 = off).
+    pub report_every_s: f64,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        ServeSettings { admission: AdmissionConfig::default(), report_every_s: 0.0 }
+    }
 }
 
 impl Default for RunConfig {
@@ -51,6 +68,7 @@ impl Default for RunConfig {
             hierarchy: HierarchyConfig::default(),
             max_concurrent: 32,
             workers: 0,
+            serve: ServeSettings::default(),
         }
     }
 }
@@ -193,6 +211,24 @@ impl RunConfig {
         // [coordinator]
         cfg.max_concurrent = get_parse(&raw, "coordinator.max_concurrent", 32usize)?;
         cfg.workers = get_parse(&raw, "coordinator.workers", 0usize)?;
+
+        // [serve]
+        if let Some(p) = raw.get("serve.policy") {
+            cfg.serve.admission.policy = AdmissionPolicy::from_name(p)
+                .ok_or_else(|| ConfigError::Invalid("serve.policy", p.clone()))?;
+        }
+        cfg.serve.admission.queue_capacity = get_parse(
+            &raw,
+            "serve.queue_capacity",
+            cfg.serve.admission.queue_capacity,
+        )?;
+        if cfg.serve.admission.queue_capacity == 0 {
+            return Err(ConfigError::Invalid("serve.queue_capacity", "must be > 0".into()));
+        }
+        cfg.serve.admission.slo_factor =
+            get_parse(&raw, "serve.slo_factor", cfg.serve.admission.slo_factor)?;
+        cfg.serve.report_every_s =
+            get_parse(&raw, "serve.report_every_s", cfg.serve.report_every_s)?;
         Ok(cfg)
     }
 
@@ -308,6 +344,27 @@ max_concurrent = 4
         assert!(d.scheduler.incremental_summaries);
         assert!(d.scheduler.fused);
         assert_eq!(d.workers, 0);
+    }
+
+    #[test]
+    fn serve_section_parses() {
+        let cfg = RunConfig::from_str(
+            "[serve]\npolicy = \"correlation\"\nqueue_capacity = 8\n\
+             slo_factor = 2.5\nreport_every_s = 30\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.admission.policy, AdmissionPolicy::Correlation);
+        assert_eq!(cfg.serve.admission.queue_capacity, 8);
+        assert_eq!(cfg.serve.admission.slo_factor, 2.5);
+        assert_eq!(cfg.serve.report_every_s, 30.0);
+        // defaults
+        let d = RunConfig::from_str("").unwrap();
+        assert_eq!(d.serve.admission.policy, AdmissionPolicy::Fifo);
+        assert!(d.serve.admission.queue_capacity > 0);
+        assert_eq!(d.serve.report_every_s, 0.0);
+        // bad policy and zero capacity error instead of panicking later
+        assert!(RunConfig::from_str("[serve]\npolicy = \"bogus\"\n").is_err());
+        assert!(RunConfig::from_str("[serve]\nqueue_capacity = 0\n").is_err());
     }
 
     #[test]

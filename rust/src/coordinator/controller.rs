@@ -2,17 +2,28 @@
 //! concurrent jobs, runs scheduling rounds to convergence and records
 //! metrics. This is the paper's `Con_processing` surface (§4.4) plus
 //! the operational shell a deployment needs (admission control, trace
-//! replay, reporting).
+//! replay, live serving, reporting).
 //!
-//! Rounds on the request path (`run_batch`, `run_trace`) execute
-//! through [`Scheduler::round_parallel`] over a worker pool sized by
+//! All three run modes — `run_batch`, `run_trace` and `serve` — drive
+//! one **event-driven core loop**, [`Coordinator::step`]:
+//! `admit → schedule → round → retire`. Jobs join and leave the
+//! resident set *between any two scheduling rounds*; what differs per
+//! mode is only the [`AdmissionQueue`] feeding the loop and the clock
+//! stamping the records. Retired jobs release their bookkeeping slots
+//! immediately (swap-removed alongside the job state), so a
+//! long-running serve session's footprint is bounded by residency,
+//! not by the number of jobs ever served.
+//!
+//! Rounds on the request path execute through
+//! [`Scheduler::round_parallel`] over a worker pool sized by
 //! `CoordinatorConfig::workers` — deterministic for any worker count.
 //! Cache-simulated runs (`run_batch_probed`) keep the sequential round
 //! so the probe sees the canonical serialized address stream.
 
-use crate::algorithms::DeltaProgram;
+use super::admission::{AdmissionConfig, AdmissionPolicy, AdmissionQueue};
 use super::metrics::{JobRecord, RunMetrics};
-use crate::engine::{JobState, JobSpec, NoProbe, Probe};
+use crate::algorithms::DeltaProgram;
+use crate::engine::{JobSpec, JobState, NoProbe, Probe};
 use crate::graph::{BlockPartition, Graph};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::trace::TraceJob;
@@ -47,6 +58,48 @@ impl CoordinatorConfig {
     }
 }
 
+/// Per-resident-job bookkeeping, parallel to `RunState::active` and
+/// retired with it (slots are reclaimed, never leaked).
+struct JobMeta {
+    submitted_s: f64,
+    started_s: f64,
+    updates_before: u64,
+}
+
+/// Live state of one coordinator run (any mode).
+struct RunState {
+    active: Vec<JobState>,
+    meta: Vec<JobMeta>,
+    metrics: RunMetrics,
+    /// Keep retired job states (tests/debug; unbounded — the
+    /// production serve path leaves this off).
+    collect: bool,
+    retired: Vec<JobState>,
+}
+
+impl RunState {
+    fn new(collect: bool) -> Self {
+        RunState {
+            active: Vec::new(),
+            meta: Vec::new(),
+            metrics: RunMetrics::default(),
+            collect,
+            retired: Vec::new(),
+        }
+    }
+}
+
+/// What one turn of the core loop did.
+enum StepOutcome {
+    /// Executed one scheduling round (and possibly admitted/retired).
+    Worked,
+    /// Nothing resident and nothing admittable yet — caller decides
+    /// how to wait (sleep to next arrival, park on the live channel).
+    Idle,
+    /// Nothing resident and the queue will never produce again.
+    Drained,
+}
+
 /// Concurrent-job coordinator over one shared graph.
 pub struct Coordinator<'g> {
     pub g: &'g Graph,
@@ -79,11 +132,126 @@ impl<'g> Coordinator<'g> {
         JobState::new(id, spec, self.g)
     }
 
+    /// One turn of the event-driven core loop:
+    /// **admit** (pull from `q` under the policy while below `cap`) →
+    /// **round** (one scheduling round over the resident set) →
+    /// **retire** (record + release converged jobs, reclaiming their
+    /// slots and scheduler scratch).
+    ///
+    /// `now` stamps admissions; `retire_now` stamps completions (both
+    /// on the caller's run clock). `parallel` selects the worker-pool
+    /// round engine; probed (cache-simulated) runs pass `false` and a
+    /// real probe.
+    fn step<P: Probe>(
+        &mut self,
+        q: &mut AdmissionQueue,
+        st: &mut RunState,
+        cap: usize,
+        now: f64,
+        parallel: bool,
+        probe: &mut P,
+        retire_now: &dyn Fn() -> f64,
+    ) -> StepOutcome {
+        // -- admit ----------------------------------------------------
+        q.poll(now);
+        while st.active.len() < cap {
+            match q.pop(&st.active, self.part) {
+                Some(sub) => {
+                    let mut job = self.new_job(JobSpec::new(sub.kind, sub.source));
+                    self.sched.attach_job(self.part, &mut job);
+                    st.meta.push(JobMeta {
+                        submitted_s: sub.submitted_s,
+                        // `poll` can drain live submissions stamped after
+                        // `now` was read; clamp so queue wait never goes
+                        // negative
+                        started_s: now.max(sub.submitted_s),
+                        updates_before: job.updates,
+                    });
+                    st.active.push(job);
+                }
+                None => break,
+            }
+        }
+        if st.active.is_empty() {
+            return if q.is_exhausted() { StepOutcome::Drained } else { StepOutcome::Idle };
+        }
+        // -- round ----------------------------------------------------
+        let s = if parallel {
+            self.sched.round_parallel(self.g, self.part, &mut st.active, &self.pool)
+        } else {
+            self.sched.round(self.g, self.part, &mut st.active, probe)
+        };
+        st.metrics.totals.merge(s);
+        st.metrics.rounds += 1;
+        // -- retire ---------------------------------------------------
+        // Lazy convergence check: scan only jobs that went quiet this
+        // round; a globally zero-update round is definitive.
+        let fin = retire_now();
+        let before = st.active.len();
+        let mut i = 0;
+        while i < st.active.len() {
+            let quiet = st.active[i].updates == st.meta[i].updates_before;
+            st.meta[i].updates_before = st.active[i].updates;
+            let job = &st.active[i];
+            let done = job.converged
+                || s.updates == 0
+                || (quiet && job.active_count_fast() == 0);
+            let forced = job.rounds >= self.cfg.max_rounds_per_job as u64;
+            if done || forced {
+                let mut j = st.active.swap_remove(i);
+                let m = st.meta.swap_remove(i);
+                if done {
+                    j.converged = true;
+                }
+                st.metrics.jobs.push(JobRecord {
+                    id: j.id as u64,
+                    kind: j.program.name(),
+                    submitted_s: m.submitted_s,
+                    started_s: m.started_s,
+                    finished_s: fin,
+                    rounds: j.rounds,
+                    updates: j.updates,
+                    edges: j.edges,
+                });
+                if st.collect {
+                    st.retired.push(j);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        if st.active.len() < before {
+            self.sched.detach_jobs(st.active.len());
+        }
+        StepOutcome::Worked
+    }
+
+    /// Close out a run: drain scheduler plan time, stamp wall-clock
+    /// totals and the shed count, and hand back metrics (+ collected
+    /// job states sorted by id).
+    fn finalize(&mut self, st: RunState, wall_s: f64, rejected: u64) -> (RunMetrics, Vec<JobState>) {
+        let mut m = st.metrics;
+        m.scheduling_s += self.sched.take_plan_seconds();
+        m.wall_s = wall_s;
+        m.execution_s = m.wall_s - m.scheduling_s;
+        m.rejected = rejected;
+        let mut retired = st.retired;
+        retired.sort_by_key(|j| j.id);
+        (m, retired)
+    }
+
     /// `Con_processing` batch mode: admit all jobs at once and run
     /// scheduling rounds until every job converges, with rounds spread
     /// across the worker pool. Times are wall seconds from run start.
     pub fn run_batch(&mut self, specs: &[JobSpec]) -> RunMetrics {
-        self.run_batch_inner(specs, &mut NoProbe, true)
+        self.run_batch_inner(specs, &mut NoProbe, true, false).0
+    }
+
+    /// Batch mode that also returns every job's final state (sorted by
+    /// id) — the reference fixpoints the serve e2e suite compares
+    /// against.
+    pub fn run_batch_collect(&mut self, specs: &[JobSpec]) -> (RunMetrics, Vec<JobState>) {
+        self.run_batch_inner(specs, &mut NoProbe, true, true)
     }
 
     /// Batch mode with a data-touch probe (cache simulation). Rounds
@@ -94,7 +262,7 @@ impl<'g> Coordinator<'g> {
         specs: &[JobSpec],
         probe: &mut P,
     ) -> RunMetrics {
-        self.run_batch_inner(specs, probe, false)
+        self.run_batch_inner(specs, probe, false, false).0
     }
 
     fn run_batch_inner<P: Probe>(
@@ -102,60 +270,19 @@ impl<'g> Coordinator<'g> {
         specs: &[JobSpec],
         probe: &mut P,
         parallel: bool,
-    ) -> RunMetrics {
+        collect: bool,
+    ) -> (RunMetrics, Vec<JobState>) {
         let t0 = Instant::now();
-        let mut metrics = RunMetrics::default();
-        let base_id = self.next_job_id;
-        let mut active: Vec<JobState> =
-            specs.iter().map(|s| self.new_job(s.clone())).collect();
-        let mut done: Vec<JobState> = Vec::new();
-        // Job ids are dense per run (base_id..base_id + n): plain
-        // Vec bookkeeping indexed by (id - base_id), no hashing in the
-        // round loop.
-        let mut updates_before: Vec<u64> = active.iter().map(|j| j.updates).collect();
-        let mut rounds = 0u64;
-        while !active.is_empty() && rounds < self.cfg.max_rounds_per_job as u64 {
-            let s = if parallel {
-                self.sched.round_parallel(self.g, self.part, &mut active, &self.pool)
-            } else {
-                self.sched.round(self.g, self.part, &mut active, probe)
-            };
-            metrics.totals.merge(s);
-            rounds += 1;
-            let now = t0.elapsed().as_secs_f64();
-            // retire converged jobs (lazy check: scan only quiet jobs)
-            let mut i = 0;
-            while i < active.len() {
-                let idx = (active[i].id - base_id) as usize;
-                let quiet = active[i].updates == updates_before[idx];
-                updates_before[idx] = active[i].updates;
-                let job_done = active[i].converged
-                    || s.updates == 0
-                    || (quiet && active[i].active_count_fast() == 0);
-                if job_done {
-                    let mut j = active.swap_remove(i);
-                    j.converged = true;
-                    metrics.jobs.push(JobRecord {
-                        id: j.id as u64,
-                        kind: j.program.name(),
-                        submitted_s: 0.0,
-                        started_s: 0.0,
-                        finished_s: now,
-                        rounds: j.rounds,
-                        updates: j.updates,
-                        edges: j.edges,
-                    });
-                    done.push(j);
-                } else {
-                    i += 1;
-                }
+        let mut q = AdmissionQueue::from_specs(specs);
+        let mut st = RunState::new(collect);
+        let clock = move || t0.elapsed().as_secs_f64();
+        loop {
+            match self.step(&mut q, &mut st, usize::MAX, 0.0, parallel, probe, &clock) {
+                StepOutcome::Worked => {}
+                StepOutcome::Idle | StepOutcome::Drained => break,
             }
         }
-        metrics.rounds = rounds;
-        metrics.scheduling_s = self.sched.take_plan_seconds();
-        metrics.wall_s = t0.elapsed().as_secs_f64();
-        metrics.execution_s = metrics.wall_s - metrics.scheduling_s;
-        metrics
+        self.finalize(st, t0.elapsed().as_secs_f64(), 0)
     }
 
     /// Trace-replay mode: jobs arrive on a virtual clock that advances
@@ -165,90 +292,148 @@ impl<'g> Coordinator<'g> {
     /// Returns metrics with virtual-time job records (so throughput and
     /// latency are directly comparable to the paper's workload numbers).
     pub fn run_trace(&mut self, trace: &[TraceJob], time_scale: f64) -> RunMetrics {
+        self.run_trace_policy(trace, time_scale, AdmissionPolicy::Fifo)
+    }
+
+    /// Trace replay under a non-default admission policy (SLO- or
+    /// correlation-aware ordering of the pending queue), with the
+    /// default deadline factor.
+    pub fn run_trace_policy(
+        &mut self,
+        trace: &[TraceJob],
+        time_scale: f64,
+        policy: AdmissionPolicy,
+    ) -> RunMetrics {
+        let admission = AdmissionConfig { policy, ..Default::default() };
+        self.run_trace_with(trace, time_scale, &admission)
+    }
+
+    /// Trace replay with full admission control: policy *and* the SLO
+    /// deadline factor come from `admission` (the `[serve]` config
+    /// section), so a configured `slo_factor` is honored on replay too.
+    pub fn run_trace_with(
+        &mut self,
+        trace: &[TraceJob],
+        time_scale: f64,
+        admission: &AdmissionConfig,
+    ) -> RunMetrics {
         assert!(time_scale > 0.0);
         let t0 = Instant::now();
-        let vnow = |t0: &Instant| t0.elapsed().as_secs_f64() * time_scale;
-        let mut metrics = RunMetrics::default();
-        let mut pending: std::collections::VecDeque<&TraceJob> = trace.iter().collect();
-        let mut active: Vec<JobState> = Vec::new();
-        // Job ids are assigned densely in admission order: Vec
-        // bookkeeping indexed by (id - base_id), grown on admit.
-        let base_id = self.next_job_id;
-        let mut started_at: Vec<(f64, f64)> = Vec::new();
-        let mut updates_before: Vec<u64> = Vec::new();
-        let mut rounds = 0u64;
+        let vnow = move || t0.elapsed().as_secs_f64() * time_scale;
+        let mut q = AdmissionQueue::from_trace(trace, admission.policy, admission.slo_factor);
+        let mut st = RunState::new(false);
         loop {
-            // admit everything that has arrived, up to the limit
-            let now = vnow(&t0);
-            while active.len() < self.cfg.max_concurrent {
-                match pending.front() {
-                    Some(tj) if tj.arrival_s <= now => {
-                        let tj = pending.pop_front().unwrap();
-                        let spec = JobSpec::new(tj.kind, tj.source);
-                        let job = self.new_job(spec);
-                        debug_assert_eq!(
-                            (job.id - base_id) as usize,
-                            started_at.len(),
-                            "dense admission order"
-                        );
-                        started_at.push((tj.arrival_s, now));
-                        updates_before.push(job.updates);
-                        active.push(job);
-                    }
-                    _ => break,
-                }
-            }
-            if active.is_empty() {
-                match pending.front() {
+            let now = vnow();
+            match self.step(&mut q, &mut st, self.cfg.max_concurrent, now, true, &mut NoProbe, &vnow)
+            {
+                StepOutcome::Worked => {}
+                StepOutcome::Idle => {
                     // idle: nothing active, next arrival in the future —
                     // compute its wall-clock deadline from the time
                     // scale and sleep once until then (no busy-wait).
-                    Some(tj) => {
-                        let wait_s = (tj.arrival_s - vnow(&t0)) / time_scale;
-                        if wait_s > 0.0 {
-                            std::thread::sleep(std::time::Duration::from_secs_f64(
-                                wait_s + 1e-4,
-                            ));
+                    match q.next_arrival() {
+                        Some(t) => {
+                            let wait_s = (t - vnow()) / time_scale;
+                            if wait_s > 0.0 {
+                                std::thread::sleep(std::time::Duration::from_secs_f64(
+                                    wait_s + 1e-4,
+                                ));
+                            }
                         }
-                        continue;
+                        None => break,
                     }
-                    None => break,
+                }
+                StepOutcome::Drained => break,
+            }
+        }
+        let rejected = q.rejected();
+        self.finalize(st, t0.elapsed().as_secs_f64(), rejected).0
+    }
+
+    /// **Serving mode**: drive the core loop from a live admission
+    /// queue ([`AdmissionQueue::live`]) until every [`JobSubmitter`]
+    /// handle has been dropped *and* all accepted work has drained.
+    /// Jobs submitted while other jobs are mid-iteration join the
+    /// resident set at the next round boundary.
+    ///
+    /// When `report_every_s > 0`, a metrics snapshot is passed to
+    /// `on_report` roughly every that many run-clock seconds.
+    ///
+    /// [`JobSubmitter`]: super::admission::JobSubmitter
+    pub fn serve<F: FnMut(&RunMetrics)>(
+        &mut self,
+        q: &mut AdmissionQueue,
+        report_every_s: f64,
+        on_report: F,
+    ) -> RunMetrics {
+        self.serve_inner(q, report_every_s, on_report, false).0
+    }
+
+    /// Test/debug variant of [`Coordinator::serve`] that also returns
+    /// every retired job's final state (sorted by id). Unbounded —
+    /// production sessions should use `serve`.
+    pub fn serve_collect<F: FnMut(&RunMetrics)>(
+        &mut self,
+        q: &mut AdmissionQueue,
+        report_every_s: f64,
+        on_report: F,
+    ) -> (RunMetrics, Vec<JobState>) {
+        self.serve_inner(q, report_every_s, on_report, true)
+    }
+
+    fn serve_inner<F: FnMut(&RunMetrics)>(
+        &mut self,
+        q: &mut AdmissionQueue,
+        report_every_s: f64,
+        mut on_report: F,
+        collect: bool,
+    ) -> (RunMetrics, Vec<JobState>) {
+        let t0 = Instant::now();
+        let scale = q.time_scale();
+        let epoch = q.epoch();
+        let clock = move || epoch.elapsed().as_secs_f64() * scale;
+        let mut st = RunState::new(collect);
+        let mut next_report = if report_every_s > 0.0 {
+            report_every_s
+        } else {
+            f64::INFINITY
+        };
+        loop {
+            let now = clock();
+            match self.step(q, &mut st, self.cfg.max_concurrent, now, true, &mut NoProbe, &clock)
+            {
+                StepOutcome::Drained => break,
+                StepOutcome::Worked => {}
+                StepOutcome::Idle => {
+                    // Park until a submission, a due trace arrival or
+                    // shutdown. The live channel wakes the loop
+                    // immediately on either of the first two; a pure
+                    // trace feed sleeps to the arrival deadline.
+                    let until_arrival =
+                        q.next_arrival().map(|t| ((t - clock()) / scale).max(0.0));
+                    if q.live_open() {
+                        let wait = until_arrival.unwrap_or(0.25).clamp(1e-3, 0.25);
+                        q.wait_for_work(std::time::Duration::from_secs_f64(wait));
+                    } else if let Some(w) = until_arrival {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(w + 1e-4));
+                    } else {
+                        break; // defensive: idle yet nothing can arrive
+                    }
                 }
             }
-            let s = self.sched.round_parallel(self.g, self.part, &mut active, &self.pool);
-            metrics.totals.merge(s);
-            rounds += 1;
-            let now = vnow(&t0);
-            let mut i = 0;
-            while i < active.len() {
-                let idx = (active[i].id - base_id) as usize;
-                let quiet = active[i].updates == updates_before[idx];
-                updates_before[idx] = active[i].updates;
-                let job_done =
-                    s.updates == 0 || (quiet && active[i].active_count_fast() == 0);
-                if job_done || active[i].rounds >= self.cfg.max_rounds_per_job as u64 {
-                    let j = active.swap_remove(i);
-                    let (submitted, started) = started_at[(j.id - base_id) as usize];
-                    metrics.jobs.push(JobRecord {
-                        id: j.id as u64,
-                        kind: j.program.name(),
-                        submitted_s: submitted,
-                        started_s: started,
-                        finished_s: now,
-                        rounds: j.rounds,
-                        updates: j.updates,
-                        edges: j.edges,
-                    });
-                } else {
-                    i += 1;
+            if clock() >= next_report {
+                st.metrics.scheduling_s += self.sched.take_plan_seconds();
+                st.metrics.wall_s = t0.elapsed().as_secs_f64();
+                st.metrics.execution_s = st.metrics.wall_s - st.metrics.scheduling_s;
+                st.metrics.rejected = q.rejected();
+                on_report(&st.metrics);
+                while next_report <= clock() {
+                    next_report += report_every_s;
                 }
             }
         }
-        metrics.rounds = rounds;
-        metrics.scheduling_s = self.sched.take_plan_seconds();
-        metrics.wall_s = t0.elapsed().as_secs_f64();
-        metrics.execution_s = metrics.wall_s - metrics.scheduling_s;
-        metrics
+        let rejected = q.rejected();
+        self.finalize(st, t0.elapsed().as_secs_f64(), rejected)
     }
 }
 
@@ -325,6 +510,20 @@ mod tests {
     }
 
     #[test]
+    fn batch_collect_returns_final_states() {
+        let (g, part) = setup();
+        let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let specs = vec![JobSpec::new(JobKind::Bfs, 3), JobSpec::new(JobKind::PageRank, 0)];
+        let (m, jobs) = coord.run_batch_collect(&specs);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs.windows(2).all(|w| w[0].id < w[1].id), "sorted by id");
+        assert!(jobs.iter().all(|j| j.converged));
+        assert_eq!(jobs[0].values.len(), g.num_vertices());
+    }
+
+    #[test]
     fn trace_replay_admits_and_completes() {
         let (g, part) = setup();
         let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
@@ -346,6 +545,30 @@ mod tests {
             assert!(j.started_s >= j.submitted_s);
         }
         assert!(m.throughput_per_hour() > 0.0);
+    }
+
+    #[test]
+    fn trace_replay_all_admission_policies_complete() {
+        let (g, part) = setup();
+        let trace: Vec<TraceJob> = (0..5)
+            .map(|i| TraceJob {
+                id: i,
+                arrival_s: i as f64 * 0.2,
+                service_s: 1.0 + i as f64,
+                kind: JobKind::ALL[i as usize % 5],
+                source: (i * 29) as u32,
+            })
+            .collect();
+        for policy in AdmissionPolicy::ALL {
+            let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+            cfg.max_concurrent = 2; // force a real pending queue
+            let mut coord = Coordinator::new(&g, &part, cfg);
+            let m = coord.run_trace_policy(&trace, 1000.0, policy);
+            assert_eq!(m.completed(), 5, "{}", policy.name());
+            for j in &m.jobs {
+                assert!(j.queueing_s() >= 0.0, "{}", policy.name());
+            }
+        }
     }
 
     #[test]

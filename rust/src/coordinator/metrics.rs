@@ -41,6 +41,9 @@ pub struct RunMetrics {
     pub execution_s: f64,
     /// End-to-end wall seconds.
     pub wall_s: f64,
+    /// Jobs shed at submission because the bounded admission queue was
+    /// full (serve-mode backpressure; 0 for batch and replay runs).
+    pub rejected: u64,
 }
 
 impl RunMetrics {
@@ -70,7 +73,28 @@ impl RunMetrics {
     }
 
     pub fn p95_latency_s(&self) -> f64 {
+        if self.jobs.is_empty() {
+            // keep periodic serve snapshots valid JSON (NaN isn't)
+            return 0.0;
+        }
         let xs: Vec<f64> = self.jobs.iter().map(|j| j.latency_s()).collect();
+        percentile(&xs, 95.0)
+    }
+
+    /// Mean seconds jobs spent waiting for admission (queue wait), the
+    /// non-execution half of latency.
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.queueing_s()).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    pub fn p95_queue_wait_s(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        let xs: Vec<f64> = self.jobs.iter().map(|j| j.queueing_s()).collect();
         percentile(&xs, 95.0)
     }
 
@@ -95,6 +119,9 @@ impl RunMetrics {
             ("throughput_per_hour", Json::num(self.throughput_per_hour())),
             ("mean_latency_s", Json::num(self.mean_latency_s())),
             ("p95_latency_s", Json::num(self.p95_latency_s())),
+            ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
+            ("p95_queue_wait_s", Json::num(self.p95_queue_wait_s())),
+            ("rejected", Json::num(self.rejected as f64)),
             ("scheduling_s", Json::num(self.scheduling_s)),
             ("execution_s", Json::num(self.execution_s)),
             ("wall_s", Json::num(self.wall_s)),
@@ -110,6 +137,7 @@ impl RunMetrics {
                         ("rounds", Json::num(j.rounds as f64)),
                         ("updates", Json::num(j.updates as f64)),
                         ("latency_s", Json::num(j.latency_s())),
+                        ("queue_wait_s", Json::num(j.queueing_s())),
                     ])
                 })),
             ),
@@ -174,5 +202,23 @@ mod tests {
         assert_eq!(m.throughput_per_hour(), 0.0);
         assert_eq!(m.mean_latency_s(), 0.0);
         assert_eq!(m.sharing_factor(), 0.0);
+        assert_eq!(m.mean_queue_wait_s(), 0.0);
+        assert_eq!(m.rejected, 0);
+    }
+
+    #[test]
+    fn queue_wait_aggregates_and_exports() {
+        let mut m = RunMetrics::default();
+        m.jobs = vec![rec(0, 0.0, 2.0, 10.0), rec(1, 1.0, 5.0, 11.0)];
+        m.rejected = 3;
+        // queue waits: 2.0 and 4.0
+        assert!((m.mean_queue_wait_s() - 3.0).abs() < 1e-9);
+        assert!(m.p95_queue_wait_s() >= 2.0);
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("rejected").unwrap().as_u64().unwrap(), 3);
+        let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();
+        assert!(
+            (jobs[0].get("queue_wait_s").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9
+        );
     }
 }

@@ -1,8 +1,13 @@
-//! L3 coordinator: job admission, scheduling-round loop, trace replay
-//! and metrics — the operational shell around the two-level scheduler.
+//! L3 coordinator: job admission, the event-driven scheduling-round
+//! loop shared by batch / trace-replay / live-serving modes, and
+//! metrics — the operational shell around the two-level scheduler.
 
+pub mod admission;
 pub mod controller;
 pub mod metrics;
 
+pub use admission::{
+    AdmissionConfig, AdmissionPolicy, AdmissionQueue, JobSubmitter, SubmitError, Submission,
+};
 pub use controller::{Coordinator, CoordinatorConfig};
 pub use metrics::{JobRecord, RunMetrics};

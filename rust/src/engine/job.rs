@@ -150,6 +150,18 @@ impl JobState {
         }
     }
 
+    /// Whether this job currently has unconverged vertices in the
+    /// given block — O(1) via the incremental summaries. Used by
+    /// correlation-aware admission to find jobs that would join a warm
+    /// CAJS pair. Conservatively `false` when tracking is disabled
+    /// (admission is a heuristic; it must not pay an O(V_B) scan).
+    pub fn is_block_active(&self, block_id: u32) -> bool {
+        match &self.tracking {
+            Some(t) => t.node_un.get(block_id as usize).is_some_and(|&c| c > 0),
+            None => false,
+        }
+    }
+
     /// Tracked global active count (O(B_N)); falls back to the O(n)
     /// scan when tracking is disabled.
     pub fn active_count_fast(&self) -> usize {
@@ -231,6 +243,27 @@ mod tests {
         j.deltas.fill(0.0); // force convergence
         assert_eq!(j.block_summary(&part.blocks[0]), BlockSummary::ZERO);
         assert!(j.check_converged());
+    }
+
+    #[test]
+    fn is_block_active_tracks_summaries() {
+        let g = generate::erdos_renyi(256, 1000, 6);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut j = JobState::new(0, JobSpec::new(JobKind::Sssp, 10), &g);
+        // no tracking: conservative false
+        assert!(!j.is_block_active(0));
+        j.enable_tracking(
+            std::sync::Arc::from(part.vertex_block.as_slice()),
+            part.num_blocks(),
+        );
+        let src_block = part.vertex_block[10];
+        assert!(j.is_block_active(src_block), "source block is active");
+        let total_active: usize = (0..part.num_blocks() as u32)
+            .filter(|&b| j.is_block_active(b))
+            .count();
+        assert!(total_active >= 1);
+        // out-of-range block ids are never active
+        assert!(!j.is_block_active(part.num_blocks() as u32 + 7));
     }
 
     #[test]

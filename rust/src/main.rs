@@ -4,6 +4,7 @@
 //! Subcommands (first positional argument):
 //! * `run`      — batch: run N jobs of mixed kinds to convergence.
 //! * `replay`   — trace replay through the coordinator.
+//! * `serve`    — live serving: persistent loop admitting streamed jobs.
 //! * `gen`      — generate a workload trace (JSONL) or a graph file.
 //! * `info`     — print graph/partition/queue statistics.
 //! * `xla`      — run the batched XLA backend (requires artifacts).
@@ -12,12 +13,16 @@
 //! ```text
 //! tlsched run --graph rmat --scale 12 --jobs 8 --scheduler twolevel
 //! tlsched replay --days 0.2 --time-scale 600 --report out.json
+//! tlsched serve --source live --minutes 2 --policy correlation
+//! echo "pagerank 0" | tlsched serve --source stdin --time-scale 1
 //! tlsched gen --trace trace.jsonl --days 7
 //! tlsched xla --jobs 4
 //! ```
 
 use tlsched::config::{GraphSource, RunConfig};
-use tlsched::coordinator::{Coordinator, CoordinatorConfig};
+use tlsched::coordinator::{
+    AdmissionPolicy, AdmissionQueue, Coordinator, CoordinatorConfig, SubmitError,
+};
 use tlsched::engine::JobSpec;
 use tlsched::graph::BlockPartition;
 use tlsched::scheduler::{Scheduler, SchedulerConfig, SchedulerKind};
@@ -33,13 +38,14 @@ fn main() {
     let code = match cmd {
         "run" => cmd_run(&rest),
         "replay" => cmd_replay(&rest),
+        "serve" => cmd_serve(&rest),
         "gen" => cmd_gen(&rest),
         "info" => cmd_info(&rest),
         "xla" => cmd_xla(&rest),
         _ => {
             println!(
                 "tlsched — two-level scheduling for concurrent graph processing\n\n\
-                 USAGE: tlsched <run|replay|gen|info|xla> [options]\n\
+                 USAGE: tlsched <run|replay|serve|gen|info|xla> [options]\n\
                  Run `tlsched <cmd> --help` for per-command options."
             );
             0
@@ -243,6 +249,141 @@ fn cmd_replay(argv: &[String]) -> i32 {
         m.throughput_per_hour(),
         m.mean_latency_s(),
         m.p95_latency_s(),
+        m.sharing_factor(),
+    );
+    write_report(a.str("report"), &m);
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let spec = common_spec("tlsched serve", "serve a live stream of concurrent jobs")
+        .opt("source", "live", "job source: live (trace generator thread) | stdin")
+        .opt("minutes", "2", "live-source stream length (virtual minutes)")
+        .opt("rate", "600", "live-source mean arrivals per hour")
+        .opt("time-scale", "60", "virtual seconds per wall second")
+        .opt("max-concurrent", "32", "admission limit")
+        .opt("queue-capacity", "0", "submission-queue bound (0 = config/default)")
+        .opt("policy", "", "admission policy: fifo|slo|correlation (empty = config)")
+        .opt("slo-factor", "0", "deadline factor over nominal service (0 = config)")
+        .opt("report-every-s", "0", "periodic metrics-JSON cadence, run-clock seconds")
+        .opt("report", "", "write final metrics JSON to this path");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let mut cfg = build_config(&a);
+    if a.was_set("queue-capacity") && a.usize("queue-capacity") > 0 {
+        cfg.serve.admission.queue_capacity = a.usize("queue-capacity");
+    }
+    if !a.str("policy").is_empty() {
+        cfg.serve.admission.policy = match AdmissionPolicy::from_name(a.str("policy")) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown admission policy '{}'", a.str("policy"));
+                return 2;
+            }
+        };
+    }
+    if a.was_set("slo-factor") && a.f64("slo-factor") > 0.0 {
+        cfg.serve.admission.slo_factor = a.f64("slo-factor");
+    }
+    if a.was_set("report-every-s") {
+        cfg.serve.report_every_s = a.f64("report-every-s");
+    }
+    let source = a.str("source").to_string();
+    if source != "live" && source != "stdin" {
+        eprintln!("unknown source '{source}' (want live|stdin)");
+        return 2;
+    }
+
+    let g = cfg.build_graph().expect("graph");
+    let part = cfg.build_partition(&g, a.usize("max-concurrent"));
+    let time_scale = a.f64("time-scale");
+    let (submitter, mut queue) = AdmissionQueue::live(&cfg.serve.admission, time_scale);
+
+    // Producer thread: plays a generated arrival trace in wall time, or
+    // reads job lines from stdin. Dropping the submitter at the end is
+    // the shutdown signal — serve drains and returns.
+    let nv = (g.num_vertices() as u32).max(1);
+    let slo = cfg.serve.admission.slo_factor;
+    let producer = if source == "live" {
+        let tc = TraceConfig {
+            days: a.f64("minutes") / (24.0 * 60.0),
+            mean_rate_per_hour: a.f64("rate"),
+            num_vertices: nv,
+            ..Default::default()
+        };
+        let jobs = trace::generate(&tc);
+        log::info!(
+            "live source: {} arrivals over {} virtual minutes",
+            jobs.len(),
+            a.f64("minutes")
+        );
+        std::thread::spawn(move || {
+            trace::play_live(&jobs, time_scale, |tj| {
+                let deadline = Some(submitter.now() + slo * tj.service_s);
+                match submitter.submit_with(tj.kind, tj.source % nv, deadline) {
+                    Ok(()) => true,
+                    // backpressure: shed this job, keep streaming
+                    Err(SubmitError::QueueFull) => true,
+                    Err(SubmitError::Closed) => false,
+                }
+            })
+        })
+    } else {
+        std::thread::spawn(move || {
+            use std::io::BufRead;
+            let stdin = std::io::stdin();
+            let mut delivered = 0usize;
+            for line in stdin.lock().lines() {
+                let Ok(line) = line else { break };
+                let t = line.trim();
+                if t.is_empty() || t.starts_with('#') {
+                    continue;
+                }
+                if t == "quit" {
+                    break;
+                }
+                let mut parts = t.split_whitespace();
+                let Some(kind) = parts.next().and_then(JobKind::from_name) else {
+                    eprintln!("bad job line (want: <kind> <source> [deadline_s]): {t}");
+                    continue;
+                };
+                let source =
+                    parts.next().and_then(|s| s.parse::<u32>().ok()).unwrap_or(0) % nv;
+                let deadline = parts.next().and_then(|s| s.parse::<f64>().ok());
+                match submitter.submit_with(kind, source, deadline) {
+                    Ok(()) => delivered += 1,
+                    Err(e) => eprintln!("rejected: {e}"),
+                }
+            }
+            delivered
+        })
+    };
+
+    let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
+    ccfg.max_concurrent = a.usize("max-concurrent");
+    ccfg.workers = cfg.workers;
+    let mut coord = Coordinator::new(&g, &part, ccfg);
+    log::info!(
+        "serving on {} worker(s): policy={} queue_capacity={} time_scale={}",
+        coord.workers(),
+        cfg.serve.admission.policy.name(),
+        cfg.serve.admission.queue_capacity,
+        time_scale,
+    );
+    let m = coord.serve(&mut queue, cfg.serve.report_every_s, |snap| {
+        println!("{}", snap.to_json());
+    });
+    let _ = producer.join();
+    println!(
+        "serve done: completed={} rejected={} throughput={:.1} jobs/h \
+         mean_latency={:.1}s mean_queue_wait={:.2}s sharing={:.2}",
+        m.completed(),
+        m.rejected,
+        m.throughput_per_hour(),
+        m.mean_latency_s(),
+        m.mean_queue_wait_s(),
         m.sharing_factor(),
     );
     write_report(a.str("report"), &m);

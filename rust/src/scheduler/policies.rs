@@ -176,10 +176,9 @@ impl Scheduler {
         }
     }
 
-    /// Ensure every job carries incremental block summaries against
-    /// this partition (EXPERIMENTS.md §Perf: turns MPDS planning from
-    /// O(V_N) to O(B_N) per job per round).
-    fn ensure_tracking(&mut self, part: &BlockPartition, jobs: &mut [JobState]) {
+    /// Cache the partition's vertex→block map (rebuilt only when the
+    /// partition changes).
+    fn ensure_block_map(&mut self, part: &BlockPartition) {
         let stale = match &self.block_map {
             Some(m) => m.len() != part.vertex_block.len(),
             None => true,
@@ -187,6 +186,13 @@ impl Scheduler {
         if stale {
             self.block_map = Some(std::sync::Arc::from(part.vertex_block.as_slice()));
         }
+    }
+
+    /// Ensure every job carries incremental block summaries against
+    /// this partition (EXPERIMENTS.md §Perf: turns MPDS planning from
+    /// O(V_N) to O(B_N) per job per round).
+    fn ensure_tracking(&mut self, part: &BlockPartition, jobs: &mut [JobState]) {
+        self.ensure_block_map(part);
         let map = self.block_map.as_ref().unwrap();
         for j in jobs.iter_mut() {
             let ok = j
@@ -196,6 +202,44 @@ impl Scheduler {
             if !ok {
                 j.enable_tracking(map.clone(), part.num_blocks());
             }
+        }
+    }
+
+    /// Incremental job add: prepare one newly admitted job for
+    /// scheduling against `part`. Enables the job's summary tracking
+    /// now — the one O(V_N) scan a job ever needs — so admission pays
+    /// it, not the next round. No-op when the config doesn't use
+    /// summaries (the round path's lazy `ensure_tracking` stays as the
+    /// safety net either way).
+    pub fn attach_job(&mut self, part: &BlockPartition, job: &mut JobState) {
+        if !self.cfg.incremental_summaries || self.cfg.kind == SchedulerKind::Independent {
+            return;
+        }
+        self.ensure_block_map(part);
+        let map = self.block_map.as_ref().unwrap();
+        let ok = job
+            .tracking
+            .as_ref()
+            .is_some_and(|t| std::sync::Arc::ptr_eq(&t.block_of, map));
+        if !ok {
+            job.enable_tracking(map.clone(), part.num_blocks());
+        }
+    }
+
+    /// Incremental job remove: release round scratch held for retired
+    /// jobs. Live pair tables are positional (rebuilt each round), so
+    /// when residency falls well below scratch capacity the tables are
+    /// shrunk to 2× the resident count — a long serving session's
+    /// scheduler footprint tracks *current* residency, not the
+    /// historical peak.
+    pub fn detach_jobs(&mut self, resident: usize) {
+        let keep = resident.saturating_mul(2).max(2);
+        if self.scratch.ptables.len() > keep {
+            self.scratch.ptables.truncate(keep);
+        }
+        if self.scratch.queues.len() > keep {
+            self.scratch.queues.truncate(keep);
+            self.scratch.queues.shrink_to(keep);
         }
     }
 
@@ -855,6 +899,52 @@ mod tests {
                 assert!(w[0].score >= w[1].score);
             }
         }
+    }
+
+    #[test]
+    fn attach_job_enables_tracking_against_cached_map() {
+        let g = generate::rmat(9, 8, 91);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut job = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        assert!(job.tracking.is_none());
+        sched.attach_job(&part, &mut job);
+        let first = job.tracking.as_ref().expect("tracking enabled").block_of.clone();
+        // idempotent: re-attach keeps the same shared map (no rebuild)
+        sched.attach_job(&part, &mut job);
+        let second = &job.tracking.as_ref().unwrap().block_of;
+        assert!(std::sync::Arc::ptr_eq(&first, second));
+        // a job attached mid-run joins rounds with exact summaries
+        let mut jobs = vec![job];
+        let s = sched.round(&g, &part, &mut jobs, &mut NoProbe);
+        assert!(s.updates > 0);
+    }
+
+    #[test]
+    fn attach_job_noop_for_independent() {
+        let g = generate::erdos_renyi(128, 512, 93);
+        let part = BlockPartition::by_vertex_count(&g, 32);
+        let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::Independent));
+        let mut job = JobState::new(0, JobSpec::new(JobKind::Bfs, 1), &g);
+        sched.attach_job(&part, &mut job);
+        assert!(job.tracking.is_none(), "independent never reads summaries");
+    }
+
+    #[test]
+    fn detach_jobs_shrinks_scratch_to_residency() {
+        let g = generate::rmat(9, 8, 95);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut jobs = mixed_jobs(&g, 8);
+        sched.round(&g, &part, &mut jobs, &mut NoProbe);
+        assert_eq!(sched.scratch.ptables.len(), 8, "one live table per job");
+        // 7 of 8 retire: scratch shrinks to 2× residency
+        sched.detach_jobs(1);
+        assert!(sched.scratch.ptables.len() <= 2);
+        // the survivor still schedules correctly
+        let mut rest = jobs.split_off(7);
+        let s = sched.round(&g, &part, &mut rest, &mut NoProbe);
+        assert!(s.updates > 0 || rest[0].converged);
     }
 
     #[test]

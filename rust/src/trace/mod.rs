@@ -222,6 +222,33 @@ impl TraceStats {
     }
 }
 
+/// Play a trace **live**: walk arrivals in wall time (one arrival per
+/// `arrival_s / time_scale` wall seconds, slept in a single
+/// `thread::sleep` per gap) and hand each job to `sink` — typically a
+/// [`JobSubmitter`](crate::coordinator::JobSubmitter) feeding a
+/// serving coordinator from a producer thread. Stops early when `sink`
+/// returns `false`. Returns the number of jobs delivered.
+pub fn play_live(
+    jobs: &[TraceJob],
+    time_scale: f64,
+    mut sink: impl FnMut(&TraceJob) -> bool,
+) -> usize {
+    assert!(time_scale > 0.0);
+    let t0 = std::time::Instant::now();
+    let mut delivered = 0usize;
+    for j in jobs {
+        let wait_s = j.arrival_s / time_scale - t0.elapsed().as_secs_f64();
+        if wait_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait_s));
+        }
+        delivered += 1;
+        if !sink(j) {
+            break;
+        }
+    }
+    delivered
+}
+
 /// Serialize a trace to JSON-lines for record/replay.
 pub fn to_jsonl(jobs: &[TraceJob]) -> String {
     use crate::util::json::Json;
@@ -334,6 +361,27 @@ mod tests {
             assert_eq!(a.kind, b.kind);
             assert!((a.arrival_s - b.arrival_s).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn play_live_delivers_in_order_and_respects_stop() {
+        let jobs: Vec<TraceJob> = (0..5)
+            .map(|i| TraceJob {
+                id: i,
+                arrival_s: i as f64 * 10.0,
+                service_s: 1.0,
+                kind: JobKind::Bfs,
+                source: i as u32,
+            })
+            .collect();
+        // huge time scale → waits are microseconds; the test is fast
+        let mut seen = Vec::new();
+        let n = play_live(&jobs, 1.0e6, |j| {
+            seen.push(j.id);
+            j.id < 2 // stop after delivering id 2
+        });
+        assert_eq!(n, 3);
+        assert_eq!(seen, vec![0, 1, 2]);
     }
 
     #[test]
