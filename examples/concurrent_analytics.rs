@@ -84,8 +84,11 @@ fn main() {
         let specs: Vec<JobSpec> = (0..8)
             .map(|i| JobSpec::new(JobKind::ALL[i % 5], (i * 997) as u32))
             .collect();
-        let mut coord =
-            Coordinator::new(&graph, &partition, CoordinatorConfig::new(SchedulerConfig::new(kind)));
+        let mut coord = Coordinator::new(
+            &graph,
+            &partition,
+            CoordinatorConfig::new(SchedulerConfig::new(kind)),
+        );
         let _ = coord.run_batch_probed(&specs, &mut probe);
         let h = mem.stats();
         t2.row(&[

@@ -45,7 +45,11 @@ fn main() {
 
     let mut summary = Table::new(&["metric", "paper", "measured"]);
     summary.row(&["peak_concurrency".into(), ">20".into(), format!("{}", stats.peak_concurrency)]);
-    summary.row(&["mean_concurrency".into(), "8.7".into(), format!("{:.2}", stats.mean_concurrency)]);
+    summary.row(&[
+        "mean_concurrency".into(),
+        "8.7".into(),
+        format!("{:.2}", stats.mean_concurrency),
+    ]);
     summary.row(&["p_at_least_2".into(), "0.834".into(), format!("{:.3}", stats.p_at_least(2))]);
     summary.row(&["total_jobs".into(), "-".into(), format!("{}", jobs.len())]);
     summary.row(&["gen_seconds".into(), "-".into(), format!("{gen_s:.2}")]);

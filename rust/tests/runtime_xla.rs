@@ -98,13 +98,23 @@ fn kernel_and_reference_artifacts_agree() {
     let out_k = rt
         .execute(
             "pagerank_step",
-            &[mk(&values, &dims_lane), mk(&deltas, &dims_lane), mk(&adj, &dims_mat), mk(&mask, &dims_mask)],
+            &[
+                mk(&values, &dims_lane),
+                mk(&deltas, &dims_lane),
+                mk(&adj, &dims_mat),
+                mk(&mask, &dims_mask),
+            ],
         )
         .unwrap();
     let out_r = rt
         .execute(
             "pagerank_step_ref",
-            &[mk(&values, &dims_lane), mk(&deltas, &dims_lane), mk(&adj, &dims_mat), mk(&mask, &dims_mask)],
+            &[
+                mk(&values, &dims_lane),
+                mk(&deltas, &dims_lane),
+                mk(&adj, &dims_mat),
+                mk(&mask, &dims_mask),
+            ],
         )
         .unwrap();
     for (a, b) in out_k.iter().zip(&out_r) {
