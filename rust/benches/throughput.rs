@@ -22,10 +22,22 @@ fn main() {
         .opt("fused-scale", "14", "rmat scale for the fused-vs-per-job A/B")
         .opt("fused-jobs", "8", "concurrent jobs for the fused-vs-per-job A/B")
         .opt("fused-out", "BENCH_fused.json", "where to write the fused A/B report")
+        .opt("dispatch-scale", "12", "rmat scale for the dispatch-overhead A/B")
+        .opt(
+            "dispatch-block-vertices",
+            "16",
+            "block size for the dispatch-overhead A/B (small on purpose)",
+        )
+        .opt("dispatch-jobs", "4", "concurrent jobs for the dispatch-overhead A/B")
         .opt(
             "check-against",
             "",
             "baseline BENCH json; exit nonzero on >20% fused-speedup regression",
+        )
+        .opt(
+            "write-baseline",
+            "",
+            "write a refreshed BENCH_baseline candidate (measured speedups + updates) here",
         );
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     // fail loudly on bad flags: a silently-defaulted run would skip the
@@ -235,6 +247,65 @@ fn main() {
     t4.print("fused multi-job kernel + parallel rounds vs seed per-job dispatch");
     export_jsonl(&t4.to_jsonl("throughput_fused"));
 
+    // ---- persistent vs scoped-spawn round dispatch (small blocks) -------
+    // The round engine's per-round dispatch overhead, isolated: many
+    // tiny blocks make each scope_map item cheap, so wall time is
+    // dominated by how the round reaches the workers. The persistent
+    // executor (chunked hand-off to long-lived workers) must be at or
+    // below the seed scoped-spawn path (one thread spawn/join cycle per
+    // round) — gated via speedup_dispatch_persistent in the baseline.
+    use tlsched::util::threadpool::ScopeDispatch;
+    let dscale: u32 = a.parse("dispatch-scale");
+    let dblock = a.usize("dispatch-block-vertices");
+    let djobs = a.usize("dispatch-jobs");
+    let gd = generate::rmat(dscale, 8, 4242);
+    let partd = BlockPartition::by_vertex_count(&gd, dblock);
+    // At least 2 workers so both modes pay real cross-thread dispatch
+    // even on single-core CI runners (workers == 1 is inline for both).
+    let dworkers = workers.max(2);
+    let run_dispatch = |mode: ScopeDispatch| -> f64 {
+        let mut best = f64::INFINITY;
+        for _rep in 0..3 {
+            let pool = ThreadPool::with_dispatch(dworkers, mode);
+            let mut jobs: Vec<JobState> = (0..djobs)
+                .map(|i| {
+                    JobState::new(
+                        i as u32,
+                        JobSpec::new(
+                            tlsched::trace::JobKind::ALL[i % 5],
+                            (i as u32 * 131) % gd.num_vertices() as u32,
+                        ),
+                        &gd,
+                    )
+                })
+                .collect();
+            let mut sched = Scheduler::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+            let t0 = std::time::Instant::now();
+            run_to_convergence_parallel(&mut sched, &gd, &partd, &mut jobs, &pool, 1_000_000);
+            assert!(jobs.iter().all(|j| j.converged), "dispatch A/B did not converge");
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let spawn_s = run_dispatch(ScopeDispatch::SpawnPerCall);
+    let persist_s = run_dispatch(ScopeDispatch::Persistent);
+    let speedup_dispatch = spawn_s / persist_s.max(1e-9);
+    let mut t5 = Table::new(&["dispatch", "wall_s", "speedup_vs_spawn"]);
+    t5.row(&["scoped_spawn".into(), format!("{spawn_s:.3}"), "1.00".into()]);
+    t5.row(&[
+        "persistent".into(),
+        format!("{persist_s:.3}"),
+        format!("{speedup_dispatch:.2}"),
+    ]);
+    t5.print(&format!(
+        "round dispatch overhead: persistent executor vs scoped spawn \
+         ({} blocks of {} vertices, {} workers)",
+        partd.num_blocks(),
+        dblock,
+        dworkers
+    ));
+    export_jsonl(&t5.to_jsonl("throughput_dispatch"));
+
     let report = Json::obj(vec![
         ("bench", Json::str("fused_vs_perjob")),
         ("scale", Json::num(fscale as f64)),
@@ -246,10 +317,39 @@ fn main() {
         ("fused_parallel_s", Json::num(par_s)),
         ("speedup_fused_seq", Json::num(seed_s / fused_s.max(1e-9))),
         ("speedup_fused_parallel", Json::num(seed_s / par_s.max(1e-9))),
+        ("dispatch_spawn_s", Json::num(spawn_s)),
+        ("dispatch_persistent_s", Json::num(persist_s)),
+        ("speedup_dispatch_persistent", Json::num(speedup_dispatch)),
     ]);
     let out = a.str("fused-out");
     std::fs::write(out, report.to_string()).expect("write BENCH_fused.json");
     eprintln!("fused A/B report written to {out}");
+
+    // Refreshed-baseline candidate: the exact measured values in the
+    // committed-baseline schema. CI uploads this as an artifact; the
+    // refresh procedure (see .github/workflows/ci.yml) is to copy it
+    // over BENCH_baseline.json once a run is trusted.
+    let baseline_out = a.str("write-baseline");
+    if !baseline_out.is_empty() {
+        let candidate = Json::obj(vec![
+            ("bench", Json::str("fused_vs_perjob")),
+            (
+                "note",
+                Json::str(
+                    "Baseline candidate recorded by benches/throughput.rs --write-baseline; \
+                     copy over BENCH_baseline.json to refresh the CI regression gate.",
+                ),
+            ),
+            ("scale", Json::num(fscale as f64)),
+            ("jobs", Json::num(fjobs as f64)),
+            ("updates", Json::num(seed_updates as f64)),
+            ("speedup_fused_seq", Json::num(seed_s / fused_s.max(1e-9))),
+            ("speedup_fused_parallel", Json::num(seed_s / par_s.max(1e-9))),
+            ("speedup_dispatch_persistent", Json::num(speedup_dispatch)),
+        ]);
+        std::fs::write(baseline_out, candidate.to_string()).expect("write baseline candidate");
+        eprintln!("baseline candidate written to {baseline_out}");
+    }
 
     // ---- bench regression gate ------------------------------------------
     // Compare the *speedup ratios* against a committed baseline: they are
@@ -265,7 +365,11 @@ fn main() {
             j.get(key).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("missing {key}"))
         };
         let mut failed = false;
-        for key in ["speedup_fused_seq", "speedup_fused_parallel"] {
+        for key in [
+            "speedup_fused_seq",
+            "speedup_fused_parallel",
+            "speedup_dispatch_persistent",
+        ] {
             let base = get(&baseline, key);
             let cur = get(&report, key);
             let floor = base * 0.8;

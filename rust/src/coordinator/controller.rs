@@ -15,10 +15,13 @@
 //! not by the number of jobs ever served.
 //!
 //! Rounds on the request path execute through
-//! [`Scheduler::round_parallel`] over a worker pool sized by
-//! `CoordinatorConfig::workers` — deterministic for any worker count.
-//! Cache-simulated runs (`run_batch_probed`) keep the sequential round
-//! so the probe sees the canonical serialized address stream.
+//! [`Scheduler::round_parallel`] over a **persistent fork-join pool**
+//! sized by `CoordinatorConfig::workers` — no thread spawn/join per
+//! round, deterministic for any worker count. The pool's dispatch
+//! counters ride along in `RunMetrics::pool` (and every serve JSON
+//! snapshot). Cache-simulated runs (`run_batch_probed`) keep the
+//! sequential round so the probe sees the canonical serialized
+//! address stream.
 
 use super::admission::{AdmissionConfig, AdmissionPolicy, AdmissionQueue};
 use super::metrics::{JobRecord, RunMetrics};
@@ -27,7 +30,7 @@ use crate::engine::{JobSpec, JobState, NoProbe, Probe};
 use crate::graph::{BlockPartition, Graph};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::trace::TraceJob;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{PoolStats, ThreadPool};
 use std::time::Instant;
 
 /// Coordinator-level configuration.
@@ -124,6 +127,13 @@ impl<'g> Coordinator<'g> {
     /// Number of round-execution workers this coordinator runs with.
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Lifetime-cumulative dispatch counters of the persistent
+    /// round-execution pool. `RunMetrics::pool` (and every serve JSON
+    /// snapshot) carries the **per-run delta** of these.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     fn new_job(&mut self, spec: JobSpec) -> JobState {
@@ -229,12 +239,19 @@ impl<'g> Coordinator<'g> {
     /// Close out a run: drain scheduler plan time, stamp wall-clock
     /// totals and the shed count, and hand back metrics (+ collected
     /// job states sorted by id).
-    fn finalize(&mut self, st: RunState, wall_s: f64, rejected: u64) -> (RunMetrics, Vec<JobState>) {
+    fn finalize(
+        &mut self,
+        st: RunState,
+        wall_s: f64,
+        rejected: u64,
+        pool0: &PoolStats,
+    ) -> (RunMetrics, Vec<JobState>) {
         let mut m = st.metrics;
         m.scheduling_s += self.sched.take_plan_seconds();
         m.wall_s = wall_s;
         m.execution_s = m.wall_s - m.scheduling_s;
         m.rejected = rejected;
+        m.pool = self.pool.stats().delta_since(pool0);
         let mut retired = st.retired;
         retired.sort_by_key(|j| j.id);
         (m, retired)
@@ -273,6 +290,7 @@ impl<'g> Coordinator<'g> {
         collect: bool,
     ) -> (RunMetrics, Vec<JobState>) {
         let t0 = Instant::now();
+        let pool0 = self.pool.stats();
         let mut q = AdmissionQueue::from_specs(specs);
         let mut st = RunState::new(collect);
         let clock = move || t0.elapsed().as_secs_f64();
@@ -282,7 +300,7 @@ impl<'g> Coordinator<'g> {
                 StepOutcome::Idle | StepOutcome::Drained => break,
             }
         }
-        self.finalize(st, t0.elapsed().as_secs_f64(), 0)
+        self.finalize(st, t0.elapsed().as_secs_f64(), 0, &pool0)
     }
 
     /// Trace-replay mode: jobs arrive on a virtual clock that advances
@@ -319,13 +337,14 @@ impl<'g> Coordinator<'g> {
     ) -> RunMetrics {
         assert!(time_scale > 0.0);
         let t0 = Instant::now();
+        let pool0 = self.pool.stats();
         let vnow = move || t0.elapsed().as_secs_f64() * time_scale;
         let mut q = AdmissionQueue::from_trace(trace, admission.policy, admission.slo_factor);
         let mut st = RunState::new(false);
         loop {
             let now = vnow();
-            match self.step(&mut q, &mut st, self.cfg.max_concurrent, now, true, &mut NoProbe, &vnow)
-            {
+            let cap = self.cfg.max_concurrent;
+            match self.step(&mut q, &mut st, cap, now, true, &mut NoProbe, &vnow) {
                 StepOutcome::Worked => {}
                 StepOutcome::Idle => {
                     // idle: nothing active, next arrival in the future —
@@ -347,7 +366,7 @@ impl<'g> Coordinator<'g> {
             }
         }
         let rejected = q.rejected();
-        self.finalize(st, t0.elapsed().as_secs_f64(), rejected).0
+        self.finalize(st, t0.elapsed().as_secs_f64(), rejected, &pool0).0
     }
 
     /// **Serving mode**: drive the core loop from a live admission
@@ -389,6 +408,7 @@ impl<'g> Coordinator<'g> {
         collect: bool,
     ) -> (RunMetrics, Vec<JobState>) {
         let t0 = Instant::now();
+        let pool0 = self.pool.stats();
         let scale = q.time_scale();
         let epoch = q.epoch();
         let clock = move || epoch.elapsed().as_secs_f64() * scale;
@@ -426,6 +446,7 @@ impl<'g> Coordinator<'g> {
                 st.metrics.wall_s = t0.elapsed().as_secs_f64();
                 st.metrics.execution_s = st.metrics.wall_s - st.metrics.scheduling_s;
                 st.metrics.rejected = q.rejected();
+                st.metrics.pool = self.pool.stats().delta_since(&pool0);
                 on_report(&st.metrics);
                 while next_report <= clock() {
                     next_report += report_every_s;
@@ -433,7 +454,7 @@ impl<'g> Coordinator<'g> {
             }
         }
         let rejected = q.rejected();
-        self.finalize(st, t0.elapsed().as_secs_f64(), rejected)
+        self.finalize(st, t0.elapsed().as_secs_f64(), rejected, &pool0)
     }
 }
 
@@ -507,6 +528,36 @@ mod tests {
             per_worker.push(recs);
         }
         assert_eq!(per_worker[0], per_worker[1]);
+    }
+
+    #[test]
+    fn batch_populates_pool_stats_per_run() {
+        // The persistent executor's counters must reach the metrics
+        // surface: a multi-worker batch dispatches every round through
+        // the pool (scope rounds or, for ≤1-entry plans, inline ones) —
+        // and each run's metrics carry only that run's delta, while
+        // `pool_stats()` stays lifetime-cumulative.
+        let (g, part) = setup();
+        let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        cfg.workers = 4;
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let specs = [JobSpec::new(JobKind::PageRank, 0), JobSpec::new(JobKind::Wcc, 5)];
+        let m1 = coord.run_batch(&specs);
+        let m2 = coord.run_batch(&specs);
+        for m in [&m1, &m2] {
+            assert_eq!(m.completed(), 2);
+            assert_eq!(m.pool.workers, 4);
+            assert!(
+                m.pool.scope_rounds + m.pool.scope_inline_rounds >= m.rounds,
+                "every round dispatches through the pool: {:?} vs {} rounds",
+                m.pool,
+                m.rounds
+            );
+            assert_eq!(m.pool.scope_panics, 0);
+        }
+        let total = coord.pool_stats();
+        assert_eq!(m1.pool.scope_rounds + m2.pool.scope_rounds, total.scope_rounds);
+        assert_eq!(m1.pool.scope_items + m2.pool.scope_items, total.scope_items);
     }
 
     #[test]

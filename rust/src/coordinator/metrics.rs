@@ -4,6 +4,7 @@
 use crate::scheduler::RoundStats;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
+use crate::util::threadpool::PoolStats;
 
 /// Lifecycle record of one job.
 #[derive(Debug, Clone)]
@@ -44,6 +45,11 @@ pub struct RunMetrics {
     /// Jobs shed at submission because the bounded admission queue was
     /// full (serve-mode backpressure; 0 for batch and replay runs).
     pub rejected: u64,
+    /// Round-executor dispatch counters (persistent fork-join pool):
+    /// rounds/chunks/items dispatched, panic and inline-fallback
+    /// counts — the **per-run delta** of the pool's cumulative
+    /// counters, taken at finalize and before every serve report.
+    pub pool: PoolStats,
 }
 
 impl RunMetrics {
@@ -126,6 +132,24 @@ impl RunMetrics {
             ("execution_s", Json::num(self.execution_s)),
             ("wall_s", Json::num(self.wall_s)),
             (
+                "pool",
+                Json::obj(vec![
+                    ("workers", Json::num(self.pool.workers as f64)),
+                    ("scope_rounds", Json::num(self.pool.scope_rounds as f64)),
+                    (
+                        "scope_inline_rounds",
+                        Json::num(self.pool.scope_inline_rounds as f64),
+                    ),
+                    ("scope_chunks", Json::num(self.pool.scope_chunks as f64)),
+                    ("scope_items", Json::num(self.pool.scope_items as f64)),
+                    ("scope_panics", Json::num(self.pool.scope_panics as f64)),
+                    ("nested_inline", Json::num(self.pool.nested_inline as f64)),
+                    ("execute_tasks", Json::num(self.pool.execute_tasks as f64)),
+                    ("execute_panics", Json::num(self.pool.execute_panics as f64)),
+                    ("shutdown_inline", Json::num(self.pool.shutdown_inline as f64)),
+                ]),
+            ),
+            (
                 "jobs",
                 Json::arr(self.jobs.iter().map(|j| {
                     Json::obj(vec![
@@ -204,6 +228,26 @@ mod tests {
         assert_eq!(m.sharing_factor(), 0.0);
         assert_eq!(m.mean_queue_wait_s(), 0.0);
         assert_eq!(m.rejected, 0);
+    }
+
+    #[test]
+    fn pool_stats_export_in_json() {
+        let mut m = RunMetrics::default();
+        m.pool = PoolStats {
+            workers: 4,
+            scope_rounds: 12,
+            scope_chunks: 96,
+            scope_items: 480,
+            execute_tasks: 3,
+            ..Default::default()
+        };
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        let pool = parsed.get("pool").unwrap();
+        assert_eq!(pool.get("workers").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(pool.get("scope_rounds").unwrap().as_u64().unwrap(), 12);
+        assert_eq!(pool.get("scope_chunks").unwrap().as_u64().unwrap(), 96);
+        assert_eq!(pool.get("execute_tasks").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(pool.get("scope_panics").unwrap().as_u64().unwrap(), 0);
     }
 
     #[test]

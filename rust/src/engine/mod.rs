@@ -3,6 +3,13 @@
 //! (`exec`) and the fused multi-job kernel (`fused`) that walks the
 //! shared structure once for all concurrent jobs — instrumented for
 //! the cache simulator.
+//!
+//! On the request path these kernels run inside block tasks that the
+//! scheduler's staged round engine (`crate::scheduler::parallel`)
+//! dispatches over the persistent fork-join executor
+//! (`crate::util::threadpool`); both kernels are pure functions of the
+//! pre-round lanes they are handed, which is what lets that dispatch
+//! stay deterministic for any worker count.
 
 pub mod exec;
 pub mod fused;

@@ -18,8 +18,10 @@
 //!   copy (Gauss–Seidel inside a block, exactly like the sequential
 //!   kernel); scatters that cross the block boundary are *staged* as an
 //!   ordered `(target, contribution)` list. Tasks read the pre-round
-//!   lanes only and write nothing shared, so `scope_map` needs no
-//!   locks.
+//!   lanes only and write nothing shared, so the pool's chunked
+//!   `scope_map` dispatch needs no locks — and because each task is a
+//!   pure function of its `BlockTaskSpec`, neither worker count nor
+//!   chunk boundaries can change any task's output.
 //! * **Phase 2 (sequential merge):** block-local lanes are copied back
 //!   (disjoint vertex ranges — order irrelevant), then every staged
 //!   contribution is folded in with the job's `combine`, walking blocks
@@ -211,9 +213,11 @@ fn block_pass(
     outs
 }
 
-/// Execute a planned set of block entries across the pool and merge the
-/// results deterministically. See the module docs for the two-phase
-/// scheme and its determinism argument.
+/// Execute a planned set of block entries across the pool's persistent
+/// workers and merge the results deterministically. One `scope_map`
+/// call per round — the serve loop's per-round dispatch cost is the
+/// pool's chunked hand-off, not a thread spawn/join cycle. See the
+/// module docs for the two-phase scheme and its determinism argument.
 pub(crate) fn execute_blocks_staged(
     g: &Graph,
     part: &BlockPartition,

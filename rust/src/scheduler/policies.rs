@@ -17,8 +17,9 @@
 //! serves every unconverged job — with the per-job reference kernel
 //! kept behind `SchedulerConfig::fused = false` for A/B benches and the
 //! parity suite. [`Scheduler::round_parallel`] additionally spreads a
-//! round's work across a [`ThreadPool`] with deterministic results (see
-//! [`super::parallel`]).
+//! round's work across a [`ThreadPool`]'s persistent workers with
+//! deterministic results for any worker count (see [`super::parallel`]
+//! and the executor docs in [`crate::util::threadpool`]).
 
 use super::cajs::{dispatch_block_on, DispatchStats};
 use super::do_select::{optimal_queue_length, DoSelector, DEFAULT_C};

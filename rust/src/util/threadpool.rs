@@ -1,33 +1,280 @@
-//! Fixed-size worker thread pool with a scoped fork-join API.
+//! Persistent fork-join worker pool on the serve hot path.
 //!
-//! Substitute for rayon/tokio in the offline environment. The coordinator
-//! uses it to run per-job block updates in parallel; on the 1-core CI
-//! image it degrades gracefully to sequential execution when
-//! `workers == 1` (no threads spawned, closures run inline).
+//! Substitute for rayon/tokio in the offline environment. The
+//! coordinator's round loop calls [`ThreadPool::scope_map`] once per
+//! scheduling round; since the serve loop made round cadence
+//! continuous, that call is on the request path of every admitted job.
+//! The executor therefore keeps one set of **persistent workers** and
+//! routes each round's borrowed tasks through them with a completion
+//! latch, instead of paying a spawn/join cycle of scoped threads per
+//! round (the seed design, kept as [`ScopeDispatch::SpawnPerCall`] for
+//! the A/B bench in `benches/throughput.rs`).
+//!
+//! Guarantees:
+//! * `scope_map` results are a pure function of `(items, f)` — worker
+//!   count, chunking and dispatch mode never change them.
+//! * A panic in any task propagates to the caller after all
+//!   participants retire (the latch never deadlocks on a panic).
+//! * `workers == 1` degrades to inline execution (no threads at all).
+//! * Nested `scope_map` from inside a worker runs inline on that
+//!   worker (deterministic; blocking a worker on its own pool could
+//!   deadlock, so nesting is flattened, never fanned out).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::cell::{Cell, UnsafeCell};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, Once};
 use std::thread;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
 enum Msg {
+    /// Fire-and-forget owned task (`execute`).
     Run(Task),
+    /// Invitation to participate in one `scope_map` round.
+    Scope(ScopeRef),
     Shutdown,
 }
 
-/// A fixed pool of worker threads accepting boxed closures.
+/// How `scope_map` reaches the workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScopeDispatch {
+    /// Route borrowed tasks through the persistent workers (default).
+    Persistent,
+    /// Spawn scoped threads per call — the seed behavior, kept as the
+    /// measured baseline for the dispatch-overhead A/B bench.
+    SpawnPerCall,
+}
+
+/// Lifetime-erased handle to one in-flight `scope_map` round.
 ///
-/// Persistent workers back the fire-and-forget [`ThreadPool::execute`]
-/// API and are spawned **lazily on first use** — a pool driven only
-/// through the scoped [`ThreadPool::scope_map`] API (the scheduler's
-/// round engine) never keeps idle threads alive.
+/// SAFETY argument for the erasure: `state` points at a
+/// [`ScopeState<T, R, F>`] on the **calling thread's stack**, and
+/// `enter` is the monomorphized entry fn built in the same `scope_map`
+/// invocation, so the cast inside `enter` is type-correct by
+/// construction. The caller blocks on the round's latch until every
+/// `ScopeRef` it sent has been consumed and retired (`pending == 0`),
+/// which happens-after the last dereference of `state` — the pointee
+/// strictly outlives all uses, and the latch's mutex hand-off orders
+/// the workers' result writes before the caller's reads.
+struct ScopeRef {
+    state: *const (),
+    enter: unsafe fn(*const ()),
+}
+
+// SAFETY: see the struct docs — the pointee outlives every use because
+// the sending `scope_map` call blocks until all ScopeRefs retire, and
+// the pointed-to ScopeState only exposes Sync-safe shared state
+// (atomics, mutexes, and disjoint result slots).
+unsafe impl Send for ScopeRef {}
+
+/// One result slot, written by exactly one participant.
+///
+/// SAFETY argument for `Sync`: the chunk counter (`ScopeState::next`)
+/// hands out each index to exactly one participant, so a given slot is
+/// written at most once, by one thread, with no concurrent access; the
+/// caller reads it only after the latch opens. `Option` keeps
+/// unclaimed slots (panic path) safe to drop.
+struct ResultSlot<R>(UnsafeCell<Option<R>>);
+
+unsafe impl<R: Send> Sync for ResultSlot<R> {}
+
+/// Shared state of one `scope_map` round, living on the caller's
+/// stack. Raw pointers (not references) so the type carries no borrow
+/// lifetimes through the erased `ScopeRef`.
+struct ScopeState<T, R, F> {
+    items: *const T,
+    len: usize,
+    f: *const F,
+    results: *const ResultSlot<R>,
+    /// Contiguous items claimed per counter bump (adaptive: sized so
+    /// each participant takes a few chunks, not one atomic per item).
+    chunk: usize,
+    /// Next unclaimed item index.
+    next: AtomicUsize,
+    /// Chunks actually claimed this round (stats).
+    chunks_claimed: AtomicU64,
+    /// Set by the first panicking participant; stops further claims.
+    panicked: AtomicBool,
+    /// First panic payload, re-thrown by the caller.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Completion latch: ScopeRefs sent but not yet retired. The
+    /// caller waits for 0 before touching results or unwinding.
+    pending: Mutex<usize>,
+    done: Condvar,
+}
+
+impl<T, R, F> ScopeState<T, R, F>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    /// Claim and run chunks until the items are exhausted or a panic
+    /// is flagged. Never unwinds: panics from `f` are caught, recorded
+    /// and re-thrown by the caller — so the latch always retires.
+    fn run_chunks(&self) {
+        loop {
+            if self.panicked.load(Ordering::Acquire) {
+                break;
+            }
+            let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+            if start >= self.len {
+                break;
+            }
+            let end = (start + self.chunk).min(self.len);
+            self.chunks_claimed.fetch_add(1, Ordering::Relaxed);
+            // AssertUnwindSafe: on panic we only record the payload and
+            // flag the round failed; no result slot from this chunk is
+            // ever read (the caller unwinds instead).
+            let run = panic::catch_unwind(AssertUnwindSafe(|| {
+                for i in start..end {
+                    // SAFETY: i < len, so `items.add(i)` is in bounds of
+                    // the caller's slice, which outlives the round (see
+                    // ScopeRef); `f` likewise points into the caller's
+                    // frame. The slot write is exclusive: index i belongs
+                    // to exactly one claimed chunk (see ResultSlot).
+                    unsafe {
+                        let item = &*self.items.add(i);
+                        let val = (*self.f)(i, item);
+                        *(*self.results.add(i)).0.get() = Some(val);
+                    }
+                }
+            }));
+            if let Err(payload) = run {
+                let mut slot = self.panic_payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+                self.panicked.store(true, Ordering::Release);
+                break;
+            }
+        }
+    }
+
+    /// Retire one participation (sent ScopeRef). The last retirement
+    /// opens the caller's latch.
+    fn retire(&self) {
+        let mut n = self.pending.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Worker-side entry: re-materialize the concrete `ScopeState`, help
+/// drain its chunks, retire. Must not unwind (`run_chunks` contains
+/// panics internally).
+///
+/// SAFETY: callable only with the `state` pointer of the `ScopeRef`
+/// built alongside this monomorphization in `scope_map`, while that
+/// round's latch is still pending — see `ScopeRef`.
+unsafe fn enter_scope<T, R, F>(p: *const ())
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let st = unsafe { &*(p as *const ScopeState<T, R, F>) };
+    st.run_chunks();
+    st.retire();
+}
+
+thread_local! {
+    /// True on pool worker threads: routes nested `scope_map` calls
+    /// inline instead of fanning out. Deliberately a process-global
+    /// "any pool's worker" flag, not a per-pool identity: same-pool
+    /// nesting would deadlock outright (a worker blocking on its own
+    /// pool's latch), and *cross*-pool dispatch from a worker can
+    /// deadlock too (pools mutually nesting leave every worker parked
+    /// on a foreign latch with nobody left to consume invitations).
+    /// Inline flattening costs only parallelism, never correctness —
+    /// results are identical either way.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Atomic counters behind [`PoolStats`]. Workers update the
+/// execute-side counters; everything scope-side is folded in by the
+/// calling thread after each round.
+#[derive(Default)]
+struct Counters {
+    scope_rounds: AtomicU64,
+    scope_inline_rounds: AtomicU64,
+    scope_chunks: AtomicU64,
+    scope_items: AtomicU64,
+    scope_panics: AtomicU64,
+    nested_inline: AtomicU64,
+    execute_tasks: AtomicU64,
+    execute_panics: AtomicU64,
+    shutdown_inline: AtomicU64,
+}
+
+/// Point-in-time snapshot of a pool's dispatch counters, exported in
+/// `RunMetrics` and the serve JSON snapshots.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Configured worker count.
+    pub workers: u64,
+    /// `scope_map` rounds dispatched through the persistent workers.
+    pub scope_rounds: u64,
+    /// `scope_map` rounds run inline (1 worker, ≤1 item, nested, or
+    /// after shutdown).
+    pub scope_inline_rounds: u64,
+    /// Contiguous index chunks claimed across all rounds (each claim
+    /// is one atomic bump; the steal-counter analogue).
+    pub scope_chunks: u64,
+    /// Items mapped across all `scope_map` rounds.
+    pub scope_items: u64,
+    /// Rounds that propagated a task panic to the caller.
+    pub scope_panics: u64,
+    /// Nested `scope_map` calls from a worker, flattened inline.
+    pub nested_inline: u64,
+    /// Fire-and-forget tasks accepted by `execute`.
+    pub execute_tasks: u64,
+    /// Panics contained in fire-and-forget tasks (logged, counted, the
+    /// worker survives and `wait_idle` still completes).
+    pub execute_panics: u64,
+    /// Submissions after `shutdown` that ran inline on the submitter.
+    pub shutdown_inline: u64,
+}
+
+impl PoolStats {
+    /// Counter delta `self - earlier` for two snapshots of the same
+    /// pool (counters are monotonic; `workers` is configuration and is
+    /// carried over, not subtracted). This is how the coordinator
+    /// scopes the lifetime-cumulative pool counters to one run.
+    pub fn delta_since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            scope_rounds: self.scope_rounds - earlier.scope_rounds,
+            scope_inline_rounds: self.scope_inline_rounds - earlier.scope_inline_rounds,
+            scope_chunks: self.scope_chunks - earlier.scope_chunks,
+            scope_items: self.scope_items - earlier.scope_items,
+            scope_panics: self.scope_panics - earlier.scope_panics,
+            nested_inline: self.nested_inline - earlier.nested_inline,
+            execute_tasks: self.execute_tasks - earlier.execute_tasks,
+            execute_panics: self.execute_panics - earlier.execute_panics,
+            shutdown_inline: self.shutdown_inline - earlier.shutdown_inline,
+        }
+    }
+}
+
+/// A fixed pool of persistent worker threads with two APIs: the
+/// fire-and-forget [`ThreadPool::execute`], and the scoped fork-join
+/// [`ThreadPool::scope_map`] the round engine runs on. Workers are
+/// spawned **lazily on the first dispatch** and live until
+/// [`ThreadPool::shutdown`] / drop.
 pub struct ThreadPool {
     tx: mpsc::Sender<Msg>,
     rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
     spawn_once: Once,
     inflight: Arc<(Mutex<usize>, Condvar)>,
+    counters: Arc<Counters>,
+    closed: AtomicBool,
+    dispatch: ScopeDispatch,
     workers: usize,
 }
 
@@ -40,6 +287,12 @@ impl ThreadPool {
 
     /// `workers == 1` means inline execution (no threads).
     pub fn new(workers: usize) -> Self {
+        Self::with_dispatch(workers, ScopeDispatch::Persistent)
+    }
+
+    /// Pool with an explicit `scope_map` dispatch mode (the bench A/B
+    /// constructs one pool per mode; everything else wants `new`).
+    pub fn with_dispatch(workers: usize, dispatch: ScopeDispatch) -> Self {
         assert!(workers >= 1);
         let (tx, rx) = mpsc::channel::<Msg>();
         ThreadPool {
@@ -48,6 +301,9 @@ impl ThreadPool {
             handles: Mutex::new(Vec::new()),
             spawn_once: Once::new(),
             inflight: Arc::new((Mutex::new(0usize), Condvar::new())),
+            counters: Arc::new(Counters::default()),
+            closed: AtomicBool::new(false),
+            dispatch,
             workers,
         }
     }
@@ -56,29 +312,71 @@ impl ThreadPool {
         self.workers
     }
 
-    /// Spawn the persistent workers backing `execute` (idempotent).
+    /// Snapshot the dispatch counters.
+    pub fn stats(&self) -> PoolStats {
+        let c = &self.counters;
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        PoolStats {
+            workers: self.workers as u64,
+            scope_rounds: ld(&c.scope_rounds),
+            scope_inline_rounds: ld(&c.scope_inline_rounds),
+            scope_chunks: ld(&c.scope_chunks),
+            scope_items: ld(&c.scope_items),
+            scope_panics: ld(&c.scope_panics),
+            nested_inline: ld(&c.nested_inline),
+            execute_tasks: ld(&c.execute_tasks),
+            execute_panics: ld(&c.execute_panics),
+            shutdown_inline: ld(&c.shutdown_inline),
+        }
+    }
+
+    /// Spawn the persistent workers (idempotent, skipped after
+    /// shutdown).
     fn ensure_workers(&self) {
         self.spawn_once.call_once(|| {
             let mut handles = self.handles.lock().unwrap();
+            // Checked under the handles lock: shutdown sets `closed`
+            // and drains the handle list under this same lock, so
+            // seeing `closed == false` here means any shutdown runs
+            // entirely after we release — it will observe and retire
+            // the workers spawned below. A closed pool can therefore
+            // never spawn workers that nobody would ever join.
+            if self.closed.load(Ordering::SeqCst) {
+                return;
+            }
             for i in 0..self.workers {
                 let rx = Arc::clone(&self.rx);
                 let inflight = Arc::clone(&self.inflight);
+                let counters = Arc::clone(&self.counters);
                 handles.push(
                     thread::Builder::new()
                         .name(format!("tlsched-worker-{i}"))
-                        .spawn(move || loop {
-                            let msg = { rx.lock().unwrap().recv() };
-                            match msg {
-                                Ok(Msg::Run(task)) => {
-                                    task();
-                                    let (lock, cv) = &*inflight;
-                                    let mut n = lock.lock().unwrap();
-                                    *n -= 1;
-                                    if *n == 0 {
-                                        cv.notify_all();
+                        .spawn(move || {
+                            IN_POOL_WORKER.set(true);
+                            loop {
+                                let msg = { rx.lock().unwrap().recv() };
+                                match msg {
+                                    Ok(Msg::Run(task)) => {
+                                        // Contain panics: the worker and the
+                                        // wait_idle latch must both survive a
+                                        // panicking fire-and-forget task.
+                                        Self::run_contained(&counters, task);
+                                        let (lock, cv) = &*inflight;
+                                        let mut n = lock.lock().unwrap();
+                                        *n -= 1;
+                                        if *n == 0 {
+                                            cv.notify_all();
+                                        }
                                     }
+                                    Ok(Msg::Scope(sref)) => {
+                                        // SAFETY: the sending scope_map call is
+                                        // blocked on this round's latch until we
+                                        // retire, so `state` is alive (ScopeRef
+                                        // invariant). enter never unwinds.
+                                        unsafe { (sref.enter)(sref.state) };
+                                    }
+                                    Ok(Msg::Shutdown) | Err(_) => break,
                                 }
-                                Ok(Msg::Shutdown) | Err(_) => break,
                             }
                         })
                         .expect("spawn worker"),
@@ -87,21 +385,70 @@ impl ThreadPool {
         });
     }
 
-    /// Submit a task. With a single worker the task runs inline.
+    /// Run a fire-and-forget task with its panic contained and counted
+    /// — identical containment whether the task runs on a worker or
+    /// inline on the submitter, so behavior and `execute_panics` don't
+    /// depend on pool size or shutdown races.
+    fn run_contained(counters: &Counters, task: impl FnOnce()) {
+        if panic::catch_unwind(AssertUnwindSafe(task)).is_err() {
+            counters.execute_panics.fetch_add(1, Ordering::Relaxed);
+            log::warn!("threadpool: execute task panicked");
+        }
+    }
+
+    /// Submit a fire-and-forget task. With a single worker — or after
+    /// [`ThreadPool::shutdown`] (a shutdown-race submission must not
+    /// panic the submitter) — the task runs inline on the caller. A
+    /// panicking task is contained and counted wherever it runs; the
+    /// panic never unwinds into the submitter.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.counters.execute_tasks.fetch_add(1, Ordering::Relaxed);
         if self.workers == 1 {
-            f();
+            Self::run_contained(&self.counters, f);
             return;
         }
         self.ensure_workers();
-        {
-            let (lock, _) = &*self.inflight;
-            *lock.lock().unwrap() += 1;
+        // Serialize the closed-check + send against shutdown's join (see
+        // shutdown): a message sent after the workers exited would never
+        // be consumed, leaving wait_idle stuck. The task itself never
+        // runs under the lock — it may re-enter the pool or panic.
+        let fallback: Option<Task> = {
+            let _guard = self.handles.lock().unwrap();
+            if self.closed.load(Ordering::SeqCst) {
+                Some(Box::new(f))
+            } else {
+                {
+                    let (lock, _) = &*self.inflight;
+                    *lock.lock().unwrap() += 1;
+                }
+                match self.tx.send(Msg::Run(Box::new(f))) {
+                    Ok(()) => None,
+                    Err(mpsc::SendError(msg)) => {
+                        // Channel closed under us (defensive; shutdown
+                        // holds the lock above, so this shouldn't
+                        // happen): undo the inflight claim, fall back
+                        // to inline.
+                        let (lock, cv) = &*self.inflight;
+                        let mut n = lock.lock().unwrap();
+                        *n -= 1;
+                        if *n == 0 {
+                            cv.notify_all();
+                        }
+                        match msg {
+                            Msg::Run(task) => Some(task),
+                            _ => None,
+                        }
+                    }
+                }
+            }
+        };
+        if let Some(task) = fallback {
+            self.counters.shutdown_inline.fetch_add(1, Ordering::Relaxed);
+            Self::run_contained(&self.counters, task);
         }
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
     }
 
-    /// Block until every submitted task has completed.
+    /// Block until every `execute`-submitted task has completed.
     pub fn wait_idle(&self) {
         if self.workers == 1 {
             return;
@@ -113,29 +460,184 @@ impl ThreadPool {
         }
     }
 
-    /// Fork-join map over items: applies `f(index, &item)` for each item,
-    /// collecting results in input order. Uses scoped threads so `f` may
-    /// borrow from the caller.
+    /// Stop and join the persistent workers (idempotent; also run by
+    /// drop). Tasks already queued are drained first. Submissions that
+    /// race or follow shutdown run inline on the submitter instead of
+    /// panicking; `scope_map` likewise degrades to inline.
+    pub fn shutdown(&self) {
+        // Flag + drain under the lock, but join OUTSIDE it: a worker
+        // mid-task may itself call execute/scope_map (which take this
+        // lock, see closed-check there, and now run inline), so joining
+        // while holding it could deadlock on our own worker. Once
+        // `closed` is set no new messages are ever sent, so the
+        // Shutdown markers queued here are the channel's tail.
+        let drained: Vec<thread::JoinHandle<()>> = {
+            let mut handles = self.handles.lock().unwrap();
+            if self.closed.swap(true, Ordering::SeqCst) {
+                return;
+            }
+            for _ in handles.iter() {
+                let _ = self.tx.send(Msg::Shutdown);
+            }
+            handles.drain(..).collect()
+        };
+        let me = thread::current().id();
+        for h in drained {
+            if h.thread().id() == me {
+                // shutdown() called from inside one of our own workers
+                // (e.g. by an execute task): joining ourselves would
+                // deadlock. This worker exits via its queued Shutdown
+                // message after the current task returns.
+                continue;
+            }
+            let _ = h.join();
+        }
+    }
+
+    /// Fork-join map over borrowed items: applies `f(index, &item)` for
+    /// each item, collecting results in input order. The work is
+    /// dispatched to the **persistent workers** in contiguous index
+    /// chunks (adaptively sized — a few chunks per participant — so
+    /// tiny-item rounds don't serialize on the claim counter), with the
+    /// calling thread participating too. A completion latch holds the
+    /// caller until every participant has retired, which is what makes
+    /// lending stack borrows to long-lived threads sound (see
+    /// [`ScopeRef`]). A panic in any task is re-thrown here after all
+    /// participants retire — the latch cannot deadlock.
     ///
-    /// Deliberate trade-off: each call spawns `workers` scoped threads
-    /// (~tens of µs each) rather than routing the borrows through the
-    /// persistent `execute` workers, which would require unsafe
-    /// lifetime erasure plus panic-deadlock handling. Per scheduling
-    /// round the spawn cost is small against the block work; revisit
-    /// (ROADMAP open item) if profiling shows it on top for tiny
-    /// graphs.
+    /// Runs inline (same results) when the pool has one worker, items
+    /// number ≤ 1, the call is nested inside a pool worker, or the pool
+    /// is shut down.
     pub fn scope_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
     where
         T: Sync,
         R: Send,
         F: Fn(usize, &T) -> R + Sync,
     {
-        if self.workers == 1 || items.len() <= 1 {
+        self.counters.scope_items.fetch_add(items.len() as u64, Ordering::Relaxed);
+        if self.dispatch == ScopeDispatch::SpawnPerCall {
+            return self.scope_map_spawn(items, f);
+        }
+        let nested = IN_POOL_WORKER.get();
+        if self.workers == 1 || items.len() <= 1 || nested {
+            if nested && self.workers > 1 && items.len() > 1 {
+                self.counters.nested_inline.fetch_add(1, Ordering::Relaxed);
+            }
+            self.counters.scope_inline_rounds.fetch_add(1, Ordering::Relaxed);
             return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
         }
+        self.ensure_workers();
+
+        let n = items.len();
+        let invited = self.workers.min(n);
+        // Adaptive chunking: aim for ~4 chunks per participant (workers
+        // + caller) so stragglers rebalance; floor 1 keeps tiny inputs
+        // at one item per claim.
+        let chunk = (n / ((invited + 1) * 4)).max(1);
+        let results: Vec<ResultSlot<R>> =
+            (0..n).map(|_| ResultSlot(UnsafeCell::new(None))).collect();
+        let state = ScopeState::<T, R, F> {
+            items: items.as_ptr(),
+            len: n,
+            f: &f,
+            results: results.as_ptr(),
+            chunk,
+            next: AtomicUsize::new(0),
+            chunks_claimed: AtomicU64::new(0),
+            panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
+            pending: Mutex::new(invited),
+            done: Condvar::new(),
+        };
+        // Invite the workers. Serialized against shutdown (same lock
+        // discipline as execute): an invitation sent after the workers
+        // exited would never retire and the latch below would hang.
+        let sent = {
+            let _guard = self.handles.lock().unwrap();
+            if self.closed.load(Ordering::SeqCst) {
+                0
+            } else {
+                let mut sent = 0;
+                for _ in 0..invited {
+                    let sref = ScopeRef {
+                        state: &state as *const ScopeState<T, R, F> as *const (),
+                        enter: enter_scope::<T, R, F>,
+                    };
+                    if self.tx.send(Msg::Scope(sref)).is_err() {
+                        break;
+                    }
+                    sent += 1;
+                }
+                sent
+            }
+        };
+        if sent < invited {
+            // Un-sent invitations retire immediately (shutdown race);
+            // the caller's own run_chunks below drains everything.
+            let mut p = state.pending.lock().unwrap();
+            *p -= invited - sent;
+            if *p == 0 {
+                state.done.notify_all();
+            }
+        }
+        // The caller participates: even if every worker is busy with
+        // execute tasks, the round makes progress.
+        state.run_chunks();
+        // Latch: wait for every sent invitation to retire. After this,
+        // no live reference to `state`, `items`, `f` or `results`
+        // remains outside this frame (the unsafe contract), and the
+        // mutex hand-off orders all result writes before our reads.
+        {
+            let mut p = state.pending.lock().unwrap();
+            while *p > 0 {
+                p = state.done.wait(p).unwrap();
+            }
+        }
+        if sent == 0 {
+            // Shutdown race: nothing reached a worker — the caller
+            // drained everything, which is an inline round per the
+            // PoolStats counter semantics.
+            self.counters.scope_inline_rounds.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.scope_rounds.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counters
+            .scope_chunks
+            .fetch_add(state.chunks_claimed.load(Ordering::Relaxed), Ordering::Relaxed);
+        if state.panicked.load(Ordering::Acquire) {
+            self.counters.scope_panics.fetch_add(1, Ordering::Relaxed);
+            let payload = state
+                .panic_payload
+                .lock()
+                .unwrap()
+                .take()
+                .unwrap_or_else(|| Box::new("scope_map task panicked"));
+            panic::resume_unwind(payload);
+        }
+        results
+            .into_iter()
+            .map(|s| s.0.into_inner().expect("chunk dispatch filled every slot"))
+            .collect()
+    }
+
+    /// The seed dispatch path: scoped threads spawned per call, one
+    /// atomic claim per item. Kept (behind
+    /// [`ScopeDispatch::SpawnPerCall`]) as the measured baseline the
+    /// persistent executor must beat in `benches/throughput.rs`, and as
+    /// a semantics cross-check in the parity tests.
+    fn scope_map_spawn<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        if self.workers == 1 || items.len() <= 1 {
+            self.counters.scope_inline_rounds.fetch_add(1, Ordering::Relaxed);
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        self.counters.scope_rounds.fetch_add(1, Ordering::Relaxed);
         let next = AtomicUsize::new(0);
-        let results: Vec<Mutex<Option<R>>> =
-            items.iter().map(|_| Mutex::new(None)).collect();
+        let results: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
         thread::scope(|s| {
             for _ in 0..self.workers.min(items.len()) {
                 s.spawn(|| loop {
@@ -157,13 +659,7 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        let handles = self.handles.get_mut().unwrap();
-        for _ in handles.iter() {
-            let _ = self.tx.send(Msg::Shutdown);
-        }
-        for h in handles.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -172,18 +668,25 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
 
+    /// High-iteration mode for the CI stress leg
+    /// (`THREADPOOL_STRESS=1 cargo test -q threadpool`).
+    fn stress_iters(normal: usize, stress: usize) -> usize {
+        if std::env::var_os("THREADPOOL_STRESS").is_some() {
+            stress
+        } else {
+            normal
+        }
+    }
+
     #[test]
     fn inline_when_single_worker() {
         let pool = ThreadPool::new(1);
-        let hit = AtomicU64::new(0);
-        pool.execute(|| {
-            // can't move &hit into 'static closure normally; use a static
-        });
-        let _ = hit;
+        pool.execute(|| {});
         // scope_map works with borrows regardless:
         let xs = [1u64, 2, 3];
         let ys = pool.scope_map(&xs, |_, &x| x * 2);
         assert_eq!(ys, vec![2, 4, 6]);
+        assert_eq!(pool.stats().scope_inline_rounds, 1);
     }
 
     #[test]
@@ -193,6 +696,40 @@ mod tests {
         let ys = pool.scope_map(&xs, |_, &x| x * x);
         for (i, y) in ys.iter().enumerate() {
             assert_eq!(*y, i * i);
+        }
+        let st = pool.stats();
+        assert_eq!(st.scope_rounds, 1);
+        assert_eq!(st.scope_items, 1000);
+        assert!(st.scope_chunks >= 1);
+    }
+
+    #[test]
+    fn chunked_dispatch_covers_every_size() {
+        let pool = ThreadPool::new(3);
+        let iters = stress_iters(1, 40);
+        for _ in 0..iters {
+            for n in [0usize, 1, 2, 3, 5, 17, 64, 100, 1001] {
+                let xs: Vec<usize> = (0..n).collect();
+                let ys = pool.scope_map(&xs, |i, &x| {
+                    assert_eq!(i, x);
+                    x.wrapping_mul(2654435761)
+                });
+                assert_eq!(ys.len(), n);
+                for (i, y) in ys.iter().enumerate() {
+                    assert_eq!(*y, i.wrapping_mul(2654435761));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spawn_and_persistent_dispatch_agree() {
+        let a = ThreadPool::with_dispatch(4, ScopeDispatch::Persistent);
+        let b = ThreadPool::with_dispatch(4, ScopeDispatch::SpawnPerCall);
+        for n in [0usize, 1, 7, 333] {
+            let xs: Vec<u64> = (0..n as u64).collect();
+            let f = |i: usize, x: &u64| x.wrapping_mul(31).wrapping_add(i as u64);
+            assert_eq!(a.scope_map(&xs, f), b.scope_map(&xs, f), "n={n}");
         }
     }
 
@@ -208,6 +745,7 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 64);
+        assert_eq!(pool.stats().execute_tasks, 64);
     }
 
     #[test]
@@ -224,5 +762,205 @@ mod tests {
         pool.execute(|| {});
         pool.wait_idle();
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn panic_in_scope_task_propagates_without_hanging() {
+        let pool = ThreadPool::new(4);
+        let iters = stress_iters(3, 200);
+        for _ in 0..iters {
+            let xs: Vec<usize> = (0..100).collect();
+            let r = panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.scope_map(&xs, |i, &x| {
+                    if i == 37 {
+                        panic!("boom 37");
+                    }
+                    x
+                })
+            }));
+            let payload = r.expect_err("panic must propagate");
+            let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+            assert_eq!(msg, "boom 37");
+            // the pool survives and the next round is clean
+            let ys = pool.scope_map(&xs, |_, &x| x + 1);
+            assert_eq!(ys[99], 100);
+        }
+        assert_eq!(pool.stats().scope_panics, iters as u64);
+    }
+
+    #[test]
+    fn panic_in_execute_does_not_hang_wait_idle() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..16 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i == 7 {
+                    panic!("task 7 panics");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must return despite the panic
+        assert_eq!(counter.load(Ordering::SeqCst), 15);
+        assert_eq!(pool.stats().execute_panics, 1);
+        // the worker that caught the panic is still serving
+        let xs = [1u32, 2, 3, 4];
+        assert_eq!(pool.scope_map(&xs, |_, &x| x * 10), vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn nested_scope_map_runs_inline_deterministically() {
+        let pool = ThreadPool::new(4);
+        let xs: Vec<usize> = (0..16).collect();
+        let inner: Vec<u64> = (0..50).collect();
+        // Retry until a *worker* (not just the participating caller)
+        // demonstrably ran one of the nested calls — the caller could
+        // in principle drain every chunk before a worker wakes.
+        for _attempt in 0..50 {
+            let ys = pool.scope_map(&xs, |_, &x| {
+                // nested call from a worker (or the caller): flattened
+                // inline, same results as a top-level call
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                let sums = pool.scope_map(&inner, |_, &v| v * 2);
+                sums.iter().sum::<u64>() + x as u64
+            });
+            for (i, y) in ys.iter().enumerate() {
+                assert_eq!(*y, 49 * 50 + i as u64);
+            }
+            if pool.stats().nested_inline >= 1 {
+                return;
+            }
+        }
+        panic!("no worker ever flattened a nested scope_map call");
+    }
+
+    #[test]
+    fn execute_after_shutdown_runs_inline_instead_of_panicking() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        pool.shutdown();
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(10, Ordering::SeqCst);
+        }); // must not panic; runs inline on this thread
+        assert_eq!(counter.load(Ordering::SeqCst), 11);
+        assert_eq!(pool.stats().shutdown_inline, 1);
+    }
+
+    #[test]
+    fn scope_map_after_shutdown_runs_inline() {
+        let pool = ThreadPool::new(3);
+        let xs: Vec<u32> = (0..10).collect();
+        assert_eq!(pool.scope_map(&xs, |_, &x| x + 1).len(), 10);
+        pool.shutdown();
+        pool.shutdown(); // idempotent
+        let before = pool.stats();
+        let ys = pool.scope_map(&xs, |_, &x| x * 3);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, i as u32 * 3);
+        }
+        let after = pool.stats();
+        assert_eq!(after.scope_inline_rounds, before.scope_inline_rounds + 1);
+        assert_eq!(after.scope_rounds, before.scope_rounds);
+    }
+
+    #[test]
+    fn execute_panic_contained_on_inline_paths_too() {
+        // Containment must not depend on where the task runs: inline
+        // single-worker pools and post-shutdown fallbacks count panics
+        // exactly like worker-executed tasks, and never unwind into
+        // the submitter.
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("inline boom"));
+        assert_eq!(pool.stats().execute_panics, 1);
+
+        let pool2 = ThreadPool::new(2);
+        pool2.shutdown();
+        pool2.execute(|| panic!("post-shutdown boom"));
+        let st = pool2.stats();
+        assert_eq!(st.execute_panics, 1);
+        assert_eq!(st.shutdown_inline, 1);
+    }
+
+    #[test]
+    fn shutdown_from_worker_task_does_not_deadlock() {
+        // A fire-and-forget task calling shutdown() on its own pool:
+        // the joining thread must skip itself (it exits later via its
+        // queued Shutdown message) instead of joining forever.
+        let pool = Arc::new(ThreadPool::new(2));
+        let p = Arc::clone(&pool);
+        pool.execute(move || p.shutdown());
+        pool.wait_idle();
+        pool.shutdown(); // idempotent from the outside too
+        assert_eq!(pool.scope_map(&[1u32, 2], |_, &x| x + 1), vec![2, 3]);
+    }
+
+    #[test]
+    fn stress_cross_thread_clients_share_one_pool() {
+        // Multiple client threads race scope_map rounds (and the odd
+        // execute task) on one shared pool: invitations from different
+        // rounds interleave on the one channel and workers hop between
+        // them. This is the multi-client soundness case the TSan leg
+        // needs to actually observe.
+        let pool = Arc::new(ThreadPool::new(4));
+        let iters = stress_iters(30, 600);
+        let mut clients = Vec::new();
+        for t in 0..3usize {
+            let p = Arc::clone(&pool);
+            clients.push(thread::spawn(move || {
+                for it in 0..iters {
+                    let n = [3usize, 17, 129, 511][(t + it) % 4];
+                    let xs: Vec<usize> = (0..n).collect();
+                    let ys = p.scope_map(&xs, |i, &x| x.wrapping_add(i));
+                    for (i, y) in ys.iter().enumerate() {
+                        assert_eq!(*y, 2 * i);
+                    }
+                    if it % 7 == 3 {
+                        p.execute(|| {});
+                    }
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        pool.wait_idle();
+        assert_eq!(pool.stats().scope_panics, 0);
+    }
+
+    #[test]
+    fn stress_concurrent_rounds_and_panics() {
+        // The TSan / stress-leg workhorse: hammer dispatch, panics and
+        // reuse on one pool across many rounds and shapes.
+        let pool = ThreadPool::new(4);
+        let iters = stress_iters(25, 1500);
+        for it in 0..iters {
+            let n = [2usize, 3, 7, 33, 256, 1023][it % 6];
+            let xs: Vec<usize> = (0..n).collect();
+            if it % 13 == 5 {
+                let r = panic::catch_unwind(AssertUnwindSafe(|| {
+                    pool.scope_map(&xs, |i, &x| {
+                        if i == n / 2 {
+                            panic!("stress panic");
+                        }
+                        x
+                    })
+                }));
+                assert!(r.is_err());
+            } else {
+                let ys = pool.scope_map(&xs, |i, &x| x + i);
+                for (i, y) in ys.iter().enumerate() {
+                    assert_eq!(*y, 2 * i);
+                }
+            }
+        }
     }
 }

@@ -157,7 +157,12 @@ fn scheduler_fused_matches_reference_every_policy() {
 fn parallel_rounds_bit_identical_across_worker_counts() {
     let g = generate::rmat(10, 8, 41);
     let part = BlockPartition::by_vertex_count(&g, 64);
-    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    let pools = [
+        ThreadPool::new(1),
+        ThreadPool::new(2),
+        ThreadPool::new(4),
+        ThreadPool::new(8),
+    ];
     for kind in SchedulerKind::ALL {
         let mut runs: Vec<(Vec<JobState>, Vec<tlsched::scheduler::RoundStats>)> = pools
             .iter()
@@ -174,6 +179,67 @@ fn parallel_rounds_bit_identical_across_worker_counts() {
         for (w, (jobs, stats)) in runs.iter().enumerate() {
             assert_eq!(&ref_stats, stats, "{} stats differ at pool {w}", kind.name());
             assert_lanes_eq(&ref_jobs, jobs, &format!("{} pool {w}", kind.name()));
+        }
+    }
+}
+
+#[test]
+fn convergence_bit_identical_at_workers_1_2_8() {
+    // Full runs to convergence through the persistent executor: the
+    // staged merge makes every round — and therefore the whole run —
+    // bit-identical across worker counts, including the chunked
+    // dispatch path at 8 workers on few-core CI machines.
+    let g = generate::rmat(10, 8, 71);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    for kind in [SchedulerKind::RoundRobinBlocks, SchedulerKind::TwoLevel] {
+        let mut reference: Option<(Vec<JobState>, usize)> = None;
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            let mut jobs = mixed_jobs(&g, 6);
+            let mut sched = Scheduler::new(SchedulerConfig::new(kind));
+            let (rounds, stats) =
+                run_to_convergence_parallel(&mut sched, &g, &part, &mut jobs, &pool, 1_000_000);
+            assert!(stats.updates > 0, "{} w={workers}", kind.name());
+            assert!(
+                jobs.iter().all(|j| j.converged),
+                "{} w={workers} did not converge",
+                kind.name()
+            );
+            match &reference {
+                None => reference = Some((jobs, rounds)),
+                Some((r, ref_rounds)) => {
+                    assert_lanes_eq(r, &jobs, &format!("{} w={workers}", kind.name()));
+                    assert_eq!(
+                        *ref_rounds, rounds,
+                        "{} w={workers} round count",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn persistent_and_spawn_dispatch_bit_identical() {
+    // The two scope_map dispatch modes (persistent workers with
+    // chunked hand-off vs scoped spawn per call) must be semantically
+    // interchangeable — rounds are a pure function of the plan.
+    use tlsched::util::threadpool::ScopeDispatch;
+    let g = generate::rmat(9, 8, 73);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let persistent = ThreadPool::with_dispatch(4, ScopeDispatch::Persistent);
+    let spawn = ThreadPool::with_dispatch(4, ScopeDispatch::SpawnPerCall);
+    for kind in SchedulerKind::ALL {
+        let mut jobs_a = mixed_jobs(&g, 5);
+        let mut jobs_b = mixed_jobs(&g, 5);
+        let mut sa = Scheduler::new(SchedulerConfig::new(kind));
+        let mut sb = Scheduler::new(SchedulerConfig::new(kind));
+        for round in 0..5 {
+            let a = sa.round_parallel(&g, &part, &mut jobs_a, &persistent);
+            let b = sb.round_parallel(&g, &part, &mut jobs_b, &spawn);
+            assert_eq!(a, b, "{} round {round}", kind.name());
+            assert_lanes_eq(&jobs_a, &jobs_b, &format!("{} round {round}", kind.name()));
         }
     }
 }
