@@ -229,8 +229,16 @@ fn main() {
     };
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let (seed_s, seed_updates) = time_case(false, 1);
-    let (fused_s, _) = time_case(true, 1);
+    let (fused_s, fused_updates) = time_case(true, 1);
     let (par_s, _) = time_case(true, workers);
+    // In-run work-to-convergence invariant: the fused flag changes
+    // memory behavior only, so the sequential fused run must perform
+    // exactly the seed path's update count — a semantic drift between
+    // the kernels fails the bench before any baseline comparison.
+    assert_eq!(
+        seed_updates, fused_updates,
+        "fused_seq updates diverged from seed per-job dispatch (kernel semantics changed)"
+    );
 
     let mut t4 = Table::new(&["path", "wall_s", "speedup_vs_seed"]);
     t4.row(&["seed_perjob_seq".into(), format!("{seed_s:.3}"), "1.00".into()]);
@@ -306,6 +314,48 @@ fn main() {
     ));
     export_jsonl(&t5.to_jsonl("throughput_dispatch"));
 
+    // ---- shard scaling A/B ----------------------------------------------
+    // The sharded runtime vs the single-scheduler engine on the same
+    // batch, pool and graph: S schedulers each plan their own block
+    // range, cross-shard deltas exchange between rounds. On one
+    // machine this isolates the sharding overhead (per-shard planning
+    // is cheaper, the exchange fold is extra); the gate floors keep it
+    // from regressing while multi-socket deployment is built out.
+    use tlsched::shard::{run_to_convergence_sharded, ShardedRuntime};
+    let shard_workers = workers.max(2);
+    let run_sharded = |shards: usize| -> f64 {
+        let mut best = f64::INFINITY;
+        for _rep in 0..2 {
+            let pool = ThreadPool::new(shard_workers);
+            let mut jobs = make_jobs();
+            let mut rt = ShardedRuntime::new(
+                &partf,
+                SchedulerConfig::new(SchedulerKind::TwoLevel),
+                shards,
+            );
+            let t0 = std::time::Instant::now();
+            run_to_convergence_sharded(&mut rt, &gf, &partf, &mut jobs, &pool, 1_000_000);
+            assert!(jobs.iter().all(|j| j.converged), "shard A/B did not converge");
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let shard1_s = run_sharded(1);
+    let shard2_s = run_sharded(2);
+    let shard4_s = run_sharded(4);
+    let speedup_shards_2 = shard1_s / shard2_s.max(1e-9);
+    let speedup_shards_4 = shard1_s / shard4_s.max(1e-9);
+    let mut t6 = Table::new(&["shards", "wall_s", "speedup_vs_1"]);
+    t6.row(&["1".into(), format!("{shard1_s:.3}"), "1.00".into()]);
+    t6.row(&["2".into(), format!("{shard2_s:.3}"), format!("{speedup_shards_2:.2}")]);
+    t6.row(&["4".into(), format!("{shard4_s:.3}"), format!("{speedup_shards_4:.2}")]);
+    t6.print(&format!(
+        "shard scaling: sharded runtime vs single scheduler ({} blocks, {} workers)",
+        partf.num_blocks(),
+        shard_workers
+    ));
+    export_jsonl(&t6.to_jsonl("throughput_shards"));
+
     let report = Json::obj(vec![
         ("bench", Json::str("fused_vs_perjob")),
         ("scale", Json::num(fscale as f64)),
@@ -320,6 +370,11 @@ fn main() {
         ("dispatch_spawn_s", Json::num(spawn_s)),
         ("dispatch_persistent_s", Json::num(persist_s)),
         ("speedup_dispatch_persistent", Json::num(speedup_dispatch)),
+        ("shard1_s", Json::num(shard1_s)),
+        ("shard2_s", Json::num(shard2_s)),
+        ("shard4_s", Json::num(shard4_s)),
+        ("speedup_shards_2", Json::num(speedup_shards_2)),
+        ("speedup_shards_4", Json::num(speedup_shards_4)),
     ]);
     let out = a.str("fused-out");
     std::fs::write(out, report.to_string()).expect("write BENCH_fused.json");
@@ -343,9 +398,14 @@ fn main() {
             ("scale", Json::num(fscale as f64)),
             ("jobs", Json::num(fjobs as f64)),
             ("updates", Json::num(seed_updates as f64)),
+            // measured in this very run, so a copied candidate is
+            // always a verified baseline
+            ("updates_verified", Json::num(1.0)),
             ("speedup_fused_seq", Json::num(seed_s / fused_s.max(1e-9))),
             ("speedup_fused_parallel", Json::num(seed_s / par_s.max(1e-9))),
             ("speedup_dispatch_persistent", Json::num(speedup_dispatch)),
+            ("speedup_shards_2", Json::num(speedup_shards_2)),
+            ("speedup_shards_4", Json::num(speedup_shards_4)),
         ]);
         std::fs::write(baseline_out, candidate.to_string()).expect("write baseline candidate");
         eprintln!("baseline candidate written to {baseline_out}");
@@ -369,6 +429,8 @@ fn main() {
             "speedup_fused_seq",
             "speedup_fused_parallel",
             "speedup_dispatch_persistent",
+            "speedup_shards_2",
+            "speedup_shards_4",
         ] {
             let base = get(&baseline, key);
             let cur = get(&report, key);
@@ -383,15 +445,45 @@ fn main() {
                 eprintln!("bench gate: {key} = {cur:.3} vs baseline {base:.3} — ok");
             }
         }
-        // total converged work is deterministic for fixed scale/jobs:
-        // a mismatch means the kernels changed semantics, not speed
+        // Total converged work is deterministic for fixed scale/jobs: a
+        // mismatch means the kernels changed semantics, not speed. The
+        // exact check only applies when the run's config matches the
+        // baseline's recorded one — a differently-flagged local run
+        // must not trip it. `updates_verified` records whether the
+        // baseline value came from a measured candidate artifact
+        // (copying one always sets it): an unverified value reports
+        // drift loudly but cannot hard-fail the gate, so arming the
+        // machinery never turns CI red on a value nobody measured.
         let base_updates = get(&baseline, "updates");
-        if base_updates > 0.0 && (seed_updates as f64 - base_updates).abs() > 0.5 {
+        let verified = baseline
+            .get("updates_verified")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            > 0.0;
+        let config_matches = get(&baseline, "scale") == fscale as f64
+            && get(&baseline, "jobs") == fjobs as f64;
+        if base_updates > 0.0 && !config_matches {
+            eprintln!(
+                "bench gate: skipping exact updates check \
+                 (run config differs from baseline scale/jobs)"
+            );
+        }
+        if base_updates > 0.0
+            && config_matches
+            && (seed_updates as f64 - base_updates).abs() > 0.5
+        {
             eprintln!(
                 "REGRESSION: updates = {seed_updates} differs from baseline {base_updates} \
-                 (work-to-convergence changed)"
+                 (work-to-convergence changed{})",
+                if verified {
+                    ""
+                } else {
+                    "; baseline unverified — refresh it from this run's candidate artifact"
+                }
             );
-            failed = true;
+            if verified {
+                failed = true;
+            }
         }
         if failed {
             std::process::exit(1);

@@ -39,6 +39,9 @@ pub struct RunConfig {
     pub max_concurrent: usize,
     /// Round-execution worker threads (0 = one per available core).
     pub workers: usize,
+    /// Scheduler shards of the sharded runtime (`[shard]` section;
+    /// 1 = unsharded). Block ranges are balanced by structure bytes.
+    pub shards: usize,
     /// Serving-mode settings (`[serve]` section).
     pub serve: ServeSettings,
 }
@@ -68,6 +71,7 @@ impl Default for RunConfig {
             hierarchy: HierarchyConfig::default(),
             max_concurrent: 32,
             workers: 0,
+            shards: 1,
             serve: ServeSettings::default(),
         }
     }
@@ -212,6 +216,12 @@ impl RunConfig {
         cfg.max_concurrent = get_parse(&raw, "coordinator.max_concurrent", 32usize)?;
         cfg.workers = get_parse(&raw, "coordinator.workers", 0usize)?;
 
+        // [shard]
+        cfg.shards = get_parse(&raw, "shard.shards", cfg.shards)?;
+        if cfg.shards == 0 {
+            return Err(ConfigError::Invalid("shard.shards", "must be >= 1".into()));
+        }
+
         // [serve]
         if let Some(p) = raw.get("serve.policy") {
             cfg.serve.admission.policy = AdmissionPolicy::from_name(p)
@@ -344,6 +354,15 @@ max_concurrent = 4
         assert!(d.scheduler.incremental_summaries);
         assert!(d.scheduler.fused);
         assert_eq!(d.workers, 0);
+    }
+
+    #[test]
+    fn shard_section_parses() {
+        let cfg = RunConfig::from_str("[shard]\nshards = 4\n").unwrap();
+        assert_eq!(cfg.shards, 4);
+        // default unsharded; zero rejected
+        assert_eq!(RunConfig::from_str("").unwrap().shards, 1);
+        assert!(RunConfig::from_str("[shard]\nshards = 0\n").is_err());
     }
 
     #[test]

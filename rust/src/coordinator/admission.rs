@@ -197,6 +197,10 @@ pub struct AdmissionQueue {
     next_seq: u64,
     t0: Instant,
     time_scale: f64,
+    /// block → owning shard of the sharded runtime; makes the
+    /// `Correlation` policy shard-affine (see [`correlation_score`]).
+    /// None for unsharded coordinators.
+    shard_map: Option<Arc<[u32]>>,
 }
 
 impl AdmissionQueue {
@@ -210,7 +214,17 @@ impl AdmissionQueue {
             next_seq: 0,
             t0: Instant::now(),
             time_scale,
+            shard_map: None,
         }
+    }
+
+    /// Attach the sharded runtime's block → shard map: the
+    /// `Correlation` policy then also scores *shard affinity* (source
+    /// vertex in the shard where a resident job is active), routing
+    /// admissions toward the shard that owns their source block. The
+    /// coordinator calls this at run start when sharding is on.
+    pub fn set_shard_map(&mut self, block_shard: Arc<[u32]>) {
+        self.shard_map = Some(block_shard);
     }
 
     /// Batch source: every spec submitted at time zero, FIFO order
@@ -347,11 +361,28 @@ impl AdmissionQueue {
                 .unwrap_or(0),
             AdmissionPolicy::Correlation => {
                 // score each candidate once, then take the best
-                // (ties fall back to arrival order)
+                // (ties fall back to arrival order). The shard-affinity
+                // input — "does shard X hold an active resident?" — is
+                // precomputed once per pop (O(residents × blocks)), so
+                // scoring stays O(1) per candidate.
+                let map = self.shard_map.as_deref();
+                let shard_live: Option<Vec<bool>> = map.map(|m| {
+                    let shards = m.iter().copied().max().map_or(1, |s| s as usize + 1);
+                    let mut live = vec![false; shards];
+                    for r in resident.iter().filter(|r| !r.converged) {
+                        for (blk, &s) in m.iter().enumerate() {
+                            if !live[s as usize] && r.is_block_active(blk as u32) {
+                                live[s as usize] = true;
+                            }
+                        }
+                    }
+                    live
+                });
+                let ctx = map.zip(shard_live.as_deref());
                 let scores: Vec<i64> = self
                     .pending
                     .iter()
-                    .map(|p| correlation_score(&p.sub, resident, part))
+                    .map(|p| correlation_score(&p.sub, resident, part, ctx))
                     .collect();
                 (0..self.pending.len())
                     .max_by(|&i, &j| {
@@ -419,8 +450,19 @@ impl AdmissionQueue {
 /// Correlation of a pending job with the resident set: +2 when a
 /// resident (unconverged) job has the same kind, +1 when the source
 /// vertex lies in a block where some resident job is still active
-/// (joining there rides a warm CAJS pair).
-fn correlation_score(sub: &Submission, resident: &[JobState], part: &BlockPartition) -> i64 {
+/// (joining there rides a warm CAJS pair). With shard context attached
+/// (sharded coordinator: the block → shard map plus the per-shard
+/// "holds an active resident" bitset the caller precomputes per pop),
+/// +1 more when the *shard* owning the source block has a resident job
+/// active in it — the shard-affine version of the same locality
+/// argument: the admitted job's first frontier joins a shard whose
+/// scheduler is already dispatching.
+fn correlation_score(
+    sub: &Submission,
+    resident: &[JobState],
+    part: &BlockPartition,
+    shard_ctx: Option<(&[u32], &[bool])>,
+) -> i64 {
     let mut score = 0i64;
     let live = resident.iter().filter(|r| !r.converged);
     if live.clone().any(|r| r.spec.kind == sub.kind) {
@@ -429,6 +471,11 @@ fn correlation_score(sub: &Submission, resident: &[JobState], part: &BlockPartit
     if let Some(&b) = part.vertex_block.get(sub.source as usize) {
         if live.clone().any(|r| r.is_block_active(b)) {
             score += 1;
+        }
+        if let Some((map, shard_live)) = shard_ctx {
+            if shard_live.get(map[b as usize] as usize).copied().unwrap_or(false) {
+                score += 1;
+            }
         }
     }
     score
@@ -504,6 +551,52 @@ mod tests {
         // second; the leftover pagerank follows
         assert_eq!(q.pop(&resident, &part).unwrap().kind, JobKind::Sssp);
         assert_eq!(q.pop(&resident, &part).unwrap().kind, JobKind::PageRank);
+    }
+
+    #[test]
+    fn correlation_with_shard_map_prefers_active_shard() {
+        // Resident SSSP job active only in its source block; two
+        // pending BFS jobs (no kind match, no exact block match): the
+        // one whose source lies in the *shard* of the active block must
+        // win once the shard map is attached.
+        let (g, part) = dummy_part();
+        let ranges = part.shard_by_bytes(2);
+        let block_shard: Vec<u32> = (0..part.num_blocks() as u32)
+            .map(|b| ranges.iter().find(|r| r.blocks.contains(&b)).unwrap().id)
+            .collect();
+        // resident job with tracking, active at vertex 3 (shard 0)
+        let mut resident_job = JobState::new(0, JobSpec::new(JobKind::Sssp, 3), &g);
+        resident_job.enable_tracking(
+            std::sync::Arc::from(part.vertex_block.as_slice()),
+            part.num_blocks(),
+        );
+        let resident = vec![resident_job];
+        let src_block = part.block_of(3);
+        assert_eq!(block_shard[src_block as usize], 0, "test setup: source in shard 0");
+        // candidate A: same shard (0) but a different block; candidate
+        // B: the other shard. Choose A's source from the last block of
+        // shard 0, B's from shard 1.
+        let shard0_last = ranges[0].blocks.end - 1;
+        assert_ne!(shard0_last, src_block, "need a different block in shard 0");
+        let a_src = part.block(shard0_last).start;
+        let b_src = ranges[1].vertices.start;
+        let trace: Vec<TraceJob> = [b_src, a_src]
+            .iter()
+            .enumerate()
+            .map(|(i, &source)| TraceJob {
+                id: i as u64,
+                arrival_s: 0.0,
+                service_s: 1.0,
+                kind: JobKind::Bfs,
+                source,
+            })
+            .collect();
+        let mut q = AdmissionQueue::from_trace(&trace, AdmissionPolicy::Correlation, 4.0);
+        q.set_shard_map(std::sync::Arc::from(block_shard.as_slice()));
+        q.poll(0.0);
+        // shard-affine: a_src (arrived second) outranks b_src
+        assert_eq!(q.pop(&resident, &part).unwrap().source, a_src);
+        assert_eq!(q.pop(&resident, &part).unwrap().source, b_src);
     }
 
     #[test]

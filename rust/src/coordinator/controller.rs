@@ -17,11 +17,16 @@
 //! Rounds on the request path execute through
 //! [`Scheduler::round_parallel`] over a **persistent fork-join pool**
 //! sized by `CoordinatorConfig::workers` — no thread spawn/join per
-//! round, deterministic for any worker count. The pool's dispatch
-//! counters ride along in `RunMetrics::pool` (and every serve JSON
-//! snapshot). Cache-simulated runs (`run_batch_probed`) keep the
-//! sequential round so the probe sees the canonical serialized
-//! address stream.
+//! round, deterministic for any worker count. With
+//! `CoordinatorConfig::shards > 1` the same `step()` loop instead
+//! drives a [`ShardedRuntime`]: every shard plans and processes its
+//! own hot blocks each round, cross-shard deltas exchange between
+//! rounds, admission becomes shard-affine under the `correlation`
+//! policy, and per-shard counters ride along in `RunMetrics::shards`.
+//! The pool's dispatch counters ride along in `RunMetrics::pool` (and
+//! every serve JSON snapshot). Cache-simulated runs
+//! (`run_batch_probed`) keep the sequential unsharded round so the
+//! probe sees the canonical serialized address stream.
 
 use super::admission::{AdmissionConfig, AdmissionPolicy, AdmissionQueue};
 use super::metrics::{JobRecord, RunMetrics};
@@ -29,6 +34,7 @@ use crate::algorithms::DeltaProgram;
 use crate::engine::{JobSpec, JobState, NoProbe, Probe};
 use crate::graph::{BlockPartition, Graph};
 use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::shard::{ShardMetrics, ShardedRuntime};
 use crate::trace::TraceJob;
 use crate::util::threadpool::{PoolStats, ThreadPool};
 use std::time::Instant;
@@ -48,6 +54,14 @@ pub struct CoordinatorConfig {
     /// from the sequential probed path (`run_batch_probed`), while
     /// fixpoints are identical.
     pub workers: usize,
+    /// Scheduler shards of the sharded runtime (`crate::shard`):
+    /// `> 1` partitions the blocks into that many byte-balanced
+    /// ranges, each driven by its own scheduler, with cross-shard
+    /// deltas exchanged deterministically between rounds. `0`/`1` =
+    /// unsharded. Only block-major policies shard; job-major
+    /// baselines fall back to the unsharded engine (logged). Probed
+    /// (cache-simulated) runs always stay sequential and unsharded.
+    pub shards: usize,
 }
 
 impl CoordinatorConfig {
@@ -57,6 +71,7 @@ impl CoordinatorConfig {
             max_concurrent: 32,
             max_rounds_per_job: 500_000,
             workers: 0,
+            shards: 1,
         }
     }
 }
@@ -109,6 +124,9 @@ pub struct Coordinator<'g> {
     pub part: &'g BlockPartition,
     pub cfg: CoordinatorConfig,
     sched: Scheduler,
+    /// Sharded round engine (`cfg.shards > 1` and a block-major
+    /// policy); None = unsharded.
+    sharded: Option<ShardedRuntime>,
     pool: ThreadPool,
     next_job_id: u32,
 }
@@ -121,12 +139,57 @@ impl<'g> Coordinator<'g> {
         } else {
             ThreadPool::new(cfg.workers)
         };
-        Coordinator { g, part, cfg, sched, pool, next_job_id: 0 }
+        let sharded = if cfg.shards > 1 {
+            if ShardedRuntime::supports(cfg.scheduler.kind) {
+                Some(ShardedRuntime::new(part, cfg.scheduler.clone(), cfg.shards))
+            } else {
+                log::warn!(
+                    "scheduler '{}' is job-major; --shards {} ignored (unsharded engine)",
+                    cfg.scheduler.kind.name(),
+                    cfg.shards
+                );
+                None
+            }
+        } else {
+            None
+        };
+        Coordinator { g, part, cfg, sched, sharded, pool, next_job_id: 0 }
     }
 
     /// Number of round-execution workers this coordinator runs with.
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Number of scheduler shards rounds execute across (1 =
+    /// unsharded).
+    pub fn shards(&self) -> usize {
+        self.sharded.as_ref().map_or(1, |rt| rt.num_shards())
+    }
+
+    /// Lifetime-cumulative per-shard counters (empty when unsharded);
+    /// `RunMetrics::shards` carries the per-run delta of these.
+    pub fn shard_metrics(&self) -> Vec<ShardMetrics> {
+        self.sharded.as_ref().map(|rt| rt.metrics().to_vec()).unwrap_or_default()
+    }
+
+    fn shard_delta(&self, start: &[ShardMetrics]) -> Vec<ShardMetrics> {
+        match &self.sharded {
+            Some(rt) if rt.metrics().len() == start.len() => {
+                rt.metrics().iter().zip(start).map(|(c, e)| c.delta_since(e)).collect()
+            }
+            Some(rt) => rt.metrics().to_vec(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Make the admission queue shard-aware (no-op when unsharded):
+    /// the `correlation` policy becomes shard-affine, routing jobs
+    /// toward the shard owning their source block.
+    fn attach_shard_context(&self, q: &mut AdmissionQueue) {
+        if let Some(rt) = &self.sharded {
+            q.set_shard_map(rt.block_shard_map());
+        }
     }
 
     /// Lifetime-cumulative dispatch counters of the persistent
@@ -187,7 +250,11 @@ impl<'g> Coordinator<'g> {
         }
         // -- round ----------------------------------------------------
         let s = if parallel {
-            self.sched.round_parallel(self.g, self.part, &mut st.active, &self.pool)
+            if let Some(rt) = &mut self.sharded {
+                rt.round(self.g, self.part, &mut st.active, &self.pool)
+            } else {
+                self.sched.round_parallel(self.g, self.part, &mut st.active, &self.pool)
+            }
         } else {
             self.sched.round(self.g, self.part, &mut st.active, probe)
         };
@@ -232,6 +299,9 @@ impl<'g> Coordinator<'g> {
         }
         if st.active.len() < before {
             self.sched.detach_jobs(st.active.len());
+            if let Some(rt) = &mut self.sharded {
+                rt.detach_jobs(st.active.len());
+            }
         }
         StepOutcome::Worked
     }
@@ -245,13 +315,18 @@ impl<'g> Coordinator<'g> {
         wall_s: f64,
         rejected: u64,
         pool0: &PoolStats,
+        shards0: &[ShardMetrics],
     ) -> (RunMetrics, Vec<JobState>) {
         let mut m = st.metrics;
         m.scheduling_s += self.sched.take_plan_seconds();
+        if let Some(rt) = &mut self.sharded {
+            m.scheduling_s += rt.take_plan_seconds();
+        }
         m.wall_s = wall_s;
         m.execution_s = m.wall_s - m.scheduling_s;
         m.rejected = rejected;
         m.pool = self.pool.stats().delta_since(pool0);
+        m.shards = self.shard_delta(shards0);
         let mut retired = st.retired;
         retired.sort_by_key(|j| j.id);
         (m, retired)
@@ -291,7 +366,9 @@ impl<'g> Coordinator<'g> {
     ) -> (RunMetrics, Vec<JobState>) {
         let t0 = Instant::now();
         let pool0 = self.pool.stats();
+        let shards0 = self.shard_metrics();
         let mut q = AdmissionQueue::from_specs(specs);
+        self.attach_shard_context(&mut q);
         let mut st = RunState::new(collect);
         let clock = move || t0.elapsed().as_secs_f64();
         loop {
@@ -300,7 +377,7 @@ impl<'g> Coordinator<'g> {
                 StepOutcome::Idle | StepOutcome::Drained => break,
             }
         }
-        self.finalize(st, t0.elapsed().as_secs_f64(), 0, &pool0)
+        self.finalize(st, t0.elapsed().as_secs_f64(), 0, &pool0, &shards0)
     }
 
     /// Trace-replay mode: jobs arrive on a virtual clock that advances
@@ -338,8 +415,10 @@ impl<'g> Coordinator<'g> {
         assert!(time_scale > 0.0);
         let t0 = Instant::now();
         let pool0 = self.pool.stats();
+        let shards0 = self.shard_metrics();
         let vnow = move || t0.elapsed().as_secs_f64() * time_scale;
         let mut q = AdmissionQueue::from_trace(trace, admission.policy, admission.slo_factor);
+        self.attach_shard_context(&mut q);
         let mut st = RunState::new(false);
         loop {
             let now = vnow();
@@ -366,7 +445,7 @@ impl<'g> Coordinator<'g> {
             }
         }
         let rejected = q.rejected();
-        self.finalize(st, t0.elapsed().as_secs_f64(), rejected, &pool0).0
+        self.finalize(st, t0.elapsed().as_secs_f64(), rejected, &pool0, &shards0).0
     }
 
     /// **Serving mode**: drive the core loop from a live admission
@@ -409,6 +488,8 @@ impl<'g> Coordinator<'g> {
     ) -> (RunMetrics, Vec<JobState>) {
         let t0 = Instant::now();
         let pool0 = self.pool.stats();
+        let shards0 = self.shard_metrics();
+        self.attach_shard_context(q);
         let scale = q.time_scale();
         let epoch = q.epoch();
         let clock = move || epoch.elapsed().as_secs_f64() * scale;
@@ -443,10 +524,14 @@ impl<'g> Coordinator<'g> {
             }
             if clock() >= next_report {
                 st.metrics.scheduling_s += self.sched.take_plan_seconds();
+                if let Some(rt) = &mut self.sharded {
+                    st.metrics.scheduling_s += rt.take_plan_seconds();
+                }
                 st.metrics.wall_s = t0.elapsed().as_secs_f64();
                 st.metrics.execution_s = st.metrics.wall_s - st.metrics.scheduling_s;
                 st.metrics.rejected = q.rejected();
                 st.metrics.pool = self.pool.stats().delta_since(&pool0);
+                st.metrics.shards = self.shard_delta(&shards0);
                 on_report(&st.metrics);
                 while next_report <= clock() {
                     next_report += report_every_s;
@@ -454,7 +539,7 @@ impl<'g> Coordinator<'g> {
             }
         }
         let rejected = q.rejected();
-        self.finalize(st, t0.elapsed().as_secs_f64(), rejected, &pool0)
+        self.finalize(st, t0.elapsed().as_secs_f64(), rejected, &pool0, &shards0)
     }
 }
 
@@ -558,6 +643,44 @@ mod tests {
         let total = coord.pool_stats();
         assert_eq!(m1.pool.scope_rounds + m2.pool.scope_rounds, total.scope_rounds);
         assert_eq!(m1.pool.scope_items + m2.pool.scope_items, total.scope_items);
+    }
+
+    #[test]
+    fn sharded_batch_completes_and_reports_shard_metrics() {
+        let (g, part) = setup();
+        let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        cfg.workers = 2;
+        cfg.shards = 2;
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        assert_eq!(coord.shards(), 2);
+        let specs = [
+            JobSpec::new(JobKind::PageRank, 0),
+            JobSpec::new(JobKind::Sssp, 10),
+            JobSpec::new(JobKind::Wcc, 0),
+        ];
+        let m1 = coord.run_batch(&specs);
+        assert_eq!(m1.completed(), 3);
+        assert_eq!(m1.shards.len(), 2);
+        assert_eq!(m1.shards.iter().map(|s| s.updates).sum::<u64>(), m1.totals.updates);
+        assert!(m1.shard_imbalance() >= 1.0);
+        // per-run delta: a second run reports only its own work
+        let m2 = coord.run_batch(&specs);
+        assert_eq!(m2.shards.iter().map(|s| s.updates).sum::<u64>(), m2.totals.updates);
+        let lifetime: u64 = coord.shard_metrics().iter().map(|s| s.updates).sum();
+        assert_eq!(lifetime, m1.totals.updates + m2.totals.updates);
+    }
+
+    #[test]
+    fn sharded_job_major_falls_back_to_unsharded() {
+        let (g, part) = setup();
+        let mut cfg =
+            CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::Independent));
+        cfg.shards = 4;
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        assert_eq!(coord.shards(), 1, "job-major policies don't shard");
+        let m = coord.run_batch(&[JobSpec::new(JobKind::Bfs, 3)]);
+        assert_eq!(m.completed(), 1);
+        assert!(m.shards.is_empty());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! exportable as JSON for EXPERIMENTS.md scripting.
 
 use crate::scheduler::RoundStats;
+use crate::shard::ShardMetrics;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::util::threadpool::PoolStats;
@@ -50,6 +51,9 @@ pub struct RunMetrics {
     /// counts — the **per-run delta** of the pool's cumulative
     /// counters, taken at finalize and before every serve report.
     pub pool: PoolStats,
+    /// Per-shard counters of the sharded runtime (per-run deltas, like
+    /// `pool`); empty for unsharded runs.
+    pub shards: Vec<ShardMetrics>,
 }
 
 impl RunMetrics {
@@ -104,6 +108,23 @@ impl RunMetrics {
         percentile(&xs, 95.0)
     }
 
+    /// Work imbalance across shards: max per-shard updates over the
+    /// mean (1.0 = perfectly balanced). 0.0 when the run was not
+    /// sharded, 1.0 when sharded but no work was done.
+    pub fn shard_imbalance(&self) -> f64 {
+        if self.shards.is_empty() {
+            return 0.0;
+        }
+        let max = self.shards.iter().map(|s| s.updates).max().unwrap_or(0) as f64;
+        let mean = self.shards.iter().map(|s| s.updates).sum::<u64>() as f64
+            / self.shards.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
     /// Average number of jobs served per block load — the sharing
     /// factor CAJS buys (1.0 = no sharing).
     pub fn sharing_factor(&self) -> f64 {
@@ -148,6 +169,25 @@ impl RunMetrics {
                     ("execute_panics", Json::num(self.pool.execute_panics as f64)),
                     ("shutdown_inline", Json::num(self.pool.shutdown_inline as f64)),
                 ]),
+            ),
+            ("shard_imbalance", Json::num(self.shard_imbalance())),
+            (
+                "shards",
+                Json::arr(self.shards.iter().map(|s| {
+                    Json::obj(vec![
+                        ("id", Json::num(s.id as f64)),
+                        ("blocks", Json::num(s.blocks as f64)),
+                        ("bytes", Json::num(s.bytes as f64)),
+                        ("rounds", Json::num(s.rounds as f64)),
+                        ("block_loads", Json::num(s.block_loads as f64)),
+                        ("dispatches", Json::num(s.dispatches as f64)),
+                        ("updates", Json::num(s.updates as f64)),
+                        ("exchanged_out", Json::num(s.exchanged_out as f64)),
+                        ("exchanged_in", Json::num(s.exchanged_in as f64)),
+                        ("resident_jobs", Json::num(s.resident_jobs as f64)),
+                        ("resident_peak", Json::num(s.resident_peak as f64)),
+                    ])
+                })),
             ),
             (
                 "jobs",
@@ -248,6 +288,30 @@ mod tests {
         assert_eq!(pool.get("scope_chunks").unwrap().as_u64().unwrap(), 96);
         assert_eq!(pool.get("execute_tasks").unwrap().as_u64().unwrap(), 3);
         assert_eq!(pool.get("scope_panics").unwrap().as_u64().unwrap(), 0);
+    }
+
+    #[test]
+    fn shard_metrics_export_and_imbalance() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.shard_imbalance(), 0.0, "unsharded runs report 0");
+        m.shards = vec![
+            ShardMetrics { id: 0, updates: 300, exchanged_out: 7, ..Default::default() },
+            ShardMetrics { id: 1, updates: 100, exchanged_in: 7, ..Default::default() },
+        ];
+        // max 300 / mean 200 = 1.5
+        assert!((m.shard_imbalance() - 1.5).abs() < 1e-9);
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        let shards = parsed.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("updates").unwrap().as_u64().unwrap(), 300);
+        assert_eq!(shards[0].get("exchanged_out").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(shards[1].get("exchanged_in").unwrap().as_u64().unwrap(), 7);
+        assert!(
+            (parsed.get("shard_imbalance").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9
+        );
+        // sharded but idle: imbalance pegged at balanced
+        m.shards.iter_mut().for_each(|s| s.updates = 0);
+        assert_eq!(m.shard_imbalance(), 1.0);
     }
 
     #[test]

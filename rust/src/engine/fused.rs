@@ -19,6 +19,13 @@
 //! is also why this kernel deliberately shares no code with
 //! [`process_block`]: the reference must stay an independent
 //! implementation for the comparison to mean anything.
+//!
+//! On the parallel and sharded request paths this access pattern runs
+//! inside the *staged* block tasks of [`crate::scheduler::parallel`]
+//! (scatters leaving the block are buffered instead of applied), which
+//! is the same hook the sharded runtime ([`crate::shard`]) drains
+//! through its cross-shard exchange — `tests/shard_parity.rs` extends
+//! the parity contract across scheduler shards.
 
 use crate::algorithms::DeltaProgram;
 use super::exec::Probe;

@@ -10,4 +10,4 @@ pub mod partition;
 
 pub use builder::GraphBuilder;
 pub use csr::{Graph, VertexId};
-pub use partition::{Block, BlockPartition};
+pub use partition::{Block, BlockPartition, ShardRange};

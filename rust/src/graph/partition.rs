@@ -45,6 +45,43 @@ impl Block {
     }
 }
 
+/// Contiguous range of blocks owned by one shard of the sharded
+/// runtime ([`crate::shard`]): the destination partition of NXgraph
+/// (arXiv:1510.06916) lifted to block granularity. Shards are disjoint,
+/// ordered and jointly cover every block; a shard owns the vertices of
+/// its blocks, so updates landing inside the shard stay local and only
+/// cross-shard scatters travel through exchange buffers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardRange {
+    pub id: u32,
+    /// Owned blocks `[start, end)` — may be empty when there are more
+    /// shards than blocks.
+    pub blocks: std::ops::Range<u32>,
+    /// Owned vertices `[start, end)` (the union of the owned blocks'
+    /// vertex ranges; empty for an empty shard).
+    pub vertices: std::ops::Range<u32>,
+    /// Total structure bytes of the owned blocks (the balance metric).
+    pub bytes: u64,
+}
+
+impl ShardRange {
+    pub fn num_blocks(&self) -> usize {
+        (self.blocks.end - self.blocks.start) as usize
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        (self.vertices.end - self.vertices.start) as usize
+    }
+
+    pub fn contains_vertex(&self, v: VertexId) -> bool {
+        self.vertices.contains(&v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
 /// Partition of a graph into blocks.
 #[derive(Debug, Clone)]
 pub struct BlockPartition {
@@ -115,6 +152,111 @@ impl BlockPartition {
 
     pub fn block(&self, id: u32) -> &Block {
         &self.blocks[id as usize]
+    }
+
+    /// Split the partition into `shards` contiguous block ranges
+    /// balanced by per-block structure bytes (greedy prefix walk
+    /// against byte quantiles). Invariants, checked by
+    /// [`BlockPartition::validate_shards`]:
+    ///
+    /// * ranges are ordered, disjoint and jointly cover every block;
+    /// * every shard is non-empty whenever `blocks >= shards`
+    ///   (earlier shards always stop while at least one block per
+    ///   remaining shard is left);
+    /// * with more shards than blocks, trailing shards own empty
+    ///   ranges (the sharded runtime skips them);
+    /// * imbalance is bounded by one block: no shard exceeds its byte
+    ///   quantile by more than the largest single block.
+    pub fn shard_by_bytes(&self, shards: usize) -> Vec<ShardRange> {
+        assert!(shards >= 1, "shard count must be >= 1");
+        let n = self.blocks.len();
+        let total: u64 = self.blocks.iter().map(|b| b.structure_bytes()).sum();
+        let mut out = Vec::with_capacity(shards);
+        let mut next = 0usize;
+        let mut cum = 0u64;
+        let mut vend = 0u32;
+        for s in 0..shards {
+            let start = next;
+            let later = shards - s - 1;
+            if next < n {
+                // Take at least one block, then keep taking while below
+                // this shard's cumulative byte quantile — but always
+                // leave one block for each remaining shard.
+                let target = total.saturating_mul(s as u64 + 1) / shards as u64;
+                cum += self.blocks[next].structure_bytes();
+                next += 1;
+                while next < n && (n - next) > later && cum < target {
+                    cum += self.blocks[next].structure_bytes();
+                    next += 1;
+                }
+            }
+            let (vstart, bytes) = if start < next {
+                let vs = self.blocks[start].start;
+                vend = self.blocks[next - 1].end;
+                let bytes: u64 =
+                    self.blocks[start..next].iter().map(|b| b.structure_bytes()).sum();
+                (vs, bytes)
+            } else {
+                (vend, 0)
+            };
+            out.push(ShardRange {
+                id: s as u32,
+                blocks: start as u32..next as u32,
+                vertices: vstart..vend,
+                bytes,
+            });
+        }
+        out
+    }
+
+    /// Verify a shard split covers every block exactly once, in order,
+    /// with consistent vertex ranges and byte totals.
+    pub fn validate_shards(&self, shards: &[ShardRange]) -> Result<(), String> {
+        if shards.is_empty() {
+            return Err("no shards".into());
+        }
+        let mut prev_block = 0u32;
+        let mut prev_vertex = 0u32;
+        for (i, s) in shards.iter().enumerate() {
+            if s.id as usize != i {
+                return Err(format!("shard {i} has id {}", s.id));
+            }
+            if s.blocks.start != prev_block {
+                return Err(format!("gap/overlap before shard {i} blocks"));
+            }
+            if s.blocks.end < s.blocks.start {
+                return Err(format!("shard {i} inverted block range"));
+            }
+            prev_block = s.blocks.end;
+            if !s.is_empty() {
+                let first = &self.blocks[s.blocks.start as usize];
+                let last = &self.blocks[s.blocks.end as usize - 1];
+                if s.vertices.start != first.start || s.vertices.end != last.end {
+                    return Err(format!("shard {i} vertex range mismatch"));
+                }
+                if s.vertices.start != prev_vertex {
+                    return Err(format!("gap/overlap before shard {i} vertices"));
+                }
+                prev_vertex = s.vertices.end;
+                let bytes: u64 = self.blocks[s.blocks.start as usize..s.blocks.end as usize]
+                    .iter()
+                    .map(|b| b.structure_bytes())
+                    .sum();
+                if bytes != s.bytes {
+                    return Err(format!("shard {i} bytes {} != {}", s.bytes, bytes));
+                }
+            } else if s.bytes != 0 || !s.vertices.is_empty() {
+                return Err(format!("empty shard {i} with bytes/vertices"));
+            }
+        }
+        if prev_block as usize != self.blocks.len() {
+            return Err(format!(
+                "shards cover {} of {} blocks",
+                prev_block,
+                self.blocks.len()
+            ));
+        }
+        Ok(())
     }
 
     /// Verify the partition covers every vertex exactly once, in order.
@@ -201,6 +343,81 @@ mod tests {
         let p = BlockPartition::by_cache_budget(&g, 1 << 30, 1);
         assert_eq!(p.num_blocks(), 1);
         assert_eq!(p.blocks[0].num_vertices(), 100);
+    }
+
+    #[test]
+    fn shard_by_bytes_covers_and_balances() {
+        let g = generate::rmat(11, 8, 9);
+        let p = BlockPartition::by_vertex_count(&g, 64);
+        for shards in [1usize, 2, 3, 4, 7] {
+            let ranges = p.shard_by_bytes(shards);
+            assert_eq!(ranges.len(), shards);
+            p.validate_shards(&ranges).unwrap();
+            if p.num_blocks() >= shards {
+                assert!(ranges.iter().all(|r| !r.is_empty()), "{shards} shards");
+            }
+            let total: u64 = ranges.iter().map(|r| r.bytes).sum();
+            let block_total: u64 = p.blocks.iter().map(|b| b.structure_bytes()).sum();
+            assert_eq!(total, block_total);
+            // imbalance bounded by one block over the byte quantile
+            let max_block = p.blocks.iter().map(|b| b.structure_bytes()).max().unwrap();
+            for r in &ranges {
+                assert!(
+                    r.bytes <= block_total.div_ceil(shards as u64) + max_block,
+                    "shard {} holds {} bytes of {block_total} over {shards}",
+                    r.id,
+                    r.bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_single_is_whole_partition() {
+        let g = generate::erdos_renyi(300, 900, 11);
+        let p = BlockPartition::by_vertex_count(&g, 64);
+        let ranges = p.shard_by_bytes(1);
+        assert_eq!(ranges.len(), 1);
+        assert_eq!(ranges[0].blocks, 0..p.num_blocks() as u32);
+        assert_eq!(ranges[0].vertices, 0..300);
+        p.validate_shards(&ranges).unwrap();
+    }
+
+    #[test]
+    fn more_shards_than_blocks_leaves_trailing_empty() {
+        let g = generate::erdos_renyi(100, 300, 13);
+        let p = BlockPartition::by_vertex_count(&g, 64); // 2 blocks
+        let ranges = p.shard_by_bytes(5);
+        assert_eq!(ranges.len(), 5);
+        p.validate_shards(&ranges).unwrap();
+        let nonempty = ranges.iter().filter(|r| !r.is_empty()).count();
+        assert_eq!(nonempty, p.num_blocks());
+        assert!(ranges[..nonempty].iter().all(|r| r.num_blocks() == 1));
+        assert!(ranges[nonempty..].iter().all(|r| r.is_empty() && r.bytes == 0));
+    }
+
+    #[test]
+    fn empty_graph_shards() {
+        let g = generate::erdos_renyi(0, 0, 1);
+        let p = BlockPartition::by_vertex_count(&g, 16);
+        assert_eq!(p.num_blocks(), 1); // the sentinel empty block
+        for shards in [1usize, 3] {
+            let ranges = p.shard_by_bytes(shards);
+            p.validate_shards(&ranges).unwrap();
+            assert_eq!(ranges[0].blocks, 0..1);
+            assert_eq!(ranges[0].num_vertices(), 0);
+        }
+    }
+
+    #[test]
+    fn one_vertex_blocks_shard_cleanly() {
+        let g = generate::erdos_renyi(17, 60, 15);
+        let p = BlockPartition::by_vertex_count(&g, 1);
+        assert_eq!(p.num_blocks(), 17);
+        for shards in [1usize, 4, 17, 20] {
+            let ranges = p.shard_by_bytes(shards);
+            p.validate_shards(&ranges).unwrap();
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! ```text
 //! tlsched run --graph rmat --scale 12 --jobs 8 --scheduler twolevel
 //! tlsched replay --days 0.2 --time-scale 600 --report out.json
-//! tlsched serve --source live --minutes 2 --policy correlation
+//! tlsched serve --source live --minutes 2 --policy correlation --shards 4
 //! echo "pagerank 0" | tlsched serve --source stdin --time-scale 1
 //! tlsched gen --trace trace.jsonl --days 7
 //! tlsched xla --jobs 4
@@ -77,6 +77,7 @@ fn common_spec(bin: &'static str, about: &'static str) -> ArgSpec {
         .opt("incremental-summaries", "true", "maintain block summaries incrementally")
         .opt("fused", "true", "fuse all jobs into one structure walk per block")
         .opt("workers", "0", "round-execution workers (0 = all cores)")
+        .opt("shards", "1", "scheduler shards, byte-balanced block ranges (1 = unsharded)")
 }
 
 fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
@@ -154,6 +155,13 @@ fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
     if a.was_set("workers") {
         cfg.workers = a.usize("workers");
     }
+    if a.was_set("shards") {
+        cfg.shards = a.usize("shards");
+        if cfg.shards == 0 {
+            eprintln!("--shards must be >= 1");
+            std::process::exit(2);
+        }
+    }
     cfg
 }
 
@@ -191,8 +199,14 @@ fn cmd_run(argv: &[String]) -> i32 {
         .collect();
     let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
     ccfg.workers = cfg.workers;
+    ccfg.shards = cfg.shards;
     let mut coord = Coordinator::new(&g, &part, ccfg);
-    log::info!("round execution on {} worker(s), fused={}", coord.workers(), cfg.scheduler.fused);
+    log::info!(
+        "round execution on {} worker(s), {} shard(s), fused={}",
+        coord.workers(),
+        coord.shards(),
+        cfg.scheduler.fused
+    );
     let m = coord.run_batch(&specs);
     println!(
         "scheduler={} jobs={} rounds={} block_loads={} dispatches={} sharing={:.2} wall={:.2}s sched={:.3}s",
@@ -240,6 +254,7 @@ fn cmd_replay(argv: &[String]) -> i32 {
     let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
     ccfg.max_concurrent = a.usize("max-concurrent");
     ccfg.workers = cfg.workers;
+    ccfg.shards = cfg.shards;
     let mut coord = Coordinator::new(&g, &part, ccfg);
     let m = coord.run_trace(&jobs, a.f64("time-scale"));
     println!(
@@ -303,7 +318,10 @@ fn cmd_serve(argv: &[String]) -> i32 {
 
     // Producer thread: plays a generated arrival trace in wall time, or
     // reads job lines from stdin. Dropping the submitter at the end is
-    // the shutdown signal — serve drains and returns.
+    // the shutdown signal — serve drains and returns. Returns
+    // (delivered, skipped): lines rejected at parse time (bad kind or
+    // malformed source vertex) are reported on stderr, skipped and
+    // counted — never silently coerced.
     let nv = (g.num_vertices() as u32).max(1);
     let slo = cfg.serve.admission.slo_factor;
     let producer = if source == "live" {
@@ -320,7 +338,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
             a.f64("minutes")
         );
         std::thread::spawn(move || {
-            trace::play_live(&jobs, time_scale, |tj| {
+            let delivered = trace::play_live(&jobs, time_scale, |tj| {
                 let deadline = Some(submitter.now() + slo * tj.service_s);
                 match submitter.submit_with(tj.kind, tj.source % nv, deadline) {
                     Ok(()) => true,
@@ -328,13 +346,15 @@ fn cmd_serve(argv: &[String]) -> i32 {
                     Err(SubmitError::QueueFull) => true,
                     Err(SubmitError::Closed) => false,
                 }
-            })
+            });
+            (delivered, 0usize)
         })
     } else {
         std::thread::spawn(move || {
             use std::io::BufRead;
             let stdin = std::io::stdin();
             let mut delivered = 0usize;
+            let mut skipped = 0usize;
             for line in stdin.lock().lines() {
                 let Ok(line) = line else { break };
                 let t = line.trim();
@@ -347,27 +367,39 @@ fn cmd_serve(argv: &[String]) -> i32 {
                 let mut parts = t.split_whitespace();
                 let Some(kind) = parts.next().and_then(JobKind::from_name) else {
                     eprintln!("bad job line (want: <kind> <source> [deadline_s]): {t}");
+                    skipped += 1;
                     continue;
                 };
-                let source =
-                    parts.next().and_then(|s| s.parse::<u32>().ok()).unwrap_or(0) % nv;
+                let source = match parts.next() {
+                    None => 0,
+                    Some(tok) => match tok.parse::<u32>() {
+                        Ok(v) => v % nv,
+                        Err(_) => {
+                            eprintln!("bad source vertex (want u32): {t}");
+                            skipped += 1;
+                            continue;
+                        }
+                    },
+                };
                 let deadline = parts.next().and_then(|s| s.parse::<f64>().ok());
                 match submitter.submit_with(kind, source, deadline) {
                     Ok(()) => delivered += 1,
                     Err(e) => eprintln!("rejected: {e}"),
                 }
             }
-            delivered
+            (delivered, skipped)
         })
     };
 
     let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
     ccfg.max_concurrent = a.usize("max-concurrent");
     ccfg.workers = cfg.workers;
+    ccfg.shards = cfg.shards;
     let mut coord = Coordinator::new(&g, &part, ccfg);
     log::info!(
-        "serving on {} worker(s): policy={} queue_capacity={} time_scale={}",
+        "serving on {} worker(s), {} shard(s): policy={} queue_capacity={} time_scale={}",
         coord.workers(),
+        coord.shards(),
         cfg.serve.admission.policy.name(),
         cfg.serve.admission.queue_capacity,
         time_scale,
@@ -375,12 +407,14 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let m = coord.serve(&mut queue, cfg.serve.report_every_s, |snap| {
         println!("{}", snap.to_json());
     });
-    let _ = producer.join();
+    let (delivered, skipped) = producer.join().unwrap_or((0, 0));
     println!(
-        "serve done: completed={} rejected={} throughput={:.1} jobs/h \
-         mean_latency={:.1}s mean_queue_wait={:.2}s sharing={:.2}",
+        "serve done: completed={} rejected={} delivered={} skipped_lines={} \
+         throughput={:.1} jobs/h mean_latency={:.1}s mean_queue_wait={:.2}s sharing={:.2}",
         m.completed(),
         m.rejected,
+        delivered,
+        skipped,
         m.throughput_per_hour(),
         m.mean_latency_s(),
         m.mean_queue_wait_s(),
@@ -464,6 +498,15 @@ fn cmd_info(argv: &[String]) -> i32 {
     println!("blocks:          {}", part.num_blocks());
     println!("block vertices:  {}", part.target_vertices);
     println!("queue length q:  {q}  (Eq. 4, C={})", cfg.scheduler.c);
+    if cfg.shards > 1 {
+        println!("shards:          {} (balanced by structure bytes)", cfg.shards);
+        for r in part.shard_by_bytes(cfg.shards) {
+            println!(
+                "  shard {}: blocks {}..{} vertices {}..{} ({} bytes)",
+                r.id, r.blocks.start, r.blocks.end, r.vertices.start, r.vertices.end, r.bytes
+            );
+        }
+    }
     let max_deg =
         (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap_or(0);
     println!("max out-degree:  {max_deg}");

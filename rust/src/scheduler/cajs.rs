@@ -7,6 +7,13 @@
 //! block's structure data is hot in cache. One memory fetch of the
 //! block then serves N jobs instead of N fetches at N different times
 //! (the paper's Fig. 8 concurrent access model).
+//!
+//! Under the sharded runtime ([`crate::shard`]) this pairing is
+//! *shard-local*: each shard dispatches its own hot blocks to the jobs
+//! unconverged there (the `active` sets of its
+//! [`Scheduler::plan_specs_range`](crate::scheduler::Scheduler) plan),
+//! so the cache a block warms is the one next to the scheduler that
+//! chose it.
 
 use crate::engine::{process_block, process_block_fused_on, JobState, Probe};
 use crate::graph::{BlockPartition, Graph};

@@ -7,6 +7,11 @@
 //! remaining (1−α)·q slots are *reserved* for blocks that are the top
 //! priority of some individual job but did not make the cumulative
 //! cut — the paper's gain-vs-individual-cost trade-off.
+//!
+//! The merge is scale-free: the sharded runtime ([`crate::shard`])
+//! runs it once per shard over that shard's job queues (built from the
+//! shard's own block summaries), producing S independent global queues
+//! per round instead of one.
 
 use super::individual::JobQueue;
 use std::collections::HashMap;

@@ -43,9 +43,23 @@ pub fn build_ptable(job: &JobState, part: &BlockPartition) -> Vec<PriorityPair> 
 /// the scheduler's `RoundScratch` can reuse one B_N-sized table per
 /// live job across rounds instead of reallocating it every round.
 pub fn build_ptable_into(job: &JobState, part: &BlockPartition, out: &mut Vec<PriorityPair>) {
+    build_ptable_range_into(job, part, 0..part.num_blocks() as u32, out);
+}
+
+/// Ranged variant of [`build_ptable_into`] for the sharded runtime:
+/// fills `out` with the pairs of blocks `[range.start, range.end)`
+/// only. Pairs carry **absolute** block ids; the table is indexed by
+/// `block - range.start`. With the full range this is exactly
+/// [`build_ptable_into`].
+pub fn build_ptable_range_into(
+    job: &JobState,
+    part: &BlockPartition,
+    range: std::ops::Range<u32>,
+    out: &mut Vec<PriorityPair>,
+) {
     out.clear();
     out.extend(
-        part.blocks
+        part.blocks[range.start as usize..range.end as usize]
             .iter()
             .map(|b| PriorityPair::from_summary(b.id, &job.summary_of(b))),
     );
@@ -81,6 +95,20 @@ mod tests {
         for (i, p) in table.iter().enumerate() {
             assert_eq!(p.block, i as u32);
         }
+    }
+
+    #[test]
+    fn ranged_ptable_is_a_window_of_the_full_table() {
+        let g = generate::erdos_renyi(512, 2000, 7);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let job = JobState::new(0, JobSpec::new(JobKind::PageRank, 0), &g);
+        let full = build_ptable(&job, &part);
+        let mut window = Vec::new();
+        build_ptable_range_into(&job, &part, 2..5, &mut window);
+        assert_eq!(window.len(), 3);
+        assert_eq!(window.as_slice(), &full[2..5]);
+        // absolute block ids survive the windowing
+        assert_eq!(window[0].block, 2);
     }
 
     #[test]

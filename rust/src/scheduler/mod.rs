@@ -9,7 +9,9 @@
 //!   through the fused multi-job kernel).
 //! * `policies` wires both levels into a `Scheduler` with the paper's
 //!   policy plus the three baselines; `parallel` is the deterministic
-//!   staged engine behind `Scheduler::round_parallel`.
+//!   staged engine behind `Scheduler::round_parallel`. The sharded
+//!   runtime ([`crate::shard`]) instantiates one `Scheduler` per
+//!   disjoint block range and reuses the same staged primitives.
 
 pub mod cajs;
 pub mod do_select;
@@ -22,7 +24,9 @@ pub mod policies;
 pub use cajs::{dispatch_block, dispatch_block_on, DispatchStats};
 pub use do_select::{optimal_queue_length, DoSelector, DEFAULT_C, DEFAULT_SAMPLES};
 pub use global::{de_gl_priority, GlobalEntry, DEFAULT_ALPHA};
-pub use individual::{build_ptable, build_ptable_into, de_in_priority, JobQueue};
+pub use individual::{
+    build_ptable, build_ptable_into, build_ptable_range_into, de_in_priority, JobQueue,
+};
 pub use pair::{Cbp, PriorityPair, DEFAULT_EPSILON_FRAC};
 pub use policies::{
     run_to_convergence, run_to_convergence_parallel, RoundStats, Scheduler,

@@ -43,6 +43,13 @@
 //! transitions, accumulated in task order), and the merge applies
 //! staged-contribution transitions one by one, mirroring the
 //! sequential executor.
+//!
+//! The sharded runtime ([`crate::shard`]) reuses these primitives
+//! (`run_block_task`, `copy_back_block`, `fold_contribution`) with the
+//! stage boundary widened from worker tasks to scheduler shards:
+//! contributions that leave the producing *shard* drain through
+//! per-shard-pair exchange buffers instead of the single in-order fold
+//! below.
 
 use crate::algorithms::DeltaProgram;
 use super::policies::RoundStats;
@@ -60,9 +67,9 @@ pub(crate) struct BlockTaskSpec {
 }
 
 /// Phase-1 output for one (block, job) pair.
-struct JobBlockOut {
+pub(crate) struct JobBlockOut {
     /// Index into the round's job slice.
-    ji: usize,
+    pub(crate) ji: usize,
     /// The block's value lane after local processing.
     values: Vec<f32>,
     /// The block's delta lane after local processing.
@@ -73,8 +80,8 @@ struct JobBlockOut {
     /// task order, so the merge result is deterministic).
     p_sum_delta: f64,
     /// Cross-block scatter contributions in (vertex, edge) order.
-    staged: Vec<(u32, f32)>,
-    updates: u64,
+    pub(crate) staged: Vec<(u32, f32)>,
+    pub(crate) updates: u64,
     edges: u64,
 }
 
@@ -85,7 +92,7 @@ struct JobBlockOut {
 /// per job — the per-job reference access pattern for A/B runs. Per
 /// job the (vertex, edge) operation sequence is identical either way,
 /// so the flag changes memory behavior only, never numerics.
-fn run_block_task(
+pub(crate) fn run_block_task(
     g: &Graph,
     part: &BlockPartition,
     jobs: &[JobState],
@@ -234,27 +241,7 @@ pub(crate) fn execute_blocks_staged(
     // Phase 2a: copy block-local lanes back (disjoint vertex ranges)
     // and apply each block's net summary change.
     for (spec, outs) in specs.iter().zip(&results) {
-        let b = part.block(spec.block);
-        let start = b.start as usize;
-        for out in outs {
-            let job = &mut jobs[out.ji];
-            let n = out.values.len();
-            job.values[start..start + n].copy_from_slice(&out.values);
-            job.deltas[start..start + n].copy_from_slice(&out.deltas);
-            if let Some(tr) = &mut job.tracking {
-                let bi = b.id as usize;
-                tr.node_un[bi] = (tr.node_un[bi] as i64 + out.node_un_delta) as u32;
-                tr.p_sum[bi] += out.p_sum_delta;
-            }
-            job.updates += out.updates;
-            job.edges += out.edges;
-            stats.updates += out.updates;
-            stats.edges += out.edges;
-        }
-        if !outs.is_empty() {
-            stats.block_loads += 1;
-            stats.dispatches += outs.len() as u64;
-        }
+        copy_back_block(part, spec.block, outs, jobs, &mut stats);
     }
     // Phase 2b: fold staged cross-block contributions, blocks in queue
     // order, contributions in (vertex, edge) order — the canonical
@@ -263,31 +250,73 @@ pub(crate) fn execute_blocks_staged(
         for out in outs {
             let job = &mut jobs[out.ji];
             for &(t, p) in &out.staged {
-                let ti = t as usize;
-                let old = job.deltas[ti];
-                let new = job.program.combine(old, p);
-                job.deltas[ti] = new;
-                if new != old {
-                    if let Some(tr) = &mut job.tracking {
-                        let tv = job.values[ti];
-                        let bi = tr.block_of[ti] as usize;
-                        let was = job.program.is_active(tv, old);
-                        let is = job.program.is_active(tv, new);
-                        if was {
-                            tr.p_sum[bi] -= job.program.priority(tv, old) as f64;
-                        }
-                        if is {
-                            tr.p_sum[bi] += job.program.priority(tv, new) as f64;
-                        }
-                        match (was, is) {
-                            (false, true) => tr.node_un[bi] += 1,
-                            (true, false) => tr.node_un[bi] -= 1,
-                            _ => {}
-                        }
-                    }
-                }
+                fold_contribution(job, t, p);
             }
         }
     }
     stats
+}
+
+/// Phase 2a for one block: copy the task-local lanes back into the
+/// job's full lanes (disjoint vertex ranges across blocks), apply the
+/// block's net summary change and accumulate the round counters.
+pub(crate) fn copy_back_block(
+    part: &BlockPartition,
+    block: u32,
+    outs: &[JobBlockOut],
+    jobs: &mut [JobState],
+    stats: &mut RoundStats,
+) {
+    let b = part.block(block);
+    let start = b.start as usize;
+    for out in outs {
+        let job = &mut jobs[out.ji];
+        let n = out.values.len();
+        job.values[start..start + n].copy_from_slice(&out.values);
+        job.deltas[start..start + n].copy_from_slice(&out.deltas);
+        if let Some(tr) = &mut job.tracking {
+            let bi = b.id as usize;
+            tr.node_un[bi] = (tr.node_un[bi] as i64 + out.node_un_delta) as u32;
+            tr.p_sum[bi] += out.p_sum_delta;
+        }
+        job.updates += out.updates;
+        job.edges += out.edges;
+        stats.updates += out.updates;
+        stats.edges += out.edges;
+    }
+    if !outs.is_empty() {
+        stats.block_loads += 1;
+        stats.dispatches += outs.len() as u64;
+    }
+}
+
+/// Fold one staged cross-block contribution into a job's delta lane
+/// with the job's `combine`, maintaining the incremental ⟨Node_un, ΣP⟩
+/// summaries exactly as the sequential executor would. Shared by the
+/// staged round merge (phase 2b) and the sharded runtime's cross-shard
+/// exchange drain.
+pub(crate) fn fold_contribution(job: &mut JobState, t: u32, p: f32) {
+    let ti = t as usize;
+    let old = job.deltas[ti];
+    let new = job.program.combine(old, p);
+    job.deltas[ti] = new;
+    if new != old {
+        if let Some(tr) = &mut job.tracking {
+            let tv = job.values[ti];
+            let bi = tr.block_of[ti] as usize;
+            let was = job.program.is_active(tv, old);
+            let is = job.program.is_active(tv, new);
+            if was {
+                tr.p_sum[bi] -= job.program.priority(tv, old) as f64;
+            }
+            if is {
+                tr.p_sum[bi] += job.program.priority(tv, new) as f64;
+            }
+            match (was, is) {
+                (false, true) => tr.node_un[bi] += 1,
+                (true, false) => tr.node_un[bi] -= 1,
+                _ => {}
+            }
+        }
+    }
 }

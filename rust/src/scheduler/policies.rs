@@ -24,7 +24,9 @@
 use super::cajs::{dispatch_block_on, DispatchStats};
 use super::do_select::{optimal_queue_length, DoSelector, DEFAULT_C};
 use super::global::{de_gl_priority, GlobalEntry, DEFAULT_ALPHA};
-use super::individual::{build_ptable_into, de_in_priority, JobQueue};
+use super::individual::{
+    build_ptable_into, build_ptable_range_into, de_in_priority, JobQueue,
+};
 use super::pair::{Cbp, PriorityPair};
 use super::parallel::{execute_blocks_staged, BlockTaskSpec};
 use crate::engine::{process_block, BlockRunStats, JobState, NoProbe, Probe};
@@ -496,6 +498,23 @@ impl Scheduler {
         jobs: &[JobState],
         q: usize,
     ) -> Vec<GlobalEntry> {
+        self.plan_twolevel_range(part, jobs, 0..part.num_blocks() as u32, q)
+    }
+
+    /// Ranged generalization of [`Scheduler::plan_twolevel`] for the
+    /// sharded runtime: pair tables, DO queues and the merged global
+    /// queue are computed over the blocks in `blocks` only (the MPDS
+    /// priorities of one shard, from that shard's block summaries).
+    /// Tables are indexed by `block - blocks.start`; entries carry
+    /// absolute block ids. With the full range this is exactly the
+    /// unsharded plan.
+    fn plan_twolevel_range(
+        &mut self,
+        part: &BlockPartition,
+        jobs: &[JobState],
+        blocks: std::ops::Range<u32>,
+        q: usize,
+    ) -> Vec<GlobalEntry> {
         self.scratch.live.clear();
         self.scratch.queues.clear();
         let mut k = 0usize;
@@ -506,7 +525,7 @@ impl Scheduler {
             if self.scratch.ptables.len() == k {
                 self.scratch.ptables.push(Vec::new());
             }
-            build_ptable_into(j, part, &mut self.scratch.ptables[k]);
+            build_ptable_range_into(j, part, blocks.clone(), &mut self.scratch.ptables[k]);
             let queue =
                 self.selector
                     .select_top_q(&self.scratch.ptables[k], q, &mut self.rng);
@@ -515,6 +534,78 @@ impl Scheduler {
             k += 1;
         }
         de_gl_priority(&self.scratch.queues, q, self.cfg.alpha)
+    }
+
+    /// Plan one round's block task specs for a block-major policy
+    /// (RoundRobinBlocks or TwoLevel), restricted to the blocks in
+    /// `blocks`. This is the planning half of a parallel round shared
+    /// by [`Scheduler::round_parallel`] (full range) and the sharded
+    /// runtime ([`crate::shard`], one call per shard against its owned
+    /// range): MPDS priorities come from the range's block summaries
+    /// only, and CAJS pairing is the per-spec `active` set. Job-major
+    /// policies never call this.
+    pub(crate) fn plan_specs_range(
+        &mut self,
+        part: &BlockPartition,
+        jobs: &[JobState],
+        blocks: std::ops::Range<u32>,
+    ) -> Vec<BlockTaskSpec> {
+        match self.cfg.kind {
+            SchedulerKind::RoundRobinBlocks => {
+                let mut specs = Vec::with_capacity(blocks.len());
+                for id in blocks {
+                    let b = part.block(id);
+                    let active: Vec<usize> = jobs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, j)| !j.converged && j.summary_of(b).node_un > 0)
+                        .map(|(ji, _)| ji)
+                        .collect();
+                    if !active.is_empty() {
+                        specs.push(BlockTaskSpec { block: id, active });
+                    }
+                }
+                specs
+            }
+            SchedulerKind::TwoLevel => {
+                let lo = blocks.start;
+                let num = blocks.len();
+                // Vertex count of the range (blocks are contiguous);
+                // the full range reproduces `queue_length` exactly.
+                let verts = if num == 0 {
+                    0
+                } else {
+                    (part.block(blocks.end - 1).end - part.block(lo).start) as usize
+                };
+                let q = self
+                    .cfg
+                    .q_override
+                    .unwrap_or_else(|| optimal_queue_length(self.cfg.c, num, verts));
+                let t0 = Instant::now();
+                let global = self.plan_twolevel_range(part, jobs, blocks, q);
+                self.plan_seconds += t0.elapsed().as_secs_f64();
+                let mut specs = Vec::with_capacity(global.len());
+                for entry in &global {
+                    let active: Vec<usize> = self
+                        .scratch
+                        .live
+                        .iter()
+                        .enumerate()
+                        .filter(|(k, _)| {
+                            self.scratch.ptables[*k][(entry.block - lo) as usize].node_un > 0
+                        })
+                        .map(|(_, &ji)| ji)
+                        .collect();
+                    if !active.is_empty() {
+                        specs.push(BlockTaskSpec { block: entry.block, active });
+                    }
+                }
+                specs
+            }
+            SchedulerKind::Independent | SchedulerKind::PrIterPerJob => {
+                unreachable!("plan_specs_range is block-major only")
+            }
+        }
     }
 
     // ---- parallel round variants --------------------------------------
@@ -611,19 +702,7 @@ impl Scheduler {
         jobs: &mut [JobState],
         pool: &ThreadPool,
     ) -> RoundStats {
-        let mut specs: Vec<BlockTaskSpec> = Vec::with_capacity(part.num_blocks());
-        for id in 0..part.num_blocks() as u32 {
-            let b = part.block(id);
-            let active: Vec<usize> = jobs
-                .iter()
-                .enumerate()
-                .filter(|(_, j)| !j.converged && j.summary_of(b).node_un > 0)
-                .map(|(ji, _)| ji)
-                .collect();
-            if !active.is_empty() {
-                specs.push(BlockTaskSpec { block: id, active });
-            }
-        }
+        let specs = self.plan_specs_range(part, jobs, 0..part.num_blocks() as u32);
         execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool)
     }
 
@@ -637,26 +716,7 @@ impl Scheduler {
         jobs: &mut [JobState],
         pool: &ThreadPool,
     ) -> RoundStats {
-        let q = self.queue_length(part, g.num_vertices());
-        let t0 = Instant::now();
-        let global = self.plan_twolevel(part, jobs, q);
-        self.plan_seconds += t0.elapsed().as_secs_f64();
-        let mut specs: Vec<BlockTaskSpec> = Vec::with_capacity(global.len());
-        for entry in &global {
-            let active: Vec<usize> = self
-                .scratch
-                .live
-                .iter()
-                .enumerate()
-                .filter(|(k, _)| {
-                    self.scratch.ptables[*k][entry.block as usize].node_un > 0
-                })
-                .map(|(_, &ji)| ji)
-                .collect();
-            if !active.is_empty() {
-                specs.push(BlockTaskSpec { block: entry.block, active });
-            }
-        }
+        let specs = self.plan_specs_range(part, jobs, 0..part.num_blocks() as u32);
         execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool)
     }
 
@@ -727,7 +787,7 @@ pub fn run_to_convergence_parallel(
 /// vertices this round is almost always still live — skip its O(n)
 /// scan and re-check next round once it goes quiet. A globally
 /// zero-update round is definitive.
-fn converged_after_round(
+pub(crate) fn converged_after_round(
     jobs: &mut [JobState],
     updates_before: &mut [u64],
     round_updates: u64,

@@ -1,0 +1,114 @@
+//! Per-shard-pair exchange buffers for cross-shard delta traffic.
+//!
+//! Phase 1 of a sharded round stages every scatter whose target vertex
+//! lies outside the producing shard (see [`super::runtime`]). Those
+//! contributions are routed here, into one reusable buffer per ordered
+//! (source, destination) shard pair, and drained in canonical
+//! (source shard, destination shard) order — within a pair the push
+//! order is preserved, which is the producing shard's (block queue
+//! position, vertex, edge) order. The drain order is therefore a pure
+//! function of the round's plan, never of thread timing: the exchange
+//! is the shard-level analogue of the staged merge in
+//! [`crate::scheduler::parallel`].
+//!
+//! Buffers keep their capacity across rounds (steady-state rounds
+//! allocate nothing here), and per-pair counters feed the coordinator's
+//! shard metrics.
+
+/// One cross-shard delta contribution: job `ji` (index into the
+/// round's job slice) scatters `value` onto vertex `target`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct Contribution {
+    pub ji: u32,
+    pub target: u32,
+    pub value: f32,
+}
+
+/// S×S exchange buffers, indexed `src * shards + dst`.
+pub struct ShardExchange {
+    shards: usize,
+    bufs: Vec<Vec<Contribution>>,
+    /// Lifetime-cumulative contributions routed per pair (same
+    /// indexing); the runtime folds these into per-shard metrics.
+    sent: Vec<u64>,
+}
+
+impl ShardExchange {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1);
+        ShardExchange {
+            shards,
+            bufs: (0..shards * shards).map(|_| Vec::new()).collect(),
+            sent: vec![0; shards * shards],
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Route one contribution from shard `src` to shard `dst`.
+    pub(crate) fn push(&mut self, src: u32, dst: u32, c: Contribution) {
+        debug_assert_ne!(src, dst, "intra-shard scatters fold locally");
+        let idx = src as usize * self.shards + dst as usize;
+        self.bufs[idx].push(c);
+        self.sent[idx] += 1;
+    }
+
+    /// Contributions currently buffered (all pairs).
+    pub fn buffered(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Lifetime contributions sent from `src` to `dst`.
+    pub fn sent(&self, src: u32, dst: u32) -> u64 {
+        self.sent[src as usize * self.shards + dst as usize]
+    }
+
+    /// Drain every pair in (src, dst) order, handing each non-empty
+    /// buffer to `sink` and clearing it (capacity retained). Within a
+    /// buffer, contributions come back in push order.
+    pub(crate) fn drain(&mut self, mut sink: impl FnMut(u32, u32, &[Contribution])) {
+        for src in 0..self.shards {
+            for dst in 0..self.shards {
+                let buf = &mut self.bufs[src * self.shards + dst];
+                if !buf.is_empty() {
+                    sink(src as u32, dst as u32, buf.as_slice());
+                    buf.clear();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_and_drains_in_pair_order() {
+        let mut ex = ShardExchange::new(3);
+        ex.push(2, 0, Contribution { ji: 0, target: 1, value: 1.0 });
+        ex.push(0, 1, Contribution { ji: 0, target: 9, value: 2.0 });
+        ex.push(0, 1, Contribution { ji: 1, target: 9, value: 3.0 });
+        assert_eq!(ex.buffered(), 3);
+        let mut seen: Vec<(u32, u32, usize)> = Vec::new();
+        ex.drain(|s, d, c| seen.push((s, d, c.len())));
+        // (src, dst) order: (0,1) before (2,0); push order within a pair
+        assert_eq!(seen, vec![(0, 1, 2), (2, 0, 1)]);
+        assert_eq!(ex.buffered(), 0);
+        assert_eq!(ex.sent(0, 1), 2);
+        assert_eq!(ex.sent(2, 0), 1);
+        // counters are cumulative across drains
+        ex.push(0, 1, Contribution { ji: 2, target: 4, value: 0.5 });
+        assert_eq!(ex.sent(0, 1), 3);
+    }
+
+    #[test]
+    fn empty_drain_is_noop() {
+        let mut ex = ShardExchange::new(2);
+        let mut calls = 0;
+        ex.drain(|_, _, _| calls += 1);
+        assert_eq!(calls, 0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Sharded execution runtime: scale-out of the two-level scheduler
+//! across S scheduler instances that each own a disjoint, contiguous,
+//! structure-byte-balanced range of blocks.
+//!
+//! Blocks are the unit of data scheduling (paper §3), and the staged
+//! parallel engine already separates "process a block against
+//! pre-round lanes" from "merge the staged scatters deterministically"
+//! — sharding generalizes that stage boundary from *worker tasks
+//! inside one scheduler* to *scheduler instances owning disjoint block
+//! ranges*. Inter- vs intra-query parallelism is controlled at exactly
+//! this granularity (Hauck et al., arXiv:2110.10797), and
+//! destination-partitioned ownership keeps updates local and merges
+//! cheap (NXgraph, arXiv:1510.06916).
+//!
+//! * [`runtime`] — [`ShardedRuntime`]: per-shard MPDS/CAJS planning,
+//!   the two-phase round, per-shard metrics.
+//! * [`exchange`] — per-shard-pair buffers draining cross-shard delta
+//!   contributions in canonical order.
+//!
+//! See DESIGN.md §7 for ownership, the exchange protocol and the
+//! determinism table.
+
+pub mod exchange;
+pub mod runtime;
+
+pub use exchange::ShardExchange;
+pub use runtime::{run_to_convergence_sharded, ShardMetrics, ShardedRuntime};

@@ -1,0 +1,480 @@
+//! The sharded execution runtime: S schedulers over S disjoint block
+//! ranges, one deterministic round at a time.
+//!
+//! [`ShardedRuntime`] partitions the [`BlockPartition`] into `S`
+//! contiguous, structure-byte-balanced shards
+//! ([`BlockPartition::shard_by_bytes`]) and instantiates one
+//! [`Scheduler`] per shard. A round has two phases:
+//!
+//! * **Phase 1 (parallel):** every shard plans its own hot blocks —
+//!   MPDS priorities from *that shard's* block summaries, DO queues
+//!   merged per shard, CAJS pairing shard-local — and the planned
+//!   block tasks of all shards run across the pool's persistent
+//!   workers. Each shard's tasks form a contiguous run of the flat
+//!   task list, so the pool's chunked dispatch hands workers
+//!   contiguous per-shard slices. Block tasks are the same pure
+//!   functions the staged engine uses ([`crate::scheduler::parallel`]):
+//!   they read the pre-round lanes only and stage every scatter.
+//! * **Phase 2 (sequential merge):** block-local lanes copy back
+//!   (disjoint ranges), each shard folds its *intra-shard* staged
+//!   contributions in its own queue order, and *cross-shard*
+//!   contributions drain through the per-shard-pair
+//!   [`ShardExchange`](super::exchange::ShardExchange) buffers in
+//!   (source shard, destination shard, block queue position, vertex,
+//!   edge) order, folded with each job's `combine`.
+//!
+//! Determinism contract, extending `tests/fused_parity.rs` (asserted
+//! by `tests/shard_parity.rs`): for a fixed shard count every round is
+//! bit-identical for any worker count; at `S = 1` rounds are
+//! bit-identical to [`Scheduler::round_parallel`]; across shard counts
+//! rounds are bit-identical for the traversal programs (min-combine is
+//! exactly order-insensitive and the dispatched (block, job) set is a
+//! pure function of the summaries) and fixpoint-equivalent within
+//! program tolerance for the PageRank family (f32 accumulation order
+//! differs across fold orders; the delta-accumulative model loses no
+//! contribution).
+//!
+//! Only the block-major policies shard (`RoundRobinBlocks`,
+//! `TwoLevel`); job-major baselines have no block ownership to split
+//! and fall back to the unsharded engine at the coordinator.
+
+use super::exchange::{Contribution, ShardExchange};
+use crate::engine::JobState;
+use crate::graph::{BlockPartition, Graph, ShardRange};
+use crate::scheduler::parallel::{
+    copy_back_block, fold_contribution, run_block_task, BlockTaskSpec,
+};
+use crate::scheduler::policies::converged_after_round;
+use crate::scheduler::{RoundStats, Scheduler, SchedulerConfig, SchedulerKind};
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Per-shard counters surfaced through `RunMetrics::shards` and the
+/// serve JSON snapshots. Counter fields are lifetime-cumulative on the
+/// runtime; the coordinator reports per-run deltas via
+/// [`ShardMetrics::delta_since`]. `resident_*` are gauges.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardMetrics {
+    pub id: u32,
+    /// Owned blocks (static for the runtime's lifetime).
+    pub blocks: u64,
+    /// Owned structure bytes (static; the balance metric).
+    pub bytes: u64,
+    /// Rounds in which this shard dispatched at least one block.
+    pub rounds: u64,
+    pub block_loads: u64,
+    pub dispatches: u64,
+    pub updates: u64,
+    /// Cross-shard contributions this shard produced.
+    pub exchanged_out: u64,
+    /// Cross-shard contributions folded into this shard's vertices.
+    pub exchanged_in: u64,
+    /// Jobs this shard dispatched in its most recent active round.
+    pub resident_jobs: u64,
+    /// Peak of `resident_jobs` over the runtime's lifetime.
+    pub resident_peak: u64,
+}
+
+impl ShardMetrics {
+    /// Per-run view: counters since `earlier`, gauges as-is.
+    pub fn delta_since(&self, earlier: &ShardMetrics) -> ShardMetrics {
+        ShardMetrics {
+            id: self.id,
+            blocks: self.blocks,
+            bytes: self.bytes,
+            rounds: self.rounds - earlier.rounds,
+            block_loads: self.block_loads - earlier.block_loads,
+            dispatches: self.dispatches - earlier.dispatches,
+            updates: self.updates - earlier.updates,
+            exchanged_out: self.exchanged_out - earlier.exchanged_out,
+            exchanged_in: self.exchanged_in - earlier.exchanged_in,
+            resident_jobs: self.resident_jobs,
+            resident_peak: self.resident_peak,
+        }
+    }
+}
+
+/// S schedulers over S disjoint block ranges; see the module docs.
+pub struct ShardedRuntime {
+    cfg: SchedulerConfig,
+    ranges: Vec<ShardRange>,
+    /// One scheduler per shard; shard `i` runs with `seed + i` so DO
+    /// sampling streams are independent (shard 0 keeps the unsharded
+    /// stream, which is what makes `S = 1` bit-identical to the plain
+    /// engine).
+    scheds: Vec<Scheduler>,
+    /// vertex → owning shard (dense; routes cross-shard scatters).
+    vertex_shard: Vec<u32>,
+    /// block → owning shard, shared with admission for shard-affine
+    /// correlation scoring.
+    block_shard: Arc<[u32]>,
+    exchange: ShardExchange,
+    metrics: Vec<ShardMetrics>,
+    /// Cached vertex→block map for the tracking safety net.
+    block_map: Option<Arc<[u32]>>,
+    /// Reused per-round buffers.
+    flat: Vec<(u32, BlockTaskSpec)>,
+    resident_seen: Vec<bool>,
+}
+
+impl ShardedRuntime {
+    /// Whether `kind` can shard (block-major policies only).
+    pub fn supports(kind: SchedulerKind) -> bool {
+        matches!(kind, SchedulerKind::RoundRobinBlocks | SchedulerKind::TwoLevel)
+    }
+
+    /// Build a runtime over `part` with `shards` shards. Panics on
+    /// unsupported policy kinds (callers gate on
+    /// [`ShardedRuntime::supports`]).
+    pub fn new(part: &BlockPartition, cfg: SchedulerConfig, shards: usize) -> Self {
+        assert!(
+            Self::supports(cfg.kind),
+            "sharded runtime requires a block-major policy, got {}",
+            cfg.kind.name()
+        );
+        let ranges = part.shard_by_bytes(shards);
+        let mut vertex_shard = vec![0u32; part.vertex_block.len()];
+        let mut block_shard = vec![0u32; part.num_blocks()];
+        let mut scheds = Vec::with_capacity(shards);
+        let mut metrics = Vec::with_capacity(shards);
+        for r in &ranges {
+            for v in r.vertices.clone() {
+                vertex_shard[v as usize] = r.id;
+            }
+            for b in r.blocks.clone() {
+                block_shard[b as usize] = r.id;
+            }
+            let mut scfg = cfg.clone();
+            scfg.seed = cfg.seed.wrapping_add(r.id as u64);
+            scheds.push(Scheduler::new(scfg));
+            metrics.push(ShardMetrics {
+                id: r.id,
+                blocks: r.num_blocks() as u64,
+                bytes: r.bytes,
+                ..ShardMetrics::default()
+            });
+        }
+        ShardedRuntime {
+            cfg,
+            scheds,
+            vertex_shard,
+            block_shard: Arc::from(block_shard),
+            exchange: ShardExchange::new(shards),
+            metrics,
+            block_map: None,
+            flat: Vec::new(),
+            resident_seen: Vec::new(),
+            ranges,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn ranges(&self) -> &[ShardRange] {
+        &self.ranges
+    }
+
+    /// Lifetime-cumulative per-shard counters.
+    pub fn metrics(&self) -> &[ShardMetrics] {
+        &self.metrics
+    }
+
+    /// block → owning shard, for shard-affine admission.
+    pub fn block_shard_map(&self) -> Arc<[u32]> {
+        Arc::clone(&self.block_shard)
+    }
+
+    /// Shrink per-shard scheduler scratch after retirements (the
+    /// sharded counterpart of [`Scheduler::detach_jobs`]).
+    pub fn detach_jobs(&mut self, resident: usize) {
+        for s in &mut self.scheds {
+            s.detach_jobs(resident);
+        }
+    }
+
+    /// Tracking safety net: admission normally enables summaries via
+    /// the coordinator's scheduler; any job that still lacks a map of
+    /// the right length gets one here. Content equality is what
+    /// matters (maps of one partition are identical), so an Arc from a
+    /// different owner is accepted as-is.
+    fn ensure_tracking(&mut self, part: &BlockPartition, jobs: &mut [JobState]) {
+        let n = part.vertex_block.len();
+        let stale = match &self.block_map {
+            Some(m) => m.len() != n,
+            None => true,
+        };
+        if stale {
+            self.block_map = Some(Arc::from(part.vertex_block.as_slice()));
+        }
+        let map = self.block_map.as_ref().unwrap();
+        for j in jobs.iter_mut() {
+            let ok = j.tracking.as_ref().is_some_and(|t| t.block_of.len() == n);
+            if !ok {
+                j.enable_tracking(map.clone(), part.num_blocks());
+            }
+        }
+    }
+
+    /// Execute one sharded scheduling round. Deterministic for any
+    /// worker count at a fixed shard count (see module docs).
+    pub fn round(
+        &mut self,
+        g: &Graph,
+        part: &BlockPartition,
+        jobs: &mut [JobState],
+        pool: &ThreadPool,
+    ) -> RoundStats {
+        debug_assert_eq!(self.vertex_shard.len(), g.num_vertices(), "partition changed");
+        if self.cfg.incremental_summaries {
+            self.ensure_tracking(part, jobs);
+        }
+        // -- phase 1a: shard-local MPDS planning (sequential; cheap and
+        // per-shard-RNG-ordered). Each shard's specs are contiguous in
+        // the flat task list.
+        self.flat.clear();
+        let mut bounds = Vec::with_capacity(self.ranges.len());
+        for (s, r) in self.ranges.iter().enumerate() {
+            let start = self.flat.len();
+            if !r.is_empty() {
+                let specs = self.scheds[s].plan_specs_range(part, jobs, r.blocks.clone());
+                self.flat.extend(specs.into_iter().map(|spec| (s as u32, spec)));
+            }
+            bounds.push(start..self.flat.len());
+        }
+        // -- phase 1b: all shards' block tasks across the pool.
+        let jobs_ro: &[JobState] = jobs;
+        let fused = self.cfg.fused;
+        let flat = &self.flat;
+        let results =
+            pool.scope_map(flat, |_, (_, spec)| run_block_task(g, part, jobs_ro, spec, fused));
+        // -- phase 2a: copy-backs + per-shard accounting.
+        let mut stats = RoundStats::default();
+        self.resident_seen.clear();
+        self.resident_seen.resize(jobs.len(), false);
+        for (s, specs) in bounds.iter().enumerate() {
+            let before = stats;
+            self.resident_seen.iter_mut().for_each(|b| *b = false);
+            for i in specs.clone() {
+                let outs = &results[i];
+                copy_back_block(part, self.flat[i].1.block, outs, jobs, &mut stats);
+                for out in outs {
+                    self.resident_seen[out.ji] = true;
+                }
+            }
+            let m = &mut self.metrics[s];
+            m.block_loads += stats.block_loads - before.block_loads;
+            m.dispatches += stats.dispatches - before.dispatches;
+            m.updates += stats.updates - before.updates;
+            if stats.dispatches > before.dispatches {
+                m.rounds += 1;
+                m.resident_jobs = self.resident_seen.iter().filter(|&&b| b).count() as u64;
+                m.resident_peak = m.resident_peak.max(m.resident_jobs);
+            }
+        }
+        // -- phase 2b: fold intra-shard staged contributions in each
+        // shard's queue order; route cross-shard ones to the exchange.
+        for (s, specs) in bounds.iter().enumerate() {
+            let vr = self.ranges[s].vertices.clone();
+            for i in specs.clone() {
+                for out in &results[i] {
+                    let mut sent = 0u64;
+                    for &(t, p) in &out.staged {
+                        if vr.contains(&t) {
+                            fold_contribution(&mut jobs[out.ji], t, p);
+                        } else {
+                            let dst = self.vertex_shard[t as usize];
+                            self.exchange.push(
+                                s as u32,
+                                dst,
+                                Contribution { ji: out.ji as u32, target: t, value: p },
+                            );
+                            sent += 1;
+                        }
+                    }
+                    self.metrics[s].exchanged_out += sent;
+                }
+            }
+        }
+        // -- phase 2c: drain the exchange in (src, dst) order.
+        let metrics = &mut self.metrics;
+        self.exchange.drain(|_src, dst, contribs| {
+            for c in contribs {
+                fold_contribution(&mut jobs[c.ji as usize], c.target, c.value);
+            }
+            metrics[dst as usize].exchanged_in += contribs.len() as u64;
+        });
+        for j in jobs.iter_mut() {
+            if !j.converged {
+                j.rounds += 1;
+            }
+        }
+        stats
+    }
+
+    /// Drain the accumulated per-shard MPDS planning time.
+    pub fn take_plan_seconds(&mut self) -> f64 {
+        self.scheds.iter_mut().map(|s| s.take_plan_seconds()).sum()
+    }
+}
+
+/// Sharded counterpart of
+/// [`run_to_convergence_parallel`](crate::scheduler::run_to_convergence_parallel):
+/// drive [`ShardedRuntime::round`] until every job converges.
+pub fn run_to_convergence_sharded(
+    rt: &mut ShardedRuntime,
+    g: &Graph,
+    part: &BlockPartition,
+    jobs: &mut [JobState],
+    pool: &ThreadPool,
+    max_rounds: usize,
+) -> (usize, RoundStats) {
+    let mut total = RoundStats::default();
+    let mut updates_before: Vec<u64> = jobs.iter().map(|j| j.updates).collect();
+    for round in 0..max_rounds {
+        let s = rt.round(g, part, jobs, pool);
+        total.merge(s);
+        if converged_after_round(jobs, &mut updates_before, s.updates) {
+            return (round + 1, total);
+        }
+    }
+    (max_rounds, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{JobSpec, JobState};
+    use crate::graph::generate;
+    use crate::trace::JobKind;
+
+    fn mixed_jobs(g: &Graph, n: usize) -> Vec<JobState> {
+        (0..n)
+            .map(|i| {
+                JobState::new(
+                    i as u32,
+                    JobSpec::new(
+                        JobKind::ALL[i % 5],
+                        (i as u32 * 131) % g.num_vertices() as u32,
+                    ),
+                    g,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_runs_converge_for_supported_kinds() {
+        let g = generate::rmat(9, 8, 19);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let pool = ThreadPool::new(2);
+        for kind in [SchedulerKind::RoundRobinBlocks, SchedulerKind::TwoLevel] {
+            for shards in [1usize, 2, 4] {
+                let mut jobs = mixed_jobs(&g, 4);
+                let mut rt =
+                    ShardedRuntime::new(&part, SchedulerConfig::new(kind), shards);
+                let (rounds, stats) = run_to_convergence_sharded(
+                    &mut rt, &g, &part, &mut jobs, &pool, 1_000_000,
+                );
+                assert!(rounds > 0);
+                assert!(stats.updates > 0, "{} S={shards}", kind.name());
+                assert!(
+                    jobs.iter().all(|j| j.converged),
+                    "{} S={shards} did not converge",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_metrics_partition_the_round_counters() {
+        let g = generate::rmat(10, 8, 23);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let pool = ThreadPool::new(2);
+        let mut jobs = mixed_jobs(&g, 4);
+        let mut rt =
+            ShardedRuntime::new(&part, SchedulerConfig::new(SchedulerKind::TwoLevel), 2);
+        let (_, stats) =
+            run_to_convergence_sharded(&mut rt, &g, &part, &mut jobs, &pool, 1_000_000);
+        let m = rt.metrics();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.iter().map(|s| s.updates).sum::<u64>(), stats.updates);
+        assert_eq!(m.iter().map(|s| s.block_loads).sum::<u64>(), stats.block_loads);
+        assert_eq!(m.iter().map(|s| s.dispatches).sum::<u64>(), stats.dispatches);
+        // an rmat graph always scatters across the shard boundary
+        assert!(m.iter().any(|s| s.exchanged_out > 0), "no cross-shard traffic");
+        let out: u64 = m.iter().map(|s| s.exchanged_out).sum();
+        let inn: u64 = m.iter().map(|s| s.exchanged_in).sum();
+        assert_eq!(out, inn, "every exchanged contribution folds somewhere");
+        for s in m {
+            assert!(s.resident_peak >= s.resident_jobs);
+            assert!(s.rounds > 0, "shard {} never dispatched", s.id);
+        }
+    }
+
+    #[test]
+    fn empty_shards_are_skipped() {
+        // 2 blocks, 4 shards: shards 2 and 3 own nothing and must not
+        // disturb the round.
+        let g = generate::erdos_renyi(100, 400, 31);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        assert_eq!(part.num_blocks(), 2);
+        let pool = ThreadPool::new(2);
+        let mut jobs = mixed_jobs(&g, 3);
+        let mut rt =
+            ShardedRuntime::new(&part, SchedulerConfig::new(SchedulerKind::TwoLevel), 4);
+        let (_, stats) =
+            run_to_convergence_sharded(&mut rt, &g, &part, &mut jobs, &pool, 1_000_000);
+        assert!(stats.updates > 0);
+        assert!(jobs.iter().all(|j| j.converged));
+        assert_eq!(rt.metrics()[2].dispatches, 0);
+        assert_eq!(rt.metrics()[3].dispatches, 0);
+    }
+
+    #[test]
+    fn delta_since_subtracts_counters_keeps_gauges() {
+        let a = ShardMetrics {
+            id: 1,
+            blocks: 4,
+            bytes: 1000,
+            rounds: 10,
+            block_loads: 40,
+            dispatches: 80,
+            updates: 500,
+            exchanged_out: 30,
+            exchanged_in: 20,
+            resident_jobs: 3,
+            resident_peak: 5,
+        };
+        let earlier = ShardMetrics {
+            rounds: 4,
+            block_loads: 10,
+            dispatches: 20,
+            updates: 100,
+            exchanged_out: 10,
+            exchanged_in: 5,
+            ..ShardMetrics::default()
+        };
+        let d = a.delta_since(&earlier);
+        assert_eq!(d.rounds, 6);
+        assert_eq!(d.updates, 400);
+        assert_eq!(d.exchanged_out, 20);
+        assert_eq!(d.resident_jobs, 3);
+        assert_eq!(d.resident_peak, 5);
+        assert_eq!(d.blocks, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "block-major")]
+    fn job_major_kinds_rejected() {
+        let g = generate::erdos_renyi(64, 200, 37);
+        let part = BlockPartition::by_vertex_count(&g, 32);
+        let _ = ShardedRuntime::new(
+            &part,
+            SchedulerConfig::new(SchedulerKind::Independent),
+            2,
+        );
+    }
+}

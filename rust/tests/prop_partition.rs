@@ -1,0 +1,123 @@
+//! Property tests for the block partitioner and the shard splitter —
+//! the edge cases that feed `BlockPartition::shard_by_bytes` (empty
+//! graphs, one-vertex blocks, more shards than blocks) and the
+//! `validate()` round-trips of both layers.
+
+mod common;
+
+use tlsched::graph::{generate, BlockPartition};
+
+#[test]
+fn prop_by_vertex_count_validates_on_random_graphs() {
+    common::prop_check("by_vertex_count validates", 48, |rng| {
+        let g = common::random_graph(rng);
+        let part = common::random_partition(&g, rng);
+        part.validate(&g).map_err(|e| format!("validate: {e}"))?;
+        let in_sum: u64 = part.blocks.iter().map(|b| b.in_edges).sum();
+        if in_sum != g.num_edges() as u64 {
+            return Err(format!("in-edge sum {in_sum} != m {}", g.num_edges()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_by_cache_budget_validates_across_budgets_and_jobs() {
+    common::prop_check("by_cache_budget validates", 48, |rng| {
+        let g = common::random_graph(rng);
+        // budgets from absurdly small (clamps to the floor block size)
+        // to huge (single block); job counts shrink blocks
+        let budget = 1usize << (6 + rng.gen_index(26));
+        let jobs = 1 + rng.gen_index(32);
+        let part = BlockPartition::by_cache_budget(&g, budget, jobs);
+        part.validate(&g).map_err(|e| format!("validate: {e}"))?;
+        if part.num_blocks() == 0 {
+            return Err("no blocks".into());
+        }
+        // a larger budget at the same job count never shrinks blocks
+        let bigger = BlockPartition::by_cache_budget(&g, budget.saturating_mul(4), jobs);
+        if bigger.target_vertices < part.target_vertices {
+            return Err(format!(
+                "budget x4 shrank blocks: {} -> {}",
+                part.target_vertices, bigger.target_vertices
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_by_bytes_round_trips_on_random_partitions() {
+    common::prop_check("shard_by_bytes validates", 48, |rng| {
+        let g = common::random_graph(rng);
+        let part = common::random_partition(&g, rng);
+        // shard counts crossing the block count in both directions
+        let shards = 1 + rng.gen_index(2 * part.num_blocks() + 2);
+        let ranges = part.shard_by_bytes(shards);
+        if ranges.len() != shards {
+            return Err(format!("{} ranges for {shards} shards", ranges.len()));
+        }
+        part.validate_shards(&ranges).map_err(|e| format!("validate_shards: {e}"))?;
+        if part.num_blocks() >= shards && ranges.iter().any(|r| r.is_empty()) {
+            return Err(format!(
+                "empty shard with {} blocks over {shards} shards",
+                part.num_blocks()
+            ));
+        }
+        let covered: usize = ranges.iter().map(|r| r.num_vertices()).sum();
+        if covered != g.num_vertices() {
+            return Err(format!("shards cover {covered} of {} vertices", g.num_vertices()));
+        }
+        // balance: no shard exceeds its byte quantile by more than the
+        // largest single block
+        let total: u64 = ranges.iter().map(|r| r.bytes).sum();
+        let max_block =
+            part.blocks.iter().map(|b| b.structure_bytes()).max().unwrap_or(0);
+        for r in &ranges {
+            if r.bytes > total.div_ceil(shards as u64) + max_block {
+                return Err(format!(
+                    "shard {} holds {} of {total} bytes over {shards} shards",
+                    r.id, r.bytes
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_one_vertex_blocks_shard_cleanly() {
+    common::prop_check("one-vertex blocks", 24, |rng| {
+        let g = common::random_graph(rng);
+        if g.num_vertices() == 0 {
+            return Ok(());
+        }
+        let part = BlockPartition::by_vertex_count(&g, 1);
+        if part.num_blocks() != g.num_vertices() {
+            return Err("one block per vertex expected".into());
+        }
+        part.validate(&g).map_err(|e| format!("validate: {e}"))?;
+        for shards in [1usize, 2, part.num_blocks(), part.num_blocks() + 3] {
+            let ranges = part.shard_by_bytes(shards);
+            part.validate_shards(&ranges)
+                .map_err(|e| format!("{shards} shards: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_graph_partitions_and_shards() {
+    let g = generate::erdos_renyi(0, 0, 7);
+    assert_eq!(g.num_vertices(), 0);
+    let part = BlockPartition::by_vertex_count(&g, 8);
+    part.validate(&g).unwrap();
+    assert_eq!(part.num_blocks(), 1, "sentinel empty block");
+    let budgeted = BlockPartition::by_cache_budget(&g, 1 << 16, 4);
+    budgeted.validate(&g).unwrap();
+    for shards in [1usize, 2, 5] {
+        let ranges = part.shard_by_bytes(shards);
+        part.validate_shards(&ranges).unwrap();
+        assert_eq!(ranges.iter().map(|r| r.num_vertices()).sum::<usize>(), 0);
+    }
+}

@@ -1,0 +1,337 @@
+//! Parity suite for the sharded execution runtime, extending the
+//! determinism contract of `tests/fused_parity.rs` across scheduler
+//! shards:
+//!
+//! 1. **S = 1 anchor** — a 1-shard round is bit-identical to the
+//!    unsharded staged engine (`Scheduler::round_parallel`) for both
+//!    block-major policies.
+//! 2. **Traversal bit-parity across shard counts** — for min-combine
+//!    programs (SSSP/BFS/WCC) every round's lanes and counters are
+//!    bit-identical at S ∈ {1, 2, 4} × workers ∈ {1, 4}: the
+//!    dispatched (block, job) set is a pure function of the exact
+//!    integer summaries, and min-folds are order-insensitive bit for
+//!    bit.
+//! 3. **Fixpoint equivalence for the PageRank family** — f32
+//!    accumulation order differs across shard counts, so runs to
+//!    convergence agree within program tolerance (exactly for
+//!    traversals).
+//! 4. **Worker independence** — at a fixed shard count, rounds are
+//!    bit-identical for any worker count.
+//! 5. **Serving** — a sharded coordinator admitting jobs mid-flight
+//!    converges to the sharded batch fixpoints.
+//!
+//! The CI shard-parity leg runs this suite at `SHARDS={1,2,4}`; set
+//! the `SHARDS` env var to pin the non-reference shard count (the
+//! S = 1 reference always runs).
+
+use tlsched::algorithms::DeltaProgram;
+use tlsched::coordinator::{
+    AdmissionConfig, AdmissionQueue, Coordinator, CoordinatorConfig,
+};
+use tlsched::engine::{JobSpec, JobState};
+use tlsched::graph::{generate, BlockPartition, Graph};
+use tlsched::scheduler::{RoundStats, Scheduler, SchedulerConfig, SchedulerKind};
+use tlsched::shard::{run_to_convergence_sharded, ShardedRuntime};
+use tlsched::trace::JobKind;
+use tlsched::util::threadpool::ThreadPool;
+
+/// Shard counts under test: with `SHARDS` set (the CI matrix), `[1]`
+/// for the cheap S = 1 anchor leg or `[1, $SHARDS]` for a sharded
+/// leg; `[1, 2, 4]` when unset (local `cargo test`).
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("SHARDS").ok().and_then(|s| s.parse::<usize>().ok()) {
+        Some(s) if s > 1 => vec![1, s],
+        Some(_) => vec![1],
+        None => vec![1, 2, 4],
+    }
+}
+
+const BLOCK_MAJOR: [SchedulerKind; 2] =
+    [SchedulerKind::RoundRobinBlocks, SchedulerKind::TwoLevel];
+
+fn mixed_jobs(g: &Graph, n: usize) -> Vec<JobState> {
+    (0..n)
+        .map(|i| {
+            JobState::new(
+                i as u32,
+                JobSpec::new(
+                    JobKind::ALL[i % 5],
+                    (i as u32 * 131) % g.num_vertices() as u32,
+                ),
+                g,
+            )
+        })
+        .collect()
+}
+
+/// Traversal-only mix: min-combine programs with exact,
+/// schedule-independent f32 fixpoints.
+fn traversal_jobs(g: &Graph, n: usize) -> Vec<JobState> {
+    let kinds = [JobKind::Sssp, JobKind::Bfs, JobKind::Wcc];
+    (0..n)
+        .map(|i| {
+            JobState::new(
+                i as u32,
+                JobSpec::new(
+                    kinds[i % 3],
+                    (i as u32 * 97) % g.num_vertices() as u32,
+                ),
+                g,
+            )
+        })
+        .collect()
+}
+
+fn assert_lanes_eq(a: &[JobState], b: &[JobState], ctx: &str) {
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.values, y.values, "values diverge: {ctx} (job {})", x.id);
+        assert_eq!(x.deltas, y.deltas, "deltas diverge: {ctx} (job {})", x.id);
+        assert_eq!(x.updates, y.updates, "updates diverge: {ctx} (job {})", x.id);
+        assert_eq!(x.edges, y.edges, "edges diverge: {ctx} (job {})", x.id);
+    }
+}
+
+fn assert_values_close(a: &[JobState], b: &[JobState], tol_mult: f32, ctx: &str) {
+    for (x, y) in a.iter().zip(b) {
+        let exact = matches!(x.spec.kind, JobKind::Sssp | JobKind::Bfs | JobKind::Wcc);
+        if exact {
+            assert_eq!(x.values, y.values, "{ctx}: job {} exact fixpoint", x.id);
+            continue;
+        }
+        let tol = x.program.value_tolerance() * tol_mult;
+        for (vi, (p, q)) in x.values.iter().zip(&y.values).enumerate() {
+            assert_eq!(p.is_finite(), q.is_finite(), "{ctx}: job {} v{vi}", x.id);
+            if p.is_finite() {
+                assert!((p - q).abs() < tol, "{ctx}: job {} v{vi}: {p} vs {q}", x.id);
+            }
+        }
+    }
+}
+
+// ---- 1. S = 1 anchors the unsharded engine ----------------------------
+
+#[test]
+fn single_shard_rounds_match_unsharded_engine_bitwise() {
+    let g = generate::rmat(10, 8, 83);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    for kind in BLOCK_MAJOR {
+        for workers in [1usize, 4] {
+            let pool = ThreadPool::new(workers);
+            let mut jobs_ref = mixed_jobs(&g, 6);
+            let mut jobs_sh = mixed_jobs(&g, 6);
+            let mut sched = Scheduler::new(SchedulerConfig::new(kind));
+            let mut rt = ShardedRuntime::new(&part, SchedulerConfig::new(kind), 1);
+            for round in 0..5 {
+                let a = sched.round_parallel(&g, &part, &mut jobs_ref, &pool);
+                let b = rt.round(&g, &part, &mut jobs_sh, &pool);
+                assert_eq!(a, b, "{} w={workers} round {round} stats", kind.name());
+                assert_lanes_eq(
+                    &jobs_ref,
+                    &jobs_sh,
+                    &format!("{} w={workers} round {round}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+// ---- 2. traversal rounds bit-identical across shard counts ------------
+
+#[test]
+fn traversal_rounds_bit_identical_across_shard_counts() {
+    let g = generate::rmat(10, 8, 89);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    for kind in BLOCK_MAJOR {
+        let mut reference: Option<(Vec<JobState>, Vec<RoundStats>)> = None;
+        for shards in shard_counts() {
+            for workers in [1usize, 4] {
+                let pool = ThreadPool::new(workers);
+                let mut jobs = traversal_jobs(&g, 6);
+                let mut rt =
+                    ShardedRuntime::new(&part, SchedulerConfig::new(kind), shards);
+                let stats: Vec<RoundStats> =
+                    (0..6).map(|_| rt.round(&g, &part, &mut jobs, &pool)).collect();
+                match &reference {
+                    None => reference = Some((jobs, stats)),
+                    Some((rj, rs)) => {
+                        assert_eq!(
+                            rs,
+                            &stats,
+                            "{} S={shards} w={workers} stats",
+                            kind.name()
+                        );
+                        assert_lanes_eq(
+                            rj,
+                            &jobs,
+                            &format!("{} S={shards} w={workers}", kind.name()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn traversal_convergence_bit_identical_across_shard_counts() {
+    let g = generate::rmat(10, 8, 97);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let pool = ThreadPool::new(4);
+    for kind in BLOCK_MAJOR {
+        let mut reference: Option<(Vec<JobState>, usize)> = None;
+        for shards in shard_counts() {
+            let mut jobs = traversal_jobs(&g, 6);
+            let mut rt = ShardedRuntime::new(&part, SchedulerConfig::new(kind), shards);
+            let (rounds, stats) =
+                run_to_convergence_sharded(&mut rt, &g, &part, &mut jobs, &pool, 1_000_000);
+            assert!(stats.updates > 0, "{} S={shards}", kind.name());
+            assert!(jobs.iter().all(|j| j.converged), "{} S={shards}", kind.name());
+            match &reference {
+                None => reference = Some((jobs, rounds)),
+                Some((rj, rr)) => {
+                    assert_eq!(*rr, rounds, "{} S={shards} rounds", kind.name());
+                    assert_lanes_eq(rj, &jobs, &format!("{} S={shards}", kind.name()));
+                }
+            }
+        }
+    }
+}
+
+// ---- 3. PageRank family: fixpoint equivalence -------------------------
+
+#[test]
+fn mixed_fixpoints_equivalent_across_shard_counts() {
+    let g = generate::rmat(10, 8, 101);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    for kind in BLOCK_MAJOR {
+        let mut reference: Option<Vec<JobState>> = None;
+        for shards in shard_counts() {
+            for workers in [1usize, 4] {
+                let pool = ThreadPool::new(workers);
+                let mut jobs = mixed_jobs(&g, 5);
+                let mut rt =
+                    ShardedRuntime::new(&part, SchedulerConfig::new(kind), shards);
+                run_to_convergence_sharded(&mut rt, &g, &part, &mut jobs, &pool, 1_000_000);
+                assert!(
+                    jobs.iter().all(|j| j.converged),
+                    "{} S={shards} w={workers}",
+                    kind.name()
+                );
+                match &reference {
+                    None => reference = Some(jobs),
+                    Some(r) => assert_values_close(
+                        r,
+                        &jobs,
+                        4.0,
+                        &format!("{} S={shards} w={workers}", kind.name()),
+                    ),
+                }
+            }
+        }
+    }
+}
+
+// ---- 4. fixed shard count, any worker count ---------------------------
+
+#[test]
+fn sharded_rounds_bit_identical_across_worker_counts() {
+    let g = generate::rmat(10, 8, 103);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    for shards in shard_counts() {
+        let mut reference: Option<Vec<JobState>> = None;
+        for workers in [1usize, 2, 4] {
+            let pool = ThreadPool::new(workers);
+            let mut jobs = mixed_jobs(&g, 6);
+            let mut rt = ShardedRuntime::new(
+                &part,
+                SchedulerConfig::new(SchedulerKind::TwoLevel),
+                shards,
+            );
+            for _ in 0..6 {
+                rt.round(&g, &part, &mut jobs, &pool);
+            }
+            match &reference {
+                None => reference = Some(jobs),
+                Some(r) => {
+                    assert_lanes_eq(r, &jobs, &format!("S={shards} w={workers}"))
+                }
+            }
+        }
+    }
+}
+
+// ---- 5. serving: mid-flight admission on the sharded coordinator ------
+
+fn sharded_coord<'g>(
+    g: &'g Graph,
+    part: &'g BlockPartition,
+    shards: usize,
+) -> Coordinator<'g> {
+    let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    cfg.workers = 2;
+    cfg.shards = shards;
+    Coordinator::new(g, part, cfg)
+}
+
+#[test]
+fn serve_sharded_mid_flight_converges_to_batch_fixpoints() {
+    let g = generate::rmat(10, 8, 107);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let specs = vec![
+        JobSpec::new(JobKind::PageRank, 0),
+        JobSpec::new(JobKind::Sssp, 10),
+        JobSpec::new(JobKind::Bfs, 3),
+        JobSpec::new(JobKind::Wcc, 0),
+    ];
+    for shards in shard_counts() {
+        let (bm, batch_jobs) = sharded_coord(&g, &part, shards).run_batch_collect(&specs);
+        assert_eq!(bm.completed(), 4);
+
+        let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+        let feeder_specs = specs.clone();
+        let feeder = std::thread::spawn(move || {
+            submitter.submit(feeder_specs[0].kind, feeder_specs[0].source).unwrap();
+            for s in &feeder_specs[1..] {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                submitter.submit(s.kind, s.source).unwrap();
+            }
+        });
+        let mut server = sharded_coord(&g, &part, shards);
+        let (sm, serve_jobs) = server.serve_collect(&mut queue, 0.0, |_| {});
+        feeder.join().unwrap();
+        assert_eq!(sm.completed(), 4, "S={shards}");
+        if shards > 1 {
+            assert_eq!(sm.shards.len(), shards, "serve metrics carry shard counters");
+            assert_eq!(
+                sm.shards.iter().map(|s| s.updates).sum::<u64>(),
+                sm.totals.updates,
+                "S={shards}"
+            );
+        }
+        assert_eq!(batch_jobs.len(), serve_jobs.len());
+        for (b, s) in batch_jobs.iter().zip(&serve_jobs) {
+            assert_eq!(b.spec.kind, s.spec.kind, "S={shards}: admission order");
+            assert!(s.converged);
+        }
+        assert_values_close(&batch_jobs, &serve_jobs, 1.0, &format!("serve S={shards}"));
+    }
+}
+
+#[test]
+fn sharded_batch_matches_unsharded_fixpoints_via_coordinator() {
+    let g = generate::rmat(10, 8, 109);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    let specs = vec![
+        JobSpec::new(JobKind::PageRank, 0),
+        JobSpec::new(JobKind::Sssp, 10),
+        JobSpec::new(JobKind::Ppr, 17),
+        JobSpec::new(JobKind::Wcc, 0),
+    ];
+    let (_, unsharded) = sharded_coord(&g, &part, 1).run_batch_collect(&specs);
+    for shards in shard_counts().into_iter().filter(|&s| s > 1) {
+        let (m, sharded) = sharded_coord(&g, &part, shards).run_batch_collect(&specs);
+        assert_eq!(m.completed(), specs.len());
+        assert_eq!(m.shards.len(), shards);
+        assert_values_close(&unsharded, &sharded, 4.0, &format!("batch S={shards}"));
+    }
+}
