@@ -52,11 +52,23 @@ pub struct ServeSettings {
     pub admission: AdmissionConfig,
     /// Periodic metrics-report cadence in run-clock seconds (0 = off).
     pub report_every_s: f64,
+    /// TCP bind address of `--source tcp` (`serve.listen`; port 0 =
+    /// ephemeral).
+    pub listen: String,
+    /// Concurrent-connection cap of the TCP front-end
+    /// (`serve.max_connections`); excess connections get
+    /// `REJECT busy`.
+    pub max_connections: usize,
 }
 
 impl Default for ServeSettings {
     fn default() -> Self {
-        ServeSettings { admission: AdmissionConfig::default(), report_every_s: 0.0 }
+        ServeSettings {
+            admission: AdmissionConfig::default(),
+            report_every_s: 0.0,
+            listen: "127.0.0.1:7171".to_string(),
+            max_connections: 64,
+        }
     }
 }
 
@@ -239,6 +251,17 @@ impl RunConfig {
             get_parse(&raw, "serve.slo_factor", cfg.serve.admission.slo_factor)?;
         cfg.serve.report_every_s =
             get_parse(&raw, "serve.report_every_s", cfg.serve.report_every_s)?;
+        if let Some(l) = raw.get("serve.listen") {
+            if l.is_empty() {
+                return Err(ConfigError::Invalid("serve.listen", "empty address".into()));
+            }
+            cfg.serve.listen = l.clone();
+        }
+        cfg.serve.max_connections =
+            get_parse(&raw, "serve.max_connections", cfg.serve.max_connections)?;
+        if cfg.serve.max_connections == 0 {
+            return Err(ConfigError::Invalid("serve.max_connections", "must be > 0".into()));
+        }
         Ok(cfg)
     }
 
@@ -369,21 +392,29 @@ max_concurrent = 4
     fn serve_section_parses() {
         let cfg = RunConfig::from_str(
             "[serve]\npolicy = \"correlation\"\nqueue_capacity = 8\n\
-             slo_factor = 2.5\nreport_every_s = 30\n",
+             slo_factor = 2.5\nreport_every_s = 30\n\
+             listen = \"0.0.0.0:9000\"\nmax_connections = 12\n",
         )
         .unwrap();
         assert_eq!(cfg.serve.admission.policy, AdmissionPolicy::Correlation);
         assert_eq!(cfg.serve.admission.queue_capacity, 8);
         assert_eq!(cfg.serve.admission.slo_factor, 2.5);
         assert_eq!(cfg.serve.report_every_s, 30.0);
+        assert_eq!(cfg.serve.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.serve.max_connections, 12);
         // defaults
         let d = RunConfig::from_str("").unwrap();
         assert_eq!(d.serve.admission.policy, AdmissionPolicy::Fifo);
         assert!(d.serve.admission.queue_capacity > 0);
         assert_eq!(d.serve.report_every_s, 0.0);
-        // bad policy and zero capacity error instead of panicking later
+        assert_eq!(d.serve.listen, "127.0.0.1:7171");
+        assert!(d.serve.max_connections > 0);
+        // bad policy and zero capacity/connections/address error
+        // instead of panicking later
         assert!(RunConfig::from_str("[serve]\npolicy = \"bogus\"\n").is_err());
         assert!(RunConfig::from_str("[serve]\nqueue_capacity = 0\n").is_err());
+        assert!(RunConfig::from_str("[serve]\nmax_connections = 0\n").is_err());
+        assert!(RunConfig::from_str("[serve]\nlisten = \"\"\n").is_err());
     }
 
     #[test]

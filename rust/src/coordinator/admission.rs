@@ -102,6 +102,11 @@ pub struct Submission {
     pub submitted_s: f64,
     /// Optional completion deadline on the run clock (`Slo` policy).
     pub deadline_s: Option<f64>,
+    /// Caller-chosen correlation id, echoed in the job's
+    /// [`JobRecord`](super::metrics::JobRecord) at retirement. The
+    /// network front-end routes `DONE` notifications back to the
+    /// submitting connection by this tag; non-net sources leave it 0.
+    pub tag: u64,
 }
 
 /// Rejection reasons surfaced to producers.
@@ -146,7 +151,20 @@ impl JobSubmitter {
         source: u32,
         deadline_s: Option<f64>,
     ) -> Result<(), SubmitError> {
-        let sub = Submission { kind, source, submitted_s: self.now(), deadline_s };
+        self.submit_tagged(kind, source, deadline_s, 0)
+    }
+
+    /// Submit a job carrying a caller-chosen correlation `tag`, echoed
+    /// in the retirement [`JobRecord`](super::metrics::JobRecord) — how
+    /// the network front-end matches completions to connections.
+    pub fn submit_tagged(
+        &self,
+        kind: JobKind,
+        source: u32,
+        deadline_s: Option<f64>,
+        tag: u64,
+    ) -> Result<(), SubmitError> {
+        let sub = Submission { kind, source, submitted_s: self.now(), deadline_s, tag };
         self.tx.try_send(sub).map_err(|e| match e {
             TrySendError::Full(_) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
@@ -235,7 +253,13 @@ impl AdmissionQueue {
             let seq = q.next_seq;
             q.next_seq += 1;
             q.pending.push(Pending::new(
-                Submission { kind: s.kind, source: s.source, submitted_s: 0.0, deadline_s: None },
+                Submission {
+                    kind: s.kind,
+                    source: s.source,
+                    submitted_s: 0.0,
+                    deadline_s: None,
+                    tag: 0,
+                },
                 seq,
             ));
         }
@@ -261,6 +285,7 @@ impl AdmissionQueue {
                     source: tj.source,
                     submitted_s: tj.arrival_s,
                     deadline_s: Some(tj.arrival_s + slo_factor * tj.service_s),
+                    tag: 0,
                 },
                 seq,
             ));
@@ -658,6 +683,17 @@ mod tests {
         assert_eq!(q.rejected(), 1);
         // capacity freed: accepted again
         assert!(sub.submit(JobKind::Bfs, 3).is_ok());
+    }
+
+    #[test]
+    fn tagged_submissions_carry_their_tag() {
+        let (sub, mut q) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        sub.submit_tagged(JobKind::Bfs, 0, None, 77).unwrap();
+        sub.submit(JobKind::Wcc, 1).unwrap();
+        q.poll(q.now());
+        let (_g, part) = dummy_part();
+        assert_eq!(q.pop(&[], &part).unwrap().tag, 77);
+        assert_eq!(q.pop(&[], &part).unwrap().tag, 0, "untagged submissions default to 0");
     }
 
     #[test]

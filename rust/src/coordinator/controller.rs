@@ -79,6 +79,8 @@ impl CoordinatorConfig {
 /// Per-resident-job bookkeeping, parallel to `RunState::active` and
 /// retired with it (slots are reclaimed, never leaked).
 struct JobMeta {
+    /// Submitter correlation tag, echoed in the retirement record.
+    tag: u64,
     submitted_s: f64,
     started_s: f64,
     updates_before: u64,
@@ -214,7 +216,9 @@ impl<'g> Coordinator<'g> {
     /// `now` stamps admissions; `retire_now` stamps completions (both
     /// on the caller's run clock). `parallel` selects the worker-pool
     /// round engine; probed (cache-simulated) runs pass `false` and a
-    /// real probe.
+    /// real probe. `on_complete` fires once per retired job, with its
+    /// record, before the record lands in the metrics — the hook the
+    /// network front-end streams `DONE` notifications from.
     fn step<P: Probe>(
         &mut self,
         q: &mut AdmissionQueue,
@@ -224,6 +228,7 @@ impl<'g> Coordinator<'g> {
         parallel: bool,
         probe: &mut P,
         retire_now: &dyn Fn() -> f64,
+        on_complete: &mut dyn FnMut(&JobRecord),
     ) -> StepOutcome {
         // -- admit ----------------------------------------------------
         q.poll(now);
@@ -233,6 +238,7 @@ impl<'g> Coordinator<'g> {
                     let mut job = self.new_job(JobSpec::new(sub.kind, sub.source));
                     self.sched.attach_job(self.part, &mut job);
                     st.meta.push(JobMeta {
+                        tag: sub.tag,
                         submitted_s: sub.submitted_s,
                         // `poll` can drain live submissions stamped after
                         // `now` was read; clamp so queue wait never goes
@@ -280,8 +286,9 @@ impl<'g> Coordinator<'g> {
                 if done {
                     j.converged = true;
                 }
-                st.metrics.jobs.push(JobRecord {
+                let rec = JobRecord {
                     id: j.id as u64,
+                    tag: m.tag,
                     kind: j.program.name(),
                     submitted_s: m.submitted_s,
                     started_s: m.started_s,
@@ -289,7 +296,9 @@ impl<'g> Coordinator<'g> {
                     rounds: j.rounds,
                     updates: j.updates,
                     edges: j.edges,
-                });
+                };
+                on_complete(&rec);
+                st.metrics.jobs.push(rec);
                 if st.collect {
                     st.retired.push(j);
                 }
@@ -372,7 +381,9 @@ impl<'g> Coordinator<'g> {
         let mut st = RunState::new(collect);
         let clock = move || t0.elapsed().as_secs_f64();
         loop {
-            match self.step(&mut q, &mut st, usize::MAX, 0.0, parallel, probe, &clock) {
+            let out =
+                self.step(&mut q, &mut st, usize::MAX, 0.0, parallel, probe, &clock, &mut |_| {});
+            match out {
                 StepOutcome::Worked => {}
                 StepOutcome::Idle | StepOutcome::Drained => break,
             }
@@ -423,7 +434,7 @@ impl<'g> Coordinator<'g> {
         loop {
             let now = vnow();
             let cap = self.cfg.max_concurrent;
-            match self.step(&mut q, &mut st, cap, now, true, &mut NoProbe, &vnow) {
+            match self.step(&mut q, &mut st, cap, now, true, &mut NoProbe, &vnow, &mut |_| {}) {
                 StepOutcome::Worked => {}
                 StepOutcome::Idle => {
                     // idle: nothing active, next arrival in the future —
@@ -464,7 +475,7 @@ impl<'g> Coordinator<'g> {
         report_every_s: f64,
         on_report: F,
     ) -> RunMetrics {
-        self.serve_inner(q, report_every_s, on_report, false).0
+        self.serve_inner(q, report_every_s, on_report, &mut |_| {}, false).0
     }
 
     /// Test/debug variant of [`Coordinator::serve`] that also returns
@@ -476,7 +487,41 @@ impl<'g> Coordinator<'g> {
         report_every_s: f64,
         on_report: F,
     ) -> (RunMetrics, Vec<JobState>) {
-        self.serve_inner(q, report_every_s, on_report, true)
+        self.serve_inner(q, report_every_s, on_report, &mut |_| {}, true)
+    }
+
+    /// [`Coordinator::serve`] with a per-job completion hook:
+    /// `on_complete` fires once per retired job, at the round boundary
+    /// it retires on, with its full [`JobRecord`] (tag included). The
+    /// network front-end streams `DONE` notifications from it.
+    pub fn serve_notify<F, G>(
+        &mut self,
+        q: &mut AdmissionQueue,
+        report_every_s: f64,
+        on_report: F,
+        mut on_complete: G,
+    ) -> RunMetrics
+    where
+        F: FnMut(&RunMetrics),
+        G: FnMut(&JobRecord),
+    {
+        self.serve_inner(q, report_every_s, on_report, &mut on_complete, false).0
+    }
+
+    /// [`Coordinator::serve_notify`] that also collects retired job
+    /// states (tests; unbounded like [`Coordinator::serve_collect`]).
+    pub fn serve_notify_collect<F, G>(
+        &mut self,
+        q: &mut AdmissionQueue,
+        report_every_s: f64,
+        on_report: F,
+        mut on_complete: G,
+    ) -> (RunMetrics, Vec<JobState>)
+    where
+        F: FnMut(&RunMetrics),
+        G: FnMut(&JobRecord),
+    {
+        self.serve_inner(q, report_every_s, on_report, &mut on_complete, true)
     }
 
     fn serve_inner<F: FnMut(&RunMetrics)>(
@@ -484,6 +529,7 @@ impl<'g> Coordinator<'g> {
         q: &mut AdmissionQueue,
         report_every_s: f64,
         mut on_report: F,
+        on_complete: &mut dyn FnMut(&JobRecord),
         collect: bool,
     ) -> (RunMetrics, Vec<JobState>) {
         let t0 = Instant::now();
@@ -501,8 +547,8 @@ impl<'g> Coordinator<'g> {
         };
         loop {
             let now = clock();
-            match self.step(q, &mut st, self.cfg.max_concurrent, now, true, &mut NoProbe, &clock)
-            {
+            let cap = self.cfg.max_concurrent;
+            match self.step(q, &mut st, cap, now, true, &mut NoProbe, &clock, on_complete) {
                 StepOutcome::Drained => break,
                 StepOutcome::Worked => {}
                 StepOutcome::Idle => {
@@ -539,6 +585,9 @@ impl<'g> Coordinator<'g> {
             }
         }
         let rejected = q.rejected();
+        // graceful-shutdown marker: the loop only exits Drained when
+        // every submitter dropped and all accepted work retired
+        st.metrics.drained = q.is_exhausted();
         self.finalize(st, t0.elapsed().as_secs_f64(), rejected, &pool0, &shards0)
     }
 }
@@ -793,6 +842,28 @@ mod tests {
         };
         starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(starts, sorted);
+    }
+
+    #[test]
+    fn serve_notify_fires_completion_hook_with_tags() {
+        let (g, part) = setup();
+        let (sub, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        sub.submit_tagged(JobKind::Bfs, 3, None, 11).unwrap();
+        sub.submit_tagged(JobKind::Wcc, 0, None, 22).unwrap();
+        drop(sub);
+        let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let mut tags = Vec::new();
+        let m = coord.serve_notify(&mut queue, 0.0, |_| {}, |rec| tags.push(rec.tag));
+        tags.sort_unstable();
+        assert_eq!(tags, vec![11, 22], "one completion per job, tags echoed");
+        assert!(m.drained, "clean drain marks the final snapshot");
+        let mut rec_tags: Vec<u64> = m.jobs.iter().map(|j| j.tag).collect();
+        rec_tags.sort_unstable();
+        assert_eq!(rec_tags, vec![11, 22]);
+        // batch runs stay unmarked
+        let mb = coord.run_batch(&[JobSpec::new(JobKind::Bfs, 1)]);
+        assert!(!mb.drained);
     }
 
     #[test]

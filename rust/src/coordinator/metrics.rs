@@ -11,6 +11,12 @@ use crate::util::threadpool::PoolStats;
 #[derive(Debug, Clone)]
 pub struct JobRecord {
     pub id: u64,
+    /// Submitter-chosen correlation id ([`Submission::tag`]); the
+    /// network front-end routes `DONE` notifications by it. 0 for
+    /// batch/trace sources.
+    ///
+    /// [`Submission::tag`]: super::admission::Submission::tag
+    pub tag: u64,
     pub kind: &'static str,
     /// Virtual seconds (trace time) or wall seconds, per run mode.
     pub submitted_s: f64,
@@ -54,6 +60,12 @@ pub struct RunMetrics {
     /// Per-shard counters of the sharded runtime (per-run deltas, like
     /// `pool`); empty for unsharded runs.
     pub shards: Vec<ShardMetrics>,
+    /// Serve mode only: true when the run ended because the admission
+    /// queue was fully drained (every submitter dropped *and* all
+    /// accepted work retired) — the graceful-shutdown signal the final
+    /// snapshot carries. False for batch/replay runs and for periodic
+    /// mid-run snapshots.
+    pub drained: bool,
 }
 
 impl RunMetrics {
@@ -149,6 +161,7 @@ impl RunMetrics {
             ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
             ("p95_queue_wait_s", Json::num(self.p95_queue_wait_s())),
             ("rejected", Json::num(self.rejected as f64)),
+            ("drained", Json::Bool(self.drained)),
             ("scheduling_s", Json::num(self.scheduling_s)),
             ("execution_s", Json::num(self.execution_s)),
             ("wall_s", Json::num(self.wall_s)),
@@ -194,6 +207,7 @@ impl RunMetrics {
                 Json::arr(self.jobs.iter().map(|j| {
                     Json::obj(vec![
                         ("id", Json::num(j.id as f64)),
+                        ("tag", Json::num(j.tag as f64)),
                         ("kind", Json::str(j.kind)),
                         ("submitted_s", Json::num(j.submitted_s)),
                         ("started_s", Json::num(j.started_s)),
@@ -216,6 +230,7 @@ mod tests {
     fn rec(id: u64, sub: f64, start: f64, fin: f64) -> JobRecord {
         JobRecord {
             id,
+            tag: id + 100,
             kind: "pagerank",
             submitted_s: sub,
             started_s: start,
@@ -257,7 +272,13 @@ mod tests {
         let j = m.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("rounds").unwrap().as_u64().unwrap(), 5);
-        assert_eq!(parsed.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+        let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].get("tag").unwrap().as_u64().unwrap(), 100);
+        assert_eq!(parsed.get("drained").unwrap().as_bool(), Some(false));
+        m.drained = true;
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("drained").unwrap().as_bool(), Some(true));
     }
 
     #[test]

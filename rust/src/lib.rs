@@ -9,8 +9,8 @@
 //! accelerating convergence.
 //!
 //! Architecture (three layers, python never on the request path):
-//! * L3 (this crate): coordinator, scheduler, sharded runtime, engine,
-//!   substrates.
+//! * L3 (this crate): coordinator, scheduler, sharded runtime, network
+//!   serving front-end, engine, substrates.
 //! * L2 (python/compile/model.py): batched multi-job block update in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
 //! * L1 (python/compile/kernels/): Pallas block kernels.
@@ -23,6 +23,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod graph;
 pub mod memsim;
+pub mod net;
 pub mod runtime;
 pub mod scheduler;
 pub mod shard;

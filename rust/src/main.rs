@@ -5,6 +5,8 @@
 //! * `run`      — batch: run N jobs of mixed kinds to convergence.
 //! * `replay`   — trace replay through the coordinator.
 //! * `serve`    — live serving: persistent loop admitting streamed jobs.
+//! * `submit`   — client: send job lines to a serving socket, wait for DONE.
+//! * `loadgen`  — client: closed-loop trace replay over N connections.
 //! * `gen`      — generate a workload trace (JSONL) or a graph file.
 //! * `info`     — print graph/partition/queue statistics.
 //! * `xla`      — run the batched XLA backend (requires artifacts).
@@ -15,6 +17,9 @@
 //! tlsched replay --days 0.2 --time-scale 600 --report out.json
 //! tlsched serve --source live --minutes 2 --policy correlation --shards 4
 //! echo "pagerank 0" | tlsched serve --source stdin --time-scale 1
+//! tlsched serve --source tcp --listen 127.0.0.1:7171 --time-scale 60
+//! tlsched submit --addr 127.0.0.1:7171 "sssp 42"
+//! tlsched loadgen --addr 127.0.0.1:7171 --connections 4 --minutes 2
 //! tlsched gen --trace trace.jsonl --days 7
 //! tlsched xla --jobs 4
 //! ```
@@ -25,6 +30,7 @@ use tlsched::coordinator::{
 };
 use tlsched::engine::JobSpec;
 use tlsched::graph::BlockPartition;
+use tlsched::net::{proto, run_loadgen, Client, NetServer, NetServerConfig, Submitted};
 use tlsched::scheduler::{Scheduler, SchedulerConfig, SchedulerKind};
 use tlsched::trace::{self, JobKind, TraceConfig};
 use tlsched::util::args::ArgSpec;
@@ -39,13 +45,15 @@ fn main() {
         "run" => cmd_run(&rest),
         "replay" => cmd_replay(&rest),
         "serve" => cmd_serve(&rest),
+        "submit" => cmd_submit(&rest),
+        "loadgen" => cmd_loadgen(&rest),
         "gen" => cmd_gen(&rest),
         "info" => cmd_info(&rest),
         "xla" => cmd_xla(&rest),
         _ => {
             println!(
                 "tlsched — two-level scheduling for concurrent graph processing\n\n\
-                 USAGE: tlsched <run|replay|serve|gen|info|xla> [options]\n\
+                 USAGE: tlsched <run|replay|serve|submit|loadgen|gen|info|xla> [options]\n\
                  Run `tlsched <cmd> --help` for per-command options."
             );
             0
@@ -272,7 +280,8 @@ fn cmd_replay(argv: &[String]) -> i32 {
 
 fn cmd_serve(argv: &[String]) -> i32 {
     let spec = common_spec("tlsched serve", "serve a live stream of concurrent jobs")
-        .opt("source", "live", "job source: live (trace generator thread) | stdin")
+        .opt("source", "live", "job source: live (trace generator thread) | stdin | tcp")
+        .opt("listen", "", "tcp bind address (empty = config serve.listen)")
         .opt("minutes", "2", "live-source stream length (virtual minutes)")
         .opt("rate", "600", "live-source mean arrivals per hour")
         .opt("time-scale", "60", "virtual seconds per wall second")
@@ -306,9 +315,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
         cfg.serve.report_every_s = a.f64("report-every-s");
     }
     let source = a.str("source").to_string();
-    if source != "live" && source != "stdin" {
-        eprintln!("unknown source '{source}' (want live|stdin)");
+    if source != "live" && source != "stdin" && source != "tcp" {
+        eprintln!("unknown source '{source}' (want live|stdin|tcp)");
         return 2;
+    }
+    if source == "tcp" {
+        // the network front-end replaces the producer thread entirely
+        return serve_tcp(&a, &cfg);
     }
 
     let g = cfg.build_graph().expect("graph");
@@ -350,6 +363,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
             (delivered, 0usize)
         })
     } else {
+        // stdin job lines go through the exact parser the TCP
+        // front-end uses (net::proto), so both sources accept
+        // byte-identical lines with one error path.
         std::thread::spawn(move || {
             use std::io::BufRead;
             let stdin = std::io::stdin();
@@ -357,34 +373,22 @@ fn cmd_serve(argv: &[String]) -> i32 {
             let mut skipped = 0usize;
             for line in stdin.lock().lines() {
                 let Ok(line) = line else { break };
-                let t = line.trim();
-                if t.is_empty() || t.starts_with('#') {
-                    continue;
-                }
-                if t == "quit" {
-                    break;
-                }
-                let mut parts = t.split_whitespace();
-                let Some(kind) = parts.next().and_then(JobKind::from_name) else {
-                    eprintln!("bad job line (want: <kind> <source> [deadline_s]): {t}");
-                    skipped += 1;
-                    continue;
-                };
-                let source = match parts.next() {
-                    None => 0,
-                    Some(tok) => match tok.parse::<u32>() {
-                        Ok(v) => v % nv,
-                        Err(_) => {
-                            eprintln!("bad source vertex (want u32): {t}");
-                            skipped += 1;
-                            continue;
+                match proto::parse_request(&line, nv) {
+                    Ok(None) => {}
+                    Ok(Some(proto::Request::Quit)) => break,
+                    Ok(Some(proto::Request::Status | proto::Request::Metrics)) => {
+                        eprintln!("STATUS/METRICS are wire requests; ignored on stdin");
+                    }
+                    Ok(Some(proto::Request::Submit(j))) => {
+                        match submitter.submit_with(j.kind, j.source, j.deadline_s) {
+                            Ok(()) => delivered += 1,
+                            Err(e) => eprintln!("rejected: {e}"),
                         }
-                    },
-                };
-                let deadline = parts.next().and_then(|s| s.parse::<f64>().ok());
-                match submitter.submit_with(kind, source, deadline) {
-                    Ok(()) => delivered += 1,
-                    Err(e) => eprintln!("rejected: {e}"),
+                    }
+                    Err(e) => {
+                        eprintln!("bad job line ({e}): {}", line.trim());
+                        skipped += 1;
+                    }
                 }
             }
             (delivered, skipped)
@@ -422,6 +426,245 @@ fn cmd_serve(argv: &[String]) -> i32 {
     );
     write_report(a.str("report"), &m);
     0
+}
+
+/// `serve --source tcp`: the network front-end (net::server) is the
+/// producer — a listener plus per-connection handlers feed the
+/// bounded admission queue, completions stream back as DONE lines,
+/// and the process exits once the last client disconnected and the
+/// coordinator drained (RunMetrics::drained).
+fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
+    let g = cfg.build_graph().expect("graph");
+    let part = cfg.build_partition(&g, a.usize("max-concurrent"));
+    let time_scale = a.f64("time-scale");
+    let (submitter, mut queue) = AdmissionQueue::live(&cfg.serve.admission, time_scale);
+    let nv = (g.num_vertices() as u32).max(1);
+    let listen = if a.was_set("listen") && !a.str("listen").is_empty() {
+        a.str("listen").to_string()
+    } else {
+        cfg.serve.listen.clone()
+    };
+    let ncfg = NetServerConfig { listen, max_connections: cfg.serve.max_connections };
+    let server = match NetServer::start(&ncfg, submitter, nv) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {}: {e}", ncfg.listen);
+            return 1;
+        }
+    };
+    println!("listening on {}", server.local_addr());
+    let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
+    ccfg.max_concurrent = a.usize("max-concurrent");
+    ccfg.workers = cfg.workers;
+    ccfg.shards = cfg.shards;
+    let mut coord = Coordinator::new(&g, &part, ccfg);
+    log::info!(
+        "serving tcp on {} worker(s), {} shard(s): policy={} queue_capacity={} time_scale={}",
+        coord.workers(),
+        coord.shards(),
+        cfg.serve.admission.policy.name(),
+        cfg.serve.admission.queue_capacity,
+        time_scale,
+    );
+    // METRICS answers from the latest published snapshot: keep it
+    // fresh (~1 wall second) even when no printed report was asked for
+    let print_reports = cfg.serve.report_every_s > 0.0;
+    let cadence = if print_reports { cfg.serve.report_every_s } else { time_scale };
+    let m = coord.serve_notify(
+        &mut queue,
+        cadence,
+        |snap| {
+            let j = snap.to_json().to_string();
+            server.publish_metrics(&j);
+            if print_reports {
+                println!("{j}");
+            }
+        },
+        |rec| server.notify_done(rec),
+    );
+    server.publish_metrics(&m.to_json().to_string());
+    let stats = server.finish();
+    println!(
+        "serve done: completed={} rejected={} drained={} connections={} acked={} \
+         rejected_busy={} rejected_parse={} done_sent={} done_dropped={} \
+         throughput={:.1} jobs/h mean_latency={:.1}s mean_queue_wait={:.2}s sharing={:.2}",
+        m.completed(),
+        m.rejected,
+        m.drained,
+        stats.connections_total,
+        stats.accepted,
+        stats.rejected_busy,
+        stats.rejected_parse,
+        stats.done_sent,
+        stats.done_dropped,
+        m.throughput_per_hour(),
+        m.mean_latency_s(),
+        m.mean_queue_wait_s(),
+        m.sharing_factor(),
+    );
+    write_report(a.str("report"), &m);
+    0
+}
+
+fn cmd_submit(argv: &[String]) -> i32 {
+    let spec = ArgSpec::new(
+        "tlsched submit",
+        "submit job lines to a serving socket and wait for their DONE notifications",
+    )
+    .opt("addr", "127.0.0.1:7171", "server address")
+    .opt("file", "", "job-line file; '-' = stdin (default when no inline job)")
+    .opt("connect-timeout-s", "5", "connection retry window, seconds")
+    .pos("job", "", "inline job line, e.g. 'pagerank 0'");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let mut lines: Vec<String> = Vec::new();
+    if !a.str("job").is_empty() {
+        lines.push(a.str("job").to_string());
+    }
+    if !a.str("file").is_empty() && a.str("file") != "-" {
+        match std::fs::read_to_string(a.str("file")) {
+            Ok(text) => lines.extend(text.lines().map(|l| l.to_string())),
+            Err(e) => {
+                eprintln!("read {}: {e}", a.str("file"));
+                return 2;
+            }
+        }
+    } else if lines.is_empty() {
+        use std::io::Read;
+        let mut text = String::new();
+        if std::io::stdin().read_to_string(&mut text).is_err() {
+            eprintln!("failed to read job lines from stdin");
+            return 2;
+        }
+        lines.extend(text.lines().map(|l| l.to_string()));
+    }
+    let timeout = std::time::Duration::from_secs_f64(a.f64("connect-timeout-s"));
+    let mut client = match Client::connect_retry(a.str("addr"), timeout) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {}: {e}", a.str("addr"));
+            return 1;
+        }
+    };
+    let mut acked = 0u64;
+    let mut rejected = 0u64;
+    for line in lines.iter().map(|l| l.trim()) {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match client.submit_line(line) {
+            Ok(Submitted::Accepted(id)) => {
+                println!("ACK {id}: {line}");
+                acked += 1;
+            }
+            Ok(Submitted::Rejected(reason)) => {
+                eprintln!("REJECT {reason}: {line}");
+                rejected += 1;
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    let mut done = 0u64;
+    while done < acked {
+        match client.wait_done() {
+            Ok(c) => {
+                println!(
+                    "DONE {}: rounds={} queue_wait={:.3}s exec={:.3}s",
+                    c.job_id, c.rounds, c.queue_wait_s, c.exec_s
+                );
+                done += 1;
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    let _ = client.quit();
+    println!("submitted={acked} rejected={rejected} completed={done}");
+    if acked == 0 && rejected > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_loadgen(argv: &[String]) -> i32 {
+    let spec = ArgSpec::new(
+        "tlsched loadgen",
+        "closed-loop load generator: replay a trace over N connections, print latency percentiles",
+    )
+    .opt("addr", "127.0.0.1:7171", "server address")
+    .opt("connections", "4", "concurrent connections")
+    .opt("trace", "", "trace JSONL path (empty = generate)")
+    .opt("minutes", "2", "generated trace length (virtual minutes)")
+    .opt("rate", "600", "generated mean arrivals per hour")
+    .opt("seed", "2018", "generated trace seed")
+    .opt("time-scale", "60", "virtual seconds per wall second (trace pacing)")
+    .opt("connect-timeout-s", "10", "connection retry window, seconds")
+    .opt("out", "", "write the latency report JSON here (e.g. BENCH_serve.json)");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let jobs = if a.str("trace").is_empty() {
+        let tc = TraceConfig {
+            days: a.f64("minutes") / (24.0 * 60.0),
+            mean_rate_per_hour: a.f64("rate"),
+            seed: a.u64("seed"),
+            ..Default::default()
+        };
+        trace::generate(&tc)
+    } else {
+        trace::from_jsonl(&std::fs::read_to_string(a.str("trace")).expect("trace file"))
+            .expect("trace parse")
+    };
+    let connections = a.usize("connections").max(1);
+    println!(
+        "loadgen: {} jobs over {} connection(s) to {} (time_scale {})",
+        jobs.len(),
+        connections,
+        a.str("addr"),
+        a.f64("time-scale"),
+    );
+    let timeout = std::time::Duration::from_secs_f64(a.f64("connect-timeout-s"));
+    match run_loadgen(a.str("addr"), &jobs, connections, a.f64("time-scale"), timeout) {
+        Ok(r) => {
+            println!(
+                "loadgen done: sent={} acked={} rejected_busy={} rejected_parse={} done={} \
+                 p50={:.3}s p95={:.3}s p99={:.3}s completed/s={:.2} wall={:.1}s",
+                r.sent,
+                r.acked,
+                r.rejected_busy,
+                r.rejected_parse,
+                r.done,
+                r.p_latency_s(50.0),
+                r.p_latency_s(95.0),
+                r.p_latency_s(99.0),
+                r.completed_per_s(),
+                r.wall_s,
+            );
+            if !a.str("out").is_empty() {
+                std::fs::write(a.str("out"), r.to_json().to_string()).expect("write report");
+                log::info!("latency report written to {}", a.str("out"));
+            }
+            if r.done == 0 {
+                eprintln!("loadgen: no jobs completed");
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("loadgen error: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_gen(argv: &[String]) -> i32 {

@@ -1,0 +1,426 @@
+//! Client side of the network front-end: a synchronous [`Client`] for
+//! interactive submission (`tlsched submit`, tests) and the closed-loop
+//! [`run_loadgen`] harness behind `tlsched loadgen`.
+//!
+//! The wire allows `DONE` notifications to arrive *between* a request
+//! and its `ACK`/`REJECT` (completions are pushed by the serve loop,
+//! not polled), so [`Client::request`] buffers any `DONE` it reads
+//! while waiting for a direct response; [`Client::wait_done`] drains
+//! that buffer first.
+//!
+//! `run_loadgen` replays a trace over N concurrent connections with
+//! the exact [`trace::play_live`] pacing the live source uses: one
+//! writer per connection fires `SUBMIT` lines on the trace clock
+//! (never blocking on responses), one reader per connection matches
+//! `ACK`s to submissions in order (the server answers a connection's
+//! requests in order) and stamps end-to-end latency at `DONE` receipt
+//! — the repo's first full closed loop over a socket.
+
+use super::proto::{self, Response, PROTO_VERSION};
+use crate::trace::{self, JobKind, TraceJob};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Client-side failures.
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("protocol: {0}")]
+    Proto(String),
+}
+
+/// A `DONE` notification, decoded.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub job_id: u64,
+    pub rounds: u64,
+    pub queue_wait_s: f64,
+    pub exec_s: f64,
+}
+
+/// Outcome of one submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Submitted {
+    /// `ACK` — the id the matching `DONE` will carry.
+    Accepted(u64),
+    /// `REJECT` — `busy`, `closed` or `parse <detail>`.
+    Rejected(String),
+}
+
+/// Synchronous connection to a `tlsched serve --source tcp` server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    buffered: VecDeque<Completion>,
+}
+
+/// Connect with retry until `timeout` — for racing a server that is
+/// still binding (CI smoke, scripted stacks).
+fn connect_stream_retry(addr: &str, timeout: Duration) -> Result<TcpStream, ClientError> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) if Instant::now() >= deadline => return Err(e.into()),
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+/// Read and verify the server's `HELLO` greeting.
+fn read_hello(reader: &mut BufReader<TcpStream>) -> Result<(), ClientError> {
+    let mut hello = String::new();
+    if reader.read_line(&mut hello)? == 0 {
+        return Err(ClientError::Proto("connection closed before greeting".to_string()));
+    }
+    match proto::parse_hello(&hello) {
+        Some(PROTO_VERSION) => Ok(()),
+        Some(v) => Err(ClientError::Proto(format!(
+            "server speaks tlsched/{v}, client speaks tlsched/{PROTO_VERSION}"
+        ))),
+        None => Err(ClientError::Proto(format!("bad greeting: {hello:?}"))),
+    }
+}
+
+impl Client {
+    /// Connect and verify the `HELLO` greeting.
+    pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Self::from_stream(stream)
+    }
+
+    /// Connect with retry until `timeout` — for racing a server that
+    /// is still binding (CI smoke, scripted stacks).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Client, ClientError> {
+        Self::from_stream(connect_stream_retry(addr, timeout)?)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client, ClientError> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        read_hello(&mut reader)?;
+        Ok(Client { reader, writer: stream, buffered: VecDeque::new() })
+    }
+
+    fn read_line(&mut self) -> Result<String, ClientError> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(ClientError::Proto("connection closed by server".to_string()));
+        }
+        Ok(line)
+    }
+
+    /// Send one raw request line and return its direct response,
+    /// buffering any `DONE` notifications that arrive first. Blank and
+    /// `#`-comment lines are refused here: the server skips them
+    /// without answering, so waiting for a response would hang.
+    pub fn request(&mut self, line: &str) -> Result<Response, ClientError> {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            return Err(ClientError::Proto("blank/comment line gets no response".to_string()));
+        }
+        self.writer.write_all(format!("{line}\n").as_bytes())?;
+        loop {
+            let raw = self.read_line()?;
+            match proto::parse_response(&raw).map_err(|e| ClientError::Proto(e.to_string()))? {
+                Response::Done { job_id, rounds, queue_wait_s, exec_s } => {
+                    self.buffered.push_back(Completion { job_id, rounds, queue_wait_s, exec_s });
+                }
+                resp => return Ok(resp),
+            }
+        }
+    }
+
+    /// Submit one job; `deadline_s` is an absolute run-clock deadline
+    /// for the `slo` admission policy.
+    pub fn submit(
+        &mut self,
+        kind: JobKind,
+        source: u32,
+        deadline_s: Option<f64>,
+    ) -> Result<Submitted, ClientError> {
+        let line = match deadline_s {
+            Some(d) => format!("SUBMIT {} {} {d}", kind.name(), source),
+            None => format!("SUBMIT {} {}", kind.name(), source),
+        };
+        self.submit_line(&line)
+    }
+
+    /// Submit a raw job line (`SUBMIT ...` or a bare job line).
+    pub fn submit_line(&mut self, line: &str) -> Result<Submitted, ClientError> {
+        match self.request(line)? {
+            Response::Ack(id) => Ok(Submitted::Accepted(id)),
+            Response::Reject(reason) => Ok(Submitted::Rejected(reason)),
+            other => Err(ClientError::Proto(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Block until the next `DONE` notification (buffered first).
+    pub fn wait_done(&mut self) -> Result<Completion, ClientError> {
+        if let Some(c) = self.buffered.pop_front() {
+            return Ok(c);
+        }
+        let raw = self.read_line()?;
+        match proto::parse_response(&raw).map_err(|e| ClientError::Proto(e.to_string()))? {
+            Response::Done { job_id, rounds, queue_wait_s, exec_s } => {
+                Ok(Completion { job_id, rounds, queue_wait_s, exec_s })
+            }
+            other => Err(ClientError::Proto(format!("expected DONE, got {other:?}"))),
+        }
+    }
+
+    /// `STATUS` — server-state JSON (one line).
+    pub fn status(&mut self) -> Result<String, ClientError> {
+        match self.request("STATUS")? {
+            Response::Json(s) => Ok(s),
+            other => Err(ClientError::Proto(format!("expected JSON, got {other:?}"))),
+        }
+    }
+
+    /// `METRICS` — latest serve metrics JSON (one line; `{}` before
+    /// the first report).
+    pub fn metrics(&mut self) -> Result<String, ClientError> {
+        match self.request("METRICS")? {
+            Response::Json(s) => Ok(s),
+            other => Err(ClientError::Proto(format!("expected JSON, got {other:?}"))),
+        }
+    }
+
+    /// Send `QUIT` and drain: the server half-closes, delivering every
+    /// outstanding `DONE` before EOF — all of them (buffered included)
+    /// come back.
+    pub fn quit(mut self) -> Result<Vec<Completion>, ClientError> {
+        self.writer.write_all(b"QUIT\n")?;
+        let mut out: Vec<Completion> = self.buffered.drain(..).collect();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                break; // server closed after its drain
+            }
+            if let Ok(Response::Done { job_id, rounds, queue_wait_s, exec_s }) =
+                proto::parse_response(&line)
+            {
+                out.push(Completion { job_id, rounds, queue_wait_s, exec_s });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Aggregate result of a [`run_loadgen`] run (`BENCH_serve.json`).
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    pub connections: usize,
+    /// `SUBMIT` lines written to sockets.
+    pub sent: u64,
+    pub acked: u64,
+    pub rejected_busy: u64,
+    pub rejected_parse: u64,
+    pub rejected_other: u64,
+    /// Completions received (`DONE` lines).
+    pub done: u64,
+    /// End-to-end wall seconds, submit write → `DONE` receipt.
+    pub latencies_s: Vec<f64>,
+    pub wall_s: f64,
+}
+
+impl LoadgenReport {
+    pub fn p_latency_s(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        percentile(&self.latencies_s, p)
+    }
+
+    pub fn completed_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.done as f64 / self.wall_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("connections", Json::num(self.connections as f64)),
+            ("sent", Json::num(self.sent as f64)),
+            ("acked", Json::num(self.acked as f64)),
+            ("rejected_busy", Json::num(self.rejected_busy as f64)),
+            ("rejected_parse", Json::num(self.rejected_parse as f64)),
+            ("rejected_other", Json::num(self.rejected_other as f64)),
+            ("done", Json::num(self.done as f64)),
+            ("p50_latency_s", Json::num(self.p_latency_s(50.0))),
+            ("p95_latency_s", Json::num(self.p_latency_s(95.0))),
+            ("p99_latency_s", Json::num(self.p_latency_s(99.0))),
+            ("completed_per_s", Json::num(self.completed_per_s())),
+            ("wall_s", Json::num(self.wall_s)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct ConnOutcome {
+    sent: u64,
+    acked: u64,
+    rejected_busy: u64,
+    rejected_parse: u64,
+    rejected_other: u64,
+    done: u64,
+    latencies_s: Vec<f64>,
+}
+
+/// Replay `jobs` against a serving socket over `connections`
+/// concurrent connections, pacing arrivals with [`trace::play_live`]
+/// at `time_scale` virtual seconds per wall second (jobs are dealt
+/// round-robin, so each connection's sub-trace keeps the global
+/// arrival spacing). Every connection is opened and greeted **before
+/// any job flows**, so a fast sibling finishing its sub-trace can
+/// never trigger the server's last-client-out shutdown while another
+/// worker is still connecting. Blocks until every connection has seen
+/// its last `DONE` and the server half-closed it. Connections are
+/// clamped to the job count (an empty sub-trace would just connect
+/// and quit).
+pub fn run_loadgen(
+    addr: &str,
+    jobs: &[TraceJob],
+    connections: usize,
+    time_scale: f64,
+    connect_timeout: Duration,
+) -> Result<LoadgenReport, ClientError> {
+    let n = connections.clamp(1, jobs.len().max(1));
+    let t0 = Instant::now();
+    let mut streams = Vec::with_capacity(n);
+    for _ in 0..n {
+        let stream = connect_stream_retry(addr, connect_timeout)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        read_hello(&mut reader)?;
+        streams.push((stream, reader));
+    }
+    let mut handles = Vec::with_capacity(n);
+    for (c, (stream, reader)) in streams.into_iter().enumerate() {
+        let sub: Vec<TraceJob> = jobs.iter().skip(c).step_by(n).cloned().collect();
+        handles.push(std::thread::spawn(move || conn_worker(stream, reader, &sub, time_scale)));
+    }
+    let mut report = LoadgenReport { connections: n, ..Default::default() };
+    for h in handles {
+        let out = h.join().map_err(|_| ClientError::Proto("worker panicked".to_string()))?;
+        report.sent += out.sent;
+        report.acked += out.acked;
+        report.rejected_busy += out.rejected_busy;
+        report.rejected_parse += out.rejected_parse;
+        report.rejected_other += out.rejected_other;
+        report.done += out.done;
+        report.latencies_s.extend(out.latencies_s);
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+fn conn_worker(
+    stream: TcpStream,
+    mut reader: BufReader<TcpStream>,
+    jobs: &[TraceJob],
+    time_scale: f64,
+) -> ConnOutcome {
+    // submit timestamps, pushed by the writer in wire order; the
+    // reader pops one per ACK/REJECT (responses come back in request
+    // order on a connection)
+    let pending: Arc<Mutex<VecDeque<Instant>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let pending_rx = Arc::clone(&pending);
+    let rdr = std::thread::spawn(move || {
+        let mut out = ConnOutcome::default();
+        let mut in_flight: HashMap<u64, Instant> = HashMap::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break, // server half-close finished
+                Ok(_) => {}
+            }
+            match proto::parse_response(&line) {
+                Ok(Response::Ack(id)) => {
+                    out.acked += 1;
+                    if let Some(t) = pending_rx.lock().unwrap().pop_front() {
+                        in_flight.insert(id, t);
+                    }
+                }
+                Ok(Response::Reject(reason)) => {
+                    pending_rx.lock().unwrap().pop_front();
+                    if reason == "busy" {
+                        out.rejected_busy += 1;
+                    } else if reason.starts_with("parse") {
+                        out.rejected_parse += 1;
+                    } else {
+                        out.rejected_other += 1;
+                    }
+                }
+                Ok(Response::Done { job_id, .. }) => {
+                    out.done += 1;
+                    if let Some(t) = in_flight.remove(&job_id) {
+                        out.latencies_s.push(t.elapsed().as_secs_f64());
+                    }
+                }
+                Ok(Response::Json(_)) | Err(_) => {}
+            }
+        }
+        out
+    });
+    // writer: fire SUBMIT lines on the trace clock, never waiting for
+    // responses — the reader thread owns the receive side
+    let mut w = stream;
+    let mut sent = 0u64;
+    trace::play_live(jobs, time_scale, |tj| {
+        pending.lock().unwrap().push_back(Instant::now());
+        let line = format!("SUBMIT {} {}\n", tj.kind.name(), tj.source);
+        match w.write_all(line.as_bytes()) {
+            Ok(()) => {
+                sent += 1;
+                true
+            }
+            Err(_) => false,
+        }
+    });
+    let _ = w.write_all(b"QUIT\n");
+    let mut out = rdr.join().unwrap_or_default();
+    out.sent = sent;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loadgen_report_percentiles_and_json() {
+        let mut r = LoadgenReport {
+            connections: 2,
+            sent: 10,
+            acked: 9,
+            rejected_busy: 1,
+            done: 9,
+            wall_s: 3.0,
+            ..Default::default()
+        };
+        r.latencies_s = (1..=9).map(|i| i as f64 / 10.0).collect();
+        assert!((r.p_latency_s(50.0) - 0.5).abs() < 1e-9);
+        assert!(r.p_latency_s(95.0) >= r.p_latency_s(50.0));
+        assert!((r.completed_per_s() - 3.0).abs() < 1e-9);
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("done").unwrap().as_u64(), Some(9));
+        assert_eq!(parsed.get("rejected_parse").unwrap().as_u64(), Some(0));
+        assert!(parsed.get("p95_latency_s").unwrap().as_f64().unwrap() > 0.0);
+        // empty report stays JSON-safe (no NaN)
+        let empty = LoadgenReport::default();
+        assert_eq!(empty.p_latency_s(95.0), 0.0);
+        assert_eq!(empty.completed_per_s(), 0.0);
+        assert!(Json::parse(&empty.to_json().to_string()).is_ok());
+    }
+}

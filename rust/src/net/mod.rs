@@ -1,0 +1,32 @@
+//! Network serving front-end: the socket seam that lets the
+//! coordinator take real concurrent traffic — and, with the sharded
+//! runtime, lets shard groups sit behind their own sockets on
+//! separate nodes.
+//!
+//! Dependency-light by construction (`std::net` + threads, no async
+//! runtime), in three parts:
+//!
+//! * [`proto`] — the versioned line-delimited wire protocol
+//!   (`SUBMIT`/`STATUS`/`METRICS`/`QUIT` → `ACK`/`REJECT`/`DONE`/JSON)
+//!   whose job-line parser is **shared with the stdin source**, so
+//!   `--source stdin` and `--source tcp` accept byte-identical lines
+//!   with one error path.
+//! * [`server`] — listener + per-connection handlers feeding the
+//!   bounded [`AdmissionQueue`]; queue backpressure surfaces as
+//!   wire-level `REJECT busy`, completions stream back as `DONE`
+//!   lines, shutdown is a half-close drain.
+//! * [`client`] — the synchronous [`Client`] (`tlsched submit`) and
+//!   the [`run_loadgen`] closed-loop harness (`tlsched loadgen`).
+//!
+//! See DESIGN.md §8 for the grammar, connection lifecycle,
+//! backpressure semantics and the shard-group deployment sketch.
+//!
+//! [`AdmissionQueue`]: crate::coordinator::AdmissionQueue
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{run_loadgen, Client, ClientError, Completion, LoadgenReport, Submitted};
+pub use proto::{JobLine, ParseError, Request, Response, PROTO_VERSION};
+pub use server::{NetServer, NetServerConfig, NetStats};

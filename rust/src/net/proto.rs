@@ -1,0 +1,296 @@
+//! Versioned line-delimited wire protocol of the network serving
+//! front-end — and the *single* job-line parser shared with the stdin
+//! job source, so `--source stdin` and `--source tcp` accept
+//! byte-identical job lines with one error path.
+//!
+//! Requests (one per line, newline-terminated):
+//!
+//! ```text
+//! SUBMIT <kind> <source> [deadline_s]   # explicit command form
+//! <kind> <source> [deadline_s]          # bare job line (stdin-compatible)
+//! STATUS                                # server-state JSON snapshot
+//! METRICS                               # latest serve metrics JSON
+//! QUIT                                  # half-close: no more submissions
+//! # comment / blank                     # skipped, never an error
+//! ```
+//!
+//! `<kind>` is a [`JobKind`] name; `<source>` is a u32 vertex id,
+//! wrapped modulo the graph size like the stdin source always did;
+//! `[deadline_s]` is an optional absolute run-clock deadline consumed
+//! by the `slo` admission policy.
+//!
+//! Responses (one per line):
+//!
+//! ```text
+//! HELLO tlsched/<version>                        # greeting on connect
+//! ACK <job_id>                                   # accepted; id echoes in DONE
+//! REJECT <reason>                                # busy | closed | parse <detail>
+//! DONE <job_id> <rounds> <queue_wait_s> <exec_s> # completion notification
+//! {...}                                          # one-line JSON (STATUS/METRICS)
+//! ```
+//!
+//! Malformed requests get `REJECT parse <detail>` and the connection
+//! stays open; `REJECT busy` is the wire form of admission-queue
+//! backpressure ([`SubmitError::QueueFull`]). See DESIGN.md §8 for the
+//! full grammar and connection lifecycle.
+//!
+//! [`SubmitError::QueueFull`]: crate::coordinator::SubmitError::QueueFull
+
+use crate::trace::JobKind;
+
+/// Protocol version announced in the `HELLO` greeting; clients refuse
+/// to talk to a server announcing a different major version.
+pub const PROTO_VERSION: u32 = 1;
+
+/// One parsed job line: what `SUBMIT` carries, and what the stdin
+/// source feeds the admission queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobLine {
+    pub kind: JobKind,
+    /// Source vertex, already wrapped modulo the graph size.
+    pub source: u32,
+    /// Optional absolute run-clock completion deadline (`slo` policy).
+    pub deadline_s: Option<f64>,
+}
+
+/// One client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit(JobLine),
+    Status,
+    Metrics,
+    Quit,
+}
+
+/// Why a line failed to parse. The message text is what travels back
+/// over the wire after `REJECT parse`.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ParseError {
+    #[error("bad job kind '{0}' (want pagerank|sssp|wcc|bfs|ppr)")]
+    BadKind(String),
+    #[error("bad source vertex '{0}' (want u32)")]
+    BadSource(String),
+    #[error("bad deadline '{0}' (want run-clock seconds)")]
+    BadDeadline(String),
+    #[error("trailing token '{0}'")]
+    Trailing(String),
+    #[error("empty submit (want: SUBMIT <kind> <source> [deadline_s])")]
+    EmptySubmit,
+}
+
+/// Parse one job line (`<kind> <source> [deadline_s]`). The source
+/// vertex is wrapped modulo `num_vertices` — the stdin source's
+/// historical behavior, now shared by the wire path.
+pub fn parse_job_line(line: &str, num_vertices: u32) -> Result<JobLine, ParseError> {
+    let nv = num_vertices.max(1);
+    let mut parts = line.split_whitespace();
+    let kind_tok = parts.next().ok_or(ParseError::EmptySubmit)?;
+    let kind =
+        JobKind::from_name(kind_tok).ok_or_else(|| ParseError::BadKind(kind_tok.to_string()))?;
+    let source = match parts.next() {
+        None => 0,
+        Some(tok) => {
+            tok.parse::<u32>().map_err(|_| ParseError::BadSource(tok.to_string()))? % nv
+        }
+    };
+    let deadline_s = match parts.next() {
+        None => None,
+        Some(tok) => {
+            Some(tok.parse::<f64>().map_err(|_| ParseError::BadDeadline(tok.to_string()))?)
+        }
+    };
+    if let Some(extra) = parts.next() {
+        return Err(ParseError::Trailing(extra.to_string()));
+    }
+    Ok(JobLine { kind, source, deadline_s })
+}
+
+/// Parse one request line. `Ok(None)` means "nothing to do" (blank
+/// line or `#` comment). Commands are case-insensitive in their
+/// keyword; a line that is no command is treated as a bare job line.
+pub fn parse_request(line: &str, num_vertices: u32) -> Result<Option<Request>, ParseError> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return Ok(None);
+    }
+    // `t` is trimmed, so the first whitespace token is a prefix of it
+    let first = t.split_whitespace().next().unwrap_or("");
+    let rest = t[first.len()..].trim();
+    let bare = |req: Request| {
+        if rest.is_empty() {
+            Ok(Some(req))
+        } else {
+            Err(ParseError::Trailing(rest.split_whitespace().next().unwrap().to_string()))
+        }
+    };
+    match first.to_ascii_uppercase().as_str() {
+        "QUIT" => bare(Request::Quit),
+        "STATUS" => bare(Request::Status),
+        "METRICS" => bare(Request::Metrics),
+        "SUBMIT" => {
+            if rest.is_empty() {
+                return Err(ParseError::EmptySubmit);
+            }
+            Ok(Some(Request::Submit(parse_job_line(rest, num_vertices)?)))
+        }
+        _ => Ok(Some(Request::Submit(parse_job_line(t, num_vertices)?))),
+    }
+}
+
+/// One server response line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Accepted; the id echoes in the later `DONE` line.
+    Ack(u64),
+    /// Shed or malformed: `busy`, `closed`, or `parse <detail>`.
+    Reject(String),
+    /// Job completion: server-side rounds and latency split.
+    Done { job_id: u64, rounds: u64, queue_wait_s: f64, exec_s: f64 },
+    /// One-line JSON payload (`STATUS` / `METRICS` reply).
+    Json(String),
+}
+
+impl Response {
+    /// Wire form, without the trailing newline.
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Ack(id) => format!("ACK {id}"),
+            Response::Reject(reason) => format!("REJECT {reason}"),
+            Response::Done { job_id, rounds, queue_wait_s, exec_s } => {
+                format!("DONE {job_id} {rounds} {queue_wait_s:.6} {exec_s:.6}")
+            }
+            Response::Json(s) => s.clone(),
+        }
+    }
+}
+
+/// What a response line failed to mean (client side).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("bad response line: {0}")]
+pub struct BadResponse(pub String);
+
+/// Parse one server response line. JSON payloads are recognized by
+/// their leading `{` and returned unparsed.
+pub fn parse_response(line: &str) -> Result<Response, BadResponse> {
+    let t = line.trim();
+    if t.starts_with('{') {
+        return Ok(Response::Json(t.to_string()));
+    }
+    let bad = || BadResponse(t.to_string());
+    let mut parts = t.split_whitespace();
+    match parts.next() {
+        Some("ACK") => {
+            let id = parts.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+            Ok(Response::Ack(id))
+        }
+        Some("REJECT") => {
+            let rest = t["REJECT".len()..].trim();
+            if rest.is_empty() {
+                return Err(bad());
+            }
+            Ok(Response::Reject(rest.to_string()))
+        }
+        Some("DONE") => {
+            let mut num = || parts.next().and_then(|s| s.parse::<f64>().ok()).ok_or_else(bad);
+            let job_id = num()? as u64;
+            let rounds = num()? as u64;
+            let queue_wait_s = num()?;
+            let exec_s = num()?;
+            Ok(Response::Done { job_id, rounds, queue_wait_s, exec_s })
+        }
+        _ => Err(bad()),
+    }
+}
+
+/// Greeting the server writes on every new connection.
+pub fn hello_line() -> String {
+    format!("HELLO tlsched/{PROTO_VERSION}")
+}
+
+/// Parse the greeting; returns the announced protocol version.
+pub fn parse_hello(line: &str) -> Option<u32> {
+    line.trim().strip_prefix("HELLO tlsched/")?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_line_grammar() {
+        let j = parse_job_line("pagerank 7", 100).unwrap();
+        assert_eq!((j.kind, j.source, j.deadline_s), (JobKind::PageRank, 7, None));
+        // source wraps modulo the graph size (stdin-compatible)
+        assert_eq!(parse_job_line("bfs 107", 100).unwrap().source, 7);
+        // source defaults to 0
+        assert_eq!(parse_job_line("wcc", 100).unwrap().source, 0);
+        // deadline rides along
+        let j = parse_job_line("sssp 3 120.5", 100).unwrap();
+        assert_eq!(j.deadline_s, Some(120.5));
+    }
+
+    #[test]
+    fn job_line_errors() {
+        assert!(matches!(parse_job_line("frobnicate 0", 10), Err(ParseError::BadKind(_))));
+        assert!(matches!(parse_job_line("bfs x", 10), Err(ParseError::BadSource(_))));
+        assert!(matches!(parse_job_line("bfs 1 soon", 10), Err(ParseError::BadDeadline(_))));
+        assert!(matches!(parse_job_line("bfs 1 2.0 extra", 10), Err(ParseError::Trailing(_))));
+        assert!(matches!(parse_job_line("", 10), Err(ParseError::EmptySubmit)));
+    }
+
+    #[test]
+    fn request_grammar() {
+        assert_eq!(parse_request("", 10), Ok(None));
+        assert_eq!(parse_request("  # comment", 10), Ok(None));
+        assert_eq!(parse_request("QUIT", 10), Ok(Some(Request::Quit)));
+        assert_eq!(parse_request("quit", 10), Ok(Some(Request::Quit)));
+        assert_eq!(parse_request("STATUS", 10), Ok(Some(Request::Status)));
+        assert_eq!(parse_request("METRICS", 10), Ok(Some(Request::Metrics)));
+        assert!(matches!(parse_request("QUIT now", 10), Err(ParseError::Trailing(_))));
+        assert!(matches!(parse_request("SUBMIT", 10), Err(ParseError::EmptySubmit)));
+    }
+
+    #[test]
+    fn submit_and_bare_lines_parse_identically() {
+        // the tentpole contract: stdin job lines and SUBMIT bodies go
+        // through one parser, so both forms accept identical lines
+        for (cmd, bare) in [
+            ("SUBMIT pagerank 4", "pagerank 4"),
+            ("SUBMIT sssp 9 33.25", "sssp 9 33.25"),
+            ("submit bfs 1000", "bfs 1000"),
+        ] {
+            let a = parse_request(cmd, 64).unwrap().unwrap();
+            let b = parse_request(bare, 64).unwrap().unwrap();
+            assert_eq!(a, b, "{cmd} vs {bare}");
+        }
+        // and identical error paths
+        assert_eq!(
+            parse_request("SUBMIT nope 1", 64).unwrap_err(),
+            parse_request("nope 1", 64).unwrap_err(),
+        );
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let cases = vec![
+            Response::Ack(42),
+            Response::Reject("busy".into()),
+            Response::Reject("parse bad job kind 'x' (want pagerank|sssp|wcc|bfs|ppr)".into()),
+            Response::Done { job_id: 7, rounds: 12, queue_wait_s: 0.25, exec_s: 1.5 },
+            Response::Json("{\"completed\":3}".into()),
+        ];
+        for r in cases {
+            assert_eq!(parse_response(&r.to_line()).unwrap(), r, "{}", r.to_line());
+        }
+        assert!(parse_response("WAT 1").is_err());
+        assert!(parse_response("ACK notanid").is_err());
+        assert!(parse_response("DONE 1 2").is_err());
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        assert_eq!(parse_hello(&hello_line()), Some(PROTO_VERSION));
+        assert_eq!(parse_hello("HELLO tlsched/9"), Some(9));
+        assert_eq!(parse_hello("HI"), None);
+    }
+}

@@ -1,0 +1,592 @@
+//! TCP serving front-end: a listener thread plus one handler thread
+//! per connection, feeding the coordinator's bounded admission queue.
+//!
+//! Threading model (no async runtime; std::net only):
+//!
+//! * **accept loop** (one thread) — owns the listener and the primary
+//!   [`JobSubmitter`]; spawns a handler per connection, rejecting
+//!   connections over `max_connections` with `REJECT busy` (the accept
+//!   loop itself never blocks on a slow client).
+//! * **connection handlers** (one thread each) — parse requests
+//!   through the shared [`proto`] parser, submit through a cloned
+//!   [`JobSubmitter`] (non-blocking: a full queue becomes a wire-level
+//!   `REJECT busy`, counted in `RunMetrics::rejected`), and answer
+//!   `STATUS`/`METRICS` from the server's counters and the latest
+//!   published metrics snapshot.
+//! * **the serve loop** (the caller's thread) — runs
+//!   [`Coordinator::serve_notify`] and calls [`NetServer::notify_done`]
+//!   from its completion hook; `DONE` lines are routed to the
+//!   submitting connection by the submission tag.
+//!
+//! Lifecycle: on client EOF or `QUIT` the handler **half-closes** —
+//! it stops reading, waits until every job the connection submitted
+//! has had its `DONE` delivered, then closes the socket. When the last
+//! connection retires *and at least one connection ever submitted a
+//! job*, the listener shuts down and the accept loop drops the primary
+//! submitter — the coordinator then drains resident jobs and returns
+//! with `RunMetrics::drained = true`. This closed-loop exit is what
+//! lets `tlsched serve --source tcp` terminate cleanly under tests, CI
+//! and `tlsched loadgen`; the submitted-work condition keeps a
+//! transient `STATUS` probe (monitoring, port scans) from killing an
+//! idle server. The accept loop polls a non-blocking listener (~25ms),
+//! so shutdown never depends on being able to unblock an `accept`.
+//!
+//! Per-request write ordering: a submission's `ACK` is written while
+//! holding the connection's writer lock *around* the queue submit, so
+//! a job's `DONE` (written by the serve-loop thread under the same
+//! lock) can never overtake its `ACK` on the wire.
+//!
+//! [`Coordinator::serve_notify`]: crate::coordinator::Coordinator::serve_notify
+
+use super::proto::{self, Request, Response, PROTO_VERSION};
+use crate::coordinator::{JobRecord, JobSubmitter, SubmitError};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Network front-end tunables (the `[serve]` config keys `listen` and
+/// `max_connections`).
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7171`; port 0 picks an ephemeral
+    /// port (tests) — read it back with [`NetServer::local_addr`].
+    pub listen: String,
+    /// Concurrent-connection cap; connections beyond it are greeted,
+    /// told `REJECT busy` and closed.
+    pub max_connections: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig { listen: "127.0.0.1:7171".to_string(), max_connections: 64 }
+    }
+}
+
+/// Snapshot of the server's wire-level counters (`STATUS` payload).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub connections_total: u64,
+    pub connections_active: u64,
+    /// Submissions accepted into the admission queue (`ACK`ed).
+    pub accepted: u64,
+    /// `REJECT busy`: queue backpressure plus over-cap connections.
+    pub rejected_busy: u64,
+    /// `REJECT parse`: malformed lines (the connection survives them).
+    pub rejected_parse: u64,
+    /// `DONE` notifications delivered to their submitting connection.
+    pub done_sent: u64,
+    /// Completions whose connection was already gone (EOF mid-flight).
+    pub done_dropped: u64,
+    /// Accepted jobs still awaiting their `DONE`.
+    pub in_flight: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections_total: AtomicU64,
+    connections_active: AtomicU64,
+    accepted: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_parse: AtomicU64,
+    done_sent: AtomicU64,
+    done_dropped: AtomicU64,
+}
+
+/// Per-connection state shared between its handler thread (reads,
+/// ACK/REJECT writes) and the serve-loop thread (DONE writes).
+struct Conn {
+    writer: Mutex<TcpStream>,
+    /// Jobs this connection submitted that have not had their `DONE`
+    /// dispatched yet; the half-close drain waits for it to hit zero.
+    outstanding: Mutex<u64>,
+    drained: Condvar,
+}
+
+impl Conn {
+    fn new(writer: TcpStream) -> Self {
+        Conn { writer: Mutex::new(writer), outstanding: Mutex::new(0), drained: Condvar::new() }
+    }
+
+    /// Write one protocol line; false when the peer is gone.
+    fn send_line(&self, line: &str) -> bool {
+        let mut buf = String::with_capacity(line.len() + 1);
+        buf.push_str(line);
+        buf.push('\n');
+        self.writer.lock().unwrap().write_all(buf.as_bytes()).is_ok()
+    }
+
+    fn job_started(&self) {
+        *self.outstanding.lock().unwrap() += 1;
+    }
+
+    fn job_finished(&self) {
+        let mut g = self.outstanding.lock().unwrap();
+        *g = g.saturating_sub(1);
+        if *g == 0 {
+            self.drained.notify_all();
+        }
+    }
+
+    /// Block until every outstanding job's `DONE` has been dispatched.
+    fn drain(&self) {
+        let mut g = self.outstanding.lock().unwrap();
+        while *g > 0 {
+            g = self.drained.wait(g).unwrap();
+        }
+    }
+}
+
+struct Shared {
+    counters: Counters,
+    /// Submission tag → submitting connection: how `DONE` lines find
+    /// their way home. Entries are removed at dispatch.
+    routes: Mutex<HashMap<u64, Arc<Conn>>>,
+    /// Latest serve metrics JSON published by the serve loop's
+    /// `on_report` hook (the `METRICS` payload).
+    snapshot: Mutex<Option<String>>,
+    shutdown: AtomicBool,
+    /// True once any connection has attempted a submission — the
+    /// last-client-out shutdown only arms then, so a transient
+    /// STATUS/probe connection cannot kill an idle server.
+    saw_submission: AtomicBool,
+    next_tag: AtomicU64,
+    addr: SocketAddr,
+    max_connections: usize,
+}
+
+impl Shared {
+    fn stats(&self) -> NetStats {
+        NetStats {
+            connections_total: self.counters.connections_total.load(Ordering::Relaxed),
+            connections_active: self.counters.connections_active.load(Ordering::Relaxed),
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            rejected_busy: self.counters.rejected_busy.load(Ordering::Relaxed),
+            rejected_parse: self.counters.rejected_parse.load(Ordering::Relaxed),
+            done_sent: self.counters.done_sent.load(Ordering::Relaxed),
+            done_dropped: self.counters.done_dropped.load(Ordering::Relaxed),
+            in_flight: self.routes.lock().unwrap().len() as u64,
+        }
+    }
+
+    fn status_json(&self) -> String {
+        let s = self.stats();
+        Json::obj(vec![
+            ("proto_version", Json::num(PROTO_VERSION as f64)),
+            ("connections_total", Json::num(s.connections_total as f64)),
+            ("connections_active", Json::num(s.connections_active as f64)),
+            ("accepted", Json::num(s.accepted as f64)),
+            ("rejected_busy", Json::num(s.rejected_busy as f64)),
+            ("rejected_parse", Json::num(s.rejected_parse as f64)),
+            ("done_sent", Json::num(s.done_sent as f64)),
+            ("done_dropped", Json::num(s.done_dropped as f64)),
+            ("in_flight", Json::num(s.in_flight as f64)),
+        ])
+        .to_string()
+    }
+
+    fn metrics_json(&self) -> String {
+        self.snapshot.lock().unwrap().clone().unwrap_or_else(|| "{}".to_string())
+    }
+
+    /// One connection retired; the last one out turns off the lights —
+    /// but only once some connection has actually submitted work, so
+    /// probes and one-off STATUS checks leave the server running.
+    fn conn_closed(&self) {
+        let left = self.counters.connections_active.fetch_sub(1, Ordering::AcqRel) - 1;
+        if left == 0 && self.saw_submission.load(Ordering::Acquire) {
+            self.begin_shutdown();
+        }
+    }
+
+    /// Idempotent: flag the accept loop down; its non-blocking poll
+    /// notices within one sleep interval.
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+}
+
+/// Handle to a running TCP front-end. Start it before the serve loop,
+/// wire [`NetServer::notify_done`] into
+/// [`Coordinator::serve_notify`](crate::coordinator::Coordinator::serve_notify)'s
+/// completion hook and [`NetServer::publish_metrics`] into its report
+/// hook, and call [`NetServer::finish`] after the serve loop returns.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen` and start accepting. The primary `submitter`
+    /// moves into the accept loop; its drop (at shutdown) is what
+    /// releases the coordinator's drain. `num_vertices` parameterizes
+    /// the shared job-line parser (source wrapping).
+    pub fn start(
+        cfg: &NetServerConfig,
+        submitter: JobSubmitter,
+        num_vertices: u32,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            counters: Counters::default(),
+            routes: Mutex::new(HashMap::new()),
+            snapshot: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+            saw_submission: AtomicBool::new(false),
+            next_tag: AtomicU64::new(0),
+            addr,
+            max_connections: cfg.max_connections.max(1),
+        });
+        let sh = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("tlsched-accept".to_string())
+            .spawn(move || accept_loop(listener, submitter, sh, num_vertices))?;
+        log::info!("net: listening on {addr} (max {} connections)", cfg.max_connections.max(1));
+        Ok(NetServer { shared, accept: Some(accept) })
+    }
+
+    /// Actual bound address (resolves an ephemeral `:0` port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Publish a serve metrics snapshot (one-line JSON) as the
+    /// `METRICS` payload. Call from the serve loop's report hook.
+    pub fn publish_metrics(&self, json: &str) {
+        *self.shared.snapshot.lock().unwrap() = Some(json.to_string());
+    }
+
+    /// Route a retired job's `DONE` notification to the connection
+    /// that submitted it. Call from the serve loop's completion hook;
+    /// records with tag 0 (non-network submissions) are ignored.
+    pub fn notify_done(&self, rec: &JobRecord) {
+        if rec.tag == 0 {
+            return;
+        }
+        // take the route *before* writing, and without holding the
+        // routes lock across the (possibly slow) socket write
+        let conn = self.shared.routes.lock().unwrap().remove(&rec.tag);
+        let Some(conn) = conn else {
+            self.shared.counters.done_dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let line = Response::Done {
+            job_id: rec.tag,
+            rounds: rec.rounds,
+            queue_wait_s: rec.queueing_s(),
+            exec_s: rec.finished_s - rec.started_s,
+        }
+        .to_line();
+        if conn.send_line(&line) {
+            self.shared.counters.done_sent.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shared.counters.done_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        conn.job_finished();
+    }
+
+    /// Wire-level counters so far.
+    pub fn stats(&self) -> NetStats {
+        self.shared.stats()
+    }
+
+    /// Shut the listener down (idempotent — normally the last client's
+    /// disconnect already did) and join the accept loop. Call after
+    /// the serve loop returns; the final counter snapshot comes back.
+    pub fn finish(mut self) -> NetStats {
+        self.shared.begin_shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.stats()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    submitter: JobSubmitter,
+    shared: Arc<Shared>,
+    num_vertices: u32,
+) {
+    // Non-blocking poll: shutdown can never hang on a parked accept,
+    // and the loop itself never blocks on a slow client.
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+                continue;
+            }
+            Err(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+                continue;
+            }
+        };
+        // the accepted socket may inherit non-blocking on some
+        // platforms; handlers want blocking reads
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_nodelay(true);
+        // admit only while under the cap — the count is untouched on
+        // the reject path, so a racing disconnect can neither be
+        // spuriously rejected nor miss the last-client-out shutdown
+        let admitted = shared
+            .counters
+            .connections_active
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                if (n as usize) < shared.max_connections {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok();
+        if !admitted {
+            shared.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            let _ = s.write_all(format!("{}\nREJECT busy\n", proto::hello_line()).as_bytes());
+            continue; // drop closes it
+        }
+        shared.counters.connections_total.fetch_add(1, Ordering::Relaxed);
+        let sub = submitter.clone();
+        let sh = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("tlsched-conn".to_string())
+            .spawn(move || handle_conn(stream, sub, sh, num_vertices));
+        if spawned.is_err() {
+            shared.conn_closed();
+        }
+    }
+    // dropping the primary submitter here is the coordinator's cue
+    // that no further work can ever arrive
+}
+
+fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, nv: u32) {
+    let Ok(write_half) = stream.try_clone() else {
+        shared.conn_closed();
+        return;
+    };
+    let conn = Arc::new(Conn::new(write_half));
+    conn.send_line(&proto::hello_line());
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            // EOF and read errors half-close exactly like QUIT
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        match proto::parse_request(&line, nv) {
+            Ok(None) => {}
+            Ok(Some(Request::Quit)) => break,
+            Ok(Some(Request::Status)) => {
+                conn.send_line(&shared.status_json());
+            }
+            Ok(Some(Request::Metrics)) => {
+                conn.send_line(&shared.metrics_json());
+            }
+            Ok(Some(Request::Submit(job))) => {
+                // arms the last-client-out shutdown (probe connections
+                // that never submit don't)
+                shared.saw_submission.store(true, Ordering::Release);
+                let tag = shared.next_tag.fetch_add(1, Ordering::Relaxed) + 1;
+                // hold the writer for the whole submit so this job's
+                // DONE (serve-loop thread) cannot overtake its ACK
+                let mut w = conn.writer.lock().unwrap();
+                conn.job_started();
+                shared.routes.lock().unwrap().insert(tag, Arc::clone(&conn));
+                let sent = submitter.submit_tagged(job.kind, job.source, job.deadline_s, tag);
+                let resp = match sent {
+                    Ok(()) => {
+                        shared.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                        Response::Ack(tag)
+                    }
+                    Err(e) => {
+                        shared.routes.lock().unwrap().remove(&tag);
+                        conn.job_finished();
+                        let reason = match e {
+                            SubmitError::QueueFull => {
+                                shared.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                                "busy"
+                            }
+                            SubmitError::Closed => "closed",
+                        };
+                        Response::Reject(reason.to_string())
+                    }
+                };
+                let mut buf = resp.to_line();
+                buf.push('\n');
+                let _ = w.write_all(buf.as_bytes());
+            }
+            Err(e) => {
+                // malformed line: reject, keep the connection
+                shared.counters.rejected_parse.fetch_add(1, Ordering::Relaxed);
+                conn.send_line(&Response::Reject(format!("parse {e}")).to_line());
+            }
+        }
+    }
+    // Half-close: stop reading, drop our submitter (so the
+    // coordinator can reach the drained state once every client is
+    // gone), deliver every outstanding DONE, then close for real.
+    drop(submitter);
+    conn.drain();
+    let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Both);
+    shared.conn_closed();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AdmissionConfig, AdmissionQueue};
+    use crate::util::json::Json;
+    use std::io::BufRead;
+
+    fn cfg(max_connections: usize) -> NetServerConfig {
+        NetServerConfig { listen: "127.0.0.1:0".to_string(), max_connections }
+    }
+
+    fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+        let s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(proto::parse_hello(&line), Some(PROTO_VERSION), "greeting: {line:?}");
+        (s, r)
+    }
+
+    fn read_line(r: &mut BufReader<TcpStream>) -> String {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+
+    #[test]
+    fn parse_reject_keeps_connection_and_status_counts_it() {
+        let (submitter, _queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+        let server = NetServer::start(&cfg(4), submitter, 100).unwrap();
+        let (mut s, mut r) = connect(server.local_addr());
+        writeln!(s, "frobnicate 1").unwrap();
+        let line = read_line(&mut r);
+        assert!(line.starts_with("REJECT parse"), "{line}");
+        // connection survived: STATUS still answers
+        writeln!(s, "STATUS").unwrap();
+        let j = Json::parse(&read_line(&mut r)).unwrap();
+        assert_eq!(j.get("rejected_parse").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("connections_active").unwrap().as_u64(), Some(1));
+        // METRICS before any published snapshot: empty object
+        writeln!(s, "METRICS").unwrap();
+        assert_eq!(read_line(&mut r), "{}");
+        server.publish_metrics("{\"completed\":7}");
+        writeln!(s, "METRICS").unwrap();
+        let j = Json::parse(&read_line(&mut r)).unwrap();
+        assert_eq!(j.get("completed").unwrap().as_u64(), Some(7));
+        writeln!(s, "QUIT").unwrap();
+        let mut line = String::new();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "closed after QUIT");
+        // a probe that never submitted must NOT shut the server down:
+        // a fresh connection still gets greeted and answered
+        let (mut s2, mut r2) = connect(server.local_addr());
+        writeln!(s2, "STATUS").unwrap();
+        let j = Json::parse(&read_line(&mut r2)).unwrap();
+        assert_eq!(j.get("connections_total").unwrap().as_u64(), Some(2));
+        writeln!(s2, "QUIT").unwrap();
+        let stats = server.finish();
+        assert_eq!(stats.connections_total, 2);
+        assert_eq!(stats.rejected_parse, 1);
+        assert_eq!(stats.accepted, 0);
+    }
+
+    #[test]
+    fn wire_backpressure_rejects_busy_and_done_routes_by_tag() {
+        // capacity-1 queue, no coordinator: the second submission is a
+        // deterministic wire-level REJECT busy
+        let acfg = AdmissionConfig { queue_capacity: 1, ..Default::default() };
+        let (submitter, _queue) = AdmissionQueue::live(&acfg, 1.0);
+        let server = NetServer::start(&cfg(4), submitter, 100).unwrap();
+        let (mut s, mut r) = connect(server.local_addr());
+        writeln!(s, "bfs 1").unwrap();
+        let ack = proto::parse_response(&read_line(&mut r)).unwrap();
+        let Response::Ack(tag) = ack else { panic!("want ACK, got {ack:?}") };
+        writeln!(s, "SUBMIT bfs 2").unwrap();
+        let reject = proto::parse_response(&read_line(&mut r)).unwrap();
+        assert_eq!(reject, Response::Reject("busy".to_string()));
+        assert_eq!(server.stats().in_flight, 1);
+        // dispatch the completion by hand (the serve loop's job in
+        // production) — DONE must reach this connection with the tag
+        let rec = JobRecord {
+            id: 0,
+            tag,
+            kind: "bfs",
+            submitted_s: 0.0,
+            started_s: 0.25,
+            finished_s: 1.25,
+            rounds: 4,
+            updates: 10,
+            edges: 20,
+        };
+        server.notify_done(&rec);
+        match proto::parse_response(&read_line(&mut r)).unwrap() {
+            Response::Done { job_id, rounds, queue_wait_s, exec_s } => {
+                assert_eq!((job_id, rounds), (tag, 4));
+                assert!((queue_wait_s - 0.25).abs() < 1e-6);
+                assert!((exec_s - 1.0).abs() < 1e-6);
+            }
+            other => panic!("want DONE, got {other:?}"),
+        }
+        writeln!(s, "QUIT").unwrap();
+        let mut line = String::new();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0);
+        let stats = server.finish();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.rejected_busy, 1);
+        assert_eq!(stats.done_sent, 1);
+        assert_eq!(stats.in_flight, 0);
+    }
+
+    #[test]
+    fn over_capacity_connection_rejected_busy() {
+        let (submitter, _queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+        let server = NetServer::start(&cfg(1), submitter, 100).unwrap();
+        let (mut s1, _r1) = connect(server.local_addr());
+        // second connection: greeted, rejected, closed
+        let (_s2, mut r2) = connect(server.local_addr());
+        assert_eq!(read_line(&mut r2), "REJECT busy");
+        let mut line = String::new();
+        assert_eq!(r2.read_line(&mut line).unwrap(), 0, "over-cap connection closed");
+        writeln!(s1, "QUIT").unwrap();
+        let stats = server.finish();
+        assert_eq!(stats.connections_total, 1, "rejected connection never counted as served");
+        assert_eq!(stats.rejected_busy, 1);
+    }
+
+    #[test]
+    fn non_network_records_are_ignored() {
+        let (submitter, _queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+        let server = NetServer::start(&cfg(2), submitter, 100).unwrap();
+        let rec = JobRecord {
+            id: 3,
+            tag: 0,
+            kind: "wcc",
+            submitted_s: 0.0,
+            started_s: 0.0,
+            finished_s: 1.0,
+            rounds: 1,
+            updates: 1,
+            edges: 1,
+        };
+        server.notify_done(&rec); // tag 0: no-op, not even done_dropped
+        let (mut s, _r) = connect(server.local_addr());
+        writeln!(s, "QUIT").unwrap();
+        let stats = server.finish();
+        assert_eq!(stats.done_dropped, 0);
+        assert_eq!(stats.done_sent, 0);
+    }
+}

@@ -1,0 +1,373 @@
+//! End-to-end tests of the TCP serving front-end: loopback server,
+//! concurrent clients, shared proto parser. Same convergence contract
+//! as `serve_e2e.rs` — mid-flight submissions reach the batch
+//! fixpoints (bit-identical for traversals, tolerance for the
+//! PageRank family; bit-identical outright when pre-queued) — plus the
+//! wire-level concerns: `REJECT busy` backpressure at queue
+//! saturation, `REJECT parse` without killing the connection, and the
+//! half-close shutdown drain that delivers every pending `DONE`.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+use tlsched::algorithms::DeltaProgram;
+use tlsched::coordinator::{
+    AdmissionConfig, AdmissionQueue, Coordinator, CoordinatorConfig, JobSubmitter,
+};
+use tlsched::engine::{JobSpec, JobState};
+use tlsched::graph::{generate, BlockPartition, Graph};
+use tlsched::net::{run_loadgen, Client, NetServer, NetServerConfig, Submitted};
+use tlsched::scheduler::{SchedulerConfig, SchedulerKind};
+use tlsched::trace::{JobKind, TraceJob};
+use tlsched::util::json::Json;
+
+fn setup(scale: u32) -> (Graph, BlockPartition) {
+    let g = generate::rmat(scale, 8, 77);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    (g, part)
+}
+
+fn coord<'g>(
+    g: &'g Graph,
+    part: &'g BlockPartition,
+    workers: usize,
+    shards: usize,
+) -> Coordinator<'g> {
+    let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    cfg.workers = workers;
+    cfg.shards = shards;
+    Coordinator::new(g, part, cfg)
+}
+
+fn start_server(g: &Graph, submitter: JobSubmitter) -> NetServer {
+    let cfg = NetServerConfig { listen: "127.0.0.1:0".to_string(), max_connections: 16 };
+    NetServer::start(&cfg, submitter, g.num_vertices() as u32).unwrap()
+}
+
+fn sort_key(j: &JobState) -> (&'static str, u32) {
+    (j.program.name(), j.spec.source)
+}
+
+/// Exact for traversals (unique schedule-independent fixpoint),
+/// within program tolerance for the PageRank family.
+fn assert_fixpoints_match(batch: &[JobState], serve: &[JobState]) {
+    assert_eq!(batch.len(), serve.len());
+    let mut b: Vec<&JobState> = batch.iter().collect();
+    let mut s: Vec<&JobState> = serve.iter().collect();
+    b.sort_by_key(|j| sort_key(j));
+    s.sort_by_key(|j| sort_key(j));
+    for (b, s) in b.iter().zip(&s) {
+        assert_eq!(sort_key(b), sort_key(s), "jobs pair up by (kind, source)");
+        assert!(s.converged);
+        let exact = matches!(b.spec.kind, JobKind::Sssp | JobKind::Bfs | JobKind::Wcc);
+        if exact {
+            assert_eq!(b.values, s.values, "{}: exact fixpoint", b.program.name());
+        } else {
+            let tol = b.program.value_tolerance();
+            for (x, y) in b.values.iter().zip(&s.values) {
+                assert_eq!(x.is_finite(), y.is_finite());
+                if x.is_finite() {
+                    assert!((x - y).abs() < tol, "{}: {x} vs {y}", b.program.name());
+                }
+            }
+        }
+    }
+}
+
+/// Two concurrent clients trickle disjoint job sets over TCP while
+/// earlier jobs are mid-iteration; everything must converge to the
+/// batch fixpoints and every client gets exactly its own DONEs.
+#[test]
+fn tcp_mid_flight_submissions_converge_to_batch_fixpoints() {
+    let (g, part) = setup(11);
+    let specs = vec![
+        JobSpec::new(JobKind::PageRank, 0),
+        JobSpec::new(JobKind::Sssp, 10),
+        JobSpec::new(JobKind::Bfs, 3),
+        JobSpec::new(JobKind::Wcc, 0),
+        JobSpec::new(JobKind::Ppr, 17),
+    ];
+    let (bm, batch_jobs) = coord(&g, &part, 2, 1).run_batch_collect(&specs);
+    assert_eq!(bm.completed(), 5);
+
+    let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+    let barrier = Arc::new(Barrier::new(2));
+    let halves: Vec<Vec<JobSpec>> = vec![
+        specs.iter().step_by(2).cloned().collect(),
+        specs.iter().skip(1).step_by(2).cloned().collect(),
+    ];
+    let clients: Vec<_> = halves
+        .into_iter()
+        .map(|half| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = Client::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+                barrier.wait(); // both connected before either submits
+                let mut ids = Vec::new();
+                for s in &half {
+                    std::thread::sleep(Duration::from_millis(5)); // mid-flight joins
+                    match c.submit(s.kind, s.source, None).unwrap() {
+                        Submitted::Accepted(id) => ids.push(id),
+                        Submitted::Rejected(r) => panic!("rejected: {r}"),
+                    }
+                }
+                let mut done_ids: Vec<u64> =
+                    ids.iter().map(|_| c.wait_done().unwrap().job_id).collect();
+                let leftovers = c.quit().unwrap();
+                assert!(leftovers.is_empty(), "all DONEs consumed before QUIT");
+                done_ids.sort_unstable();
+                ids.sort_unstable();
+                assert_eq!(done_ids, ids, "a client sees exactly its own completions");
+                ids.len()
+            })
+        })
+        .collect();
+
+    let mut srv = coord(&g, &part, 2, 1);
+    let (sm, serve_jobs) =
+        srv.serve_notify_collect(&mut queue, 0.0, |_| {}, |rec| server.notify_done(rec));
+    let submitted: usize = clients.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(submitted, 5);
+    assert_eq!(sm.completed(), 5);
+    assert!(sm.drained);
+    let stats = server.finish();
+    assert_eq!(stats.connections_total, 2);
+    assert_eq!(stats.accepted, 5);
+    assert_eq!(stats.done_sent, 5);
+    assert_eq!((stats.rejected_parse, stats.rejected_busy, stats.done_dropped), (0, 0, 0));
+    assert_fixpoints_match(&batch_jobs, &serve_jobs);
+}
+
+/// All jobs queued over TCP before the serve loop starts: serve
+/// replays the exact batch round sequence, so fixpoints are
+/// bit-identical — including the PageRank family, and on the sharded
+/// runtime too.
+#[test]
+fn tcp_prequeued_matches_batch_bitwise_sharded_and_unsharded() {
+    let (g, part) = setup(9);
+    let specs = vec![
+        JobSpec::new(JobKind::PageRank, 0),
+        JobSpec::new(JobKind::Sssp, 10),
+        JobSpec::new(JobKind::Wcc, 0),
+        JobSpec::new(JobKind::Bfs, 3),
+        JobSpec::new(JobKind::Ppr, 17),
+    ];
+    for shards in [1usize, 2] {
+        let (bm, batch_jobs) = coord(&g, &part, 2, shards).run_batch_collect(&specs);
+        assert_eq!(bm.completed(), 5);
+
+        let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        let server = start_server(&g, submitter);
+        let addr = server.local_addr().to_string();
+        let client_specs = specs.clone();
+        let client = std::thread::spawn(move || {
+            let mut c = Client::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+            let mut ids = Vec::new();
+            for s in &client_specs {
+                match c.submit(s.kind, s.source, None).unwrap() {
+                    Submitted::Accepted(id) => ids.push(id),
+                    Submitted::Rejected(r) => panic!("rejected: {r}"),
+                }
+            }
+            for _ in &ids {
+                c.wait_done().unwrap();
+            }
+            c.quit().unwrap();
+        });
+        // hold the serve loop until every submission is queued, so the
+        // round sequence replays the batch exactly
+        while server.stats().accepted < 5 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut srv = coord(&g, &part, 2, shards);
+        let (sm, serve_jobs) =
+            srv.serve_notify_collect(&mut queue, 0.0, |_| {}, |rec| server.notify_done(rec));
+        client.join().unwrap();
+        server.finish();
+        assert_eq!(sm.completed(), 5, "shards={shards}");
+        assert!(sm.drained);
+        assert_eq!(batch_jobs.len(), serve_jobs.len());
+        for (b, s) in batch_jobs.iter().zip(&serve_jobs) {
+            assert_eq!(b.spec.kind, s.spec.kind, "admission preserved submission order");
+            assert_eq!(b.updates, s.updates, "{}: work counters", b.program.name());
+            assert_eq!(b.rounds, s.rounds, "{}: round counts", b.program.name());
+            assert_eq!(b.values, s.values, "{}: bit-identical", b.program.name());
+            assert_eq!(b.deltas, s.deltas, "{}: deltas bit-identical", b.program.name());
+        }
+    }
+}
+
+/// Saturating `--queue-capacity` surfaces as wire-level `REJECT busy`
+/// — deterministically, without ever blocking the accept loop (a
+/// second client can still connect and query STATUS mid-saturation).
+#[test]
+fn tcp_backpressure_surfaces_reject_busy_on_the_wire() {
+    let (g, part) = setup(8);
+    let acfg = AdmissionConfig { queue_capacity: 2, ..Default::default() };
+    let (submitter, mut queue) = AdmissionQueue::live(&acfg, 1000.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+    let (saturated_tx, saturated_rx) = std::sync::mpsc::channel();
+    let client_addr = addr.clone();
+    let client = std::thread::spawn(move || {
+        let mut c = Client::connect_retry(&client_addr, Duration::from_secs(5)).unwrap();
+        // nothing drains yet (the serve loop starts later): exactly
+        // capacity submissions are ACKed, the rest REJECT busy
+        let outcomes: Vec<Submitted> =
+            (0..6u32).map(|i| c.submit(JobKind::Bfs, i * 7, None).unwrap()).collect();
+        saturated_tx.send(()).unwrap();
+        let acked = outcomes.iter().filter(|o| matches!(o, Submitted::Accepted(_))).count();
+        for _ in 0..acked {
+            c.wait_done().unwrap();
+        }
+        c.quit().unwrap();
+        outcomes
+    });
+    saturated_rx.recv().unwrap();
+    // accept loop alive under saturation: a second connection answers
+    let mut probe = Client::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    let status = Json::parse(&probe.status().unwrap()).unwrap();
+    assert_eq!(status.get("rejected_busy").unwrap().as_u64(), Some(4));
+    assert_eq!(status.get("in_flight").unwrap().as_u64(), Some(2));
+    probe.quit().unwrap();
+
+    let mut srv = coord(&g, &part, 1, 1);
+    let m = srv.serve_notify(&mut queue, 0.0, |_| {}, |rec| server.notify_done(rec));
+    let outcomes = client.join().unwrap();
+    let rejected: Vec<String> = outcomes
+        .iter()
+        .filter_map(|o| match o {
+            Submitted::Rejected(r) => Some(r.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(rejected, vec!["busy"; 4], "queue saturation is a wire-level REJECT busy");
+    assert_eq!(m.completed(), 2);
+    assert_eq!(m.rejected, 4, "coordinator metrics agree with the wire");
+    assert!(m.drained);
+    let stats = server.finish();
+    assert_eq!(stats.accepted, 2);
+    assert_eq!(stats.rejected_busy, 4);
+    assert_eq!(stats.done_sent, 2);
+}
+
+/// Malformed lines get `REJECT parse <detail>` and the connection
+/// survives to submit valid work afterwards.
+#[test]
+fn tcp_malformed_lines_reject_parse_without_killing_connection() {
+    let (g, part) = setup(8);
+    let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+    let client = std::thread::spawn(move || {
+        let mut c = Client::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        let bad = ["frobnicate 3", "bfs notanumber", "pagerank 0 soon", "bfs 1 2.0 x", "SUBMIT"];
+        let mut reasons = Vec::new();
+        for b in bad {
+            match c.submit_line(b).unwrap() {
+                Submitted::Rejected(r) => reasons.push(r),
+                Submitted::Accepted(id) => panic!("'{b}' accepted as {id}"),
+            }
+        }
+        // the same socket still takes valid work
+        match c.submit_line("bfs 3").unwrap() {
+            Submitted::Accepted(_) => {}
+            Submitted::Rejected(r) => panic!("valid line rejected: {r}"),
+        }
+        c.wait_done().unwrap();
+        c.quit().unwrap();
+        reasons
+    });
+    let mut srv = coord(&g, &part, 1, 1);
+    let m = srv.serve_notify(&mut queue, 0.0, |_| {}, |rec| server.notify_done(rec));
+    let reasons = client.join().unwrap();
+    assert_eq!(reasons.len(), 5);
+    assert!(reasons.iter().all(|r| r.starts_with("parse ")), "{reasons:?}");
+    assert_eq!(m.completed(), 1);
+    let stats = server.finish();
+    assert_eq!(stats.rejected_parse, 5);
+    assert_eq!(stats.accepted, 1);
+    assert_eq!(stats.connections_total, 1, "rejects never killed the connection");
+}
+
+/// `QUIT` right after submitting: the server half-closes — it stops
+/// reading but delivers every pending `DONE` before EOF, so no
+/// completion notification is ever dropped on a graceful shutdown.
+#[test]
+fn tcp_quit_drains_pending_done_notifications() {
+    let (g, part) = setup(9);
+    let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+    let client = std::thread::spawn(move || {
+        let mut c = Client::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        let mut ids = Vec::new();
+        for (kind, src) in [(JobKind::PageRank, 0), (JobKind::Bfs, 3), (JobKind::Wcc, 0)] {
+            match c.submit(kind, src, None).unwrap() {
+                Submitted::Accepted(id) => ids.push(id),
+                Submitted::Rejected(r) => panic!("rejected: {r}"),
+            }
+        }
+        // quit immediately, completions still pending
+        let dones = c.quit().unwrap();
+        (ids, dones)
+    });
+    let mut srv = coord(&g, &part, 2, 1);
+    let m = srv.serve_notify(&mut queue, 0.0, |_| {}, |rec| server.notify_done(rec));
+    let (mut ids, dones) = client.join().unwrap();
+    let mut done_ids: Vec<u64> = dones.iter().map(|d| d.job_id).collect();
+    ids.sort_unstable();
+    done_ids.sort_unstable();
+    assert_eq!(done_ids, ids, "every ACKed job's DONE arrived before close");
+    for d in &dones {
+        assert!(d.rounds > 0);
+        assert!(d.queue_wait_s >= 0.0);
+        assert!(d.exec_s >= 0.0);
+    }
+    assert_eq!(m.completed(), 3);
+    assert!(m.drained, "final snapshot carries the drained flag");
+    let stats = server.finish();
+    assert_eq!(stats.done_sent, 3);
+    assert_eq!(stats.done_dropped, 0);
+}
+
+/// The closed loop the CI smoke runs in-process: loadgen replays a
+/// trace over three connections and every job comes back with a
+/// latency sample.
+#[test]
+fn loadgen_closed_loop_over_loopback() {
+    let (g, part) = setup(8);
+    let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+    let jobs: Vec<TraceJob> = (0..12)
+        .map(|i| TraceJob {
+            id: i,
+            arrival_s: i as f64 * 20.0,
+            service_s: 1.0,
+            kind: JobKind::ALL[i as usize % 5],
+            source: (i * 31) as u32,
+        })
+        .collect();
+    let lg = std::thread::spawn(move || {
+        run_loadgen(&addr, &jobs, 3, 1.0e4, Duration::from_secs(5)).unwrap()
+    });
+    let mut srv = coord(&g, &part, 2, 1);
+    let m = srv.serve_notify(&mut queue, 0.0, |_| {}, |rec| server.notify_done(rec));
+    let report = lg.join().unwrap();
+    assert_eq!(report.connections, 3);
+    assert_eq!(report.sent, 12);
+    assert_eq!(report.acked, 12);
+    assert_eq!(report.done, 12);
+    assert_eq!(report.rejected_parse, 0);
+    assert_eq!(report.latencies_s.len(), 12, "every completion has a latency sample");
+    assert!(report.p_latency_s(50.0) > 0.0);
+    assert!(report.p_latency_s(95.0) >= report.p_latency_s(50.0));
+    assert!(report.completed_per_s() > 0.0);
+    assert!(Json::parse(&report.to_json().to_string()).is_ok());
+    assert_eq!(m.completed(), 12);
+    assert!(m.drained);
+    server.finish();
+}

@@ -55,6 +55,7 @@ fn serve_prequeued_matches_batch_bitwise() {
     let (sm, serve_jobs) = server.serve_collect(&mut queue, 0.0, |_| {});
     assert_eq!(sm.completed(), 5);
     assert_eq!(sm.rejected, 0);
+    assert!(sm.drained, "clean shutdown marks the final snapshot drained");
 
     assert_eq!(batch_jobs.len(), serve_jobs.len());
     for (b, s) in batch_jobs.iter().zip(&serve_jobs) {
@@ -150,6 +151,7 @@ fn serve_backpressure_rejects_at_queue_bound() {
     let m = server.serve(&mut queue, 0.0, |_| {});
     assert_eq!(m.completed(), 2);
     assert_eq!(m.rejected, 4);
+    assert!(m.drained, "shed jobs don't block the drain");
 }
 
 /// With an admission limit of 1, queued jobs wait for the resident job
