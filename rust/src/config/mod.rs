@@ -42,6 +42,17 @@ pub struct RunConfig {
     /// Scheduler shards of the sharded runtime (`[shard]` section;
     /// 1 = unsharded). Block ranges are balanced by structure bytes.
     pub shards: usize,
+    /// Deadline-overrun cancellation factor (`coordinator.deadline_grace`;
+    /// 0 = never cancel, 1 = cancel exactly at the deadline, 1.5 =
+    /// allow 50% grace past it).
+    pub deadline_grace: f64,
+    /// Wall-clock budget per scheduling round in seconds
+    /// (`coordinator.round_watchdog_s`; 0 = off) — rounds exceeding it
+    /// are logged and counted in `RunMetrics::slow_rounds`.
+    pub round_watchdog_s: f64,
+    /// Deterministic fault-injection spec (`[faults] spec`, same
+    /// grammar as `TLSCHED_FAULTS`); empty = injection disabled.
+    pub faults: String,
     /// Serving-mode settings (`[serve]` section).
     pub serve: ServeSettings,
 }
@@ -59,6 +70,10 @@ pub struct ServeSettings {
     /// (`serve.max_connections`); excess connections get
     /// `REJECT busy`.
     pub max_connections: usize,
+    /// Per-connection idle read timeout in seconds
+    /// (`serve.idle_timeout_s`; 0 = off) — silent peers are closed so
+    /// they stop pinning connection slots.
+    pub idle_timeout_s: f64,
 }
 
 impl Default for ServeSettings {
@@ -68,6 +83,7 @@ impl Default for ServeSettings {
             report_every_s: 0.0,
             listen: "127.0.0.1:7171".to_string(),
             max_connections: 64,
+            idle_timeout_s: 0.0,
         }
     }
 }
@@ -84,6 +100,9 @@ impl Default for RunConfig {
             max_concurrent: 32,
             workers: 0,
             shards: 1,
+            deadline_grace: 0.0,
+            round_watchdog_s: 0.0,
+            faults: String::new(),
             serve: ServeSettings::default(),
         }
     }
@@ -227,6 +246,27 @@ impl RunConfig {
         // [coordinator]
         cfg.max_concurrent = get_parse(&raw, "coordinator.max_concurrent", 32usize)?;
         cfg.workers = get_parse(&raw, "coordinator.workers", 0usize)?;
+        cfg.deadline_grace = get_parse(&raw, "coordinator.deadline_grace", 0.0f64)?;
+        if cfg.deadline_grace < 0.0 || !cfg.deadline_grace.is_finite() {
+            return Err(ConfigError::Invalid(
+                "coordinator.deadline_grace",
+                "must be finite and >= 0".into(),
+            ));
+        }
+        cfg.round_watchdog_s = get_parse(&raw, "coordinator.round_watchdog_s", 0.0f64)?;
+        if cfg.round_watchdog_s < 0.0 {
+            return Err(ConfigError::Invalid("coordinator.round_watchdog_s", "must be >= 0".into()));
+        }
+
+        // [faults] — validated against the injector grammar up front,
+        // so a typo fails the launch instead of silently not injecting
+        if let Some(spec) = raw.get("faults.spec") {
+            if !spec.is_empty() {
+                crate::util::faults::FaultPlan::parse(spec)
+                    .map_err(|_| ConfigError::Invalid("faults.spec", spec.clone()))?;
+            }
+            cfg.faults = spec.clone();
+        }
 
         // [shard]
         cfg.shards = get_parse(&raw, "shard.shards", cfg.shards)?;
@@ -262,6 +302,13 @@ impl RunConfig {
         if cfg.serve.max_connections == 0 {
             return Err(ConfigError::Invalid("serve.max_connections", "must be > 0".into()));
         }
+        cfg.serve.idle_timeout_s =
+            get_parse(&raw, "serve.idle_timeout_s", cfg.serve.idle_timeout_s)?;
+        if cfg.serve.idle_timeout_s < 0.0 {
+            return Err(ConfigError::Invalid("serve.idle_timeout_s", "must be >= 0".into()));
+        }
+        cfg.serve.admission.shed_overdue =
+            get_parse(&raw, "serve.shed_overdue", cfg.serve.admission.shed_overdue)?;
         Ok(cfg)
     }
 
@@ -415,6 +462,35 @@ max_concurrent = 4
         assert!(RunConfig::from_str("[serve]\nqueue_capacity = 0\n").is_err());
         assert!(RunConfig::from_str("[serve]\nmax_connections = 0\n").is_err());
         assert!(RunConfig::from_str("[serve]\nlisten = \"\"\n").is_err());
+    }
+
+    #[test]
+    fn robustness_knobs_parse() {
+        let cfg = RunConfig::from_str(
+            "[coordinator]\ndeadline_grace = 1.5\nround_watchdog_s = 0.25\n\n\
+             [serve]\nidle_timeout_s = 30\nshed_overdue = true\n\n\
+             [faults]\nspec = \"seed=7 panic=0@3 delay=2:0.5\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.deadline_grace, 1.5);
+        assert_eq!(cfg.round_watchdog_s, 0.25);
+        assert_eq!(cfg.serve.idle_timeout_s, 30.0);
+        assert!(cfg.serve.admission.shed_overdue);
+        assert_eq!(cfg.faults, "seed=7 panic=0@3 delay=2:0.5");
+        // defaults: everything off
+        let d = RunConfig::from_str("").unwrap();
+        assert_eq!(d.deadline_grace, 0.0);
+        assert_eq!(d.round_watchdog_s, 0.0);
+        assert_eq!(d.serve.idle_timeout_s, 0.0);
+        assert!(!d.serve.admission.shed_overdue);
+        assert!(d.faults.is_empty());
+        // invalid values rejected at parse time
+        assert!(RunConfig::from_str("[coordinator]\ndeadline_grace = -1\n").is_err());
+        assert!(RunConfig::from_str("[coordinator]\nround_watchdog_s = -0.1\n").is_err());
+        assert!(RunConfig::from_str("[serve]\nidle_timeout_s = -5\n").is_err());
+        assert!(RunConfig::from_str("[faults]\nspec = \"panic=oops\"\n").is_err());
+        // empty spec is explicitly fine (injection off)
+        assert!(RunConfig::from_str("[faults]\nspec = \"\"\n").unwrap().faults.is_empty());
     }
 
     #[test]

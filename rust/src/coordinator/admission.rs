@@ -80,6 +80,12 @@ pub struct AdmissionConfig {
     /// Default deadline factor over nominal service time, used when a
     /// trace is played through an SLO-aware queue.
     pub slo_factor: f64,
+    /// Shed still-queued jobs whose deadline has already passed instead
+    /// of admitting them (DESIGN.md §9): they never start, and retire
+    /// as [`JobOutcome::Shed`](super::metrics::JobOutcome::Shed) —
+    /// counted separately from channel-full `rejected`. Off by
+    /// default: deadlines then only order the queue.
+    pub shed_overdue: bool,
 }
 
 impl Default for AdmissionConfig {
@@ -88,6 +94,7 @@ impl Default for AdmissionConfig {
             policy: AdmissionPolicy::Fifo,
             queue_capacity: 256,
             slo_factor: 4.0,
+            shed_overdue: false,
         }
     }
 }
@@ -219,6 +226,14 @@ pub struct AdmissionQueue {
     /// `Correlation` policy shard-affine (see [`correlation_score`]).
     /// None for unsharded coordinators.
     shard_map: Option<Arc<[u32]>>,
+    /// When set, [`AdmissionQueue::poll`] moves pending jobs whose
+    /// deadline has already passed into `shed` instead of leaving them
+    /// admittable.
+    shed_overdue: bool,
+    /// Overdue jobs shed from the queue, awaiting pickup by the
+    /// controller ([`AdmissionQueue::take_shed`]), which retires them
+    /// as `Shed` records.
+    shed: Vec<Submission>,
 }
 
 impl AdmissionQueue {
@@ -233,6 +248,8 @@ impl AdmissionQueue {
             t0: Instant::now(),
             time_scale,
             shard_map: None,
+            shed_overdue: false,
+            shed: Vec::new(),
         }
     }
 
@@ -302,6 +319,7 @@ impl AdmissionQueue {
         let (tx, rx) = sync_channel(cfg.queue_capacity);
         let mut q = Self::empty(cfg.policy, time_scale);
         q.rx = Some(rx);
+        q.shed_overdue = cfg.shed_overdue;
         let sub = JobSubmitter {
             tx,
             t0: q.t0,
@@ -358,6 +376,31 @@ impl AdmissionQueue {
             let p = self.future.pop_front().unwrap();
             self.pending.push(p);
         }
+        if self.shed_overdue {
+            // Retain keeps arrival order, which `pop` relies on.
+            let shed = &mut self.shed;
+            self.pending.retain(|p| {
+                if p.sub.deadline_s.is_some_and(|d| d < now) {
+                    shed.push(p.sub.clone());
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+    }
+
+    /// Enable/disable overdue shedding after construction (trace and
+    /// batch queues; live queues inherit it from [`AdmissionConfig`]).
+    pub fn set_shed_overdue(&mut self, on: bool) {
+        self.shed_overdue = on;
+    }
+
+    /// Drain the jobs [`AdmissionQueue::poll`] shed as already-overdue.
+    /// The controller retires each as a `Shed` record so tagged
+    /// submissions still get their one terminal wire response.
+    pub fn take_shed(&mut self) -> Vec<Submission> {
+        std::mem::take(&mut self.shed)
     }
 
     /// Pick the next job to admit under the configured policy, given
@@ -744,6 +787,66 @@ mod tests {
         let (_g, part) = dummy_part();
         let s = q.pop(&[], &part).unwrap();
         assert!(s.submitted_s > 0.0, "submission stamped on the shared clock");
+    }
+
+    #[test]
+    fn overdue_pending_jobs_shed_when_enabled() {
+        let (_g, part) = dummy_part();
+        // Deadlines 10 and 100; at now=50 only the first is overdue.
+        let trace: Vec<TraceJob> = [10.0, 100.0]
+            .iter()
+            .enumerate()
+            .map(|(i, &service)| TraceJob {
+                id: i as u64,
+                arrival_s: 0.0,
+                service_s: service,
+                kind: JobKind::Bfs,
+                source: i as u32,
+            })
+            .collect();
+        let mut q = AdmissionQueue::from_trace(&trace, AdmissionPolicy::Fifo, 1.0);
+        q.set_shed_overdue(true);
+        q.poll(50.0);
+        let shed = q.take_shed();
+        assert_eq!(shed.len(), 1, "only the overdue job is shed");
+        assert_eq!(shed[0].source, 0);
+        assert_eq!(q.take_shed().len(), 0, "take_shed drains");
+        let s = q.pop(&[], &part).expect("the in-deadline job survives");
+        assert_eq!(s.source, 1);
+        assert!(q.is_exhausted());
+        // Shedding is separate from channel-full rejection.
+        assert_eq!(q.rejected(), 0);
+    }
+
+    #[test]
+    fn overdue_jobs_kept_when_shedding_disabled() {
+        let (_g, part) = dummy_part();
+        let trace = vec![TraceJob {
+            id: 0,
+            arrival_s: 0.0,
+            service_s: 1.0,
+            kind: JobKind::Bfs,
+            source: 4,
+        }];
+        let mut q = AdmissionQueue::from_trace(&trace, AdmissionPolicy::Fifo, 1.0);
+        q.poll(1e9);
+        assert!(q.take_shed().is_empty());
+        assert_eq!(q.pop(&[], &part).unwrap().source, 4, "default keeps overdue jobs");
+    }
+
+    #[test]
+    fn live_queue_sheds_overdue_from_config() {
+        let (_g, part) = dummy_part();
+        let cfg = AdmissionConfig { shed_overdue: true, ..Default::default() };
+        let (sub, mut q) = AdmissionQueue::live(&cfg, 1000.0);
+        sub.submit_tagged(JobKind::Wcc, 2, Some(1e-9), 5).unwrap();
+        sub.submit(JobKind::Bfs, 3).unwrap(); // deadline-less: never shed
+        std::thread::sleep(Duration::from_millis(2));
+        q.poll(q.now());
+        let shed = q.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].tag, 5, "shed submissions keep their tag");
+        assert_eq!(q.pop(&[], &part).unwrap().kind, JobKind::Bfs);
     }
 
     #[test]

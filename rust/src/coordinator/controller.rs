@@ -29,14 +29,16 @@
 //! probe sees the canonical serialized address stream.
 
 use super::admission::{AdmissionConfig, AdmissionPolicy, AdmissionQueue};
-use super::metrics::{JobRecord, RunMetrics};
+use super::metrics::{JobOutcome, JobRecord, RunMetrics};
 use crate::algorithms::DeltaProgram;
 use crate::engine::{JobSpec, JobState, NoProbe, Probe};
 use crate::graph::{BlockPartition, Graph};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::shard::{ShardMetrics, ShardedRuntime};
 use crate::trace::TraceJob;
+use crate::util::faults::JobPanic;
 use crate::util::threadpool::{PoolStats, ThreadPool};
+use std::panic::AssertUnwindSafe;
 use std::time::Instant;
 
 /// Coordinator-level configuration.
@@ -62,6 +64,18 @@ pub struct CoordinatorConfig {
     /// baselines fall back to the unsharded engine (logged). Probed
     /// (cache-simulated) runs always stay sequential and unsharded.
     pub shards: usize,
+    /// Deadline enforcement (DESIGN.md §9): a resident job whose
+    /// run-clock time since submission exceeds
+    /// `(deadline_s - submitted_s) * deadline_grace` is cancelled at
+    /// the next round boundary (`JobOutcome::Cancelled("deadline")`).
+    /// `0.0` disables enforcement — deadlines then only *order* the
+    /// queue under the `slo` policy, the pre-existing behavior. `1.0`
+    /// cancels exactly at the deadline; `> 1.0` grants grace.
+    pub deadline_grace: f64,
+    /// Round watchdog: rounds whose wall time exceeds this many
+    /// seconds are logged and counted in `RunMetrics::slow_rounds`.
+    /// `0.0` disables the watchdog.
+    pub round_watchdog_s: f64,
 }
 
 impl CoordinatorConfig {
@@ -72,6 +86,8 @@ impl CoordinatorConfig {
             max_rounds_per_job: 500_000,
             workers: 0,
             shards: 1,
+            deadline_grace: 0.0,
+            round_watchdog_s: 0.0,
         }
     }
 }
@@ -83,6 +99,9 @@ struct JobMeta {
     tag: u64,
     submitted_s: f64,
     started_s: f64,
+    /// Absolute run-clock deadline, when the submission carried one;
+    /// enforced only when `CoordinatorConfig::deadline_grace > 0`.
+    deadline_s: Option<f64>,
     updates_before: u64,
 }
 
@@ -232,6 +251,29 @@ impl<'g> Coordinator<'g> {
     ) -> StepOutcome {
         // -- admit ----------------------------------------------------
         q.poll(now);
+        // Jobs the queue shed as already-overdue retire immediately: a
+        // real id is allocated and an ordinary record (with its wire
+        // FAIL, via `on_complete`) is emitted, so the exactly-one-
+        // terminal-response contract holds for shed work too.
+        for sub in q.take_shed() {
+            let id = self.next_job_id as u64;
+            self.next_job_id += 1;
+            let fin = retire_now();
+            let rec = JobRecord {
+                id,
+                tag: sub.tag,
+                kind: sub.kind.name(),
+                submitted_s: sub.submitted_s,
+                started_s: fin,
+                finished_s: fin,
+                rounds: 0,
+                updates: 0,
+                edges: 0,
+                outcome: JobOutcome::Shed,
+            };
+            on_complete(&rec);
+            st.metrics.jobs.push(rec);
+        }
         while st.active.len() < cap {
             match q.pop(&st.active, self.part) {
                 Some(sub) => {
@@ -244,6 +286,7 @@ impl<'g> Coordinator<'g> {
                         // `now` was read; clamp so queue wait never goes
                         // negative
                         started_s: now.max(sub.submitted_s),
+                        deadline_s: sub.deadline_s,
                         updates_before: job.updates,
                     });
                     st.active.push(job);
@@ -255,20 +298,53 @@ impl<'g> Coordinator<'g> {
             return if q.is_exhausted() { StepOutcome::Drained } else { StepOutcome::Idle };
         }
         // -- round ----------------------------------------------------
-        let s = if parallel {
-            if let Some(rt) = &mut self.sharded {
-                rt.round(self.g, self.part, &mut st.active, &self.pool)
+        // Panic quarantine (DESIGN.md §9): a panic in a parallel or
+        // sharded round unwinds out of `scope_map` *before* the
+        // sequential merge phase touches any job lane, so on catch
+        // every resident job is bit-identical to its pre-round state.
+        // Failing the offending job and discarding the round is
+        // therefore exact for the survivors, not best-effort.
+        let round_t = Instant::now();
+        let sharded = &mut self.sharded;
+        let sched = &mut self.sched;
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if parallel {
+                if let Some(rt) = sharded {
+                    rt.round(self.g, self.part, &mut st.active, &self.pool)
+                } else {
+                    sched.round_parallel(self.g, self.part, &mut st.active, &self.pool)
+                }
             } else {
-                self.sched.round_parallel(self.g, self.part, &mut st.active, &self.pool)
+                sched.round(self.g, self.part, &mut st.active, probe)
             }
-        } else {
-            self.sched.round(self.g, self.part, &mut st.active, probe)
+        }));
+        let s = match caught {
+            Ok(s) => s,
+            Err(payload) => {
+                self.quarantine(st, payload, retire_now(), on_complete);
+                return StepOutcome::Worked;
+            }
         };
+        if self.cfg.round_watchdog_s > 0.0 {
+            let el = round_t.elapsed().as_secs_f64();
+            if el > self.cfg.round_watchdog_s {
+                st.metrics.slow_rounds += 1;
+                log::warn!(
+                    "round {} took {:.3}s (budget {:.3}s, {} resident jobs)",
+                    st.metrics.rounds,
+                    el,
+                    self.cfg.round_watchdog_s,
+                    st.active.len()
+                );
+            }
+        }
         st.metrics.totals.merge(s);
         st.metrics.rounds += 1;
         // -- retire ---------------------------------------------------
         // Lazy convergence check: scan only jobs that went quiet this
-        // round; a globally zero-update round is definitive.
+        // round; a globally zero-update round is definitive. The same
+        // scan enforces the runaway and deadline guards: convergence
+        // wins ties, cancellation lands within one round of the breach.
         let fin = retire_now();
         let before = st.active.len();
         let mut i = 0;
@@ -280,7 +356,31 @@ impl<'g> Coordinator<'g> {
                 || s.updates == 0
                 || (quiet && job.active_count_fast() == 0);
             let forced = job.rounds >= self.cfg.max_rounds_per_job as u64;
-            if done || forced {
+            let overdue = !done
+                && !forced
+                && self.cfg.deadline_grace > 0.0
+                && st.meta[i].deadline_s.is_some_and(|d| {
+                    let m = &st.meta[i];
+                    let budget = (d - m.submitted_s).max(0.0) * self.cfg.deadline_grace;
+                    fin > m.submitted_s + budget
+                });
+            if done || forced || overdue {
+                let outcome = if done {
+                    JobOutcome::Done
+                } else if forced {
+                    JobOutcome::Cancelled("max_rounds")
+                } else {
+                    JobOutcome::Cancelled("deadline")
+                };
+                if !done {
+                    log::warn!(
+                        "cancelling job {} ({}): {} after {} rounds",
+                        job.id,
+                        job.program.name(),
+                        outcome.reason().unwrap_or("?"),
+                        job.rounds
+                    );
+                }
                 let mut j = st.active.swap_remove(i);
                 let m = st.meta.swap_remove(i);
                 if done {
@@ -296,6 +396,7 @@ impl<'g> Coordinator<'g> {
                     rounds: j.rounds,
                     updates: j.updates,
                     edges: j.edges,
+                    outcome,
                 };
                 on_complete(&rec);
                 st.metrics.jobs.push(rec);
@@ -313,6 +414,95 @@ impl<'g> Coordinator<'g> {
             }
         }
         StepOutcome::Worked
+    }
+
+    /// Contain a panic that unwound out of a scheduling round.
+    ///
+    /// Soundness: both round engines run their parallel phase over
+    /// **task-local copies** and merge sequentially afterwards, and
+    /// `scope_map` re-throws a task panic before its caller reaches
+    /// that merge — so a caught payload here implies *no* job lane was
+    /// touched this round. With a typed [`JobPanic`] payload (what the
+    /// engine's own attribution and the fault injector throw) exactly
+    /// the offending job is failed and detached; the surviving jobs
+    /// retry the round next turn, bit-identical to never having
+    /// scheduled it. An unattributable payload fails the whole
+    /// resident cohort (fail-stop beats silently retrying a panic we
+    /// cannot pin to a job — it would loop forever).
+    fn quarantine(
+        &mut self,
+        st: &mut RunState,
+        payload: Box<dyn std::any::Any + Send>,
+        fin: f64,
+        on_complete: &mut dyn FnMut(&JobRecord),
+    ) {
+        let before = st.active.len();
+        match payload.downcast::<JobPanic>() {
+            Ok(jp) => {
+                log::error!(
+                    "job {} panicked in a block task ({}); quarantining, {} other jobs unaffected",
+                    jp.job_id,
+                    jp.reason,
+                    before.saturating_sub(1)
+                );
+                if let Some(i) = st.active.iter().position(|j| j.id == jp.job_id) {
+                    self.fail_job(st, i, JobOutcome::Failed(jp.reason), fin, on_complete);
+                } else {
+                    log::error!("panicked job {} not resident; round discarded", jp.job_id);
+                }
+            }
+            Err(payload) => {
+                let reason = panic_reason(payload.as_ref());
+                log::error!(
+                    "unattributable panic in scheduling round ({reason}); failing all {before} resident jobs"
+                );
+                while !st.active.is_empty() {
+                    self.fail_job(
+                        st,
+                        0,
+                        JobOutcome::Failed(format!("panic: {reason}")),
+                        fin,
+                        on_complete,
+                    );
+                }
+            }
+        }
+        if st.active.len() < before {
+            self.sched.detach_jobs(st.active.len());
+            if let Some(rt) = &mut self.sharded {
+                rt.detach_jobs(st.active.len());
+            }
+        }
+    }
+
+    /// Remove the resident job at `i` and retire it with `outcome`.
+    fn fail_job(
+        &mut self,
+        st: &mut RunState,
+        i: usize,
+        outcome: JobOutcome,
+        fin: f64,
+        on_complete: &mut dyn FnMut(&JobRecord),
+    ) {
+        let j = st.active.swap_remove(i);
+        let m = st.meta.swap_remove(i);
+        let rec = JobRecord {
+            id: j.id as u64,
+            tag: m.tag,
+            kind: j.program.name(),
+            submitted_s: m.submitted_s,
+            started_s: m.started_s,
+            finished_s: fin,
+            rounds: j.rounds,
+            updates: j.updates,
+            edges: j.edges,
+            outcome,
+        };
+        on_complete(&rec);
+        st.metrics.jobs.push(rec);
+        if st.collect {
+            st.retired.push(j);
+        }
     }
 
     /// Close out a run: drain scheduler plan time, stamp wall-clock
@@ -592,6 +782,18 @@ impl<'g> Coordinator<'g> {
     }
 }
 
+/// Best-effort human-readable reason from an arbitrary panic payload
+/// (`panic!` literals are `&str`, formatted panics are `String`).
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -864,6 +1066,156 @@ mod tests {
         // batch runs stay unmarked
         let mb = coord.run_batch(&[JobSpec::new(JobKind::Bfs, 1)]);
         assert!(!mb.drained);
+    }
+
+    #[test]
+    fn quarantine_fails_offending_job_then_cohort() {
+        // Attribution surface of the panic quarantine, driven directly:
+        // a typed JobPanic payload fails exactly the named job; an
+        // unattributable payload fail-stops the whole resident cohort.
+        // (The end-to-end path — a real panic unwinding out of
+        // scope_map — is covered by tests/chaos_e2e.rs.)
+        let (g, part) = setup();
+        let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let (sub, mut q) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        sub.submit_tagged(JobKind::PageRank, 0, None, 70).unwrap();
+        sub.submit_tagged(JobKind::PageRank, 9, None, 71).unwrap();
+        drop(sub);
+        let mut st = RunState::new(false);
+        let retire = || 1.0f64;
+        let mut recs: Vec<JobRecord> = Vec::new();
+        let out = coord.step(
+            &mut q,
+            &mut st,
+            32,
+            0.0,
+            true,
+            &mut NoProbe,
+            &retire,
+            &mut |r| recs.push(r.clone()),
+        );
+        assert!(matches!(out, StepOutcome::Worked));
+        assert_eq!(st.active.len(), 2, "pagerank does not converge in one round");
+        coord.quarantine(
+            &mut st,
+            Box::new(JobPanic { job_id: 0, reason: "injected".into() }),
+            2.0,
+            &mut |r| recs.push(r.clone()),
+        );
+        assert_eq!(st.active.len(), 1, "only the offending job is removed");
+        assert_eq!(st.active[0].id, 1);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].tag, 70);
+        assert_eq!(recs[0].outcome, JobOutcome::Failed("injected".into()));
+        // Unattributable payload: fail-stop the remaining cohort.
+        coord.quarantine(&mut st, Box::new("boom".to_string()), 3.0, &mut |r| {
+            recs.push(r.clone())
+        });
+        assert!(st.active.is_empty());
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].tag, 71);
+        assert_eq!(recs[1].outcome, JobOutcome::Failed("panic: boom".into()));
+        assert_eq!(st.metrics.failed(), 2);
+        assert_eq!(st.metrics.completed(), 0);
+    }
+
+    #[test]
+    fn runaway_job_cancelled_at_max_rounds() {
+        let (g, part) = setup();
+        let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        cfg.max_rounds_per_job = 3;
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let m = coord.run_batch(&[JobSpec::new(JobKind::PageRank, 0)]);
+        assert_eq!(m.completed(), 0);
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(m.jobs[0].outcome, JobOutcome::Cancelled("max_rounds"));
+        assert!(m.jobs[0].rounds >= 3);
+    }
+
+    #[test]
+    fn deadline_breach_cancels_overdue_job() {
+        // deadline_grace = 1.0 cancels exactly at the deadline; a job
+        // with an (effectively) already-passed deadline is cancelled at
+        // the first round boundary, while the deadline-less job beside
+        // it completes untouched.
+        let (g, part) = setup();
+        let (sub, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        sub.submit_tagged(JobKind::PageRank, 0, Some(1e-9), 7).unwrap();
+        sub.submit_tagged(JobKind::Bfs, 3, None, 8).unwrap();
+        drop(sub);
+        let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        cfg.deadline_grace = 1.0;
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let mut failed_tags = Vec::new();
+        let m = coord.serve_notify(&mut queue, 0.0, |_| {}, |rec| {
+            if !rec.outcome.is_done() {
+                failed_tags.push(rec.tag);
+            }
+        });
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(failed_tags, vec![7], "the completion hook saw the cancellation");
+        let cj = m.jobs.iter().find(|j| j.tag == 7).unwrap();
+        assert_eq!(cj.outcome, JobOutcome::Cancelled("deadline"));
+        assert!(cj.rounds >= 1, "cancelled at a round boundary, within one round");
+        assert!(m.drained);
+    }
+
+    #[test]
+    fn deadline_grace_zero_never_cancels() {
+        // The default keeps the pre-existing behavior: deadlines order
+        // the queue but never kill work.
+        let (g, part) = setup();
+        let (sub, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        sub.submit_with(JobKind::Bfs, 3, Some(1e-9)).unwrap();
+        drop(sub);
+        let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let m = coord.serve(&mut queue, 0.0, |_| {});
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.cancelled(), 0);
+    }
+
+    #[test]
+    fn overdue_queued_jobs_shed_at_admission() {
+        let (g, part) = setup();
+        let acfg = AdmissionConfig { shed_overdue: true, ..Default::default() };
+        let (sub, mut queue) = AdmissionQueue::live(&acfg, 1000.0);
+        sub.submit_tagged(JobKind::PageRank, 0, Some(1e-9), 3).unwrap();
+        sub.submit_tagged(JobKind::Bfs, 3, None, 4).unwrap();
+        drop(sub);
+        let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let mut hook_tags = Vec::new();
+        let m = coord.serve_notify(&mut queue, 0.0, |_| {}, |rec| hook_tags.push(rec.tag));
+        assert_eq!(m.shed(), 1);
+        assert_eq!(m.completed(), 1);
+        hook_tags.sort_unstable();
+        assert_eq!(hook_tags, vec![3, 4], "shed jobs still get a completion event");
+        let sj = m.jobs.iter().find(|j| j.tag == 3).unwrap();
+        assert_eq!(sj.outcome, JobOutcome::Shed);
+        assert_eq!(sj.rounds, 0, "shed before ever running");
+        assert_eq!(sj.updates, 0);
+        assert!(sj.queueing_s() >= 0.0);
+        // shed is its own bucket, not channel backpressure
+        assert_eq!(m.rejected, 0);
+    }
+
+    #[test]
+    fn round_watchdog_counts_slow_rounds() {
+        let (g, part) = setup();
+        let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        cfg.round_watchdog_s = 1e-12; // every real round overruns this
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let m = coord.run_batch(&[JobSpec::new(JobKind::Bfs, 3)]);
+        assert!(m.rounds > 0);
+        assert_eq!(m.slow_rounds, m.rounds);
+        // watchdog off (default): nothing counted
+        let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+        let mut coord = Coordinator::new(&g, &part, cfg);
+        let m = coord.run_batch(&[JobSpec::new(JobKind::Bfs, 3)]);
+        assert_eq!(m.slow_rounds, 0);
     }
 
     #[test]

@@ -7,6 +7,51 @@ use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::util::threadpool::PoolStats;
 
+/// Terminal state of a job (DESIGN.md §9). Every job the coordinator
+/// ever accepted retires in exactly one of these; wire-level `REJECT`
+/// happens *before* acceptance and never produces a record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Converged normally.
+    Done,
+    /// Quarantined after a panic in one of its block tasks; the string
+    /// is the (sanitized) panic reason.
+    Failed(String),
+    /// Cancelled by policy — `"deadline"` (blew `deadline_s` by the
+    /// configured grace factor) or `"max_rounds"` (runaway guard).
+    Cancelled(&'static str),
+    /// Dropped from the admission queue before its first round because
+    /// its deadline had already passed (`shed_overdue`).
+    Shed,
+}
+
+impl JobOutcome {
+    pub fn is_done(&self) -> bool {
+        *self == JobOutcome::Done
+    }
+
+    /// Stable lowercase label for JSON export.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobOutcome::Done => "done",
+            JobOutcome::Failed(_) => "failed",
+            JobOutcome::Cancelled(_) => "cancelled",
+            JobOutcome::Shed => "shed",
+        }
+    }
+
+    /// Short reason string for non-`Done` outcomes — what `FAIL` lines
+    /// carry on the wire.
+    pub fn reason(&self) -> Option<&str> {
+        match self {
+            JobOutcome::Done => None,
+            JobOutcome::Failed(r) => Some(r),
+            JobOutcome::Cancelled(r) => Some(r),
+            JobOutcome::Shed => Some("shed"),
+        }
+    }
+}
+
 /// Lifecycle record of one job.
 #[derive(Debug, Clone)]
 pub struct JobRecord {
@@ -25,6 +70,10 @@ pub struct JobRecord {
     pub rounds: u64,
     pub updates: u64,
     pub edges: u64,
+    /// How the job retired. Latency/throughput aggregates only count
+    /// [`JobOutcome::Done`] records; the failure split is exported
+    /// alongside them.
+    pub outcome: JobOutcome,
 }
 
 impl JobRecord {
@@ -66,57 +115,86 @@ pub struct RunMetrics {
     /// snapshot carries. False for batch/replay runs and for periodic
     /// mid-run snapshots.
     pub drained: bool,
+    /// Rounds whose wall time exceeded the coordinator's
+    /// `round_watchdog_s` budget (0 when the watchdog is off).
+    pub slow_rounds: u64,
 }
 
 impl RunMetrics {
-    pub fn completed(&self) -> usize {
-        self.jobs.len()
+    fn done_jobs(&self) -> impl Iterator<Item = &JobRecord> {
+        self.jobs.iter().filter(|j| j.outcome.is_done())
     }
 
-    /// Jobs per hour of (virtual or wall) time span.
+    /// Jobs that converged normally. Failed/cancelled/shed jobs retire
+    /// into `jobs` too but are counted by their own accessors.
+    pub fn completed(&self) -> usize {
+        self.done_jobs().count()
+    }
+
+    /// Jobs quarantined after a block-task panic.
+    pub fn failed(&self) -> usize {
+        self.jobs.iter().filter(|j| matches!(j.outcome, JobOutcome::Failed(_))).count()
+    }
+
+    /// Jobs cancelled by deadline or runaway enforcement.
+    pub fn cancelled(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| matches!(j.outcome, JobOutcome::Cancelled(_)))
+            .count()
+    }
+
+    /// Jobs shed from the queue as already-overdue before starting.
+    pub fn shed(&self) -> usize {
+        self.jobs.iter().filter(|j| j.outcome == JobOutcome::Shed).count()
+    }
+
+    /// Completed jobs per hour of (virtual or wall) time span.
     pub fn throughput_per_hour(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let n = self.completed();
+        if n == 0 {
             return 0.0;
         }
         let span = self
-            .jobs
-            .iter()
+            .done_jobs()
             .map(|j| j.finished_s)
             .fold(0.0f64, f64::max)
             .max(1e-9);
-        self.jobs.len() as f64 * 3600.0 / span
+        n as f64 * 3600.0 / span
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let n = self.completed();
+        if n == 0 {
             return 0.0;
         }
-        self.jobs.iter().map(|j| j.latency_s()).sum::<f64>() / self.jobs.len() as f64
+        self.done_jobs().map(|j| j.latency_s()).sum::<f64>() / n as f64
     }
 
     pub fn p95_latency_s(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let xs: Vec<f64> = self.done_jobs().map(|j| j.latency_s()).collect();
+        if xs.is_empty() {
             // keep periodic serve snapshots valid JSON (NaN isn't)
             return 0.0;
         }
-        let xs: Vec<f64> = self.jobs.iter().map(|j| j.latency_s()).collect();
         percentile(&xs, 95.0)
     }
 
-    /// Mean seconds jobs spent waiting for admission (queue wait), the
-    /// non-execution half of latency.
+    /// Mean seconds completed jobs spent waiting for admission (queue
+    /// wait), the non-execution half of latency.
     pub fn mean_queue_wait_s(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let n = self.completed();
+        if n == 0 {
             return 0.0;
         }
-        self.jobs.iter().map(|j| j.queueing_s()).sum::<f64>() / self.jobs.len() as f64
+        self.done_jobs().map(|j| j.queueing_s()).sum::<f64>() / n as f64
     }
 
     pub fn p95_queue_wait_s(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let xs: Vec<f64> = self.done_jobs().map(|j| j.queueing_s()).collect();
+        if xs.is_empty() {
             return 0.0;
         }
-        let xs: Vec<f64> = self.jobs.iter().map(|j| j.queueing_s()).collect();
         percentile(&xs, 95.0)
     }
 
@@ -149,7 +227,11 @@ impl RunMetrics {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("completed", Json::num(self.completed() as f64)),
+            ("failed", Json::num(self.failed() as f64)),
+            ("cancelled", Json::num(self.cancelled() as f64)),
+            ("shed", Json::num(self.shed() as f64)),
             ("rounds", Json::num(self.rounds as f64)),
+            ("slow_rounds", Json::num(self.slow_rounds as f64)),
             ("block_loads", Json::num(self.totals.block_loads as f64)),
             ("dispatches", Json::num(self.totals.dispatches as f64)),
             ("updates", Json::num(self.totals.updates as f64)),
@@ -205,10 +287,11 @@ impl RunMetrics {
             (
                 "jobs",
                 Json::arr(self.jobs.iter().map(|j| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("id", Json::num(j.id as f64)),
                         ("tag", Json::num(j.tag as f64)),
                         ("kind", Json::str(j.kind)),
+                        ("outcome", Json::str(j.outcome.label())),
                         ("submitted_s", Json::num(j.submitted_s)),
                         ("started_s", Json::num(j.started_s)),
                         ("finished_s", Json::num(j.finished_s)),
@@ -216,7 +299,11 @@ impl RunMetrics {
                         ("updates", Json::num(j.updates as f64)),
                         ("latency_s", Json::num(j.latency_s())),
                         ("queue_wait_s", Json::num(j.queueing_s())),
-                    ])
+                    ];
+                    if let Some(r) = j.outcome.reason() {
+                        fields.push(("reason", Json::str(r)));
+                    }
+                    Json::obj(fields)
                 })),
             ),
         ])
@@ -238,6 +325,7 @@ mod tests {
             rounds: 3,
             updates: 100,
             edges: 500,
+            outcome: JobOutcome::Done,
         }
     }
 
@@ -333,6 +421,45 @@ mod tests {
         // sharded but idle: imbalance pegged at balanced
         m.shards.iter_mut().for_each(|s| s.updates = 0);
         assert_eq!(m.shard_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn outcome_split_counts_and_exports() {
+        let mut m = RunMetrics::default();
+        m.jobs = vec![
+            rec(0, 0.0, 0.0, 10.0),
+            JobRecord {
+                outcome: JobOutcome::Failed("injected panic at round 3".into()),
+                ..rec(1, 0.0, 0.0, 100.0)
+            },
+            JobRecord { outcome: JobOutcome::Cancelled("deadline"), ..rec(2, 0.0, 0.0, 5.0) },
+            JobRecord { outcome: JobOutcome::Shed, ..rec(3, 0.0, 20.0, 20.0) },
+        ];
+        m.slow_rounds = 2;
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.failed(), 1);
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(m.shed(), 1);
+        // Aggregates count Done only: span 10s, latency 10s — the
+        // failed job's 100s must not leak in.
+        assert!((m.throughput_per_hour() - 360.0).abs() < 1e-9);
+        assert!((m.mean_latency_s() - 10.0).abs() < 1e-9);
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("completed").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(parsed.get("failed").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(parsed.get("cancelled").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(parsed.get("shed").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(parsed.get("slow_rounds").unwrap().as_u64().unwrap(), 2);
+        let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs[0].get("outcome").unwrap().as_str(), Some("done"));
+        assert!(jobs[0].get("reason").is_none());
+        assert_eq!(jobs[1].get("outcome").unwrap().as_str(), Some("failed"));
+        assert_eq!(
+            jobs[1].get("reason").unwrap().as_str(),
+            Some("injected panic at round 3")
+        );
+        assert_eq!(jobs[2].get("reason").unwrap().as_str(), Some("deadline"));
+        assert_eq!(jobs[3].get("outcome").unwrap().as_str(), Some("shed"));
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub use admission::{
     AdmissionConfig, AdmissionPolicy, AdmissionQueue, JobSubmitter, SubmitError, Submission,
 };
 pub use controller::{Coordinator, CoordinatorConfig};
-pub use metrics::{JobRecord, RunMetrics};
+pub use metrics::{JobOutcome, JobRecord, RunMetrics};

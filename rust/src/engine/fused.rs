@@ -25,7 +25,12 @@
 //! (scatters leaving the block are buffered instead of applied), which
 //! is the same hook the sharded runtime ([`crate::shard`]) drains
 //! through its cross-shard exchange — `tests/shard_parity.rs` extends
-//! the parity contract across scheduler shards.
+//! the parity contract across scheduler shards. The chaos injector
+//! (`util::faults`) deliberately hooks the staged *task wrapper*
+//! (`run_block_task`), never this kernel: the kernel stays a pure,
+//! branch-free function of its inputs, so the fault gate costs the
+//! request path one cold check per block task and the probed/batch
+//! kernels nothing at all.
 
 use crate::algorithms::DeltaProgram;
 use super::exec::Probe;

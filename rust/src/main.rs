@@ -30,7 +30,9 @@ use tlsched::coordinator::{
 };
 use tlsched::engine::JobSpec;
 use tlsched::graph::BlockPartition;
-use tlsched::net::{proto, run_loadgen, Client, NetServer, NetServerConfig, Submitted};
+use tlsched::net::{
+    proto, run_loadgen_with, Client, NetServer, NetServerConfig, RetryPolicy, Submitted,
+};
 use tlsched::scheduler::{Scheduler, SchedulerConfig, SchedulerKind};
 use tlsched::trace::{self, JobKind, TraceConfig};
 use tlsched::util::args::ArgSpec;
@@ -38,6 +40,12 @@ use tlsched::util::logging;
 
 fn main() {
     logging::init();
+    // deterministic fault injection (chaos testing): a malformed spec
+    // is a launch error, not a silently-disabled injector
+    if let Err(e) = tlsched::util::faults::install_from_env() {
+        eprintln!("TLSCHED_FAULTS: {e}");
+        std::process::exit(2);
+    }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
     let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
@@ -86,6 +94,8 @@ fn common_spec(bin: &'static str, about: &'static str) -> ArgSpec {
         .opt("fused", "true", "fuse all jobs into one structure walk per block")
         .opt("workers", "0", "round-execution workers (0 = all cores)")
         .opt("shards", "1", "scheduler shards, byte-balanced block ranges (1 = unsharded)")
+        .opt("deadline-grace", "0", "cancel jobs past deadline*grace (0 = never cancel)")
+        .opt("round-watchdog-s", "0", "log+count rounds over this wall budget (0 = off)")
 }
 
 fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
@@ -170,6 +180,30 @@ fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
             std::process::exit(2);
         }
     }
+    if a.was_set("deadline-grace") {
+        cfg.deadline_grace = a.f64("deadline-grace");
+        if cfg.deadline_grace < 0.0 || !cfg.deadline_grace.is_finite() {
+            eprintln!("--deadline-grace must be finite and >= 0");
+            std::process::exit(2);
+        }
+    }
+    if a.was_set("round-watchdog-s") {
+        cfg.round_watchdog_s = a.f64("round-watchdog-s");
+    }
+    // config-file fault spec (env TLSCHED_FAULTS, installed at
+    // startup, takes precedence)
+    if !cfg.faults.is_empty() && !tlsched::util::faults::active() {
+        match tlsched::util::faults::FaultPlan::parse(&cfg.faults) {
+            Ok(plan) => {
+                tlsched::util::faults::install(plan);
+                tlsched::util::faults::arm();
+            }
+            Err(e) => {
+                eprintln!("[faults] spec: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     cfg
 }
 
@@ -208,6 +242,8 @@ fn cmd_run(argv: &[String]) -> i32 {
     let mut ccfg = CoordinatorConfig::new(cfg.scheduler.clone());
     ccfg.workers = cfg.workers;
     ccfg.shards = cfg.shards;
+    ccfg.deadline_grace = cfg.deadline_grace;
+    ccfg.round_watchdog_s = cfg.round_watchdog_s;
     let mut coord = Coordinator::new(&g, &part, ccfg);
     log::info!(
         "round execution on {} worker(s), {} shard(s), fused={}",
@@ -263,6 +299,8 @@ fn cmd_replay(argv: &[String]) -> i32 {
     ccfg.max_concurrent = a.usize("max-concurrent");
     ccfg.workers = cfg.workers;
     ccfg.shards = cfg.shards;
+    ccfg.deadline_grace = cfg.deadline_grace;
+    ccfg.round_watchdog_s = cfg.round_watchdog_s;
     let mut coord = Coordinator::new(&g, &part, ccfg);
     let m = coord.run_trace(&jobs, a.f64("time-scale"));
     println!(
@@ -290,6 +328,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("policy", "", "admission policy: fifo|slo|correlation (empty = config)")
         .opt("slo-factor", "0", "deadline factor over nominal service (0 = config)")
         .opt("report-every-s", "0", "periodic metrics-JSON cadence, run-clock seconds")
+        .opt("idle-timeout-s", "0", "close silent tcp peers after this many seconds (0 = off)")
+        .opt("shed-overdue", "false", "drop queued jobs already past their deadline")
         .opt("report", "", "write final metrics JSON to this path");
     let a = match spec.parse_from(argv) {
         Ok(a) => a,
@@ -298,6 +338,12 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let mut cfg = build_config(&a);
     if a.was_set("queue-capacity") && a.usize("queue-capacity") > 0 {
         cfg.serve.admission.queue_capacity = a.usize("queue-capacity");
+    }
+    if a.was_set("idle-timeout-s") {
+        cfg.serve.idle_timeout_s = a.f64("idle-timeout-s");
+    }
+    if a.was_set("shed-overdue") {
+        cfg.serve.admission.shed_overdue = a.parse("shed-overdue");
     }
     if !a.str("policy").is_empty() {
         cfg.serve.admission.policy = match AdmissionPolicy::from_name(a.str("policy")) {
@@ -399,6 +445,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
     ccfg.max_concurrent = a.usize("max-concurrent");
     ccfg.workers = cfg.workers;
     ccfg.shards = cfg.shards;
+    ccfg.deadline_grace = cfg.deadline_grace;
+    ccfg.round_watchdog_s = cfg.round_watchdog_s;
     let mut coord = Coordinator::new(&g, &part, ccfg);
     log::info!(
         "serving on {} worker(s), {} shard(s): policy={} queue_capacity={} time_scale={}",
@@ -413,9 +461,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
     });
     let (delivered, skipped) = producer.join().unwrap_or((0, 0));
     println!(
-        "serve done: completed={} rejected={} delivered={} skipped_lines={} \
+        "serve done: completed={} failed={} cancelled={} shed={} rejected={} \
+         delivered={} skipped_lines={} \
          throughput={:.1} jobs/h mean_latency={:.1}s mean_queue_wait={:.2}s sharing={:.2}",
         m.completed(),
+        m.failed(),
+        m.cancelled(),
+        m.shed(),
         m.rejected,
         delivered,
         skipped,
@@ -444,7 +496,11 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
     } else {
         cfg.serve.listen.clone()
     };
-    let ncfg = NetServerConfig { listen, max_connections: cfg.serve.max_connections };
+    let ncfg = NetServerConfig {
+        listen,
+        max_connections: cfg.serve.max_connections,
+        idle_timeout_s: cfg.serve.idle_timeout_s,
+    };
     let server = match NetServer::start(&ncfg, submitter, nv) {
         Ok(s) => s,
         Err(e) => {
@@ -457,6 +513,8 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
     ccfg.max_concurrent = a.usize("max-concurrent");
     ccfg.workers = cfg.workers;
     ccfg.shards = cfg.shards;
+    ccfg.deadline_grace = cfg.deadline_grace;
+    ccfg.round_watchdog_s = cfg.round_watchdog_s;
     let mut coord = Coordinator::new(&g, &part, ccfg);
     log::info!(
         "serving tcp on {} worker(s), {} shard(s): policy={} queue_capacity={} time_scale={}",
@@ -485,10 +543,14 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
     server.publish_metrics(&m.to_json().to_string());
     let stats = server.finish();
     println!(
-        "serve done: completed={} rejected={} drained={} connections={} acked={} \
-         rejected_busy={} rejected_parse={} done_sent={} done_dropped={} \
+        "serve done: completed={} failed={} cancelled={} shed={} rejected={} drained={} \
+         connections={} acked={} rejected_busy={} rejected_parse={} done_sent={} \
+         fail_sent={} done_dropped={} idle_closed={} \
          throughput={:.1} jobs/h mean_latency={:.1}s mean_queue_wait={:.2}s sharing={:.2}",
         m.completed(),
+        m.failed(),
+        m.cancelled(),
+        m.shed(),
         m.rejected,
         m.drained,
         stats.connections_total,
@@ -496,7 +558,9 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
         stats.rejected_busy,
         stats.rejected_parse,
         stats.done_sent,
+        stats.fail_sent,
         stats.done_dropped,
+        stats.idle_closed,
         m.throughput_per_hour(),
         m.mean_latency_s(),
         m.mean_queue_wait_s(),
@@ -514,6 +578,8 @@ fn cmd_submit(argv: &[String]) -> i32 {
     .opt("addr", "127.0.0.1:7171", "server address")
     .opt("file", "", "job-line file; '-' = stdin (default when no inline job)")
     .opt("connect-timeout-s", "5", "connection retry window, seconds")
+    .opt("retries", "0", "REJECT-busy re-attempts per job (exponential backoff)")
+    .opt("backoff-ms", "100", "base backoff between retries, doubled per attempt")
     .pos("job", "", "inline job line, e.g. 'pagerank 0'");
     let a = match spec.parse_from(argv) {
         Ok(a) => a,
@@ -548,20 +614,28 @@ fn cmd_submit(argv: &[String]) -> i32 {
             return 1;
         }
     };
+    let policy = RetryPolicy {
+        retries: a.parse("retries"),
+        backoff_ms: a.u64("backoff-ms"),
+        ..Default::default()
+    };
     let mut acked = 0u64;
     let mut rejected = 0u64;
+    let mut retried = 0u64;
     for line in lines.iter().map(|l| l.trim()) {
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        match client.submit_line(line) {
-            Ok(Submitted::Accepted(id)) => {
+        match client.submit_line_retry(line, policy) {
+            Ok((Submitted::Accepted(id), tries)) => {
                 println!("ACK {id}: {line}");
                 acked += 1;
+                retried += tries as u64;
             }
-            Ok(Submitted::Rejected(reason)) => {
+            Ok((Submitted::Rejected(reason), tries)) => {
                 eprintln!("REJECT {reason}: {line}");
                 rejected += 1;
+                retried += tries as u64;
             }
             Err(e) => {
                 eprintln!("error: {e}");
@@ -570,14 +644,22 @@ fn cmd_submit(argv: &[String]) -> i32 {
         }
     }
     let mut done = 0u64;
-    while done < acked {
+    let mut failed = 0u64;
+    let mut terminal = 0u64;
+    while terminal < acked {
         match client.wait_done() {
             Ok(c) => {
-                println!(
-                    "DONE {}: rounds={} queue_wait={:.3}s exec={:.3}s",
-                    c.job_id, c.rounds, c.queue_wait_s, c.exec_s
-                );
-                done += 1;
+                if let Some(reason) = &c.fail_reason {
+                    println!("FAIL {}: {reason}", c.job_id);
+                    failed += 1;
+                } else {
+                    println!(
+                        "DONE {}: rounds={} queue_wait={:.3}s exec={:.3}s",
+                        c.job_id, c.rounds, c.queue_wait_s, c.exec_s
+                    );
+                    done += 1;
+                }
+                terminal += 1;
             }
             Err(e) => {
                 eprintln!("error: {e}");
@@ -586,8 +668,8 @@ fn cmd_submit(argv: &[String]) -> i32 {
         }
     }
     let _ = client.quit();
-    println!("submitted={acked} rejected={rejected} completed={done}");
-    if acked == 0 && rejected > 0 {
+    println!("submitted={acked} rejected={rejected} retried={retried} completed={done} failed={failed}");
+    if (acked == 0 && rejected > 0) || (failed > 0 && done == 0) {
         1
     } else {
         0
@@ -607,6 +689,8 @@ fn cmd_loadgen(argv: &[String]) -> i32 {
     .opt("seed", "2018", "generated trace seed")
     .opt("time-scale", "60", "virtual seconds per wall second (trace pacing)")
     .opt("connect-timeout-s", "10", "connection retry window, seconds")
+    .opt("retries", "0", "post-trace REJECT-busy retry rounds (exponential backoff)")
+    .opt("backoff-ms", "100", "base backoff between retry rounds, doubled per round")
     .opt("out", "", "write the latency report JSON here (e.g. BENCH_serve.json)");
     let a = match spec.parse_from(argv) {
         Ok(a) => a,
@@ -633,16 +717,31 @@ fn cmd_loadgen(argv: &[String]) -> i32 {
         a.f64("time-scale"),
     );
     let timeout = std::time::Duration::from_secs_f64(a.f64("connect-timeout-s"));
-    match run_loadgen(a.str("addr"), &jobs, connections, a.f64("time-scale"), timeout) {
+    let policy = RetryPolicy {
+        retries: a.parse("retries"),
+        backoff_ms: a.u64("backoff-ms"),
+        seed: a.u64("seed"),
+    };
+    match run_loadgen_with(
+        a.str("addr"),
+        &jobs,
+        connections,
+        a.f64("time-scale"),
+        timeout,
+        policy,
+    ) {
         Ok(r) => {
             println!(
-                "loadgen done: sent={} acked={} rejected_busy={} rejected_parse={} done={} \
+                "loadgen done: sent={} acked={} rejected_busy={} rejected_parse={} retried={} \
+                 done={} failed={} \
                  p50={:.3}s p95={:.3}s p99={:.3}s completed/s={:.2} wall={:.1}s",
                 r.sent,
                 r.acked,
                 r.rejected_busy,
                 r.rejected_parse,
+                r.retried,
                 r.done,
+                r.failed,
                 r.p_latency_s(50.0),
                 r.p_latency_s(95.0),
                 r.p_latency_s(99.0),

@@ -2,11 +2,13 @@
 //! interactive submission (`tlsched submit`, tests) and the closed-loop
 //! [`run_loadgen`] harness behind `tlsched loadgen`.
 //!
-//! The wire allows `DONE` notifications to arrive *between* a request
-//! and its `ACK`/`REJECT` (completions are pushed by the serve loop,
-//! not polled), so [`Client::request`] buffers any `DONE` it reads
-//! while waiting for a direct response; [`Client::wait_done`] drains
-//! that buffer first.
+//! The wire allows `DONE`/`FAIL` notifications to arrive *between* a
+//! request and its `ACK`/`REJECT` (completions are pushed by the serve
+//! loop, not polled), so [`Client::request`] buffers any terminal
+//! notification it reads while waiting for a direct response;
+//! [`Client::wait_done`] drains that buffer first. Transient failures
+//! — connect refusals and `REJECT busy` — retry under a bounded
+//! exponential-backoff [`RetryPolicy`] with deterministic jitter.
 //!
 //! `run_loadgen` replays a trace over N concurrent connections with
 //! the exact [`trace::play_live`] pacing the live source uses: one
@@ -19,10 +21,12 @@
 use super::proto::{self, Response, PROTO_VERSION};
 use crate::trace::{self, JobKind, TraceJob};
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
 use crate::util::stats::percentile;
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -35,13 +39,72 @@ pub enum ClientError {
     Proto(String),
 }
 
-/// A `DONE` notification, decoded.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// A terminal job notification, decoded: a `DONE` line, or a `FAIL`
+/// line (then `fail_reason` is set and the numeric fields are the
+/// server's best effort — zero for shed jobs that never ran).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Completion {
     pub job_id: u64,
     pub rounds: u64,
     pub queue_wait_s: f64,
     pub exec_s: f64,
+    /// `Some(reason)` iff the job terminated with `FAIL`.
+    pub fail_reason: Option<String>,
+}
+
+impl Completion {
+    fn done(job_id: u64, rounds: u64, queue_wait_s: f64, exec_s: f64) -> Completion {
+        Completion { job_id, rounds, queue_wait_s, exec_s, fail_reason: None }
+    }
+
+    fn failed(job_id: u64, reason: String) -> Completion {
+        Completion {
+            job_id,
+            rounds: 0,
+            queue_wait_s: 0.0,
+            exec_s: 0.0,
+            fail_reason: Some(reason),
+        }
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.fail_reason.is_some()
+    }
+}
+
+/// Bounded exponential backoff with deterministic jitter, shared by
+/// connect retries and `REJECT busy` resubmission (`--retries` /
+/// `--backoff-ms` on `tlsched submit` and `tlsched loadgen`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first try; 0 disables retrying.
+    pub retries: u32,
+    /// Base backoff in milliseconds, doubled per attempt and capped at
+    /// one minute.
+    pub backoff_ms: u64,
+    /// Seed for the jitter RNG — same seed, same sleep schedule.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { retries: 0, backoff_ms: 100, seed: 1 }
+    }
+}
+
+impl RetryPolicy {
+    /// Sleep duration before re-attempt `attempt` (0-based): uniform
+    /// jitter over `[base/2, base]` where `base = backoff_ms << attempt`,
+    /// capped at 60s so a long retry ladder cannot overflow or stall.
+    pub fn backoff(&self, attempt: u32, rng: &mut Pcg32) -> Duration {
+        let base = self
+            .backoff_ms
+            .saturating_mul(1u64 << attempt.min(16))
+            .clamp(1, 60_000);
+        let half = base / 2;
+        let jitter = half + rng.gen_range((base - half + 1) as u32) as u64;
+        Duration::from_millis(jitter)
+    }
 }
 
 /// Outcome of one submission.
@@ -105,6 +168,27 @@ impl Client {
         Self::from_stream(connect_stream_retry(addr, timeout)?)
     }
 
+    /// Connect with bounded exponential backoff: `policy.retries`
+    /// re-attempts after the first failure, sleeping
+    /// [`RetryPolicy::backoff`] between them.
+    pub fn connect_backoff(addr: &str, policy: RetryPolicy) -> Result<Client, ClientError> {
+        let mut rng = Pcg32::new(policy.seed, 0);
+        let mut attempt = 0u32;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    return Self::from_stream(s);
+                }
+                Err(e) if attempt >= policy.retries => return Err(e.into()),
+                Err(_) => {
+                    std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
     fn from_stream(stream: TcpStream) -> Result<Client, ClientError> {
         let mut reader = BufReader::new(stream.try_clone()?);
         read_hello(&mut reader)?;
@@ -120,9 +204,9 @@ impl Client {
     }
 
     /// Send one raw request line and return its direct response,
-    /// buffering any `DONE` notifications that arrive first. Blank and
-    /// `#`-comment lines are refused here: the server skips them
-    /// without answering, so waiting for a response would hang.
+    /// buffering any `DONE`/`FAIL` notifications that arrive first.
+    /// Blank and `#`-comment lines are refused here: the server skips
+    /// them without answering, so waiting for a response would hang.
     pub fn request(&mut self, line: &str) -> Result<Response, ClientError> {
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
@@ -133,7 +217,10 @@ impl Client {
             let raw = self.read_line()?;
             match proto::parse_response(&raw).map_err(|e| ClientError::Proto(e.to_string()))? {
                 Response::Done { job_id, rounds, queue_wait_s, exec_s } => {
-                    self.buffered.push_back(Completion { job_id, rounds, queue_wait_s, exec_s });
+                    self.buffered.push_back(Completion::done(job_id, rounds, queue_wait_s, exec_s));
+                }
+                Response::Fail { job_id, reason } => {
+                    self.buffered.push_back(Completion::failed(job_id, reason));
                 }
                 resp => return Ok(resp),
             }
@@ -164,7 +251,31 @@ impl Client {
         }
     }
 
-    /// Block until the next `DONE` notification (buffered first).
+    /// Submit a raw job line, retrying `REJECT busy` with bounded
+    /// exponential backoff. Returns the final outcome plus the number
+    /// of retries consumed. Non-busy rejections (parse, closed) are
+    /// permanent and never retried.
+    pub fn submit_line_retry(
+        &mut self,
+        line: &str,
+        policy: RetryPolicy,
+    ) -> Result<(Submitted, u32), ClientError> {
+        let mut rng = Pcg32::new(policy.seed, 1);
+        let mut attempt = 0u32;
+        loop {
+            let out = self.submit_line(line)?;
+            match &out {
+                Submitted::Rejected(reason) if reason == "busy" && attempt < policy.retries => {
+                    std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    attempt += 1;
+                }
+                _ => return Ok((out, attempt)),
+            }
+        }
+    }
+
+    /// Block until the next terminal `DONE`/`FAIL` notification
+    /// (buffered first).
     pub fn wait_done(&mut self) -> Result<Completion, ClientError> {
         if let Some(c) = self.buffered.pop_front() {
             return Ok(c);
@@ -172,9 +283,10 @@ impl Client {
         let raw = self.read_line()?;
         match proto::parse_response(&raw).map_err(|e| ClientError::Proto(e.to_string()))? {
             Response::Done { job_id, rounds, queue_wait_s, exec_s } => {
-                Ok(Completion { job_id, rounds, queue_wait_s, exec_s })
+                Ok(Completion::done(job_id, rounds, queue_wait_s, exec_s))
             }
-            other => Err(ClientError::Proto(format!("expected DONE, got {other:?}"))),
+            Response::Fail { job_id, reason } => Ok(Completion::failed(job_id, reason)),
+            other => Err(ClientError::Proto(format!("expected DONE/FAIL, got {other:?}"))),
         }
     }
 
@@ -196,8 +308,8 @@ impl Client {
     }
 
     /// Send `QUIT` and drain: the server half-closes, delivering every
-    /// outstanding `DONE` before EOF — all of them (buffered included)
-    /// come back.
+    /// outstanding `DONE`/`FAIL` before EOF — all of them (buffered
+    /// included) come back.
     pub fn quit(mut self) -> Result<Vec<Completion>, ClientError> {
         self.writer.write_all(b"QUIT\n")?;
         let mut out: Vec<Completion> = self.buffered.drain(..).collect();
@@ -206,10 +318,14 @@ impl Client {
             if self.reader.read_line(&mut line)? == 0 {
                 break; // server closed after its drain
             }
-            if let Ok(Response::Done { job_id, rounds, queue_wait_s, exec_s }) =
-                proto::parse_response(&line)
-            {
-                out.push(Completion { job_id, rounds, queue_wait_s, exec_s });
+            match proto::parse_response(&line) {
+                Ok(Response::Done { job_id, rounds, queue_wait_s, exec_s }) => {
+                    out.push(Completion::done(job_id, rounds, queue_wait_s, exec_s));
+                }
+                Ok(Response::Fail { job_id, reason }) => {
+                    out.push(Completion::failed(job_id, reason));
+                }
+                _ => {}
             }
         }
         Ok(out)
@@ -228,6 +344,12 @@ pub struct LoadgenReport {
     pub rejected_other: u64,
     /// Completions received (`DONE` lines).
     pub done: u64,
+    /// Terminal failures received (`FAIL` lines: quarantined,
+    /// cancelled, or shed server-side).
+    pub failed: u64,
+    /// `REJECT busy` submissions re-fired under the retry policy
+    /// (each re-send counts once; also counted in `sent`).
+    pub retried: u64,
     /// End-to-end wall seconds, submit write → `DONE` receipt.
     pub latencies_s: Vec<f64>,
     pub wall_s: f64,
@@ -257,6 +379,8 @@ impl LoadgenReport {
             ("rejected_parse", Json::num(self.rejected_parse as f64)),
             ("rejected_other", Json::num(self.rejected_other as f64)),
             ("done", Json::num(self.done as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("retried", Json::num(self.retried as f64)),
             ("p50_latency_s", Json::num(self.p_latency_s(50.0))),
             ("p95_latency_s", Json::num(self.p_latency_s(95.0))),
             ("p99_latency_s", Json::num(self.p_latency_s(99.0))),
@@ -274,6 +398,8 @@ struct ConnOutcome {
     rejected_parse: u64,
     rejected_other: u64,
     done: u64,
+    failed: u64,
+    retried: u64,
     latencies_s: Vec<f64>,
 }
 
@@ -295,6 +421,21 @@ pub fn run_loadgen(
     time_scale: f64,
     connect_timeout: Duration,
 ) -> Result<LoadgenReport, ClientError> {
+    run_loadgen_with(addr, jobs, connections, time_scale, connect_timeout, RetryPolicy::default())
+}
+
+/// [`run_loadgen`] with an explicit retry policy: `REJECT busy`
+/// submissions are re-fired after the trace finishes, up to
+/// `policy.retries` rounds of bounded exponential backoff per
+/// connection (each re-send counts in `retried` and `sent`).
+pub fn run_loadgen_with(
+    addr: &str,
+    jobs: &[TraceJob],
+    connections: usize,
+    time_scale: f64,
+    connect_timeout: Duration,
+    policy: RetryPolicy,
+) -> Result<LoadgenReport, ClientError> {
     let n = connections.clamp(1, jobs.len().max(1));
     let t0 = Instant::now();
     let mut streams = Vec::with_capacity(n);
@@ -307,7 +448,11 @@ pub fn run_loadgen(
     let mut handles = Vec::with_capacity(n);
     for (c, (stream, reader)) in streams.into_iter().enumerate() {
         let sub: Vec<TraceJob> = jobs.iter().skip(c).step_by(n).cloned().collect();
-        handles.push(std::thread::spawn(move || conn_worker(stream, reader, &sub, time_scale)));
+        let mut pol = policy;
+        pol.seed = policy.seed.wrapping_add(c as u64); // de-sync sibling backoffs
+        handles.push(
+            std::thread::spawn(move || conn_worker(stream, reader, &sub, time_scale, pol)),
+        );
     }
     let mut report = LoadgenReport { connections: n, ..Default::default() };
     for h in handles {
@@ -318,6 +463,8 @@ pub fn run_loadgen(
         report.rejected_parse += out.rejected_parse;
         report.rejected_other += out.rejected_other;
         report.done += out.done;
+        report.failed += out.failed;
+        report.retried += out.retried;
         report.latencies_s.extend(out.latencies_s);
     }
     report.wall_s = t0.elapsed().as_secs_f64();
@@ -329,12 +476,18 @@ fn conn_worker(
     mut reader: BufReader<TcpStream>,
     jobs: &[TraceJob],
     time_scale: f64,
+    policy: RetryPolicy,
 ) -> ConnOutcome {
-    // submit timestamps, pushed by the writer in wire order; the
-    // reader pops one per ACK/REJECT (responses come back in request
-    // order on a connection)
-    let pending: Arc<Mutex<VecDeque<Instant>>> = Arc::new(Mutex::new(VecDeque::new()));
+    // (submit timestamp, submit line) pairs, pushed by the writer in
+    // wire order; the reader pops one per ACK/REJECT (responses come
+    // back in request order on a connection). Busy-rejected lines land
+    // in `retry_q` for the post-trace retry rounds.
+    let pending: Arc<Mutex<VecDeque<(Instant, String)>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let retry_q: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let reader_done = Arc::new(AtomicBool::new(false));
     let pending_rx = Arc::clone(&pending);
+    let retry_rx = Arc::clone(&retry_q);
+    let done_rx = Arc::clone(&reader_done);
     let rdr = std::thread::spawn(move || {
         let mut out = ConnOutcome::default();
         let mut in_flight: HashMap<u64, Instant> = HashMap::new();
@@ -348,14 +501,17 @@ fn conn_worker(
             match proto::parse_response(&line) {
                 Ok(Response::Ack(id)) => {
                     out.acked += 1;
-                    if let Some(t) = pending_rx.lock().unwrap().pop_front() {
+                    if let Some((t, _)) = pending_rx.lock().unwrap().pop_front() {
                         in_flight.insert(id, t);
                     }
                 }
                 Ok(Response::Reject(reason)) => {
-                    pending_rx.lock().unwrap().pop_front();
+                    let popped = pending_rx.lock().unwrap().pop_front();
                     if reason == "busy" {
                         out.rejected_busy += 1;
+                        if let Some((_, l)) = popped {
+                            retry_rx.lock().unwrap().push(l);
+                        }
                     } else if reason.starts_with("parse") {
                         out.rejected_parse += 1;
                     } else {
@@ -368,9 +524,14 @@ fn conn_worker(
                         out.latencies_s.push(t.elapsed().as_secs_f64());
                     }
                 }
+                Ok(Response::Fail { job_id, .. }) => {
+                    out.failed += 1;
+                    in_flight.remove(&job_id); // a failure is no latency sample
+                }
                 Ok(Response::Json(_)) | Err(_) => {}
             }
         }
+        done_rx.store(true, Ordering::Release);
         out
     });
     // writer: fire SUBMIT lines on the trace clock, never waiting for
@@ -378,8 +539,8 @@ fn conn_worker(
     let mut w = stream;
     let mut sent = 0u64;
     trace::play_live(jobs, time_scale, |tj| {
-        pending.lock().unwrap().push_back(Instant::now());
         let line = format!("SUBMIT {} {}\n", tj.kind.name(), tj.source);
+        pending.lock().unwrap().push_back((Instant::now(), line.clone()));
         match w.write_all(line.as_bytes()) {
             Ok(()) => {
                 sent += 1;
@@ -388,9 +549,35 @@ fn conn_worker(
             Err(_) => false,
         }
     });
+    // bounded retry rounds for busy-rejected submissions: wait until
+    // every in-wire response has come back (so retry_q is settled),
+    // back off, re-fire the batch
+    let mut retried = 0u64;
+    if policy.retries > 0 {
+        let mut rng = Pcg32::new(policy.seed, 2);
+        for attempt in 0..policy.retries {
+            while !pending.lock().unwrap().is_empty() && !reader_done.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let batch: Vec<String> = std::mem::take(&mut *retry_q.lock().unwrap());
+            if batch.is_empty() || reader_done.load(Ordering::Acquire) {
+                break;
+            }
+            std::thread::sleep(policy.backoff(attempt, &mut rng));
+            for line in batch {
+                pending.lock().unwrap().push_back((Instant::now(), line.clone()));
+                if w.write_all(line.as_bytes()).is_err() {
+                    break;
+                }
+                sent += 1;
+                retried += 1;
+            }
+        }
+    }
     let _ = w.write_all(b"QUIT\n");
     let mut out = rdr.join().unwrap_or_default();
     out.sent = sent;
+    out.retried = retried;
     out
 }
 
@@ -410,17 +597,51 @@ mod tests {
             ..Default::default()
         };
         r.latencies_s = (1..=9).map(|i| i as f64 / 10.0).collect();
+        r.retried = 2;
+        r.failed = 1;
         assert!((r.p_latency_s(50.0) - 0.5).abs() < 1e-9);
         assert!(r.p_latency_s(95.0) >= r.p_latency_s(50.0));
         assert!((r.completed_per_s() - 3.0).abs() < 1e-9);
         let parsed = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(parsed.get("done").unwrap().as_u64(), Some(9));
         assert_eq!(parsed.get("rejected_parse").unwrap().as_u64(), Some(0));
+        assert_eq!(parsed.get("retried").unwrap().as_u64(), Some(2));
+        assert_eq!(parsed.get("failed").unwrap().as_u64(), Some(1));
         assert!(parsed.get("p95_latency_s").unwrap().as_f64().unwrap() > 0.0);
         // empty report stays JSON-safe (no NaN)
         let empty = LoadgenReport::default();
         assert_eq!(empty.p_latency_s(95.0), 0.0);
         assert_eq!(empty.completed_per_s(), 0.0);
         assert!(Json::parse(&empty.to_json().to_string()).is_ok());
+    }
+
+    #[test]
+    fn retry_backoff_bounded_jittered_deterministic() {
+        let pol = RetryPolicy { retries: 5, backoff_ms: 100, seed: 42 };
+        let mut a = Pcg32::new(pol.seed, 9);
+        let mut b = Pcg32::new(pol.seed, 9);
+        for attempt in 0..5 {
+            let base = 100u64 << attempt;
+            let d = pol.backoff(attempt, &mut a);
+            // jitter stays within [base/2, base]
+            assert!(d.as_millis() as u64 >= base / 2, "attempt {attempt}: {d:?}");
+            assert!(d.as_millis() as u64 <= base, "attempt {attempt}: {d:?}");
+            // same seed, same schedule
+            assert_eq!(d, pol.backoff(attempt, &mut b));
+        }
+        // the exponential ladder caps at 60s instead of overflowing
+        let mut rng = Pcg32::new(1, 0);
+        let d = pol.backoff(40, &mut rng);
+        assert!(d.as_millis() as u64 <= 60_000);
+    }
+
+    #[test]
+    fn completion_fail_constructor_and_predicate() {
+        let done = Completion::done(3, 7, 0.1, 0.9);
+        assert!(!done.is_failed());
+        let failed = Completion::failed(4, "deadline".to_string());
+        assert!(failed.is_failed());
+        assert_eq!(failed.fail_reason.as_deref(), Some("deadline"));
+        assert_eq!(failed.rounds, 0);
     }
 }

@@ -27,6 +27,9 @@ pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use client::{run_loadgen, Client, ClientError, Completion, LoadgenReport, Submitted};
+pub use client::{
+    run_loadgen, run_loadgen_with, Client, ClientError, Completion, LoadgenReport, RetryPolicy,
+    Submitted,
+};
 pub use proto::{JobLine, ParseError, Request, Response, PROTO_VERSION};
 pub use server::{NetServer, NetServerConfig, NetStats};

@@ -23,16 +23,21 @@
 //!
 //! ```text
 //! HELLO tlsched/<version>                        # greeting on connect
-//! ACK <job_id>                                   # accepted; id echoes in DONE
+//! ACK <job_id>                                   # accepted; id echoes in DONE/FAIL
 //! REJECT <reason>                                # busy | closed | parse <detail>
 //! DONE <job_id> <rounds> <queue_wait_s> <exec_s> # completion notification
+//! FAIL <job_id> <reason>                         # terminal non-completion
 //! {...}                                          # one-line JSON (STATUS/METRICS)
 //! ```
 //!
 //! Malformed requests get `REJECT parse <detail>` and the connection
 //! stays open; `REJECT busy` is the wire form of admission-queue
-//! backpressure ([`SubmitError::QueueFull`]). See DESIGN.md §8 for the
-//! full grammar and connection lifecycle.
+//! backpressure ([`SubmitError::QueueFull`]). Every `ACK`ed job gets
+//! exactly one terminal line — `DONE` on fixpoint, `FAIL` when the job
+//! was quarantined after a panic, cancelled past its deadline or round
+//! budget, or shed while overdue in the queue (`REJECT` is always
+//! pre-`ACK`). See DESIGN.md §8 for the full grammar and connection
+//! lifecycle, and §9 for the failure model behind `FAIL`.
 //!
 //! [`SubmitError::QueueFull`]: crate::coordinator::SubmitError::QueueFull
 
@@ -146,8 +151,28 @@ pub enum Response {
     Reject(String),
     /// Job completion: server-side rounds and latency split.
     Done { job_id: u64, rounds: u64, queue_wait_s: f64, exec_s: f64 },
+    /// Terminal non-completion of an `ACK`ed job: quarantined panic
+    /// (`Failed`), deadline/round-budget cancellation (`Cancelled`), or
+    /// overdue shed (`Shed`). Reason text is free-form but one line.
+    Fail { job_id: u64, reason: String },
     /// One-line JSON payload (`STATUS` / `METRICS` reply).
     Json(String),
+}
+
+/// Clamp a failure reason to one safe wire token sequence: internal
+/// whitespace (which would desync the line framing) becomes `_`, and
+/// the text is capped so a pathological panic payload cannot flood the
+/// response stream.
+fn sanitize_reason(reason: &str) -> String {
+    let mut s: String = reason
+        .chars()
+        .map(|c| if c.is_whitespace() || c.is_control() { '_' } else { c })
+        .take(80)
+        .collect();
+    if s.is_empty() {
+        s.push_str("unknown");
+    }
+    s
 }
 
 impl Response {
@@ -158,6 +183,9 @@ impl Response {
             Response::Reject(reason) => format!("REJECT {reason}"),
             Response::Done { job_id, rounds, queue_wait_s, exec_s } => {
                 format!("DONE {job_id} {rounds} {queue_wait_s:.6} {exec_s:.6}")
+            }
+            Response::Fail { job_id, reason } => {
+                format!("FAIL {job_id} {}", sanitize_reason(reason))
             }
             Response::Json(s) => s.clone(),
         }
@@ -197,6 +225,16 @@ pub fn parse_response(line: &str) -> Result<Response, BadResponse> {
             let queue_wait_s = num()?;
             let exec_s = num()?;
             Ok(Response::Done { job_id, rounds, queue_wait_s, exec_s })
+        }
+        Some("FAIL") => {
+            let job_id = parts.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+            let reason = parts.next().ok_or_else(bad)?;
+            // reason is one sanitized token; anything after it is a
+            // framing error, same as a trailing token on DONE would be
+            if parts.next().is_some() {
+                return Err(bad());
+            }
+            Ok(Response::Fail { job_id, reason: reason.to_string() })
         }
         _ => Err(bad()),
     }
@@ -277,6 +315,8 @@ mod tests {
             Response::Reject("busy".into()),
             Response::Reject("parse bad job kind 'x' (want pagerank|sssp|wcc|bfs|ppr)".into()),
             Response::Done { job_id: 7, rounds: 12, queue_wait_s: 0.25, exec_s: 1.5 },
+            // already-sanitized reason so to_line is the identity on it
+            Response::Fail { job_id: 9, reason: "injected_panic_at_round_3".into() },
             Response::Json("{\"completed\":3}".into()),
         ];
         for r in cases {
@@ -285,6 +325,141 @@ mod tests {
         assert!(parse_response("WAT 1").is_err());
         assert!(parse_response("ACK notanid").is_err());
         assert!(parse_response("DONE 1 2").is_err());
+        assert!(parse_response("FAIL 1").is_err());
+        assert!(parse_response("FAIL x deadline").is_err());
+        assert!(parse_response("FAIL 1 deadline extra").is_err());
+    }
+
+    #[test]
+    fn fail_reason_sanitized_on_the_wire() {
+        // whitespace, control chars, and unbounded length must not be
+        // able to desync the line framing
+        let r = Response::Fail { job_id: 3, reason: "panic: index\nout of\tbounds".into() };
+        let line = r.to_line();
+        assert!(!line[5..].contains(['\n', '\t']), "{line:?}");
+        assert_eq!(
+            parse_response(&line).unwrap(),
+            Response::Fail { job_id: 3, reason: "panic:_index_out_of_bounds".into() },
+        );
+        let long = Response::Fail { job_id: 0, reason: "x".repeat(10_000) };
+        assert!(long.to_line().len() < 100);
+        let empty = Response::Fail { job_id: 0, reason: String::new() };
+        assert_eq!(empty.to_line(), "FAIL 0 unknown");
+    }
+
+    // ---- adversarial inputs: the parser must never panic, only return
+    // Err(ParseError) or a clean skip (Ok(None)) ----
+
+    #[test]
+    fn adversarial_request_lines_never_panic() {
+        let overlong = "a".repeat(10_000);
+        let cases: Vec<String> = vec![
+            // truncated command forms
+            "SUBMIT".into(),
+            "SUBMIT ".into(),
+            "SUBMIT pagerank 1 2.0 ".into(),
+            "SUBM".into(),
+            // NUL bytes and control characters inside tokens
+            "page\0rank 1".into(),
+            "\0".into(),
+            "pagerank \x071".into(),
+            "pagerank 1\0".into(),
+            // overlong tokens in every position
+            overlong.clone(),
+            format!("SUBMIT {overlong}"),
+            format!("pagerank {overlong}"),
+            format!("pagerank 1 {overlong}"),
+            format!("pagerank 1 2.0 {overlong}"),
+            // replacement-char / non-ASCII garbage
+            "\u{FFFD}\u{FFFD}\u{FFFD}".into(),
+            "pagerank \u{FFFD}".into(),
+            "págerank 1".into(),
+            // numeric edge garbage in the source slot
+            "pagerank -1".into(),
+            "pagerank 4294967296".into(),
+            "pagerank 1e3".into(),
+            "pagerank +7".into(),
+        ];
+        for line in &cases {
+            match parse_request(line, 100) {
+                Ok(_) | Err(_) => {}
+            }
+            // `+7` actually parses as u32 via FromStr — pin only that
+            // none of these panic and the clear-cut ones reject
+        }
+        assert!(parse_request(&overlong, 100).is_err());
+        assert!(parse_request("page\0rank 1", 100).is_err());
+        assert!(parse_request("pagerank -1", 100).is_err());
+        assert!(parse_request("pagerank 4294967296", 100).is_err());
+    }
+
+    #[test]
+    fn adversarial_deadline_edge_values() {
+        // f64 accepts inf/nan spellings; the parser's contract is
+        // merely "never panic, produce a JobLine or a ParseError" —
+        // admission treats non-finite deadlines as immediately overdue
+        // or never-due, both well-defined
+        for tok in ["inf", "-inf", "nan", "NaN", "1e309", "-1", "0", "1e-309"] {
+            let line = format!("bfs 1 {tok}");
+            match parse_job_line(&line, 100) {
+                Ok(j) => assert!(j.deadline_s.is_some(), "{line}"),
+                Err(ParseError::BadDeadline(_)) => {}
+                Err(e) => panic!("{line}: unexpected error {e:?}"),
+            }
+        }
+        assert!(matches!(parse_job_line("bfs 1 2.0.0", 100), Err(ParseError::BadDeadline(_))));
+        assert!(matches!(parse_job_line("bfs 1 0x10", 100), Err(ParseError::BadDeadline(_))));
+    }
+
+    #[test]
+    fn adversarial_response_lines_never_panic() {
+        let overlong = "D".repeat(10_000);
+        for line in [
+            "",
+            "DONE",
+            "DONE 1 2 3",
+            "DONE 1 2 3 4 5",
+            "FAIL",
+            "FAIL \0",
+            "ACK",
+            "ACK 18446744073709551616",
+            "REJECT",
+            "{",
+            "{not json",
+            "\u{FFFD}",
+            overlong.as_str(),
+        ] {
+            let _ = parse_response(line);
+        }
+        // JSON recognition is by leading '{' only — returned unparsed
+        assert_eq!(parse_response("{not json").unwrap(), Response::Json("{not json".into()));
+    }
+
+    #[test]
+    fn fuzz_request_parser_on_seeded_garbage() {
+        // deterministic structured fuzz: random bytes, random token
+        // soup, and mutations of valid lines — parser must stay total
+        let mut rng = crate::util::rng::Pcg32::new(0xF00D, 0);
+        let vocab = ["pagerank", "SUBMIT", "bfs", "1", "-1", "inf", "\0", "#", "QUIT", "\u{FFFD}"];
+        for _ in 0..2000 {
+            let line: String = match rng.gen_index(3) {
+                0 => (0..rng.gen_index(64))
+                    .map(|_| char::from_u32(rng.gen_range(0xD800)).unwrap_or('?'))
+                    .collect(),
+                1 => (0..rng.gen_index(8))
+                    .map(|_| vocab[rng.gen_index(vocab.len())])
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                _ => {
+                    let mut s = String::from("SUBMIT sssp 42 10.5");
+                    let cut = rng.gen_index(s.len() + 1);
+                    s.truncate(cut);
+                    s
+                }
+            };
+            let _ = parse_request(&line, 64);
+            let _ = parse_response(&line);
+        }
     }
 
     #[test]

@@ -15,12 +15,14 @@
 //!   published metrics snapshot.
 //! * **the serve loop** (the caller's thread) — runs
 //!   [`Coordinator::serve_notify`] and calls [`NetServer::notify_done`]
-//!   from its completion hook; `DONE` lines are routed to the
-//!   submitting connection by the submission tag.
+//!   from its completion hook; `DONE`/`FAIL` lines are routed to the
+//!   submitting connection by the submission tag (`FAIL` carries
+//!   quarantined, cancelled and shed outcomes — DESIGN.md §9).
 //!
-//! Lifecycle: on client EOF or `QUIT` the handler **half-closes** —
-//! it stops reading, waits until every job the connection submitted
-//! has had its `DONE` delivered, then closes the socket. When the last
+//! Lifecycle: on client EOF, `QUIT`, or an idle read timeout
+//! (`idle_timeout_s`) the handler **half-closes** — it stops reading,
+//! waits until every job the connection submitted has had its
+//! `DONE`/`FAIL` delivered, then closes the socket. When the last
 //! connection retires *and at least one connection ever submitted a
 //! job*, the listener shuts down and the accept loop drops the primary
 //! submitter — the coordinator then drains resident jobs and returns
@@ -39,8 +41,8 @@
 //! [`Coordinator::serve_notify`]: crate::coordinator::Coordinator::serve_notify
 
 use super::proto::{self, Request, Response, PROTO_VERSION};
-use crate::coordinator::{JobRecord, JobSubmitter, SubmitError};
-use crate::util::json::Json;
+use crate::coordinator::{JobOutcome, JobRecord, JobSubmitter, SubmitError};
+use crate::util::{faults, json::Json};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -58,11 +60,21 @@ pub struct NetServerConfig {
     /// Concurrent-connection cap; connections beyond it are greeted,
     /// told `REJECT busy` and closed.
     pub max_connections: usize,
+    /// Per-connection idle read timeout in seconds (`[serve]
+    /// idle_timeout_s`); 0 disables. A peer that goes silent for this
+    /// long is closed (after its outstanding completions drain), so a
+    /// dead or stalled probe cannot pin a `max_connections` slot
+    /// forever.
+    pub idle_timeout_s: f64,
 }
 
 impl Default for NetServerConfig {
     fn default() -> Self {
-        NetServerConfig { listen: "127.0.0.1:7171".to_string(), max_connections: 64 }
+        NetServerConfig {
+            listen: "127.0.0.1:7171".to_string(),
+            max_connections: 64,
+            idle_timeout_s: 0.0,
+        }
     }
 }
 
@@ -79,9 +91,16 @@ pub struct NetStats {
     pub rejected_parse: u64,
     /// `DONE` notifications delivered to their submitting connection.
     pub done_sent: u64,
-    /// Completions whose connection was already gone (EOF mid-flight).
+    /// `FAIL` notifications (quarantined / cancelled / shed jobs)
+    /// delivered to their submitting connection.
+    pub fail_sent: u64,
+    /// Terminal notifications whose connection was already gone (EOF
+    /// mid-flight) — `acked == done_sent + fail_sent + done_dropped`
+    /// once the queue drains.
     pub done_dropped: u64,
-    /// Accepted jobs still awaiting their `DONE`.
+    /// Connections closed by the idle read timeout.
+    pub idle_closed: u64,
+    /// Accepted jobs still awaiting their terminal `DONE`/`FAIL`.
     pub in_flight: u64,
 }
 
@@ -93,7 +112,9 @@ struct Counters {
     rejected_busy: AtomicU64,
     rejected_parse: AtomicU64,
     done_sent: AtomicU64,
+    fail_sent: AtomicU64,
     done_dropped: AtomicU64,
+    idle_closed: AtomicU64,
 }
 
 /// Per-connection state shared between its handler thread (reads,
@@ -116,7 +137,14 @@ impl Conn {
         let mut buf = String::with_capacity(line.len() + 1);
         buf.push_str(line);
         buf.push('\n');
-        self.writer.lock().unwrap().write_all(buf.as_bytes()).is_ok()
+        let mut w = self.writer.lock().unwrap();
+        if faults::active() && faults::short_write() && buf.len() > 1 {
+            // injected torn write: the line crosses two syscalls, so a
+            // client that assumes write atomicity tears its framing
+            let (a, b) = buf.as_bytes().split_at(buf.len() / 2);
+            return w.write_all(a).is_ok() && w.write_all(b).is_ok();
+        }
+        w.write_all(buf.as_bytes()).is_ok()
     }
 
     fn job_started(&self) {
@@ -156,6 +184,7 @@ struct Shared {
     next_tag: AtomicU64,
     addr: SocketAddr,
     max_connections: usize,
+    idle_timeout_s: f64,
 }
 
 impl Shared {
@@ -167,7 +196,9 @@ impl Shared {
             rejected_busy: self.counters.rejected_busy.load(Ordering::Relaxed),
             rejected_parse: self.counters.rejected_parse.load(Ordering::Relaxed),
             done_sent: self.counters.done_sent.load(Ordering::Relaxed),
+            fail_sent: self.counters.fail_sent.load(Ordering::Relaxed),
             done_dropped: self.counters.done_dropped.load(Ordering::Relaxed),
+            idle_closed: self.counters.idle_closed.load(Ordering::Relaxed),
             in_flight: self.routes.lock().unwrap().len() as u64,
         }
     }
@@ -182,7 +213,9 @@ impl Shared {
             ("rejected_busy", Json::num(s.rejected_busy as f64)),
             ("rejected_parse", Json::num(s.rejected_parse as f64)),
             ("done_sent", Json::num(s.done_sent as f64)),
+            ("fail_sent", Json::num(s.fail_sent as f64)),
             ("done_dropped", Json::num(s.done_dropped as f64)),
+            ("idle_closed", Json::num(s.idle_closed as f64)),
             ("in_flight", Json::num(s.in_flight as f64)),
         ])
         .to_string()
@@ -241,6 +274,7 @@ impl NetServer {
             next_tag: AtomicU64::new(0),
             addr,
             max_connections: cfg.max_connections.max(1),
+            idle_timeout_s: cfg.idle_timeout_s.max(0.0),
         });
         let sh = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
@@ -261,9 +295,11 @@ impl NetServer {
         *self.shared.snapshot.lock().unwrap() = Some(json.to_string());
     }
 
-    /// Route a retired job's `DONE` notification to the connection
-    /// that submitted it. Call from the serve loop's completion hook;
-    /// records with tag 0 (non-network submissions) are ignored.
+    /// Route a retired job's terminal notification — `DONE` for
+    /// completed jobs, `FAIL` for quarantined/cancelled/shed ones — to
+    /// the connection that submitted it. Call from the serve loop's
+    /// completion hook; records with tag 0 (non-network submissions)
+    /// are ignored.
     pub fn notify_done(&self, rec: &JobRecord) {
         if rec.tag == 0 {
             return;
@@ -275,15 +311,24 @@ impl NetServer {
             self.shared.counters.done_dropped.fetch_add(1, Ordering::Relaxed);
             return;
         };
-        let line = Response::Done {
-            job_id: rec.tag,
-            rounds: rec.rounds,
-            queue_wait_s: rec.queueing_s(),
-            exec_s: rec.finished_s - rec.started_s,
-        }
-        .to_line();
-        if conn.send_line(&line) {
-            self.shared.counters.done_sent.fetch_add(1, Ordering::Relaxed);
+        let sent_ctr = match &rec.outcome {
+            JobOutcome::Done => &self.shared.counters.done_sent,
+            _ => &self.shared.counters.fail_sent,
+        };
+        let resp = match &rec.outcome {
+            JobOutcome::Done => Response::Done {
+                job_id: rec.tag,
+                rounds: rec.rounds,
+                queue_wait_s: rec.queueing_s(),
+                exec_s: rec.finished_s - rec.started_s,
+            },
+            other => Response::Fail {
+                job_id: rec.tag,
+                reason: other.reason().unwrap_or("failed").to_string(),
+            },
+        };
+        if conn.send_line(&resp.to_line()) {
+            sent_ctr.fetch_add(1, Ordering::Relaxed);
         } else {
             self.shared.counters.done_dropped.fetch_add(1, Ordering::Relaxed);
         }
@@ -373,15 +418,39 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
         shared.conn_closed();
         return;
     };
+    if shared.idle_timeout_s > 0.0 {
+        // SO_RCVTIMEO on the read half only: a peer that goes silent
+        // surfaces as a WouldBlock/TimedOut read error below instead
+        // of pinning this handler (and its max_connections slot)
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs_f64(
+            shared.idle_timeout_s,
+        )));
+    }
     let conn = Arc::new(Conn::new(write_half));
     conn.send_line(&proto::hello_line());
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    // true when fault injection tore the connection down abruptly: the
+    // half-close drain is skipped, so pending completions fall into
+    // `done_dropped` — exactly what a mid-stream client crash does
+    let mut abrupt = false;
     loop {
         line.clear();
         match reader.read_line(&mut line) {
-            // EOF and read errors half-close exactly like QUIT
-            Ok(0) | Err(_) => break,
+            // EOF half-closes exactly like QUIT
+            Ok(0) => break,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // idle timeout: close like QUIT (any partial line the
+                // peer left behind is dead air from a dead peer)
+                shared.counters.idle_closed.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(_) => break,
             Ok(_) => {}
         }
         match proto::parse_request(&line, nv) {
@@ -422,9 +491,19 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
                         Response::Reject(reason.to_string())
                     }
                 };
+                let acked = matches!(resp, Response::Ack(_));
                 let mut buf = resp.to_line();
                 buf.push('\n');
                 let _ = w.write_all(buf.as_bytes());
+                drop(w);
+                if acked && faults::active() && faults::drop_conn_on_ack() {
+                    // injected mid-stream client death: tear the socket
+                    // down without draining — the job is already in the
+                    // queue, so its terminal notification must land in
+                    // done_dropped, not vanish
+                    abrupt = true;
+                    break;
+                }
             }
             Err(e) => {
                 // malformed line: reject, keep the connection
@@ -435,9 +514,13 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
     }
     // Half-close: stop reading, drop our submitter (so the
     // coordinator can reach the drained state once every client is
-    // gone), deliver every outstanding DONE, then close for real.
+    // gone), deliver every outstanding DONE/FAIL, then close for real.
+    // An injected abrupt drop skips the drain: routes to this
+    // connection stay behind and resolve as done_dropped.
     drop(submitter);
-    conn.drain();
+    if !abrupt {
+        conn.drain();
+    }
     let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Both);
     shared.conn_closed();
 }
@@ -450,7 +533,11 @@ mod tests {
     use std::io::BufRead;
 
     fn cfg(max_connections: usize) -> NetServerConfig {
-        NetServerConfig { listen: "127.0.0.1:0".to_string(), max_connections }
+        NetServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_connections,
+            ..Default::default()
+        }
     }
 
     fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
@@ -531,6 +618,7 @@ mod tests {
             rounds: 4,
             updates: 10,
             edges: 20,
+            outcome: JobOutcome::Done,
         };
         server.notify_done(&rec);
         match proto::parse_response(&read_line(&mut r)).unwrap() {
@@ -581,6 +669,7 @@ mod tests {
             rounds: 1,
             updates: 1,
             edges: 1,
+            outcome: JobOutcome::Done,
         };
         server.notify_done(&rec); // tag 0: no-op, not even done_dropped
         let (mut s, _r) = connect(server.local_addr());
@@ -588,5 +677,67 @@ mod tests {
         let stats = server.finish();
         assert_eq!(stats.done_dropped, 0);
         assert_eq!(stats.done_sent, 0);
+    }
+
+    #[test]
+    fn failed_job_notifies_fail_with_reason() {
+        let (submitter, _queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+        let server = NetServer::start(&cfg(2), submitter, 100).unwrap();
+        let (mut s, mut r) = connect(server.local_addr());
+        writeln!(s, "pagerank 1").unwrap();
+        let ack = proto::parse_response(&read_line(&mut r)).unwrap();
+        let Response::Ack(tag) = ack else { panic!("want ACK, got {ack:?}") };
+        let rec = JobRecord {
+            id: 0,
+            tag,
+            kind: "pagerank",
+            submitted_s: 0.0,
+            started_s: 0.5,
+            finished_s: 2.0,
+            rounds: 3,
+            updates: 5,
+            edges: 9,
+            outcome: JobOutcome::Failed("injected panic at round 3".to_string()),
+        };
+        server.notify_done(&rec);
+        match proto::parse_response(&read_line(&mut r)).unwrap() {
+            Response::Fail { job_id, reason } => {
+                assert_eq!(job_id, tag);
+                assert_eq!(reason, "injected_panic_at_round_3");
+            }
+            other => panic!("want FAIL, got {other:?}"),
+        }
+        writeln!(s, "QUIT").unwrap();
+        let mut line = String::new();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0);
+        let stats = server.finish();
+        assert_eq!(stats.fail_sent, 1);
+        assert_eq!(stats.done_sent, 0);
+        assert_eq!(stats.done_dropped, 0);
+        assert_eq!(stats.in_flight, 0);
+    }
+
+    #[test]
+    fn idle_connection_times_out_and_releases_slot() {
+        let (submitter, _queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+        let mut c = cfg(1);
+        c.idle_timeout_s = 0.2;
+        let server = NetServer::start(&c, submitter, 100).unwrap();
+        let (_s1, mut r1) = connect(server.local_addr());
+        // say nothing: the server must close the idle connection...
+        let mut line = String::new();
+        assert_eq!(r1.read_line(&mut line).unwrap(), 0, "idle peer not closed");
+        // ...and release its slot — with max_connections = 1, a fresh
+        // connection only gets past the greeting if the probe's slot
+        // came back (otherwise it reads REJECT busy and connect panics)
+        let (mut s2, mut r2) = connect(server.local_addr());
+        writeln!(s2, "STATUS").unwrap();
+        let j = Json::parse(&read_line(&mut r2)).unwrap();
+        assert_eq!(j.get("idle_closed").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("connections_active").unwrap().as_u64(), Some(1));
+        writeln!(s2, "QUIT").unwrap();
+        let stats = server.finish();
+        assert_eq!(stats.idle_closed, 1);
+        assert_eq!(stats.connections_total, 2);
     }
 }

@@ -38,6 +38,15 @@
 //! associative and commutative and contributions are never lost, so
 //! fixpoints are unchanged (asserted by `tests/fused_parity.rs`).
 //!
+//! This phase split is also the **failure-containment boundary**
+//! (DESIGN.md §9): a panic in any phase-1 task re-throws out of
+//! `scope_map` before the merge runs, so when the coordinator catches
+//! it every job lane, summary and delta is still bit-identical to the
+//! pre-round state — quarantining the offending job and retrying the
+//! round with the survivors is exact, not best-effort. The
+//! `util::faults` chaos injector hooks into [`run_block_task`] behind
+//! one cold armed-check to prove this under test.
+//!
 //! Incremental ⟨Node_un, ΣP⟩ summaries stay exact: each task returns
 //! the net summary change of its own block (consumptions + intra-block
 //! transitions, accumulated in task order), and the merge applies
@@ -99,6 +108,18 @@ pub(crate) fn run_block_task(
     spec: &BlockTaskSpec,
     fused: bool,
 ) -> Vec<JobBlockOut> {
+    // Fault-injection gate (chaos harness, `util::faults`): one cold
+    // check on the hot path, no-op unless a plan is armed. An injected
+    // panic unwinds out of `scope_map` before any merge — the
+    // coordinator's quarantine relies on that ordering (see the module
+    // docs: phase 1 is pure, phase 2 never starts after a panic).
+    if crate::util::faults::active() {
+        for &ji in &spec.active {
+            crate::util::faults::maybe_panic(jobs[ji].id, jobs[ji].rounds);
+        }
+        let salt = spec.active.first().map_or(0, |&ji| jobs[ji].rounds);
+        crate::util::faults::maybe_delay(spec.block, salt);
+    }
     if fused {
         block_pass(g, part, jobs, spec.block, &spec.active)
     } else {

@@ -219,6 +219,13 @@ impl ShardedRuntime {
 
     /// Execute one sharded scheduling round. Deterministic for any
     /// worker count at a fixed shard count (see module docs).
+    ///
+    /// Failure containment matches the unsharded staged round: every
+    /// block task (phase 1b) runs through the same `run_block_task` —
+    /// fault-injection gate included — and a task panic re-throws out
+    /// of `scope_map` before any copy-back, fold or exchange drain
+    /// runs, so the coordinator's quarantine sees all jobs (and the
+    /// exchange buffers) untouched by the aborted round.
     pub fn round(
         &mut self,
         g: &Graph,

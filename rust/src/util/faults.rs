@@ -1,0 +1,320 @@
+//! Deterministic, gated fault injection for the chaos harness.
+//!
+//! The robustness claims of the serving path (per-job panic
+//! quarantine, deadline cancellation, connection hygiene — DESIGN.md
+//! §9) are only testable if faults can be produced on demand,
+//! reproducibly. This module is the single switchboard: a [`FaultPlan`]
+//! parsed from the `TLSCHED_FAULTS` env var (or the `[faults] spec`
+//! config key) names the faults to inject, a process-wide armed flag
+//! gates every hook, and all randomness derives from the plan's seed
+//! through [`Pcg32`] so a given (plan, workload) pair replays the
+//! identical fault sequence at any worker count.
+//!
+//! **Zero cost when disabled**: every call site guards its hook behind
+//! [`active`] — one relaxed atomic load that is false unless a plan
+//! was both installed *and* armed — and the hooks themselves are
+//! `#[cold]`. The block hot path pays exactly that one cold check.
+//!
+//! Injection points (each threaded through by the named module):
+//! * `panic=<job>@<round>` — panic inside that job's block task once
+//!   the job has run `<round>` rounds (`scheduler/parallel`), with a
+//!   typed [`JobPanic`] payload the coordinator quarantine attributes
+//!   back to the job. Fires at most once per installed plan.
+//! * `delay=<ms>:<prob>` — deterministic pseudo-random stall of a
+//!   block task (`scheduler/parallel`), for round-watchdog and
+//!   latency-degradation tests.
+//! * `drop_conn=<n>` — abruptly drop the connection that receives the
+//!   n-th ACK of the run (`net/server`), simulating a peer that
+//!   vanished mid-stream without a half-close.
+//! * `short_write=1` — split every response line into two `write`
+//!   calls (`net/server`), probing partial-write handling under the
+//!   per-connection writer lock.
+//!
+//! Plan grammar: comma- or whitespace-separated `key=value` tokens,
+//! e.g. `seed=7,panic=0@3,delay=5:0.25,drop_conn=2,short_write=1`.
+
+use std::panic::panic_any;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::rng::Pcg32;
+
+/// Parsed fault plan. `Default` is the empty plan (no faults).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every pseudo-random fault decision.
+    pub seed: u64,
+    /// `(job_id, round)`: panic in that job's block task once the job
+    /// has completed at least `round` rounds.
+    pub panic_job: Option<(u32, u64)>,
+    /// `(millis, probability)`: stall a block task with the given
+    /// probability, decided deterministically from `(seed, block)`.
+    pub delay: Option<(u64, f64)>,
+    /// Drop the connection that receives the n-th ACK of the run.
+    pub drop_conn_after_acks: Option<u64>,
+    /// Split response-line writes into two `write` calls.
+    pub short_write: bool,
+}
+
+impl FaultPlan {
+    /// Parse the `TLSCHED_FAULTS` grammar (module docs). Unknown keys
+    /// and malformed values are hard errors — a chaos run with a typo
+    /// must not silently test nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for tok in spec.split(|c: char| c == ',' || c.is_whitespace()) {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("fault token `{tok}` is not key=value"))?;
+            match key {
+                "seed" => {
+                    plan.seed =
+                        val.parse().map_err(|_| format!("bad fault seed `{val}`"))?;
+                }
+                "panic" => {
+                    let (j, r) = val.split_once('@').ok_or_else(|| {
+                        format!("panic wants <job>@<round>, got `{val}`")
+                    })?;
+                    let j = j.parse().map_err(|_| format!("bad panic job `{j}`"))?;
+                    let r = r.parse().map_err(|_| format!("bad panic round `{r}`"))?;
+                    plan.panic_job = Some((j, r));
+                }
+                "delay" => {
+                    let (ms, p) = val.split_once(':').ok_or_else(|| {
+                        format!("delay wants <ms>:<prob>, got `{val}`")
+                    })?;
+                    let ms = ms.parse().map_err(|_| format!("bad delay ms `{ms}`"))?;
+                    let p: f64 =
+                        p.parse().map_err(|_| format!("bad delay prob `{p}`"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("delay prob {p} outside [0, 1]"));
+                    }
+                    plan.delay = Some((ms, p));
+                }
+                "drop_conn" => {
+                    plan.drop_conn_after_acks = Some(
+                        val.parse().map_err(|_| format!("bad drop_conn `{val}`"))?,
+                    );
+                }
+                "short_write" => {
+                    plan.short_write = val == "1" || val.eq_ignore_ascii_case("true");
+                }
+                other => return Err(format!("unknown fault key `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Typed payload of an injected (or any attributable) job panic. The
+/// coordinator's quarantine downcasts unwind payloads to this type to
+/// fail exactly the offending job; injection throws it so chaos runs
+/// exercise the production attribution path, not a lookalike.
+#[derive(Debug)]
+pub struct JobPanic {
+    pub job_id: u32,
+    pub reason: String,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+static PANIC_FIRED: AtomicBool = AtomicBool::new(false);
+static ACKS_SEEN: AtomicU64 = AtomicU64::new(0);
+
+/// The one gate every call site checks before touching a hook. A
+/// relaxed load: hooks are advisory test machinery, and arming happens
+/// strictly before the workload that observes it.
+#[inline]
+pub fn active() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Install a plan (resetting fire-once state) without arming it.
+pub fn install(plan: FaultPlan) {
+    *PLAN.lock().unwrap() = Some(plan);
+    PANIC_FIRED.store(false, Ordering::SeqCst);
+    ACKS_SEEN.store(0, Ordering::SeqCst);
+}
+
+/// Install + arm from the `TLSCHED_FAULTS` env var. Returns whether a
+/// plan was found; a present-but-malformed spec is a hard error.
+pub fn install_from_env() -> Result<bool, String> {
+    match std::env::var("TLSCHED_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            install(FaultPlan::parse(&spec)?);
+            arm();
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Arm the installed plan: [`active`] starts returning true.
+pub fn arm() {
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm: [`active`] returns false, all hooks become no-ops. The plan
+/// stays installed (re-arm to resume it mid-way).
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Clone of the installed plan, if any. Cold-path only.
+pub fn plan() -> Option<FaultPlan> {
+    PLAN.lock().unwrap().clone()
+}
+
+/// Block-task hook: injected panic for the configured job once it has
+/// run `round` rounds (`>=`, not `==` — the victim need not be
+/// dispatched on the exact round), firing at most once per installed
+/// plan regardless of how many tasks race past the threshold.
+#[cold]
+pub fn maybe_panic(job_id: u32, round: u64) {
+    let Some(plan) = plan() else { return };
+    let Some((jid, r)) = plan.panic_job else { return };
+    if job_id == jid && round >= r && !PANIC_FIRED.swap(true, Ordering::SeqCst) {
+        panic_any(JobPanic { job_id, reason: format!("injected panic at round {round}") });
+    }
+}
+
+/// Block-task hook: deterministic pseudo-random stall. The decision is
+/// a pure function of `(plan.seed, block, salt)` — never of thread
+/// timing — so a plan replays the identical delay pattern at any
+/// worker count.
+#[cold]
+pub fn maybe_delay(block: u32, salt: u64) {
+    let Some(plan) = plan() else { return };
+    let Some((ms, prob)) = plan.delay else { return };
+    let mut rng = Pcg32::new(plan.seed ^ salt.rotate_left(17), block as u64);
+    if rng.gen_bool(prob) {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
+/// ACK hook: counts ACKs and returns true exactly when this one is the
+/// configured n-th of the run — the receiving connection should then
+/// be dropped abruptly (no half-close, no drain).
+#[cold]
+pub fn drop_conn_on_ack() -> bool {
+    let Some(plan) = plan() else { return false };
+    let Some(n) = plan.drop_conn_after_acks else { return false };
+    ACKS_SEEN.fetch_add(1, Ordering::SeqCst) + 1 == n
+}
+
+/// Whether response-line writes should be split in two.
+#[cold]
+pub fn short_write() -> bool {
+    plan().is_some_and(|p| p.short_write)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plan/fired/ack globals are process-wide; serialize the tests
+    /// that touch them. None of these tests call `arm()` — other tests
+    /// in this binary run coordinator rounds concurrently and must
+    /// never observe an armed injector.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn parse_full_spec() {
+        let p =
+            FaultPlan::parse("seed=7,panic=0@3,delay=5:0.25,drop_conn=2,short_write=1")
+                .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.panic_job, Some((0, 3)));
+        assert_eq!(p.delay, Some((5, 0.25)));
+        assert_eq!(p.drop_conn_after_acks, Some(2));
+        assert!(p.short_write);
+    }
+
+    #[test]
+    fn parse_whitespace_and_empty_tokens() {
+        let p = FaultPlan::parse("  seed=9   panic=3@10 ,, ").unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.panic_job, Some((3, 10)));
+        assert_eq!(p, FaultPlan { seed: 9, panic_job: Some((3, 10)), ..Default::default() });
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "panic",
+            "panic=3",
+            "panic=x@1",
+            "panic=1@y",
+            "delay=5",
+            "delay=a:0.5",
+            "delay=5:2.0",
+            "delay=5:nope",
+            "drop_conn=x",
+            "seed=minus",
+            "frobnicate=1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn panic_hook_fires_once_for_matching_job_round() {
+        let _g = LOCK.lock().unwrap();
+        install(FaultPlan::parse("panic=4@2").unwrap());
+        maybe_panic(3, 100); // other job: never
+        maybe_panic(4, 1); // too early: never
+        let hit = std::panic::catch_unwind(|| maybe_panic(4, 2));
+        let payload = hit.unwrap_err();
+        let jp = payload.downcast_ref::<JobPanic>().expect("typed payload");
+        assert_eq!(jp.job_id, 4);
+        assert!(jp.reason.contains("injected panic"));
+        // Fire-once: the same trigger is now inert.
+        maybe_panic(4, 2);
+        maybe_panic(4, 50);
+        install(FaultPlan::parse("panic=4@2").unwrap()); // reinstall resets
+        assert!(std::panic::catch_unwind(|| maybe_panic(4, 7)).is_err());
+    }
+
+    #[test]
+    fn delay_decision_is_deterministic() {
+        let _g = LOCK.lock().unwrap();
+        install(FaultPlan::parse("seed=11,delay=0:1.0").unwrap());
+        maybe_delay(0, 1); // prob 1, 0ms: sleeps zero — just must not hang
+        install(FaultPlan::parse("seed=11,delay=1000:0.0").unwrap());
+        let t = std::time::Instant::now();
+        for b in 0..64 {
+            maybe_delay(b, b as u64);
+        }
+        assert!(t.elapsed() < Duration::from_millis(500), "prob 0 must never sleep");
+    }
+
+    #[test]
+    fn ack_counter_trips_exactly_nth() {
+        let _g = LOCK.lock().unwrap();
+        install(FaultPlan::parse("drop_conn=3").unwrap());
+        assert!(!drop_conn_on_ack());
+        assert!(!drop_conn_on_ack());
+        assert!(drop_conn_on_ack());
+        assert!(!drop_conn_on_ack());
+        install(FaultPlan::default());
+        assert!(!drop_conn_on_ack());
+    }
+
+    #[test]
+    fn hooks_noop_without_plan_parts() {
+        let _g = LOCK.lock().unwrap();
+        install(FaultPlan::default());
+        maybe_panic(0, 0);
+        maybe_delay(0, 0);
+        assert!(!drop_conn_on_ack());
+        assert!(!short_write());
+        install(FaultPlan::parse("short_write=1").unwrap());
+        assert!(short_write());
+    }
+}

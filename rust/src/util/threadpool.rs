@@ -14,7 +14,11 @@
 //! * `scope_map` results are a pure function of `(items, f)` — worker
 //!   count, chunking and dispatch mode never change them.
 //! * A panic in any task propagates to the caller after all
-//!   participants retire (the latch never deadlocks on a panic).
+//!   participants retire (the latch never deadlocks on a panic). The
+//!   re-throw carries the **first task's original payload box**, so
+//!   typed payloads (e.g. `util::faults::JobPanic`, which the
+//!   coordinator quarantine downcasts for per-job attribution) survive
+//!   the pool boundary intact.
 //! * `workers == 1` degrades to inline execution (no threads at all).
 //! * Nested `scope_map` from inside a worker runs inline on that
 //!   worker (deterministic; blocking a worker on its own pool could

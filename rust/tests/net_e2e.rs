@@ -39,7 +39,11 @@ fn coord<'g>(
 }
 
 fn start_server(g: &Graph, submitter: JobSubmitter) -> NetServer {
-    let cfg = NetServerConfig { listen: "127.0.0.1:0".to_string(), max_connections: 16 };
+    let cfg = NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_connections: 16,
+        ..Default::default()
+    };
     NetServer::start(&cfg, submitter, g.num_vertices() as u32).unwrap()
 }
 
