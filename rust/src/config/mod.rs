@@ -74,6 +74,13 @@ pub struct ServeSettings {
     /// (`serve.idle_timeout_s`; 0 = off) — silent peers are closed so
     /// they stop pinning connection slots.
     pub idle_timeout_s: f64,
+    /// Bind address of the HTTP/JSON gateway (`serve.http`); empty
+    /// disables the HTTP front. Also reachable as `serve --http`.
+    pub http: String,
+    /// Bound of the HTTP terminal-state table
+    /// (`serve.http_terminal_capacity`): retired-but-unpolled jobs
+    /// kept before the oldest are evicted.
+    pub http_terminal_capacity: usize,
 }
 
 impl Default for ServeSettings {
@@ -84,6 +91,8 @@ impl Default for ServeSettings {
             listen: "127.0.0.1:7171".to_string(),
             max_connections: 64,
             idle_timeout_s: 0.0,
+            http: String::new(),
+            http_terminal_capacity: 1024,
         }
     }
 }
@@ -309,6 +318,20 @@ impl RunConfig {
         }
         cfg.serve.admission.shed_overdue =
             get_parse(&raw, "serve.shed_overdue", cfg.serve.admission.shed_overdue)?;
+        if let Some(h) = raw.get("serve.http") {
+            cfg.serve.http = h.clone();
+        }
+        cfg.serve.http_terminal_capacity = get_parse(
+            &raw,
+            "serve.http_terminal_capacity",
+            cfg.serve.http_terminal_capacity,
+        )?;
+        if cfg.serve.http_terminal_capacity == 0 {
+            return Err(ConfigError::Invalid(
+                "serve.http_terminal_capacity",
+                "must be > 0".into(),
+            ));
+        }
         Ok(cfg)
     }
 
@@ -440,7 +463,8 @@ max_concurrent = 4
         let cfg = RunConfig::from_str(
             "[serve]\npolicy = \"correlation\"\nqueue_capacity = 8\n\
              slo_factor = 2.5\nreport_every_s = 30\n\
-             listen = \"0.0.0.0:9000\"\nmax_connections = 12\n",
+             listen = \"0.0.0.0:9000\"\nmax_connections = 12\n\
+             http = \"127.0.0.1:7180\"\nhttp_terminal_capacity = 64\n",
         )
         .unwrap();
         assert_eq!(cfg.serve.admission.policy, AdmissionPolicy::Correlation);
@@ -449,6 +473,8 @@ max_concurrent = 4
         assert_eq!(cfg.serve.report_every_s, 30.0);
         assert_eq!(cfg.serve.listen, "0.0.0.0:9000");
         assert_eq!(cfg.serve.max_connections, 12);
+        assert_eq!(cfg.serve.http, "127.0.0.1:7180");
+        assert_eq!(cfg.serve.http_terminal_capacity, 64);
         // defaults
         let d = RunConfig::from_str("").unwrap();
         assert_eq!(d.serve.admission.policy, AdmissionPolicy::Fifo);
@@ -456,12 +482,15 @@ max_concurrent = 4
         assert_eq!(d.serve.report_every_s, 0.0);
         assert_eq!(d.serve.listen, "127.0.0.1:7171");
         assert!(d.serve.max_connections > 0);
+        assert!(d.serve.http.is_empty(), "HTTP front is opt-in");
+        assert!(d.serve.http_terminal_capacity > 0);
         // bad policy and zero capacity/connections/address error
         // instead of panicking later
         assert!(RunConfig::from_str("[serve]\npolicy = \"bogus\"\n").is_err());
         assert!(RunConfig::from_str("[serve]\nqueue_capacity = 0\n").is_err());
         assert!(RunConfig::from_str("[serve]\nmax_connections = 0\n").is_err());
         assert!(RunConfig::from_str("[serve]\nlisten = \"\"\n").is_err());
+        assert!(RunConfig::from_str("[serve]\nhttp_terminal_capacity = 0\n").is_err());
     }
 
     #[test]

@@ -127,6 +127,48 @@ pub enum SubmitError {
     Closed,
 }
 
+/// Identifier of a live submission, allocated by the queue's shared
+/// counter (ids start at 1; 0 is the non-live sentinel of batch/trace
+/// submissions). The id is echoed as the retirement
+/// [`JobRecord::tag`](super::metrics::JobRecord) and is what every
+/// front-end — TCP `ACK`/`DONE`, HTTP `{"id":…}`/poll — keys
+/// completions on.
+pub type JobId = u64;
+
+/// One submission through [`JobSubmitter::submit`] — the single seam
+/// shared by every producer (stdin, TCP, HTTP, tests). Batch and trace
+/// paths use the same struct with default options.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRequest {
+    pub kind: JobKind,
+    pub source: u32,
+    /// Optional absolute run-clock completion deadline (`Slo` policy).
+    pub deadline_s: Option<f64>,
+    /// Pre-allocated id from [`JobSubmitter::next_id`]; `None` lets
+    /// `submit` allocate one. Front-ends that must register a
+    /// completion route *before* the submission can race the serve
+    /// loop pre-allocate.
+    pub id: Option<JobId>,
+}
+
+impl JobRequest {
+    pub fn new(kind: JobKind, source: u32) -> JobRequest {
+        JobRequest { kind, source, deadline_s: None, id: None }
+    }
+
+    /// Attach an optional deadline (run-clock seconds).
+    pub fn deadline(mut self, deadline_s: Option<f64>) -> JobRequest {
+        self.deadline_s = deadline_s;
+        self
+    }
+
+    /// Attach a pre-allocated id (see [`JobSubmitter::next_id`]).
+    pub fn with_id(mut self, id: JobId) -> JobRequest {
+        self.id = Some(id);
+        self
+    }
+}
+
 /// Clone-able producer handle for the live queue. Safe to hand to any
 /// number of threads; dropping **all** submitters signals shutdown —
 /// the serve loop drains what was accepted and returns.
@@ -136,6 +178,10 @@ pub struct JobSubmitter {
     t0: Instant,
     time_scale: f64,
     rejected: Arc<AtomicU64>,
+    /// Shared id allocator: clones (and co-resident front-ends holding
+    /// clones) draw from one id space, so a completion's id names its
+    /// submission unambiguously across producers.
+    ids: Arc<AtomicU64>,
 }
 
 impl JobSubmitter {
@@ -144,41 +190,35 @@ impl JobSubmitter {
         self.t0.elapsed().as_secs_f64() * self.time_scale
     }
 
-    /// Submit a job without a deadline. Non-blocking: when the bounded
-    /// queue is full the job is shed and `QueueFull` returned.
-    pub fn submit(&self, kind: JobKind, source: u32) -> Result<(), SubmitError> {
-        self.submit_with(kind, source, None)
+    /// Draw the next job id without submitting. Front-ends that must
+    /// insert a completion route before the queue submit (so the serve
+    /// loop cannot retire the job before the route exists) allocate
+    /// here, register, then `submit(req.with_id(id))`.
+    pub fn next_id(&self) -> JobId {
+        self.ids.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Submit a job with an optional completion deadline (run-clock
-    /// seconds) for the `Slo` admission policy.
-    pub fn submit_with(
-        &self,
-        kind: JobKind,
-        source: u32,
-        deadline_s: Option<f64>,
-    ) -> Result<(), SubmitError> {
-        self.submit_tagged(kind, source, deadline_s, 0)
-    }
-
-    /// Submit a job carrying a caller-chosen correlation `tag`, echoed
-    /// in the retirement [`JobRecord`](super::metrics::JobRecord) — how
-    /// the network front-end matches completions to connections.
-    pub fn submit_tagged(
-        &self,
-        kind: JobKind,
-        source: u32,
-        deadline_s: Option<f64>,
-        tag: u64,
-    ) -> Result<(), SubmitError> {
-        let sub = Submission { kind, source, submitted_s: self.now(), deadline_s, tag };
-        self.tx.try_send(sub).map_err(|e| match e {
-            TrySendError::Full(_) => {
+    /// Submit one job. Non-blocking: when the bounded queue is full the
+    /// job is shed and `QueueFull` returned. On success the job's id —
+    /// `req.id` if pre-allocated, freshly drawn otherwise — comes back,
+    /// and is echoed as the retirement record's tag.
+    pub fn submit(&self, req: JobRequest) -> Result<JobId, SubmitError> {
+        let id = req.id.unwrap_or_else(|| self.next_id());
+        let sub = Submission {
+            kind: req.kind,
+            source: req.source,
+            submitted_s: self.now(),
+            deadline_s: req.deadline_s,
+            tag: id,
+        };
+        match self.tx.try_send(sub) {
+            Ok(()) => Ok(id),
+            Err(TrySendError::Full(_)) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
-                SubmitError::QueueFull
+                Err(SubmitError::QueueFull)
             }
-            TrySendError::Disconnected(_) => SubmitError::Closed,
-        })
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
     }
 
     /// Jobs this queue has shed so far (all submitters combined).
@@ -325,6 +365,7 @@ impl AdmissionQueue {
             t0: q.t0,
             time_scale,
             rejected: Arc::clone(&q.rejected),
+            ids: Arc::new(AtomicU64::new(0)),
         };
         (sub, q)
     }
@@ -697,11 +738,11 @@ mod tests {
             ..Default::default()
         };
         let (sub, mut q) = AdmissionQueue::live(&cfg, 1000.0);
-        sub.submit(JobKind::Wcc, 0).unwrap(); // no deadline: ranks last
+        sub.submit(JobRequest::new(JobKind::Wcc, 0)).unwrap(); // no deadline: ranks last
         let mut pops = 0usize;
         loop {
             // keep one urgent competitor pending at all times
-            sub.submit_with(JobKind::Bfs, 1, Some(0.001)).unwrap();
+            sub.submit(JobRequest::new(JobKind::Bfs, 1).deadline(Some(0.001))).unwrap();
             q.poll(q.now());
             let got = q.pop(&[], &part).expect("pending nonempty");
             pops += 1;
@@ -717,33 +758,41 @@ mod tests {
     fn live_backpressure_rejects_when_full() {
         let cfg = AdmissionConfig { queue_capacity: 2, ..Default::default() };
         let (sub, mut q) = AdmissionQueue::live(&cfg, 1000.0);
-        assert!(sub.submit(JobKind::Bfs, 0).is_ok());
-        assert!(sub.submit(JobKind::Bfs, 1).is_ok());
-        assert_eq!(sub.submit(JobKind::Bfs, 2), Err(SubmitError::QueueFull));
+        assert!(sub.submit(JobRequest::new(JobKind::Bfs, 0)).is_ok());
+        assert!(sub.submit(JobRequest::new(JobKind::Bfs, 1)).is_ok());
+        assert_eq!(sub.submit(JobRequest::new(JobKind::Bfs, 2)), Err(SubmitError::QueueFull));
         assert_eq!(sub.rejected(), 1);
         q.poll(q.now());
         assert_eq!(q.pending_len(), 2);
         assert_eq!(q.rejected(), 1);
         // capacity freed: accepted again
-        assert!(sub.submit(JobKind::Bfs, 3).is_ok());
+        assert!(sub.submit(JobRequest::new(JobKind::Bfs, 3)).is_ok());
     }
 
     #[test]
-    fn tagged_submissions_carry_their_tag() {
+    fn submissions_carry_their_id_as_tag() {
         let (sub, mut q) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
-        sub.submit_tagged(JobKind::Bfs, 0, None, 77).unwrap();
-        sub.submit(JobKind::Wcc, 1).unwrap();
+        // Pre-allocated id (the front-end route-registration path).
+        let pre = sub.next_id();
+        assert_eq!(sub.submit(JobRequest::new(JobKind::Bfs, 0).with_id(pre)).unwrap(), pre);
+        // Auto-allocated id: returned to the caller, distinct from pre.
+        let auto = sub.submit(JobRequest::new(JobKind::Wcc, 1)).unwrap();
+        assert_ne!(auto, pre);
+        assert_ne!(auto, 0, "live ids never collide with the batch sentinel 0");
         q.poll(q.now());
         let (_g, part) = dummy_part();
-        assert_eq!(q.pop(&[], &part).unwrap().tag, 77);
-        assert_eq!(q.pop(&[], &part).unwrap().tag, 0, "untagged submissions default to 0");
+        assert_eq!(q.pop(&[], &part).unwrap().tag, pre);
+        assert_eq!(q.pop(&[], &part).unwrap().tag, auto, "submission tag echoes the id");
+        // Clones share the id space.
+        let sub2 = sub.clone();
+        assert!(sub2.next_id() > auto);
     }
 
     #[test]
     fn dropping_all_submitters_closes_queue() {
         let (sub, mut q) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
         let sub2 = sub.clone();
-        assert!(sub.submit(JobKind::Wcc, 0).is_ok());
+        assert!(sub.submit(JobRequest::new(JobKind::Wcc, 0)).is_ok());
         drop(sub);
         drop(sub2);
         assert!(!q.is_exhausted(), "buffered submission still pending");
@@ -782,7 +831,7 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         assert!(sub.now() > 0.0, "scaled clock advances");
         assert_eq!(q.time_scale(), 600.0);
-        sub.submit(JobKind::Bfs, 0).unwrap();
+        sub.submit(JobRequest::new(JobKind::Bfs, 0)).unwrap();
         q.poll(q.now());
         let (_g, part) = dummy_part();
         let s = q.pop(&[], &part).unwrap();
@@ -839,8 +888,8 @@ mod tests {
         let (_g, part) = dummy_part();
         let cfg = AdmissionConfig { shed_overdue: true, ..Default::default() };
         let (sub, mut q) = AdmissionQueue::live(&cfg, 1000.0);
-        sub.submit_tagged(JobKind::Wcc, 2, Some(1e-9), 5).unwrap();
-        sub.submit(JobKind::Bfs, 3).unwrap(); // deadline-less: never shed
+        sub.submit(JobRequest::new(JobKind::Wcc, 2).deadline(Some(1e-9)).with_id(5)).unwrap();
+        sub.submit(JobRequest::new(JobKind::Bfs, 3)).unwrap(); // deadline-less: never shed
         std::thread::sleep(Duration::from_millis(2));
         q.poll(q.now());
         let shed = q.take_shed();

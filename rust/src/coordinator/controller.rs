@@ -797,6 +797,7 @@ fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::JobRequest;
     use crate::graph::generate;
     use crate::scheduler::SchedulerKind;
     use crate::trace::{JobKind, TraceJob};
@@ -1050,8 +1051,8 @@ mod tests {
     fn serve_notify_fires_completion_hook_with_tags() {
         let (g, part) = setup();
         let (sub, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
-        sub.submit_tagged(JobKind::Bfs, 3, None, 11).unwrap();
-        sub.submit_tagged(JobKind::Wcc, 0, None, 22).unwrap();
+        sub.submit(JobRequest::new(JobKind::Bfs, 3).with_id(11)).unwrap();
+        sub.submit(JobRequest::new(JobKind::Wcc, 0).with_id(22)).unwrap();
         drop(sub);
         let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
         let mut coord = Coordinator::new(&g, &part, cfg);
@@ -1079,8 +1080,8 @@ mod tests {
         let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
         let mut coord = Coordinator::new(&g, &part, cfg);
         let (sub, mut q) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
-        sub.submit_tagged(JobKind::PageRank, 0, None, 70).unwrap();
-        sub.submit_tagged(JobKind::PageRank, 9, None, 71).unwrap();
+        sub.submit(JobRequest::new(JobKind::PageRank, 0).with_id(70)).unwrap();
+        sub.submit(JobRequest::new(JobKind::PageRank, 9).with_id(71)).unwrap();
         drop(sub);
         let mut st = RunState::new(false);
         let retire = || 1.0f64;
@@ -1141,8 +1142,8 @@ mod tests {
         // it completes untouched.
         let (g, part) = setup();
         let (sub, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
-        sub.submit_tagged(JobKind::PageRank, 0, Some(1e-9), 7).unwrap();
-        sub.submit_tagged(JobKind::Bfs, 3, None, 8).unwrap();
+        sub.submit(JobRequest::new(JobKind::PageRank, 0).deadline(Some(1e-9)).with_id(7)).unwrap();
+        sub.submit(JobRequest::new(JobKind::Bfs, 3).with_id(8)).unwrap();
         drop(sub);
         let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
         cfg.deadline_grace = 1.0;
@@ -1168,7 +1169,7 @@ mod tests {
         // the queue but never kill work.
         let (g, part) = setup();
         let (sub, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
-        sub.submit_with(JobKind::Bfs, 3, Some(1e-9)).unwrap();
+        sub.submit(JobRequest::new(JobKind::Bfs, 3).deadline(Some(1e-9))).unwrap();
         drop(sub);
         let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
         let mut coord = Coordinator::new(&g, &part, cfg);
@@ -1182,8 +1183,8 @@ mod tests {
         let (g, part) = setup();
         let acfg = AdmissionConfig { shed_overdue: true, ..Default::default() };
         let (sub, mut queue) = AdmissionQueue::live(&acfg, 1000.0);
-        sub.submit_tagged(JobKind::PageRank, 0, Some(1e-9), 3).unwrap();
-        sub.submit_tagged(JobKind::Bfs, 3, None, 4).unwrap();
+        sub.submit(JobRequest::new(JobKind::PageRank, 0).deadline(Some(1e-9)).with_id(3)).unwrap();
+        sub.submit(JobRequest::new(JobKind::Bfs, 3).with_id(4)).unwrap();
         drop(sub);
         let cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
         let mut coord = Coordinator::new(&g, &part, cfg);

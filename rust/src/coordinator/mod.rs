@@ -7,7 +7,8 @@ pub mod controller;
 pub mod metrics;
 
 pub use admission::{
-    AdmissionConfig, AdmissionPolicy, AdmissionQueue, JobSubmitter, SubmitError, Submission,
+    AdmissionConfig, AdmissionPolicy, AdmissionQueue, JobId, JobRequest, JobSubmitter,
+    SubmitError, Submission,
 };
 pub use controller::{Coordinator, CoordinatorConfig};
 pub use metrics::{JobOutcome, JobRecord, RunMetrics};

@@ -18,20 +18,23 @@
 //! tlsched serve --source live --minutes 2 --policy correlation --shards 4
 //! echo "pagerank 0" | tlsched serve --source stdin --time-scale 1
 //! tlsched serve --source tcp --listen 127.0.0.1:7171 --time-scale 60
+//! tlsched serve --source tcp --http 127.0.0.1:7180 --time-scale 60
 //! tlsched submit --addr 127.0.0.1:7171 "sssp 42"
 //! tlsched loadgen --addr 127.0.0.1:7171 --connections 4 --minutes 2
+//! tlsched loadgen --addr 127.0.0.1:7180 --http true --minutes 2
 //! tlsched gen --trace trace.jsonl --days 7
 //! tlsched xla --jobs 4
 //! ```
 
 use tlsched::config::{GraphSource, RunConfig};
 use tlsched::coordinator::{
-    AdmissionPolicy, AdmissionQueue, Coordinator, CoordinatorConfig, SubmitError,
+    AdmissionPolicy, AdmissionQueue, Coordinator, CoordinatorConfig, JobRequest, SubmitError,
 };
 use tlsched::engine::JobSpec;
 use tlsched::graph::BlockPartition;
 use tlsched::net::{
-    proto, run_loadgen_with, Client, NetServer, NetServerConfig, RetryPolicy, Submitted,
+    proto, run_http_loadgen_with, run_loadgen_with, Client, HttpServer, HttpServerConfig,
+    NetServer, NetServerConfig, RetryPolicy, Submitted,
 };
 use tlsched::scheduler::{Scheduler, SchedulerConfig, SchedulerKind};
 use tlsched::trace::{self, JobKind, TraceConfig};
@@ -320,6 +323,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let spec = common_spec("tlsched serve", "serve a live stream of concurrent jobs")
         .opt("source", "live", "job source: live (trace generator thread) | stdin | tcp")
         .opt("listen", "", "tcp bind address (empty = config serve.listen)")
+        .opt("http", "", "also serve the HTTP/JSON gateway on this address (empty = config serve.http)")
         .opt("minutes", "2", "live-source stream length (virtual minutes)")
         .opt("rate", "600", "live-source mean arrivals per hour")
         .opt("time-scale", "60", "virtual seconds per wall second")
@@ -360,6 +364,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
     if a.was_set("report-every-s") {
         cfg.serve.report_every_s = a.f64("report-every-s");
     }
+    if a.was_set("http") {
+        cfg.serve.http = a.str("http").to_string();
+    }
     let source = a.str("source").to_string();
     if source != "live" && source != "stdin" && source != "tcp" {
         eprintln!("unknown source '{source}' (want live|stdin|tcp)");
@@ -374,6 +381,32 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let part = cfg.build_partition(&g, a.usize("max-concurrent"));
     let time_scale = a.f64("time-scale");
     let (submitter, mut queue) = AdmissionQueue::live(&cfg.serve.admission, time_scale);
+    let nv = (g.num_vertices() as u32).max(1);
+
+    // Optional co-resident HTTP/JSON gateway: shares the admission
+    // queue (and id space) with the producer via a submitter clone.
+    // With HTTP on, serve exits once the producer finished AND the
+    // gateway got `POST /shutdown`.
+    let http = if cfg.serve.http.is_empty() {
+        None
+    } else {
+        let hcfg = HttpServerConfig {
+            listen: cfg.serve.http.clone(),
+            max_connections: cfg.serve.max_connections,
+            idle_timeout_s: cfg.serve.idle_timeout_s,
+            terminal_capacity: cfg.serve.http_terminal_capacity,
+        };
+        match HttpServer::start(&hcfg, submitter.clone(), nv) {
+            Ok(h) => {
+                println!("http listening on {}", h.local_addr());
+                Some(h)
+            }
+            Err(e) => {
+                eprintln!("bind http {}: {e}", hcfg.listen);
+                return 1;
+            }
+        }
+    };
 
     // Producer thread: plays a generated arrival trace in wall time, or
     // reads job lines from stdin. Dropping the submitter at the end is
@@ -381,7 +414,6 @@ fn cmd_serve(argv: &[String]) -> i32 {
     // (delivered, skipped): lines rejected at parse time (bad kind or
     // malformed source vertex) are reported on stderr, skipped and
     // counted — never silently coerced.
-    let nv = (g.num_vertices() as u32).max(1);
     let slo = cfg.serve.admission.slo_factor;
     let producer = if source == "live" {
         let tc = TraceConfig {
@@ -399,8 +431,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
         std::thread::spawn(move || {
             let delivered = trace::play_live(&jobs, time_scale, |tj| {
                 let deadline = Some(submitter.now() + slo * tj.service_s);
-                match submitter.submit_with(tj.kind, tj.source % nv, deadline) {
-                    Ok(()) => true,
+                let req = JobRequest::new(tj.kind, tj.source % nv).deadline(deadline);
+                match submitter.submit(req) {
+                    Ok(_) => true,
                     // backpressure: shed this job, keep streaming
                     Err(SubmitError::QueueFull) => true,
                     Err(SubmitError::Closed) => false,
@@ -426,8 +459,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
                         eprintln!("STATUS/METRICS are wire requests; ignored on stdin");
                     }
                     Ok(Some(proto::Request::Submit(j))) => {
-                        match submitter.submit_with(j.kind, j.source, j.deadline_s) {
-                            Ok(()) => delivered += 1,
+                        let req = JobRequest::new(j.kind, j.source).deadline(j.deadline_s);
+                        match submitter.submit(req) {
+                            Ok(_) => delivered += 1,
                             Err(e) => eprintln!("rejected: {e}"),
                         }
                     }
@@ -456,10 +490,36 @@ fn cmd_serve(argv: &[String]) -> i32 {
         cfg.serve.admission.queue_capacity,
         time_scale,
     );
-    let m = coord.serve(&mut queue, cfg.serve.report_every_s, |snap| {
-        println!("{}", snap.to_json());
-    });
+    // With the HTTP front on, keep its /metrics snapshot fresh
+    // (~1 wall second) even when no printed report was asked for.
+    let print_reports = cfg.serve.report_every_s > 0.0;
+    let cadence = if http.is_some() && !print_reports {
+        time_scale
+    } else {
+        cfg.serve.report_every_s
+    };
+    let m = coord.serve_notify(
+        &mut queue,
+        cadence,
+        |snap| {
+            let j = snap.to_json().to_string();
+            if let Some(h) = &http {
+                h.publish_metrics(&j);
+            }
+            if print_reports {
+                println!("{j}");
+            }
+        },
+        |rec| {
+            if let Some(h) = &http {
+                h.notify_done(rec);
+            }
+        },
+    );
     let (delivered, skipped) = producer.join().unwrap_or((0, 0));
+    if let Some(h) = &http {
+        h.publish_metrics(&m.to_json().to_string());
+    }
     println!(
         "serve done: completed={} failed={} cancelled={} shed={} rejected={} \
          delivered={} skipped_lines={} \
@@ -476,6 +536,21 @@ fn cmd_serve(argv: &[String]) -> i32 {
         m.mean_queue_wait_s(),
         m.sharing_factor(),
     );
+    if let Some(h) = http {
+        let hs = h.finish();
+        println!(
+            "http done: connections={} requests={} accepted={} rejected_busy={} \
+             rejected_parse={} delivered={} terminals_evicted={} bad_requests={}",
+            hs.connections_total,
+            hs.requests,
+            hs.accepted,
+            hs.rejected_busy,
+            hs.rejected_parse,
+            hs.delivered,
+            hs.terminals_evicted,
+            hs.bad_requests,
+        );
+    }
     write_report(a.str("report"), &m);
     0
 }
@@ -495,6 +570,30 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
         a.str("listen").to_string()
     } else {
         cfg.serve.listen.clone()
+    };
+    // Optional co-resident HTTP/JSON gateway: clones the submitter
+    // (shared id space) before the TCP front consumes it. The fan-out
+    // below offers completions HTTP-first; ids never collide, so TCP's
+    // done_dropped accounting is untouched.
+    let http = if cfg.serve.http.is_empty() {
+        None
+    } else {
+        let hcfg = HttpServerConfig {
+            listen: cfg.serve.http.clone(),
+            max_connections: cfg.serve.max_connections,
+            idle_timeout_s: cfg.serve.idle_timeout_s,
+            terminal_capacity: cfg.serve.http_terminal_capacity,
+        };
+        match HttpServer::start(&hcfg, submitter.clone(), nv) {
+            Ok(h) => {
+                println!("http listening on {}", h.local_addr());
+                Some(h)
+            }
+            Err(e) => {
+                eprintln!("bind http {}: {e}", hcfg.listen);
+                return 1;
+            }
+        }
     };
     let ncfg = NetServerConfig {
         listen,
@@ -534,13 +633,28 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
         |snap| {
             let j = snap.to_json().to_string();
             server.publish_metrics(&j);
+            if let Some(h) = &http {
+                h.publish_metrics(&j);
+            }
             if print_reports {
                 println!("{j}");
             }
         },
-        |rec| server.notify_done(rec),
+        |rec| {
+            // precise ownership: the HTTP front claims only ids in its
+            // own pending set; everything else is the TCP router's
+            if let Some(h) = &http {
+                if h.notify_done(rec) {
+                    return;
+                }
+            }
+            server.notify_done(rec);
+        },
     );
     server.publish_metrics(&m.to_json().to_string());
+    if let Some(h) = &http {
+        h.publish_metrics(&m.to_json().to_string());
+    }
     let stats = server.finish();
     println!(
         "serve done: completed={} failed={} cancelled={} shed={} rejected={} drained={} \
@@ -566,6 +680,21 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
         m.mean_queue_wait_s(),
         m.sharing_factor(),
     );
+    if let Some(h) = http {
+        let hs = h.finish();
+        println!(
+            "http done: connections={} requests={} accepted={} rejected_busy={} \
+             rejected_parse={} delivered={} terminals_evicted={} bad_requests={}",
+            hs.connections_total,
+            hs.requests,
+            hs.accepted,
+            hs.rejected_busy,
+            hs.rejected_parse,
+            hs.delivered,
+            hs.terminals_evicted,
+            hs.bad_requests,
+        );
+    }
     write_report(a.str("report"), &m);
     0
 }
@@ -580,6 +709,7 @@ fn cmd_submit(argv: &[String]) -> i32 {
     .opt("connect-timeout-s", "5", "connection retry window, seconds")
     .opt("retries", "0", "REJECT-busy re-attempts per job (exponential backoff)")
     .opt("backoff-ms", "100", "base backoff between retries, doubled per attempt")
+    .opt("strict", "true", "exit nonzero when ANY job failed (false: only when all did)")
     .pos("job", "", "inline job line, e.g. 'pagerank 0'");
     let a = match spec.parse_from(argv) {
         Ok(a) => a,
@@ -668,8 +798,19 @@ fn cmd_submit(argv: &[String]) -> i32 {
         }
     }
     let _ = client.quit();
-    println!("submitted={acked} rejected={rejected} retried={retried} completed={done} failed={failed}");
-    if (acked == 0 && rejected > 0) || (failed > 0 && done == 0) {
+    // same outcome-split vocabulary as `loadgen done:`
+    println!(
+        "submit done: sent={} acked={acked} rejected={rejected} retried={retried} \
+         done={done} failed={failed}",
+        acked + rejected,
+    );
+    // Nonzero when nothing was accepted, or on failures: any failure
+    // under --strict (the default), all-failed otherwise. The old
+    // behavior — partial failures exiting 0 — masked broken jobs in
+    // scripted pipelines.
+    let strict: bool = a.parse("strict");
+    let failure_exit = if strict { failed > 0 } else { failed > 0 && done == 0 };
+    if (acked == 0 && rejected > 0) || failure_exit {
         1
     } else {
         0
@@ -682,6 +823,7 @@ fn cmd_loadgen(argv: &[String]) -> i32 {
         "closed-loop load generator: replay a trace over N connections, print latency percentiles",
     )
     .opt("addr", "127.0.0.1:7171", "server address")
+    .opt("http", "false", "drive the HTTP/JSON gateway instead of the TCP line protocol")
     .opt("connections", "4", "concurrent connections")
     .opt("trace", "", "trace JSONL path (empty = generate)")
     .opt("minutes", "2", "generated trace length (virtual minutes)")
@@ -709,11 +851,13 @@ fn cmd_loadgen(argv: &[String]) -> i32 {
             .expect("trace parse")
     };
     let connections = a.usize("connections").max(1);
+    let over_http: bool = a.parse("http");
     println!(
-        "loadgen: {} jobs over {} connection(s) to {} (time_scale {})",
+        "loadgen: {} jobs over {} connection(s) to {} via {} (time_scale {})",
         jobs.len(),
         connections,
         a.str("addr"),
+        if over_http { "http" } else { "tcp" },
         a.f64("time-scale"),
     );
     let timeout = std::time::Duration::from_secs_f64(a.f64("connect-timeout-s"));
@@ -722,14 +866,26 @@ fn cmd_loadgen(argv: &[String]) -> i32 {
         backoff_ms: a.u64("backoff-ms"),
         seed: a.u64("seed"),
     };
-    match run_loadgen_with(
-        a.str("addr"),
-        &jobs,
-        connections,
-        a.f64("time-scale"),
-        timeout,
-        policy,
-    ) {
+    let run = if over_http {
+        run_http_loadgen_with(
+            a.str("addr"),
+            &jobs,
+            connections,
+            a.f64("time-scale"),
+            timeout,
+            policy,
+        )
+    } else {
+        run_loadgen_with(
+            a.str("addr"),
+            &jobs,
+            connections,
+            a.f64("time-scale"),
+            timeout,
+            policy,
+        )
+    };
+    match run {
         Ok(r) => {
             println!(
                 "loadgen done: sent={} acked={} rejected_busy={} rejected_parse={} retried={} \

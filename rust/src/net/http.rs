@@ -1,0 +1,1242 @@
+//! HTTP/1.1 front-end: the operator-friendly JSON gateway over the
+//! same `JobSubmitter` seam and serve-loop hooks as the TCP server.
+//!
+//! Threading model mirrors [`super::server`] exactly (no async
+//! runtime; std::net only): one accept-loop thread owning the primary
+//! [`JobSubmitter`] over a non-blocking listener (~25ms poll), one
+//! handler thread per connection (HTTP/1.1 keep-alive request loop),
+//! and the serve loop on the caller's thread feeding
+//! [`HttpServer::notify_done`] from its completion hook and
+//! [`HttpServer::publish_metrics`] from its report hook.
+//!
+//! Surface:
+//!
+//! ```text
+//! POST /jobs      {"kind":"bfs","source":7,"deadline_s":10.5}
+//!                 -> 200 {"id":N,"state":"accepted"}
+//!                 |  400 {"error":"<parse detail>"}   (connection survives)
+//!                 |  429 {"error":"busy"}             (queue backpressure)
+//!                 |  503 {"error":"closed"}           (serve loop gone)
+//! GET  /jobs/<id> -> 200 terminal JSON | 200 pending | 404 unknown
+//! GET  /status    -> 200 server-state JSON
+//! GET  /metrics   -> 200 latest serve metrics snapshot JSON
+//! GET  /          -> 200 static status page (text/html)
+//! POST /shutdown  -> 200; stops accepting and releases the primary
+//!                    submitter (the HTTP analog of the TCP server's
+//!                    last-client-out shutdown)
+//! ```
+//!
+//! **Terminal-state retention.** HTTP clients poll instead of holding
+//! a push channel, so completions are buffered per job in a *bounded*
+//! terminal-state table: `notify_done` moves a job from the pending
+//! set to the table, and the first `GET /jobs/<id>` that observes a
+//! terminal state removes it — every job gets **exactly one durable
+//! terminal answer** (second poll: 404), mirroring the
+//! exactly-one-`DONE`/`FAIL` wire contract proven by chaos_e2e. When
+//! the table overflows `terminal_capacity`, the oldest undelivered
+//! entries are evicted (counted in `terminals_evicted`), bounding
+//! memory under pathological fire-and-forget clients.
+//!
+//! Terminal bodies come from [`proto::terminal_response`] +
+//! [`Response::to_json`](super::proto::Response::to_json) — the same
+//! single source of truth the TCP line protocol encodes, so both
+//! transports speak one terminal vocabulary by construction.
+//!
+//! Co-residency: `tlsched serve --source tcp --http <addr>` runs both
+//! fronts over one admission queue. The completion fan-out offers each
+//! record to the HTTP front first — `notify_done` returns `true` only
+//! for jobs in its own pending set (precise ownership; ids come from
+//! the submitters' shared allocator, so they never collide) — and
+//! falls back to the TCP router, whose `done_dropped` accounting is
+//! untouched.
+//!
+//! Malformed request lines get `400` and the connection closes (the
+//! framing is unrecoverable); malformed *bodies* on a well-framed
+//! request get `400` and the connection — and listener — live on.
+
+use super::client::{ClientError, LoadgenReport, RetryPolicy};
+use super::proto::{self, JobLine, ParseError, PROTO_VERSION};
+use crate::coordinator::{JobRecord, JobRequest, JobSubmitter, SubmitError};
+use crate::trace::{self, JobKind, TraceJob};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Largest accepted request body; anything bigger is `413` and the
+/// connection closes (the unread body would desync the framing).
+const MAX_BODY: usize = 64 * 1024;
+
+/// HTTP front-end tunables (the `[serve]` config keys `http` and
+/// `http_terminal_capacity`).
+#[derive(Debug, Clone)]
+pub struct HttpServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7180`; port 0 picks an ephemeral
+    /// port (tests) — read it back with [`HttpServer::local_addr`].
+    pub listen: String,
+    /// Concurrent-connection cap; over-cap connections get `503` and
+    /// close.
+    pub max_connections: usize,
+    /// Per-connection idle read timeout in seconds; 0 disables.
+    pub idle_timeout_s: f64,
+    /// Bound of the terminal-state table (jobs retired but not yet
+    /// polled); oldest undelivered entries evict beyond it.
+    pub terminal_capacity: usize,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> Self {
+        HttpServerConfig {
+            listen: "127.0.0.1:7180".to_string(),
+            max_connections: 64,
+            idle_timeout_s: 0.0,
+            terminal_capacity: 1024,
+        }
+    }
+}
+
+/// Snapshot of the HTTP front's counters (`GET /status` payload).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HttpStats {
+    pub connections_total: u64,
+    pub connections_active: u64,
+    /// Requests answered (any route, any status).
+    pub requests: u64,
+    /// `POST /jobs` accepted into the admission queue.
+    pub accepted: u64,
+    /// `429` responses: queue backpressure (plus over-cap connections).
+    pub rejected_busy: u64,
+    /// `400` responses to malformed submit bodies.
+    pub rejected_parse: u64,
+    /// Terminal answers delivered by `GET /jobs/<id>` (exactly one per
+    /// retired job, eviction aside).
+    pub delivered: u64,
+    /// Accepted jobs not yet retired.
+    pub pending: u64,
+    /// Retired jobs buffered awaiting their delivering poll.
+    pub terminals_held: u64,
+    /// Terminal states evicted unread by the capacity bound.
+    pub terminals_evicted: u64,
+    /// Requests whose very framing was malformed (bad request line,
+    /// oversized body) — those connections close.
+    pub bad_requests: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections_total: AtomicU64,
+    connections_active: AtomicU64,
+    requests: AtomicU64,
+    accepted: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_parse: AtomicU64,
+    delivered: AtomicU64,
+    bad_requests: AtomicU64,
+}
+
+/// Pending set + bounded terminal-state table. One mutex, never held
+/// across I/O.
+struct JobTable {
+    /// Accepted-but-not-retired job ids this front owns.
+    pending: HashSet<u64>,
+    /// Retired jobs awaiting their one delivering poll.
+    terminal: HashMap<u64, Json>,
+    /// Insertion order of `terminal` entries for eviction; may hold
+    /// ids already delivered (skipped lazily when evicting).
+    order: VecDeque<u64>,
+    capacity: usize,
+    evicted: u64,
+}
+
+/// What a poll observed, under the exactly-once contract.
+enum Polled {
+    /// First poll after retirement: the terminal body, now removed.
+    Terminal(Json),
+    Pending,
+    Unknown,
+}
+
+impl JobTable {
+    fn new(capacity: usize) -> JobTable {
+        JobTable {
+            pending: HashSet::new(),
+            terminal: HashMap::new(),
+            order: VecDeque::new(),
+            capacity: capacity.max(1),
+            evicted: 0,
+        }
+    }
+
+    fn begin(&mut self, id: u64) {
+        self.pending.insert(id);
+    }
+
+    /// Roll back `begin` when the queue rejected the submission.
+    fn abort(&mut self, id: u64) {
+        self.pending.remove(&id);
+    }
+
+    /// Move a retired job into the terminal table. Returns false when
+    /// the job is not this front's (co-resident TCP traffic).
+    fn complete(&mut self, id: u64, body: Json) -> bool {
+        if !self.pending.remove(&id) {
+            return false;
+        }
+        self.terminal.insert(id, body);
+        self.order.push_back(id);
+        while self.terminal.len() > self.capacity {
+            match self.order.pop_front() {
+                Some(old) => {
+                    if self.terminal.remove(&old).is_some() {
+                        self.evicted += 1;
+                    }
+                    // already-delivered ids in `order` are skipped
+                }
+                None => break, // unreachable: order covers terminal
+            }
+        }
+        true
+    }
+
+    fn poll(&mut self, id: u64) -> Polled {
+        if let Some(body) = self.terminal.remove(&id) {
+            return Polled::Terminal(body);
+        }
+        if self.pending.contains(&id) {
+            return Polled::Pending;
+        }
+        Polled::Unknown
+    }
+}
+
+struct Shared {
+    counters: Counters,
+    jobs: Mutex<JobTable>,
+    /// Latest serve metrics JSON published by the serve loop's
+    /// `on_report` hook (the `GET /metrics` payload).
+    snapshot: Mutex<Option<String>>,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    max_connections: usize,
+    idle_timeout_s: f64,
+}
+
+impl Shared {
+    fn stats(&self) -> HttpStats {
+        let (pending, held, evicted) = {
+            let t = self.jobs.lock().unwrap();
+            (t.pending.len() as u64, t.terminal.len() as u64, t.evicted)
+        };
+        HttpStats {
+            connections_total: self.counters.connections_total.load(Ordering::Relaxed),
+            connections_active: self.counters.connections_active.load(Ordering::Relaxed),
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            rejected_busy: self.counters.rejected_busy.load(Ordering::Relaxed),
+            rejected_parse: self.counters.rejected_parse.load(Ordering::Relaxed),
+            delivered: self.counters.delivered.load(Ordering::Relaxed),
+            pending,
+            terminals_held: held,
+            terminals_evicted: evicted,
+            bad_requests: self.counters.bad_requests.load(Ordering::Relaxed),
+        }
+    }
+
+    fn status_json(&self) -> String {
+        let s = self.stats();
+        Json::obj(vec![
+            ("proto_version", Json::num(PROTO_VERSION as f64)),
+            ("transport", Json::str("http")),
+            ("connections_total", Json::num(s.connections_total as f64)),
+            ("connections_active", Json::num(s.connections_active as f64)),
+            ("requests", Json::num(s.requests as f64)),
+            ("accepted", Json::num(s.accepted as f64)),
+            ("rejected_busy", Json::num(s.rejected_busy as f64)),
+            ("rejected_parse", Json::num(s.rejected_parse as f64)),
+            ("delivered", Json::num(s.delivered as f64)),
+            ("pending", Json::num(s.pending as f64)),
+            ("terminals_held", Json::num(s.terminals_held as f64)),
+            ("terminals_evicted", Json::num(s.terminals_evicted as f64)),
+            ("bad_requests", Json::num(s.bad_requests as f64)),
+        ])
+        .to_string()
+    }
+
+    fn metrics_json(&self) -> String {
+        self.snapshot.lock().unwrap().clone().unwrap_or_else(|| "{}".to_string())
+    }
+
+    /// Static status page: the same JSON the API serves, readable in a
+    /// browser without tooling.
+    fn status_page(&self) -> String {
+        let esc = |s: String| s.replace('<', "&lt;");
+        format!(
+            "<!DOCTYPE html><html><head><title>tlsched serve</title></head><body>\
+             <h1>tlsched serve</h1>\
+             <h2>front-end</h2><pre>{}</pre>\
+             <h2>latest serve metrics</h2><pre>{}</pre>\
+             <p>API: POST /jobs &middot; GET /jobs/&lt;id&gt; &middot; \
+             GET /status &middot; GET /metrics</p>\
+             </body></html>",
+            esc(self.status_json()),
+            esc(self.metrics_json()),
+        )
+    }
+
+    fn conn_closed(&self) {
+        self.counters.connections_active.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+}
+
+/// Handle to a running HTTP front-end. Start it before the serve loop,
+/// wire [`HttpServer::notify_done`] into the completion hook (before
+/// the TCP router when co-resident) and
+/// [`HttpServer::publish_metrics`] into the report hook, and call
+/// [`HttpServer::finish`] after the serve loop returns.
+pub struct HttpServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.listen` and start accepting. The primary `submitter`
+    /// moves into the accept loop; its drop (at shutdown) releases the
+    /// coordinator's drain. `num_vertices` parameterizes source
+    /// wrapping, same as the line protocol.
+    pub fn start(
+        cfg: &HttpServerConfig,
+        submitter: JobSubmitter,
+        num_vertices: u32,
+    ) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            counters: Counters::default(),
+            jobs: Mutex::new(JobTable::new(cfg.terminal_capacity)),
+            snapshot: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+            addr,
+            max_connections: cfg.max_connections.max(1),
+            idle_timeout_s: cfg.idle_timeout_s.max(0.0),
+        });
+        let sh = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("tlsched-http-accept".to_string())
+            .spawn(move || accept_loop(listener, submitter, sh, num_vertices))?;
+        log::info!("http: listening on {addr} (max {} connections)", cfg.max_connections.max(1));
+        Ok(HttpServer { shared, accept: Some(accept) })
+    }
+
+    /// Actual bound address (resolves an ephemeral `:0` port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Publish a serve metrics snapshot (one-line JSON) as the
+    /// `GET /metrics` payload. Call from the serve loop's report hook.
+    pub fn publish_metrics(&self, json: &str) {
+        *self.shared.snapshot.lock().unwrap() = Some(json.to_string());
+    }
+
+    /// Offer a retired job to this front: when the id is in the HTTP
+    /// pending set, its terminal state is buffered for polling and
+    /// `true` comes back; `false` means the job is not ours (route it
+    /// to the next front). Call from the serve loop's completion hook.
+    pub fn notify_done(&self, rec: &JobRecord) -> bool {
+        if rec.tag == 0 {
+            return false; // batch/trace sentinel: never HTTP's
+        }
+        let resp = proto::terminal_response(rec);
+        let owned = self.shared.jobs.lock().unwrap().complete(rec.tag, resp.to_json());
+        if owned {
+            log::info!(
+                "http: job={} outcome={} latency_s={:.6}",
+                rec.tag,
+                rec.outcome.label(),
+                rec.latency_s(),
+            );
+        }
+        owned
+    }
+
+    /// Front-end counters so far.
+    pub fn stats(&self) -> HttpStats {
+        self.shared.stats()
+    }
+
+    /// Shut the listener down (idempotent — `POST /shutdown` normally
+    /// already did) and join the accept loop.
+    pub fn finish(mut self) -> HttpStats {
+        self.shared.begin_shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.stats()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    submitter: JobSubmitter,
+    shared: Arc<Shared>,
+    num_vertices: u32,
+) {
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
+            }
+        };
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_nodelay(true);
+        let admitted = shared
+            .counters
+            .connections_active
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                if (n as usize) < shared.max_connections {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok();
+        if !admitted {
+            shared.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            write_response(&mut s, 503, "{\"error\":\"busy\"}", "application/json", false);
+            continue; // drop closes it
+        }
+        shared.counters.connections_total.fetch_add(1, Ordering::Relaxed);
+        let sub = submitter.clone();
+        let sh = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("tlsched-http-conn".to_string())
+            .spawn(move || handle_conn(stream, sub, sh, num_vertices));
+        if spawned.is_err() {
+            shared.conn_closed();
+        }
+    }
+    // dropping the primary submitter here releases the coordinator's
+    // drain once every handler's clone is gone too
+}
+
+/// One framed request.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+    keep_alive: bool,
+}
+
+enum ReadOutcome {
+    Request(HttpRequest),
+    /// Clean EOF / idle timeout between requests.
+    Closed,
+    /// Unrecoverable framing (bad request line, oversized or
+    /// non-Content-Length body): answer `status` and close.
+    Malformed { status: u16, error: String },
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> ReadOutcome {
+    let mut line = String::new();
+    // tolerate blank lines between pipelined requests (RFC 9112 §2.2)
+    let request_line = loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            // EOF, idle timeout, or torn socket: the connection is done
+            Ok(0) | Err(_) => return ReadOutcome::Closed,
+            Ok(_) => {}
+        }
+        let t = line.trim();
+        if !t.is_empty() {
+            break t.to_string();
+        }
+    };
+    let mut it = request_line.split_whitespace();
+    let (method, path, version) = match (it.next(), it.next(), it.next(), it.next()) {
+        (Some(m), Some(p), Some(v), None) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), p.to_string(), v)
+        }
+        _ => {
+            return ReadOutcome::Malformed {
+                status: 400,
+                error: "bad request line".to_string(),
+            }
+        }
+    };
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_length = 0usize;
+    for _ in 0..128 {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return ReadOutcome::Closed,
+            Ok(_) => {}
+        }
+        let h = line.trim();
+        if h.is_empty() {
+            // end of headers
+            if content_length > MAX_BODY {
+                return ReadOutcome::Malformed {
+                    status: 413,
+                    error: format!("body over {MAX_BODY} bytes"),
+                };
+            }
+            let mut buf = vec![0u8; content_length];
+            if reader.read_exact(&mut buf).is_err() {
+                return ReadOutcome::Closed;
+            }
+            let body = match String::from_utf8(buf) {
+                Ok(s) => s,
+                Err(_) => {
+                    return ReadOutcome::Malformed {
+                        status: 400,
+                        error: "body is not utf-8".to_string(),
+                    }
+                }
+            };
+            return ReadOutcome::Request(HttpRequest { method, path, body, keep_alive });
+        }
+        let Some((k, v)) = h.split_once(':') else {
+            return ReadOutcome::Malformed { status: 400, error: "bad header".to_string() };
+        };
+        let key = k.trim().to_ascii_lowercase();
+        let val = v.trim();
+        match key.as_str() {
+            "content-length" => match val.parse::<usize>() {
+                Ok(n) => content_length = n,
+                Err(_) => {
+                    return ReadOutcome::Malformed {
+                        status: 400,
+                        error: "bad content-length".to_string(),
+                    }
+                }
+            },
+            "transfer-encoding" => {
+                // Content-Length bodies only: chunked framing is not
+                // recoverable without decoding it
+                return ReadOutcome::Malformed {
+                    status: 400,
+                    error: "transfer-encoding unsupported (use Content-Length)".to_string(),
+                };
+            }
+            "connection" => {
+                if val.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if val.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    // >128 header lines: nobody legitimate sends that
+    ReadOutcome::Malformed { status: 400, error: "too many headers".to_string() }
+}
+
+/// Write one response; false when the peer is gone.
+fn write_response(
+    w: &mut TcpStream,
+    status: u16,
+    body: &str,
+    content_type: &str,
+    keep_alive: bool,
+) -> bool {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "OK",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes()).is_ok() && w.write_all(body.as_bytes()).is_ok()
+}
+
+/// Parse a `POST /jobs` body. Field vocabulary mirrors the line
+/// protocol (`kind`, `source`, `deadline_s`), and the error strings
+/// reuse the typed [`ParseError`] texts where one applies, so both
+/// transports reject with the same words.
+fn parse_job_body(body: &str, num_vertices: u32) -> Result<JobLine, String> {
+    let v = Json::parse(body).map_err(|e| e.to_string())?;
+    if v.as_obj().is_none() {
+        return Err("body must be a JSON object".to_string());
+    }
+    let kind_tok = v
+        .get_str("kind")
+        .ok_or_else(|| "missing 'kind' (want pagerank|sssp|wcc|bfs|ppr)".to_string())?;
+    let kind = JobKind::from_name(kind_tok)
+        .ok_or_else(|| ParseError::BadKind(kind_tok.to_string()).to_string())?;
+    let source = match v.get("source") {
+        None | Some(Json::Null) => 0,
+        Some(s) => s
+            .as_u64()
+            .and_then(|x| u32::try_from(x).ok())
+            .ok_or_else(|| ParseError::BadSource(s.to_string()).to_string())?
+            % num_vertices.max(1),
+    };
+    let deadline_s = match v.get("deadline_s") {
+        None | Some(Json::Null) => None,
+        Some(d) => Some(
+            d.as_f64().ok_or_else(|| ParseError::BadDeadline(d.to_string()).to_string())?,
+        ),
+    };
+    Ok(JobLine { kind, source, deadline_s })
+}
+
+fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, nv: u32) {
+    let Ok(mut writer) = stream.try_clone() else {
+        shared.conn_closed();
+        return;
+    };
+    if shared.idle_timeout_s > 0.0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_secs_f64(shared.idle_timeout_s)));
+    }
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader) {
+            ReadOutcome::Closed => break,
+            ReadOutcome::Malformed { status, error } => {
+                shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+                shared.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let body = Json::obj(vec![("error", Json::str(error.as_str()))]).to_string();
+                write_response(&mut writer, status, &body, "application/json", false);
+                log::info!("http: malformed request status={status} error={error:?}");
+                break;
+            }
+            ReadOutcome::Request(req) => {
+                shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let (status, body, content_type) = dispatch(&req, &submitter, &shared, nv);
+                let wrote =
+                    write_response(&mut writer, status, &body, content_type, req.keep_alive);
+                let keep = wrote && req.keep_alive;
+                log::debug!(
+                    "http: method={} path={} status={status} latency_s={:.6}",
+                    req.method,
+                    req.path,
+                    t0.elapsed().as_secs_f64(),
+                );
+                if !keep {
+                    break;
+                }
+            }
+        }
+    }
+    drop(submitter); // release the coordinator's drain for this handler
+    shared.conn_closed();
+}
+
+/// Route one request. Returns (status, body, content type).
+fn dispatch(
+    req: &HttpRequest,
+    submitter: &JobSubmitter,
+    shared: &Arc<Shared>,
+    nv: u32,
+) -> (u16, String, &'static str) {
+    const JSON: &str = "application/json";
+    let err = |msg: &str| Json::obj(vec![("error", Json::str(msg))]).to_string();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/jobs") => {
+            let job = match parse_job_body(&req.body, nv) {
+                Ok(j) => j,
+                Err(msg) => {
+                    shared.counters.rejected_parse.fetch_add(1, Ordering::Relaxed);
+                    log::info!("http: submit rejected parse error={msg:?}");
+                    return (400, err(&msg), JSON);
+                }
+            };
+            // register ownership *before* the queue submit, so the
+            // serve loop cannot retire the job before the pending
+            // entry exists (the HTTP analog of ACK-before-DONE)
+            let id = submitter.next_id();
+            shared.jobs.lock().unwrap().begin(id);
+            match submitter.submit(
+                JobRequest::new(job.kind, job.source).deadline(job.deadline_s).with_id(id),
+            ) {
+                Ok(_) => {
+                    shared.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                    log::info!("http: submit job={id} kind={} accepted", job.kind.name());
+                    (200, proto::Response::Ack(id).to_json().to_string(), JSON)
+                }
+                Err(e) => {
+                    shared.jobs.lock().unwrap().abort(id);
+                    let (status, reason) = match e {
+                        SubmitError::QueueFull => {
+                            shared.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                            (429, "busy")
+                        }
+                        SubmitError::Closed => (503, "closed"),
+                    };
+                    log::info!("http: submit job={id} rejected {reason}");
+                    (status, err(reason), JSON)
+                }
+            }
+        }
+        ("GET", p) if p.starts_with("/jobs/") => {
+            let Ok(id) = p["/jobs/".len()..].parse::<u64>() else {
+                return (400, err("bad job id"), JSON);
+            };
+            match shared.jobs.lock().unwrap().poll(id) {
+                Polled::Terminal(body) => {
+                    shared.counters.delivered.fetch_add(1, Ordering::Relaxed);
+                    log::info!("http: poll job={id} delivered");
+                    (200, body.to_string(), JSON)
+                }
+                Polled::Pending => (
+                    200,
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("state", Json::str("pending")),
+                    ])
+                    .to_string(),
+                    JSON,
+                ),
+                Polled::Unknown => (404, err("unknown job"), JSON),
+            }
+        }
+        ("GET", "/status") => (200, shared.status_json(), JSON),
+        ("GET", "/metrics") => (200, shared.metrics_json(), JSON),
+        ("GET", "/") => (200, shared.status_page(), "text/html"),
+        ("POST", "/shutdown") => {
+            log::info!("http: shutdown requested");
+            shared.begin_shutdown();
+            (200, Json::obj(vec![("state", Json::str("shutting_down"))]).to_string(), JSON)
+        }
+        ("POST", _) | ("GET", _) => (404, err("not found"), JSON),
+        _ => (405, err("method not allowed"), JSON),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client side: a minimal keep-alive HTTP client + the loadgen HTTP mode
+// ---------------------------------------------------------------------------
+
+/// Minimal synchronous HTTP/1.1 client over one keep-alive connection
+/// — enough to drive the gateway from `tlsched loadgen --http` and the
+/// e2e tests without any HTTP dependency.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    /// Connect with retry until `timeout` — for racing a server that
+    /// is still binding (CI smoke, scripted stacks).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<HttpClient, ClientError> {
+        let deadline = Instant::now() + timeout;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if Instant::now() >= deadline => return Err(e.into()),
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HttpClient { reader, writer: stream })
+    }
+
+    /// One request/response round-trip. The body comes back parsed
+    /// (`Json::Null` when empty or not JSON — the status page).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, Json), ClientError> {
+        let b = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: tlsched\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{b}",
+            b.len(),
+        );
+        self.writer.write_all(req.as_bytes())?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(ClientError::Proto("connection closed by server".to_string()));
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| ClientError::Proto(format!("bad status line: {line:?}")))?;
+        let mut content_length = 0usize;
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(ClientError::Proto("connection closed mid-headers".to_string()));
+            }
+            let h = line.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| ClientError::Proto("bad content-length".to_string()))?;
+                }
+            }
+        }
+        let mut buf = vec![0u8; content_length];
+        self.reader.read_exact(&mut buf)?;
+        let text = String::from_utf8_lossy(&buf);
+        Ok((status, Json::parse(&text).unwrap_or(Json::Null)))
+    }
+
+    /// `POST /jobs`.
+    pub fn submit(
+        &mut self,
+        kind: JobKind,
+        source: u32,
+        deadline_s: Option<f64>,
+    ) -> Result<(u16, Json), ClientError> {
+        let mut pairs = vec![
+            ("kind", Json::str(kind.name())),
+            ("source", Json::num(source)),
+        ];
+        if let Some(d) = deadline_s {
+            pairs.push(("deadline_s", Json::num(d)));
+        }
+        let body = Json::obj(pairs).to_string();
+        self.request("POST", "/jobs", Some(&body))
+    }
+
+    /// `GET /jobs/<id>`.
+    pub fn poll(&mut self, id: u64) -> Result<(u16, Json), ClientError> {
+        self.request("GET", &format!("/jobs/{id}"), None)
+    }
+
+    /// `POST /shutdown`.
+    pub fn shutdown(&mut self) -> Result<(u16, Json), ClientError> {
+        self.request("POST", "/shutdown", None)
+    }
+}
+
+/// [`run_http_loadgen`] with the default retry policy.
+pub fn run_http_loadgen(
+    addr: &str,
+    jobs: &[TraceJob],
+    connections: usize,
+    time_scale: f64,
+    connect_timeout: Duration,
+) -> Result<LoadgenReport, ClientError> {
+    run_http_loadgen_with(
+        addr,
+        jobs,
+        connections,
+        time_scale,
+        connect_timeout,
+        RetryPolicy::default(),
+    )
+}
+
+/// Replay `jobs` against the HTTP gateway over `connections`
+/// keep-alive connections: arrivals fire on the trace clock
+/// ([`trace::play_live`] pacing, jobs dealt round-robin like the TCP
+/// loadgen), `429 busy` submissions re-fire under the retry policy,
+/// and outstanding jobs are polled to their terminal state (latency =
+/// submit → first poll that observes the terminal). After every worker
+/// drains, one extra connection `POST /shutdown`s the gateway — the
+/// closed-loop harness owns the server lifecycle, mirroring the TCP
+/// loadgen's last-client-out.
+pub fn run_http_loadgen_with(
+    addr: &str,
+    jobs: &[TraceJob],
+    connections: usize,
+    time_scale: f64,
+    connect_timeout: Duration,
+    policy: RetryPolicy,
+) -> Result<LoadgenReport, ClientError> {
+    let n = connections.clamp(1, jobs.len().max(1));
+    let t0 = Instant::now();
+    // connect everyone before any traffic flows
+    let mut clients = Vec::with_capacity(n);
+    for _ in 0..n {
+        clients.push(HttpClient::connect_retry(addr, connect_timeout)?);
+    }
+    let mut handles = Vec::with_capacity(n);
+    for (c, client) in clients.into_iter().enumerate() {
+        let sub: Vec<TraceJob> = jobs.iter().skip(c).step_by(n).cloned().collect();
+        let mut pol = policy;
+        pol.seed = policy.seed.wrapping_add(c as u64);
+        handles.push(std::thread::spawn(move || http_worker(client, &sub, time_scale, pol)));
+    }
+    let mut report = LoadgenReport { connections: n, ..Default::default() };
+    for h in handles {
+        let out = h.join().map_err(|_| ClientError::Proto("worker panicked".to_string()))?;
+        report.sent += out.sent;
+        report.acked += out.acked;
+        report.rejected_busy += out.rejected_busy;
+        report.rejected_parse += out.rejected_parse;
+        report.rejected_other += out.rejected_other;
+        report.done += out.done;
+        report.failed += out.failed;
+        report.retried += out.retried;
+        report.latencies_s.extend(out.latencies_s);
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    if let Ok(mut c) = HttpClient::connect_retry(addr, connect_timeout) {
+        let _ = c.shutdown();
+    }
+    Ok(report)
+}
+
+enum SubmitFlow {
+    Accepted,
+    Busy,
+    Refused,
+    Dead,
+}
+
+fn http_submit_once(
+    client: &mut HttpClient,
+    tj: &TraceJob,
+    out: &mut LoadgenReport,
+    outstanding: &mut Vec<(u64, Instant)>,
+) -> SubmitFlow {
+    out.sent += 1;
+    match client.submit(tj.kind, tj.source, None) {
+        Ok((200, body)) => {
+            out.acked += 1;
+            if let Some(id) = body.get_u64("id") {
+                outstanding.push((id, Instant::now()));
+            }
+            SubmitFlow::Accepted
+        }
+        Ok((429, _)) => {
+            out.rejected_busy += 1;
+            SubmitFlow::Busy
+        }
+        Ok((400, _)) => {
+            out.rejected_parse += 1;
+            SubmitFlow::Refused
+        }
+        Ok(_) => {
+            out.rejected_other += 1;
+            SubmitFlow::Refused
+        }
+        Err(_) => SubmitFlow::Dead,
+    }
+}
+
+fn http_worker(
+    mut client: HttpClient,
+    jobs: &[TraceJob],
+    time_scale: f64,
+    policy: RetryPolicy,
+) -> LoadgenReport {
+    let mut out = LoadgenReport::default();
+    let mut outstanding: Vec<(u64, Instant)> = Vec::new();
+    let mut retry: Vec<TraceJob> = Vec::new();
+    let mut alive = true;
+    trace::play_live(jobs, time_scale, |tj| {
+        match http_submit_once(&mut client, tj, &mut out, &mut outstanding) {
+            SubmitFlow::Busy => {
+                retry.push(tj.clone());
+                true
+            }
+            SubmitFlow::Dead => {
+                alive = false;
+                false
+            }
+            _ => true,
+        }
+    });
+    // bounded retry rounds for busy-rejected submissions (each re-send
+    // counts in both `retried` and `sent`, like the TCP loadgen)
+    if policy.retries > 0 && alive {
+        let mut rng = Pcg32::new(policy.seed, 3);
+        for attempt in 0..policy.retries {
+            if retry.is_empty() || !alive {
+                break;
+            }
+            std::thread::sleep(policy.backoff(attempt, &mut rng));
+            let batch = std::mem::take(&mut retry);
+            for tj in &batch {
+                out.retried += 1;
+                match http_submit_once(&mut client, tj, &mut out, &mut outstanding) {
+                    SubmitFlow::Busy => retry.push(tj.clone()),
+                    SubmitFlow::Dead => {
+                        alive = false;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    // poll every accepted job to its terminal state
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !outstanding.is_empty() && alive && Instant::now() < deadline {
+        let mut still = Vec::with_capacity(outstanding.len());
+        for (id, t) in std::mem::take(&mut outstanding) {
+            match client.poll(id) {
+                Ok((200, body)) => match body.get_str("state") {
+                    Some("done") => {
+                        out.done += 1;
+                        out.latencies_s.push(t.elapsed().as_secs_f64());
+                    }
+                    Some("failed") => {
+                        out.failed += 1; // a failure is no latency sample
+                    }
+                    _ => still.push((id, t)), // pending
+                },
+                Ok((404, _)) => out.failed += 1, // evicted unread under overload
+                Ok(_) => still.push((id, t)),
+                Err(_) => {
+                    alive = false;
+                    break;
+                }
+            }
+        }
+        outstanding = still;
+        if !outstanding.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AdmissionConfig, AdmissionQueue};
+
+    #[test]
+    fn terminal_table_exactly_once_and_eviction() {
+        let mut t = JobTable::new(2);
+        for id in 1..=3u64 {
+            t.begin(id);
+        }
+        assert!(matches!(t.poll(1), Polled::Pending));
+        assert!(matches!(t.poll(99), Polled::Unknown));
+        let body = |id: u64| Json::obj(vec![("id", Json::num(id as f64))]);
+        assert!(t.complete(1, body(1)));
+        assert!(!t.complete(1, body(1)), "double retirement is not ours twice");
+        assert!(!t.complete(99, body(99)), "never-pending job is not ours");
+        // exactly-once delivery: first poll gets the body, second 404s
+        assert!(matches!(t.poll(1), Polled::Terminal(_)));
+        assert!(matches!(t.poll(1), Polled::Unknown));
+        // capacity 2: retiring 3 jobs evicts the oldest undelivered
+        assert!(t.complete(2, body(2)));
+        t.begin(4);
+        t.begin(5);
+        assert!(t.complete(3, body(3)));
+        assert!(t.complete(4, body(4)));
+        assert_eq!(t.evicted, 1, "oldest undelivered (2) evicted at capacity");
+        assert!(matches!(t.poll(2), Polled::Unknown));
+        assert!(matches!(t.poll(3), Polled::Terminal(_)));
+        assert!(matches!(t.poll(4), Polled::Terminal(_)));
+        // delivered ids in the order deque are skipped, not re-evicted
+        assert!(t.complete(5, body(5)));
+        assert_eq!(t.evicted, 1);
+        assert!(matches!(t.poll(5), Polled::Terminal(_)));
+    }
+
+    #[test]
+    fn job_body_grammar() {
+        let j = parse_job_body(r#"{"kind":"pagerank","source":7}"#, 100).unwrap();
+        assert_eq!((j.kind, j.source, j.deadline_s), (JobKind::PageRank, 7, None));
+        // source wraps modulo the graph size, like the line protocol
+        assert_eq!(parse_job_body(r#"{"kind":"bfs","source":107}"#, 100).unwrap().source, 7);
+        // source defaults to 0
+        assert_eq!(parse_job_body(r#"{"kind":"wcc"}"#, 100).unwrap().source, 0);
+        let j = parse_job_body(r#"{"kind":"sssp","source":3,"deadline_s":120.5}"#, 100).unwrap();
+        assert_eq!(j.deadline_s, Some(120.5));
+        // null fields read as absent
+        assert_eq!(
+            parse_job_body(r#"{"kind":"bfs","source":null,"deadline_s":null}"#, 100)
+                .unwrap()
+                .source,
+            0,
+        );
+        // errors: shared vocabulary with the line protocol where it fits
+        assert!(parse_job_body("", 100).is_err());
+        assert!(parse_job_body("not json", 100).is_err());
+        assert!(parse_job_body("[1,2]", 100).is_err());
+        assert!(parse_job_body(r#"{"source":1}"#, 100).unwrap_err().contains("kind"));
+        assert!(parse_job_body(r#"{"kind":"frob"}"#, 100).unwrap_err().contains("bad job kind"));
+        assert!(
+            parse_job_body(r#"{"kind":"bfs","source":-1}"#, 100)
+                .unwrap_err()
+                .contains("bad source"),
+        );
+        assert!(
+            parse_job_body(r#"{"kind":"bfs","source":4294967296}"#, 100)
+                .unwrap_err()
+                .contains("bad source"),
+        );
+        assert!(
+            parse_job_body(r#"{"kind":"bfs","source":1,"deadline_s":"soon"}"#, 100)
+                .unwrap_err()
+                .contains("bad deadline"),
+        );
+    }
+
+    /// Full front-end pass over a real socket with a live queue but no
+    /// serve loop: submissions park as pending, the ops surface
+    /// answers, malformed bodies don't kill the connection, and
+    /// shutdown stops the accept loop.
+    #[test]
+    fn server_surface_without_serve_loop() {
+        let acfg = AdmissionConfig { queue_capacity: 4, ..Default::default() };
+        let (submitter, _queue) = AdmissionQueue::live(&acfg, 1000.0);
+        let cfg = HttpServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() };
+        let server = HttpServer::start(&cfg, submitter, 64).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+
+        // submit -> accepted with an id; poll -> pending
+        let (st, body) = c.submit(JobKind::Bfs, 7, None).unwrap();
+        assert_eq!(st, 200, "{body}");
+        let id = body.get_u64("id").unwrap();
+        assert_eq!(body.get_str("state"), Some("accepted"));
+        let (st, body) = c.poll(id).unwrap();
+        assert_eq!((st, body.get_str("state")), (200, Some("pending")));
+
+        // malformed body: 400, and the same connection keeps working
+        let (st, body) = c.request("POST", "/jobs", Some("{\"kind\":\"frob\"}")).unwrap();
+        assert_eq!(st, 400);
+        assert!(body.get_str("error").unwrap().contains("bad job kind"));
+        let (st, _) = c.submit(JobKind::Wcc, 1, Some(9.5)).unwrap();
+        assert_eq!(st, 200, "connection survived the parse reject");
+
+        // queue saturation: capacity 4 with no consumer -> 429 busy
+        let mut saw_busy = false;
+        for _ in 0..8 {
+            let (st, body) = c.submit(JobKind::Bfs, 0, None).unwrap();
+            if st == 429 {
+                assert_eq!(body.get_str("error"), Some("busy"));
+                saw_busy = true;
+                break;
+            }
+        }
+        assert!(saw_busy, "bounded queue must backpressure over HTTP");
+
+        // ops surface
+        let (st, status) = c.request("GET", "/status", None).unwrap();
+        assert_eq!(st, 200);
+        assert!(status.get_u64("accepted").unwrap() >= 2);
+        assert!(status.get_u64("rejected_busy").unwrap() >= 1);
+        assert_eq!(status.get_u64("rejected_parse"), Some(1));
+        let (st, metrics) = c.request("GET", "/metrics", None).unwrap();
+        assert_eq!((st, metrics), (200, Json::Obj(Default::default())));
+        server.publish_metrics("{\"completed\":5}");
+        let (_, metrics) = c.request("GET", "/metrics", None).unwrap();
+        assert_eq!(metrics.get_u64("completed"), Some(5));
+        let (st, page) = c.request("GET", "/", None).unwrap();
+        assert_eq!((st, page), (200, Json::Null), "status page is html, not json");
+        let (st, _) = c.request("GET", "/nope", None).unwrap();
+        assert_eq!(st, 404);
+        let (st, _) = c.request("DELETE", "/jobs", None).unwrap();
+        assert_eq!(st, 405);
+
+        // unknown id 404s; garbage id 400s
+        let (st, _) = c.poll(999_999).unwrap();
+        assert_eq!(st, 404);
+        let (st, _) = c.request("GET", "/jobs/xyz", None).unwrap();
+        assert_eq!(st, 400);
+
+        let (st, _) = c.shutdown().unwrap();
+        assert_eq!(st, 200);
+        drop(c);
+        let stats = server.finish();
+        assert_eq!(stats.rejected_parse, 1);
+        assert!(stats.accepted >= 2);
+        assert_eq!(stats.delivered, 0, "nothing retired without a serve loop");
+    }
+
+    /// A torn request line closes the connection with 400 — but the
+    /// listener keeps serving fresh connections.
+    #[test]
+    fn malformed_request_line_never_kills_listener() {
+        let (submitter, _queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        let cfg = HttpServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() };
+        let server = HttpServer::start(&cfg, submitter, 64).unwrap();
+        let addr = server.local_addr().to_string();
+        for garbage in ["THIS IS NOT HTTP\r\n\r\n", "GET\r\n\r\n", "\u{FFFD}\r\n\r\n"] {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(garbage.as_bytes()).unwrap();
+            let mut buf = String::new();
+            let _ = BufReader::new(&mut s).read_line(&mut buf);
+            assert!(buf.contains("400"), "{garbage:?} -> {buf:?}");
+        }
+        // listener still alive and serving
+        let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        let (st, _) = c.submit(JobKind::Bfs, 3, None).unwrap();
+        assert_eq!(st, 200);
+        let (_, status) = c.request("GET", "/status", None).unwrap();
+        assert_eq!(status.get_u64("bad_requests"), Some(3));
+        let _ = c.shutdown();
+        drop(c);
+        server.finish();
+    }
+
+    #[test]
+    fn notify_done_owns_only_pending_ids() {
+        let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        let cfg = HttpServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() };
+        let server = HttpServer::start(&cfg, submitter.clone(), 64).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        let (_, body) = c.submit(JobKind::Bfs, 1, None).unwrap();
+        let http_id = body.get_u64("id").unwrap();
+        // a co-resident front (TCP) submits through the shared id space
+        let tcp_id = submitter
+            .submit(JobRequest::new(JobKind::Wcc, 0).with_id(submitter.next_id()))
+            .unwrap();
+        queue.poll(queue.now());
+        let rec = |tag: u64| JobRecord {
+            id: 0,
+            tag,
+            kind: "bfs",
+            submitted_s: 0.0,
+            started_s: 0.1,
+            finished_s: 0.5,
+            rounds: 3,
+            updates: 10,
+            edges: 20,
+            outcome: crate::coordinator::JobOutcome::Done,
+        };
+        assert!(server.notify_done(&rec(http_id)), "own job is claimed");
+        assert!(!server.notify_done(&rec(tcp_id)), "foreign job is declined");
+        assert!(!server.notify_done(&rec(0)), "batch sentinel is declined");
+        // the claimed job delivers exactly once with the full split
+        let (st, body) = c.poll(http_id).unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body.get_str("state"), Some("done"));
+        assert_eq!(body.get_u64("rounds"), Some(3));
+        assert!(body.get_f64("queue_wait_s").unwrap() > 0.0);
+        let (st, _) = c.poll(http_id).unwrap();
+        assert_eq!(st, 404, "terminal state delivered exactly once");
+        let _ = c.shutdown();
+        drop(c);
+        let stats = server.finish();
+        assert_eq!(stats.delivered, 1);
+    }
+}

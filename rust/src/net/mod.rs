@@ -17,19 +17,29 @@
 //!   lines, shutdown is a half-close drain.
 //! * [`client`] — the synchronous [`Client`] (`tlsched submit`) and
 //!   the [`run_loadgen`] closed-loop harness (`tlsched loadgen`).
+//! * [`http`] — the HTTP/1.1 JSON gateway (`tlsched serve --http`):
+//!   `POST /jobs` through the same [`JobSubmitter`] seam, terminal
+//!   states buffered for polling in a bounded table, plus `/status`,
+//!   `/metrics` and a static status page for operators.
 //!
 //! See DESIGN.md §8 for the grammar, connection lifecycle,
-//! backpressure semantics and the shard-group deployment sketch.
+//! backpressure semantics and the shard-group deployment sketch, and
+//! §10 for the HTTP surface and its retention contract.
 //!
 //! [`AdmissionQueue`]: crate::coordinator::AdmissionQueue
+//! [`JobSubmitter`]: crate::coordinator::JobSubmitter
 
 pub mod client;
+pub mod http;
 pub mod proto;
 pub mod server;
 
 pub use client::{
     run_loadgen, run_loadgen_with, Client, ClientError, Completion, LoadgenReport, RetryPolicy,
     Submitted,
+};
+pub use http::{
+    run_http_loadgen, run_http_loadgen_with, HttpClient, HttpServer, HttpServerConfig, HttpStats,
 };
 pub use proto::{JobLine, ParseError, Request, Response, PROTO_VERSION};
 pub use server::{NetServer, NetServerConfig, NetStats};

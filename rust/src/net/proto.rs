@@ -41,7 +41,9 @@
 //!
 //! [`SubmitError::QueueFull`]: crate::coordinator::SubmitError::QueueFull
 
+use crate::coordinator::{JobOutcome, JobRecord};
 use crate::trace::JobKind;
+use crate::util::json::Json;
 
 /// Protocol version announced in the `HELLO` greeting; clients refuse
 /// to talk to a server announcing a different major version.
@@ -142,6 +144,25 @@ pub fn parse_request(line: &str, num_vertices: u32) -> Result<Option<Request>, P
     }
 }
 
+impl Request {
+    /// Canonical wire form (explicit command shape), without the
+    /// trailing newline. `parse_request(r.encode())` yields `r` back
+    /// for every representable request — the deadline is written with
+    /// `{}` Display, which round-trips every f64 exactly (NaN included,
+    /// up to NaN's own `!=` semantics).
+    pub fn encode(&self) -> String {
+        match self {
+            Request::Submit(j) => match j.deadline_s {
+                Some(d) => format!("SUBMIT {} {} {}", j.kind.name(), j.source, d),
+                None => format!("SUBMIT {} {}", j.kind.name(), j.source),
+            },
+            Request::Status => "STATUS".to_string(),
+            Request::Metrics => "METRICS".to_string(),
+            Request::Quit => "QUIT".to_string(),
+        }
+    }
+}
+
 /// One server response line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
@@ -176,8 +197,9 @@ fn sanitize_reason(reason: &str) -> String {
 }
 
 impl Response {
-    /// Wire form, without the trailing newline.
-    pub fn to_line(&self) -> String {
+    /// Wire form, without the trailing newline. (Byte-identical to the
+    /// pre-redesign `to_line` output: the TCP protocol is frozen.)
+    pub fn encode(&self) -> String {
         match self {
             Response::Ack(id) => format!("ACK {id}"),
             Response::Reject(reason) => format!("REJECT {reason}"),
@@ -189,6 +211,52 @@ impl Response {
             }
             Response::Json(s) => s.clone(),
         }
+    }
+
+    /// JSON body of this response for the HTTP front — the same
+    /// terminal-state vocabulary as the line protocol, one source of
+    /// truth for both transports.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Ack(id) => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("state", Json::str("accepted")),
+            ]),
+            Response::Reject(reason) => Json::obj(vec![("error", Json::str(reason.as_str()))]),
+            Response::Done { job_id, rounds, queue_wait_s, exec_s } => Json::obj(vec![
+                ("id", Json::num(*job_id as f64)),
+                ("state", Json::str("done")),
+                ("rounds", Json::num(*rounds as f64)),
+                ("queue_wait_s", Json::num(*queue_wait_s)),
+                ("exec_s", Json::num(*exec_s)),
+            ]),
+            Response::Fail { job_id, reason } => Json::obj(vec![
+                ("id", Json::num(*job_id as f64)),
+                ("state", Json::str("failed")),
+                ("reason", Json::str(sanitize_reason(reason))),
+            ]),
+            Response::Json(s) => Json::parse(s).unwrap_or(Json::Null),
+        }
+    }
+}
+
+/// The one mapping from a retired [`JobRecord`] to its terminal
+/// response — `DONE` with the latency split on fixpoint, `FAIL` with
+/// the outcome's reason otherwise. Shared verbatim by the TCP
+/// notification path and the HTTP terminal-state table, so both fronts
+/// speak the same terminal vocabulary by construction.
+pub fn terminal_response(rec: &JobRecord) -> Response {
+    match &rec.outcome {
+        JobOutcome::Done => Response::Done {
+            job_id: rec.tag,
+            rounds: rec.rounds,
+            queue_wait_s: rec.queueing_s(),
+            exec_s: rec.finished_s - rec.started_s,
+        },
+        other => Response::Fail {
+            job_id: rec.tag,
+            reason: other.reason().unwrap_or("failed").to_string(),
+        },
     }
 }
 
@@ -315,12 +383,12 @@ mod tests {
             Response::Reject("busy".into()),
             Response::Reject("parse bad job kind 'x' (want pagerank|sssp|wcc|bfs|ppr)".into()),
             Response::Done { job_id: 7, rounds: 12, queue_wait_s: 0.25, exec_s: 1.5 },
-            // already-sanitized reason so to_line is the identity on it
+            // already-sanitized reason so encode is the identity on it
             Response::Fail { job_id: 9, reason: "injected_panic_at_round_3".into() },
             Response::Json("{\"completed\":3}".into()),
         ];
         for r in cases {
-            assert_eq!(parse_response(&r.to_line()).unwrap(), r, "{}", r.to_line());
+            assert_eq!(parse_response(&r.encode()).unwrap(), r, "{}", r.encode());
         }
         assert!(parse_response("WAT 1").is_err());
         assert!(parse_response("ACK notanid").is_err());
@@ -335,16 +403,16 @@ mod tests {
         // whitespace, control chars, and unbounded length must not be
         // able to desync the line framing
         let r = Response::Fail { job_id: 3, reason: "panic: index\nout of\tbounds".into() };
-        let line = r.to_line();
+        let line = r.encode();
         assert!(!line[5..].contains(['\n', '\t']), "{line:?}");
         assert_eq!(
             parse_response(&line).unwrap(),
             Response::Fail { job_id: 3, reason: "panic:_index_out_of_bounds".into() },
         );
         let long = Response::Fail { job_id: 0, reason: "x".repeat(10_000) };
-        assert!(long.to_line().len() < 100);
+        assert!(long.encode().len() < 100);
         let empty = Response::Fail { job_id: 0, reason: String::new() };
-        assert_eq!(empty.to_line(), "FAIL 0 unknown");
+        assert_eq!(empty.encode(), "FAIL 0 unknown");
     }
 
     // ---- adversarial inputs: the parser must never panic, only return
@@ -460,6 +528,122 @@ mod tests {
             let _ = parse_request(&line, 64);
             let _ = parse_response(&line);
         }
+    }
+
+    #[test]
+    fn request_encode_roundtrip() {
+        let cases = vec![
+            Request::Submit(JobLine { kind: JobKind::PageRank, source: 0, deadline_s: None }),
+            Request::Submit(JobLine { kind: JobKind::Sssp, source: 63, deadline_s: Some(10.5) }),
+            // Display round-trips awkward f64s exactly (shortest repr)
+            Request::Submit(JobLine { kind: JobKind::Bfs, source: 7, deadline_s: Some(0.1) }),
+            Request::Submit(JobLine {
+                kind: JobKind::Ppr,
+                source: 1,
+                deadline_s: Some(f64::INFINITY),
+            }),
+            Request::Status,
+            Request::Metrics,
+            Request::Quit,
+        ];
+        for r in cases {
+            assert_eq!(parse_request(&r.encode(), 64).unwrap(), Some(r.clone()), "{}", r.encode());
+        }
+    }
+
+    #[test]
+    fn fuzz_corpus_parse_encode_is_stable() {
+        // Round-trip property over the PR-6 fuzz corpus: whenever the
+        // parser accepts a line, encoding the parse and re-parsing the
+        // encoding must be a fixpoint. Encoded strings are compared
+        // (not values) so NaN deadlines and {:.6} fixed-point DONE
+        // latencies — encode-idempotent but not value-preserving —
+        // satisfy the property on their own terms.
+        let mut rng = crate::util::rng::Pcg32::new(0xF00D, 0);
+        let vocab = ["pagerank", "SUBMIT", "bfs", "1", "-1", "inf", "\0", "#", "QUIT", "\u{FFFD}"];
+        for _ in 0..2000 {
+            let line: String = match rng.gen_index(3) {
+                0 => (0..rng.gen_index(64))
+                    .map(|_| char::from_u32(rng.gen_range(0xD800)).unwrap_or('?'))
+                    .collect(),
+                1 => (0..rng.gen_index(8))
+                    .map(|_| vocab[rng.gen_index(vocab.len())])
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                _ => {
+                    let mut s = String::from("SUBMIT sssp 42 10.5");
+                    let cut = rng.gen_index(s.len() + 1);
+                    s.truncate(cut);
+                    s
+                }
+            };
+            if let Ok(Some(req)) = parse_request(&line, 64) {
+                let enc = req.encode();
+                let back = parse_request(&enc, 64)
+                    .unwrap_or_else(|e| panic!("{line:?} -> {enc:?} reparse failed: {e}"))
+                    .expect("canonical form is never a blank/comment");
+                assert_eq!(back.encode(), enc, "unstable request encode for {line:?}");
+            }
+            if let Ok(resp) = parse_response(&line) {
+                let enc = resp.encode();
+                let back = parse_response(&enc)
+                    .unwrap_or_else(|e| panic!("{line:?} -> {enc:?} reparse failed: {e}"));
+                assert_eq!(back.encode(), enc, "unstable response encode for {line:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn terminal_response_maps_every_outcome() {
+        let rec = |outcome: JobOutcome| JobRecord {
+            id: 0,
+            tag: 42,
+            kind: "bfs",
+            submitted_s: 1.0,
+            started_s: 1.25,
+            finished_s: 2.75,
+            rounds: 9,
+            updates: 100,
+            edges: 1000,
+            outcome,
+        };
+        assert_eq!(
+            terminal_response(&rec(JobOutcome::Done)),
+            Response::Done { job_id: 42, rounds: 9, queue_wait_s: 0.25, exec_s: 1.5 },
+        );
+        assert_eq!(
+            terminal_response(&rec(JobOutcome::Failed("panic: boom".into()))),
+            Response::Fail { job_id: 42, reason: "panic: boom".into() },
+        );
+        assert_eq!(
+            terminal_response(&rec(JobOutcome::Cancelled("deadline"))),
+            Response::Fail { job_id: 42, reason: "deadline".into() },
+        );
+        assert_eq!(
+            terminal_response(&rec(JobOutcome::Shed)),
+            Response::Fail { job_id: 42, reason: "shed".into() },
+        );
+    }
+
+    #[test]
+    fn response_json_bodies() {
+        let j = Response::Ack(7).to_json();
+        assert_eq!(j.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("state").unwrap().as_str(), Some("accepted"));
+        let j = Response::Reject("busy".into()).to_json();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("busy"));
+        let j = Response::Done { job_id: 3, rounds: 4, queue_wait_s: 0.5, exec_s: 1.5 }.to_json();
+        assert_eq!(j.get("state").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("rounds").unwrap().as_u64(), Some(4));
+        assert_eq!(j.get("queue_wait_s").unwrap().as_f64(), Some(0.5));
+        // FAIL reasons are sanitized in the JSON body too: one terminal
+        // vocabulary across transports
+        let j = Response::Fail { job_id: 3, reason: "a b\nc".into() }.to_json();
+        assert_eq!(j.get("reason").unwrap().as_str(), Some("a_b_c"));
+        // STATUS/METRICS payloads pass through as parsed JSON
+        let j = Response::Json("{\"completed\":3}".into()).to_json();
+        assert_eq!(j.get("completed").unwrap().as_u64(), Some(3));
+        assert_eq!(Response::Json("not json".into()).to_json(), Json::Null);
     }
 
     #[test]

@@ -41,7 +41,7 @@
 //! [`Coordinator::serve_notify`]: crate::coordinator::Coordinator::serve_notify
 
 use super::proto::{self, Request, Response, PROTO_VERSION};
-use crate::coordinator::{JobOutcome, JobRecord, JobSubmitter, SubmitError};
+use crate::coordinator::{JobOutcome, JobRecord, JobRequest, JobSubmitter, SubmitError};
 use crate::util::{faults, json::Json};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -181,7 +181,6 @@ struct Shared {
     /// last-client-out shutdown only arms then, so a transient
     /// STATUS/probe connection cannot kill an idle server.
     saw_submission: AtomicBool,
-    next_tag: AtomicU64,
     addr: SocketAddr,
     max_connections: usize,
     idle_timeout_s: f64,
@@ -271,7 +270,6 @@ impl NetServer {
             snapshot: Mutex::new(None),
             shutdown: AtomicBool::new(false),
             saw_submission: AtomicBool::new(false),
-            next_tag: AtomicU64::new(0),
             addr,
             max_connections: cfg.max_connections.max(1),
             idle_timeout_s: cfg.idle_timeout_s.max(0.0),
@@ -315,19 +313,8 @@ impl NetServer {
             JobOutcome::Done => &self.shared.counters.done_sent,
             _ => &self.shared.counters.fail_sent,
         };
-        let resp = match &rec.outcome {
-            JobOutcome::Done => Response::Done {
-                job_id: rec.tag,
-                rounds: rec.rounds,
-                queue_wait_s: rec.queueing_s(),
-                exec_s: rec.finished_s - rec.started_s,
-            },
-            other => Response::Fail {
-                job_id: rec.tag,
-                reason: other.reason().unwrap_or("failed").to_string(),
-            },
-        };
-        if conn.send_line(&resp.to_line()) {
+        let resp = proto::terminal_response(rec);
+        if conn.send_line(&resp.encode()) {
             sent_ctr.fetch_add(1, Ordering::Relaxed);
         } else {
             self.shared.counters.done_dropped.fetch_add(1, Ordering::Relaxed);
@@ -466,15 +453,16 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
                 // arms the last-client-out shutdown (probe connections
                 // that never submit don't)
                 shared.saw_submission.store(true, Ordering::Release);
-                let tag = shared.next_tag.fetch_add(1, Ordering::Relaxed) + 1;
+                let tag = submitter.next_id();
                 // hold the writer for the whole submit so this job's
                 // DONE (serve-loop thread) cannot overtake its ACK
                 let mut w = conn.writer.lock().unwrap();
                 conn.job_started();
                 shared.routes.lock().unwrap().insert(tag, Arc::clone(&conn));
-                let sent = submitter.submit_tagged(job.kind, job.source, job.deadline_s, tag);
+                let sent = submitter
+                    .submit(JobRequest::new(job.kind, job.source).deadline(job.deadline_s).with_id(tag));
                 let resp = match sent {
-                    Ok(()) => {
+                    Ok(_) => {
                         shared.counters.accepted.fetch_add(1, Ordering::Relaxed);
                         Response::Ack(tag)
                     }
@@ -492,7 +480,7 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
                     }
                 };
                 let acked = matches!(resp, Response::Ack(_));
-                let mut buf = resp.to_line();
+                let mut buf = resp.encode();
                 buf.push('\n');
                 let _ = w.write_all(buf.as_bytes());
                 drop(w);
@@ -508,7 +496,7 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
             Err(e) => {
                 // malformed line: reject, keep the connection
                 shared.counters.rejected_parse.fetch_add(1, Ordering::Relaxed);
-                conn.send_line(&Response::Reject(format!("parse {e}")).to_line());
+                conn.send_line(&Response::Reject(format!("parse {e}")).encode());
             }
         }
     }

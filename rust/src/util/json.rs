@@ -89,6 +89,22 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
 
+    /// `get(key)` then `as_str` — the object-field accessor the HTTP
+    /// body parser leans on.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    /// `get(key)` then `as_u64`.
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.as_u64())
+    }
+
+    /// `get(key)` then `as_f64`.
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
     // -- builders -----------------------------------------------------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -414,6 +430,19 @@ mod tests {
         ]);
         let back = Json::parse(&v.to_string()).unwrap();
         assert_eq!(back, v);
+    }
+
+    #[test]
+    fn keyed_accessors() {
+        let v = Json::parse(r#"{"kind":"bfs","source":7,"deadline_s":1.5}"#).unwrap();
+        assert_eq!(v.get_str("kind"), Some("bfs"));
+        assert_eq!(v.get_u64("source"), Some(7));
+        assert_eq!(v.get_f64("deadline_s"), Some(1.5));
+        // type mismatches and absent keys are None, not panics
+        assert_eq!(v.get_str("source"), None);
+        assert_eq!(v.get_u64("deadline_s"), None, "non-integral");
+        assert_eq!(v.get_f64("nope"), None);
+        assert_eq!(Json::Null.get_str("kind"), None, "non-objects have no keys");
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! End-to-end tests of the HTTP/JSON gateway: loopback server, the
+//! same convergence contract as `net_e2e.rs` — jobs submitted over
+//! HTTP while earlier jobs are mid-iteration reach the batch fixpoints
+//! (bit-identical for traversals, tolerance for the PageRank family) —
+//! plus the gateway-specific concerns: structured `429 busy` rejects at
+//! queue saturation, the exactly-once terminal-state retention
+//! contract (`GET /jobs/<id>` delivers a retired job's outcome exactly
+//! once, then 404), and malformed bodies/request lines never killing
+//! the listener.
+
+use std::time::Duration;
+use tlsched::coordinator::{
+    AdmissionConfig, AdmissionQueue, Coordinator, CoordinatorConfig, JobSubmitter,
+};
+use tlsched::engine::{JobSpec, JobState};
+use tlsched::graph::{generate, BlockPartition, Graph};
+use tlsched::net::{run_http_loadgen, HttpClient, HttpServer, HttpServerConfig};
+use tlsched::scheduler::{SchedulerConfig, SchedulerKind};
+use tlsched::trace::{JobKind, TraceJob};
+use tlsched::util::json::Json;
+
+fn setup(scale: u32) -> (Graph, BlockPartition) {
+    let g = generate::rmat(scale, 8, 77);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    (g, part)
+}
+
+fn coord<'g>(g: &'g Graph, part: &'g BlockPartition, workers: usize) -> Coordinator<'g> {
+    let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    cfg.workers = workers;
+    Coordinator::new(g, part, cfg)
+}
+
+fn start_server(g: &Graph, submitter: JobSubmitter) -> HttpServer {
+    let cfg = HttpServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_connections: 16,
+        ..Default::default()
+    };
+    HttpServer::start(&cfg, submitter, g.num_vertices() as u32).unwrap()
+}
+
+/// Poll `id` until its terminal state arrives (the serve loop is
+/// running concurrently), with a generous guard against hangs.
+fn poll_terminal(c: &mut HttpClient, id: u64) -> Json {
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let (st, body) = c.poll(id).unwrap();
+        assert_eq!(st, 200, "job {id} must be pending or terminal while polling: {body}");
+        if body.get_str("state") != Some("pending") {
+            return body;
+        }
+        assert!(std::time::Instant::now() < deadline, "job {id} never retired");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn sort_key(j: &JobState) -> (&'static str, u32) {
+    (j.program.name(), j.spec.source)
+}
+
+/// Exact for traversals (unique schedule-independent fixpoint), within
+/// program tolerance for the PageRank family — the identical predicate
+/// `net_e2e.rs` holds the TCP front to.
+fn assert_fixpoints_match(batch: &[JobState], serve: &[JobState]) {
+    assert_eq!(batch.len(), serve.len());
+    let mut b: Vec<&JobState> = batch.iter().collect();
+    let mut s: Vec<&JobState> = serve.iter().collect();
+    b.sort_by_key(|j| sort_key(j));
+    s.sort_by_key(|j| sort_key(j));
+    for (b, s) in b.iter().zip(&s) {
+        assert_eq!(sort_key(b), sort_key(s), "jobs pair up by (kind, source)");
+        assert!(s.converged);
+        let exact = matches!(b.spec.kind, JobKind::Sssp | JobKind::Bfs | JobKind::Wcc);
+        if exact {
+            assert_eq!(b.values, s.values, "{}: exact fixpoint", b.program.name());
+        } else {
+            let tol = b.program.value_tolerance();
+            for (x, y) in b.values.iter().zip(&s.values) {
+                assert_eq!(x.is_finite(), y.is_finite());
+                if x.is_finite() {
+                    assert!((x - y).abs() < tol, "{}: {x} vs {y}", b.program.name());
+                }
+            }
+        }
+    }
+}
+
+/// Jobs trickled in over HTTP while earlier jobs are mid-iteration
+/// converge to the batch fixpoints, each terminal state is delivered
+/// exactly once (second poll: 404), and `POST /shutdown` retires the
+/// gateway so the serve loop drains cleanly.
+#[test]
+fn http_mid_flight_submissions_converge_to_batch_fixpoints() {
+    let (g, part) = setup(11);
+    let specs = vec![
+        JobSpec::new(JobKind::PageRank, 0),
+        JobSpec::new(JobKind::Sssp, 10),
+        JobSpec::new(JobKind::Bfs, 3),
+        JobSpec::new(JobKind::Wcc, 0),
+        JobSpec::new(JobKind::Ppr, 17),
+    ];
+    let (bm, batch_jobs) = coord(&g, &part, 2).run_batch_collect(&specs);
+    assert_eq!(bm.completed(), 5);
+
+    let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+    let client_specs = specs.clone();
+    let client = std::thread::spawn(move || {
+        let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        let mut ids = Vec::new();
+        for s in &client_specs {
+            std::thread::sleep(Duration::from_millis(5)); // mid-flight joins
+            let (st, body) = c.submit(s.kind, s.source, None).unwrap();
+            assert_eq!(st, 200, "{body}");
+            assert_eq!(body.get_str("state"), Some("accepted"));
+            ids.push(body.get_u64("id").unwrap());
+        }
+        let mut done = 0;
+        for &id in &ids {
+            let body = poll_terminal(&mut c, id);
+            assert_eq!(body.get_u64("id"), Some(id));
+            assert_eq!(body.get_str("state"), Some("done"), "{body}");
+            assert!(body.get_u64("rounds").unwrap() > 0);
+            assert!(body.get_f64("queue_wait_s").unwrap() >= 0.0);
+            assert!(body.get_f64("exec_s").unwrap() >= 0.0);
+            done += 1;
+            // retention contract: the terminal state was handed out
+            // exactly once — a second poll finds nothing
+            let (st, _) = c.poll(id).unwrap();
+            assert_eq!(st, 404, "job {id} delivered exactly once");
+        }
+        let (st, _) = c.shutdown().unwrap();
+        assert_eq!(st, 200);
+        done
+    });
+
+    let mut srv = coord(&g, &part, 2);
+    let (sm, serve_jobs) = srv.serve_notify_collect(&mut queue, 0.0, |_| {}, |rec| {
+        server.notify_done(rec);
+    });
+    let done = client.join().unwrap();
+    assert_eq!(done, 5);
+    assert_eq!(sm.completed(), 5);
+    assert!(sm.drained);
+    let stats = server.finish();
+    assert_eq!(stats.accepted, 5);
+    assert_eq!(stats.delivered, 5);
+    assert_eq!((stats.rejected_busy, stats.rejected_parse, stats.terminals_evicted), (0, 0, 0));
+    assert_fixpoints_match(&batch_jobs, &serve_jobs);
+}
+
+/// Saturating the bounded queue surfaces as structured `429 busy`
+/// rejects, the ops surface answers mid-saturation from a second
+/// connection, and the accepted jobs still converge and deliver their
+/// terminal states once the serve loop runs.
+#[test]
+fn http_backpressure_surfaces_structured_429() {
+    let (g, part) = setup(8);
+    let acfg = AdmissionConfig { queue_capacity: 2, ..Default::default() };
+    let (submitter, mut queue) = AdmissionQueue::live(&acfg, 1000.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+
+    // nothing drains yet (the serve loop starts later): exactly
+    // capacity submissions are accepted, the rest 429
+    let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    let mut ids = Vec::new();
+    let mut busy = 0;
+    for i in 0..6u32 {
+        let (st, body) = c.submit(JobKind::Bfs, i * 7, None).unwrap();
+        match st {
+            200 => ids.push(body.get_u64("id").unwrap()),
+            429 => {
+                assert_eq!(body.get_str("error"), Some("busy"), "structured reject");
+                busy += 1;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert_eq!((ids.len(), busy), (2, 4));
+
+    // ops surface answers mid-saturation from a fresh connection
+    let mut probe = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    let (st, status) = probe.request("GET", "/status", None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(status.get_u64("rejected_busy"), Some(4));
+    assert_eq!(status.get_u64("accepted"), Some(2));
+    assert_eq!(status.get_u64("pending"), Some(2));
+    drop(probe);
+
+    let mut srv = coord(&g, &part, 1);
+    let client = std::thread::spawn(move || {
+        let terminals: Vec<Json> =
+            ids.iter().map(|&id| poll_terminal(&mut c, id)).collect();
+        let _ = c.shutdown();
+        terminals
+    });
+    let m = srv.serve_notify(&mut queue, 0.0, |_| {}, |rec| {
+        server.notify_done(rec);
+    });
+    let terminals = client.join().unwrap();
+    assert_eq!(terminals.len(), 2);
+    for t in &terminals {
+        assert_eq!(t.get_str("state"), Some("done"), "{t}");
+    }
+    assert_eq!(m.completed(), 2);
+    assert_eq!(m.rejected, 4, "coordinator metrics agree with the gateway");
+    assert!(m.drained);
+    let stats = server.finish();
+    assert_eq!(stats.accepted, 2);
+    assert_eq!(stats.rejected_busy, 4);
+    assert_eq!(stats.delivered, 2);
+}
+
+/// Malformed bodies get a structured 400 and the connection — and
+/// listener — survive; torn request lines close their connection with
+/// 400 but never take the accept loop down. Valid work still flows
+/// afterwards on the same socket and on fresh ones.
+#[test]
+fn http_malformed_input_never_kills_the_listener() {
+    let (g, part) = setup(8);
+    let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+
+    let client = std::thread::spawn(move || {
+        let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        let bad_bodies = [
+            "",                                        // empty
+            "not json",                                // not JSON at all
+            "[1,2]",                                   // wrong shape
+            "{\"kind\":\"frobnicate\"}",               // unknown kind
+            "{\"kind\":\"bfs\",\"source\":-1}",        // bad source
+            "{\"kind\":\"bfs\",\"deadline_s\":\"x\"}", // bad deadline
+        ];
+        for b in bad_bodies {
+            let (st, body) = c.request("POST", "/jobs", Some(b)).unwrap();
+            assert_eq!(st, 400, "{b:?} must be rejected: {body}");
+            assert!(body.get_str("error").is_some(), "reject carries a reason: {body}");
+        }
+        // the same connection still takes valid work
+        let (st, body) = c.submit(JobKind::Bfs, 3, None).unwrap();
+        assert_eq!(st, 200, "connection survived six parse rejects: {body}");
+        let id = body.get_u64("id").unwrap();
+        let done = poll_terminal(&mut c, id);
+        assert_eq!(done.get_str("state"), Some("done"));
+
+        // torn request lines 400 and close — on fresh connections, so
+        // the keep-alive one above is untouched
+        use std::io::{BufRead, BufReader, Write};
+        for garbage in ["NOT HTTP AT ALL\r\n\r\n", "GET\r\n\r\n"] {
+            let mut s = std::net::TcpStream::connect(&addr).unwrap();
+            s.write_all(garbage.as_bytes()).unwrap();
+            let mut line = String::new();
+            let _ = BufReader::new(&mut s).read_line(&mut line);
+            assert!(line.contains("400"), "{garbage:?} -> {line:?}");
+        }
+
+        // the listener is still accepting and serving after all of it
+        let mut c2 = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        let (st, body) = c2.submit(JobKind::Wcc, 0, None).unwrap();
+        assert_eq!(st, 200, "{body}");
+        let id2 = body.get_u64("id").unwrap();
+        assert_eq!(poll_terminal(&mut c2, id2).get_str("state"), Some("done"));
+        let (st, status) = c2.request("GET", "/status", None).unwrap();
+        assert_eq!(st, 200);
+        let parse_rejects = status.get_u64("rejected_parse").unwrap();
+        let bad_requests = status.get_u64("bad_requests").unwrap();
+        let _ = c2.shutdown();
+        (parse_rejects, bad_requests)
+    });
+
+    let mut srv = coord(&g, &part, 1);
+    let m = srv.serve_notify(&mut queue, 0.0, |_| {}, |rec| {
+        server.notify_done(rec);
+    });
+    let (parse_rejects, bad_requests) = client.join().unwrap();
+    assert_eq!(parse_rejects, 6, "every malformed body counted, none fatal");
+    assert_eq!(bad_requests, 2, "torn request lines counted, listener alive");
+    assert_eq!(m.completed(), 2);
+    assert!(m.drained);
+    let stats = server.finish();
+    assert_eq!(stats.delivered, 2);
+}
+
+/// The closed loop the CI smoke runs in-process: the HTTP loadgen
+/// replays a trace, polls every job to its terminal state with a
+/// latency sample, and shuts the gateway down itself.
+#[test]
+fn http_loadgen_closed_loop_over_loopback() {
+    let (g, part) = setup(8);
+    let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+    let server = start_server(&g, submitter);
+    let addr = server.local_addr().to_string();
+    let jobs: Vec<TraceJob> = (0..12)
+        .map(|i| TraceJob {
+            id: i,
+            arrival_s: i as f64 * 20.0,
+            service_s: 1.0,
+            kind: JobKind::ALL[i as usize % 5],
+            source: (i * 31) as u32,
+        })
+        .collect();
+    let lg = std::thread::spawn(move || {
+        run_http_loadgen(&addr, &jobs, 3, 1.0e4, Duration::from_secs(5)).unwrap()
+    });
+    let mut srv = coord(&g, &part, 2);
+    let m = srv.serve_notify(&mut queue, 0.0, |_| {}, |rec| {
+        server.notify_done(rec);
+    });
+    let report = lg.join().unwrap();
+    assert_eq!(report.connections, 3);
+    assert_eq!(report.sent, 12);
+    assert_eq!(report.acked, 12);
+    assert_eq!(report.done, 12);
+    assert_eq!(report.rejected_parse, 0);
+    assert_eq!(report.latencies_s.len(), 12, "every completion has a latency sample");
+    assert!(report.p_latency_s(50.0) > 0.0);
+    assert!(report.p_latency_s(95.0) >= report.p_latency_s(50.0));
+    assert!(report.completed_per_s() > 0.0);
+    assert!(Json::parse(&report.to_json().to_string()).is_ok());
+    assert_eq!(m.completed(), 12);
+    assert!(m.drained);
+    server.finish();
+}

@@ -5,7 +5,7 @@
 
 use tlsched::coordinator::{
     AdmissionConfig, AdmissionPolicy, AdmissionQueue, Coordinator, CoordinatorConfig,
-    SubmitError,
+    JobRequest, SubmitError,
 };
 use tlsched::algorithms::DeltaProgram;
 use tlsched::engine::JobSpec;
@@ -48,7 +48,7 @@ fn serve_prequeued_matches_batch_bitwise() {
 
     let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
     for s in &specs {
-        submitter.submit(s.kind, s.source).unwrap();
+        submitter.submit(JobRequest::new(s.kind, s.source)).unwrap();
     }
     drop(submitter);
     let mut server = coord(&g, &part, 2);
@@ -89,10 +89,10 @@ fn serve_mid_flight_submissions_converge_to_batch_fixpoints() {
     let feeder_specs = specs.clone();
     let feeder = std::thread::spawn(move || {
         // first job immediately; the rest trickle in mid-flight
-        submitter.submit(feeder_specs[0].kind, feeder_specs[0].source).unwrap();
+        submitter.submit(JobRequest::new(feeder_specs[0].kind, feeder_specs[0].source)).unwrap();
         for s in &feeder_specs[1..] {
             std::thread::sleep(std::time::Duration::from_millis(5));
-            submitter.submit(s.kind, s.source).unwrap();
+            submitter.submit(JobRequest::new(s.kind, s.source)).unwrap();
         }
     });
     let mut server = coord(&g, &part, 2);
@@ -138,8 +138,8 @@ fn serve_backpressure_rejects_at_queue_bound() {
     let mut accepted = 0;
     let mut rejected = 0;
     for i in 0..6u32 {
-        match submitter.submit(JobKind::Bfs, i * 7) {
-            Ok(()) => accepted += 1,
+        match submitter.submit(JobRequest::new(JobKind::Bfs, i * 7)) {
+            Ok(_) => accepted += 1,
             Err(SubmitError::QueueFull) => rejected += 1,
             Err(e) => panic!("unexpected: {e}"),
         }
@@ -163,9 +163,9 @@ fn serve_serializes_under_admission_limit_and_accounts_queue_wait() {
     let acfg = AdmissionConfig { policy: AdmissionPolicy::Slo, ..Default::default() };
     let (submitter, mut queue) = AdmissionQueue::live(&acfg, 1000.0);
     // shortest deadline last: SLO order must not starve anyone
-    submitter.submit_with(JobKind::PageRank, 0, Some(9000.0)).unwrap();
-    submitter.submit_with(JobKind::Bfs, 3, Some(5000.0)).unwrap();
-    submitter.submit_with(JobKind::Sssp, 10, Some(1000.0)).unwrap();
+    submitter.submit(JobRequest::new(JobKind::PageRank, 0).deadline(Some(9000.0))).unwrap();
+    submitter.submit(JobRequest::new(JobKind::Bfs, 3).deadline(Some(5000.0))).unwrap();
+    submitter.submit(JobRequest::new(JobKind::Sssp, 10).deadline(Some(1000.0))).unwrap();
     drop(submitter);
 
     let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));

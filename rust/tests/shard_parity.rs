@@ -26,7 +26,7 @@
 
 use tlsched::algorithms::DeltaProgram;
 use tlsched::coordinator::{
-    AdmissionConfig, AdmissionQueue, Coordinator, CoordinatorConfig,
+    AdmissionConfig, AdmissionQueue, Coordinator, CoordinatorConfig, JobRequest,
 };
 use tlsched::engine::{JobSpec, JobState};
 use tlsched::graph::{generate, BlockPartition, Graph};
@@ -290,10 +290,10 @@ fn serve_sharded_mid_flight_converges_to_batch_fixpoints() {
         let (submitter, mut queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
         let feeder_specs = specs.clone();
         let feeder = std::thread::spawn(move || {
-            submitter.submit(feeder_specs[0].kind, feeder_specs[0].source).unwrap();
+            submitter.submit(JobRequest::new(feeder_specs[0].kind, feeder_specs[0].source)).unwrap();
             for s in &feeder_specs[1..] {
                 std::thread::sleep(std::time::Duration::from_millis(5));
-                submitter.submit(s.kind, s.source).unwrap();
+                submitter.submit(JobRequest::new(s.kind, s.source)).unwrap();
             }
         });
         let mut server = sharded_coord(&g, &part, shards);

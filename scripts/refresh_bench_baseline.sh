@@ -2,7 +2,8 @@
 # Refresh the committed bench-gate baseline from a measured candidate.
 #
 # Usage:
-#   scripts/refresh_bench_baseline.sh <BENCH_baseline_candidate.json>
+#   scripts/refresh_bench_baseline.sh <BENCH_baseline_candidate.json> \
+#       [BENCH_serve.json]
 #
 # The candidate comes from the `bench-fused` artifact of a *green*
 # bench-smoke CI run (or a local `cargo bench --bench throughput --
@@ -11,16 +12,30 @@
 # measured by the run that wrote them — so copying one (re)arms the
 # hard-failing exact work-to-convergence check in the gate.
 #
-# Never hand-edit speedup values into BENCH_baseline.json: unmeasured
-# floors either mask regressions (too low) or flake CI (too high).
+# The optional second argument is the `bench-serve` artifact of a
+# green net-e2e run (the loadgen smoke's latency report). Passing it
+# folds the serving keys — serve_p50_latency_s, serve_p95_latency_s,
+# serve_completed_per_s — into the baseline and sets
+# `serve_verified: 1`, which arms the hard-failing serve-latency gate
+# in the net-e2e job. Without it, the previous serve_* values are
+# preserved unchanged.
+#
+# Never hand-edit speedup or latency values into BENCH_baseline.json:
+# unmeasured floors either mask regressions (too low) or flake CI
+# (too high).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-candidate="${1:?usage: $0 <BENCH_baseline_candidate.json>}"
+candidate="${1:?usage: $0 <BENCH_baseline_candidate.json> [BENCH_serve.json]}"
 [ -f "$candidate" ] || { echo "error: $candidate not found" >&2; exit 1; }
+serve="${2:-}"
+if [ -n "$serve" ] && [ ! -f "$serve" ]; then
+    echo "error: $serve not found" >&2
+    exit 1
+fi
 
-python3 - "$candidate" <<'EOF'
+python3 - "$candidate" "$serve" <<'EOF'
 import json, sys
 
 cand = json.load(open(sys.argv[1]))
@@ -34,12 +49,34 @@ assert not missing, f"candidate missing keys: {missing}"
 assert cand["updates_verified"], "candidate is not a measured baseline"
 assert cand["updates"] > 0, "candidate recorded zero work-to-convergence"
 
+serve_keys = ["serve_p50_latency_s", "serve_p95_latency_s", "serve_completed_per_s"]
 old = json.load(open("BENCH_baseline.json"))
 for k in required:
     if k in old and isinstance(old[k], (int, float)):
         print(f"  {k}: {old[k]} -> {cand[k]}")
 cand["bench"] = old.get("bench", "fused_vs_perjob")
 cand["note"] = old.get("note", "")
+
+if sys.argv[2]:
+    smoke = json.load(open(sys.argv[2]))
+    smoke_required = ["p50_latency_s", "p95_latency_s", "completed_per_s", "done"]
+    missing = [k for k in smoke_required if k not in smoke]
+    assert not missing, f"serve report missing keys: {missing}"
+    assert smoke["done"] > 0, "serve report recorded zero completions"
+    assert smoke["p95_latency_s"] > 0, "serve report recorded zero p95 latency"
+    cand["serve_p50_latency_s"] = smoke["p50_latency_s"]
+    cand["serve_p95_latency_s"] = smoke["p95_latency_s"]
+    cand["serve_completed_per_s"] = smoke["completed_per_s"]
+    cand["serve_verified"] = 1
+    for k in serve_keys:
+        print(f"  {k}: {old.get(k, 0.0)} -> {cand[k]}")
+    print("  serve_verified: "
+          f"{old.get('serve_verified', 0)} -> 1 (serve latency gate armed)")
+else:
+    # preserve the serving baseline unchanged
+    for k in serve_keys:
+        cand[k] = old.get(k, 0.0)
+    cand["serve_verified"] = old.get("serve_verified", 0)
 
 with open("BENCH_baseline.json", "w") as f:
     json.dump(cand, f)
