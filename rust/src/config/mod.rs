@@ -21,7 +21,8 @@ pub enum GraphSource {
     BarabasiAlbert { n: usize, k: usize },
     /// Road grid: (rows, cols).
     Grid { rows: usize, cols: usize },
-    /// Edge-list file (text) or binary snapshot (by extension `.bin`).
+    /// Edge-list file (text), binary snapshot (extension `.bin`), or
+    /// mmap-shared paged snapshot (extension `.pbin`).
     File(String),
 }
 
@@ -357,7 +358,13 @@ impl RunConfig {
             }
             GraphSource::File(path) => {
                 let p = std::path::Path::new(path);
-                if path.ends_with(".bin") {
+                if path.ends_with(".pbin") {
+                    // paged snapshot: zero-copy mmap shared across every
+                    // co-resident process (DESIGN.md §11)
+                    crate::graph::io::GraphSnapshot::open_mapped(p)
+                        .map_err(|e| ConfigError::Invalid("graph.path", e.to_string()))?
+                        .into_graph()
+                } else if path.ends_with(".bin") {
                     crate::graph::io::load_binary(p)
                         .map_err(|e| ConfigError::Invalid("graph.path", e.to_string()))?
                 } else {

@@ -5,7 +5,7 @@
 //! replay, live serving, reporting).
 //!
 //! All three run modes — `run_batch`, `run_trace` and `serve` — drive
-//! one **event-driven core loop**, [`Coordinator::step`]:
+//! one **event-driven core loop**, `Coordinator::step`:
 //! `admit → schedule → round → retire`. Jobs join and leave the
 //! resident set *between any two scheduling rounds*; what differs per
 //! mode is only the [`AdmissionQueue`] feeding the loop and the clock

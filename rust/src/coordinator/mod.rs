@@ -1,6 +1,41 @@
 //! L3 coordinator: job admission, the event-driven scheduling-round
 //! loop shared by batch / trace-replay / live-serving modes, and
 //! metrics — the operational shell around the two-level scheduler.
+//!
+//! * [`admission`] — [`AdmissionQueue`]: policy-ordered (FIFO / SLO /
+//!   correlation) bounded submission queue with deadline shedding;
+//!   [`JobSubmitter`] is its cloneable producer handle.
+//! * [`controller`] — [`Coordinator`]: owns the scheduler stack and
+//!   runs jobs to convergence; one entry point per mode
+//!   ([`Coordinator::run_batch`], [`Coordinator::run_trace`],
+//!   [`Coordinator::serve_notify_collect`]).
+//! * [`metrics`] — [`RunMetrics`] aggregates plus the per-job
+//!   [`JobRecord`] handed to completion hooks.
+//!
+//! ## The submission seam
+//!
+//! Every producer — batch spec list, trace replayer, stdin reader,
+//! TCP server, HTTP gateway, router — funnels through the same two
+//! calls, so admission policy, backpressure and metrics behave
+//! identically no matter where jobs come from:
+//!
+//! ```text
+//! JobSubmitter::submit(JobRequest { kind, source, deadline_s, .. })
+//!     -> Ok(JobId)                  queued (TCP answers `ACK <id>`)
+//!     -> Err(SubmitError::QueueFull) queue full (`REJECT busy` / HTTP 429)
+//!     -> Err(SubmitError::Closed)   serve loop gone (`REJECT closed` / 503)
+//!
+//! Coordinator::serve_notify_collect(queue, .., |rec: &JobRecord| ..)
+//!     — pops admitted jobs, runs scheduling rounds, and fires the
+//!       completion hook exactly once per job with its terminal
+//!       outcome (Done / Failed / Shed), which the serving fronts
+//!       translate to `DONE <id> ..` / `FAIL <id> <reason>` lines.
+//! ```
+//!
+//! The exactly-once terminal guarantee that the wire protocols and
+//! the router (DESIGN.md §8, §11) expose is established *here*: the
+//! serve loop owns job state transitions, and every accepted
+//! [`JobId`] reaches exactly one [`JobOutcome`].
 
 pub mod admission;
 pub mod controller;

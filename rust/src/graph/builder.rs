@@ -143,7 +143,14 @@ impl GraphBuilder {
             }
         }
 
-        let g = Graph { out_offsets, out_targets, in_offsets, in_sources, out_weights, in_weights };
+        let g = Graph {
+            out_offsets: out_offsets.into(),
+            out_targets: out_targets.into(),
+            in_offsets: in_offsets.into(),
+            in_sources: in_sources.into(),
+            out_weights: out_weights.into(),
+            in_weights: in_weights.into(),
+        };
         debug_assert_eq!(g.validate(), Ok(()));
         g
     }

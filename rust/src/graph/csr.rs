@@ -7,23 +7,30 @@
 //! Both out-edge CSR (push-style scatter) and in-edge CSR (pull-style
 //! gather, what the delta-PageRank kernel consumes) are materialized.
 
+use super::lane::Lane;
+
 pub type VertexId = u32;
 
 /// Immutable directed graph in CSR form, with optional edge weights.
+///
+/// Each column is a [`Lane`]: owned memory when built in-process, or a
+/// zero-copy view into a shared mmap'd snapshot when opened via
+/// [`GraphSnapshot::open_mapped`](super::io::GraphSnapshot::open_mapped).
+/// Lanes deref to `&[T]`, so reads are identical either way.
 #[derive(Debug, Clone)]
 pub struct Graph {
     /// Out-edge row offsets, length `n + 1`.
-    pub out_offsets: Vec<u64>,
+    pub out_offsets: Lane<u64>,
     /// Out-edge targets, length `m`.
-    pub out_targets: Vec<VertexId>,
+    pub out_targets: Lane<VertexId>,
     /// In-edge row offsets, length `n + 1`.
-    pub in_offsets: Vec<u64>,
+    pub in_offsets: Lane<u64>,
     /// In-edge sources, length `m`.
-    pub in_sources: Vec<VertexId>,
+    pub in_sources: Lane<VertexId>,
     /// Per-out-edge weights (parallel to `out_targets`); empty ⇒ unweighted.
-    pub out_weights: Vec<f32>,
+    pub out_weights: Lane<f32>,
     /// Per-in-edge weights (parallel to `in_sources`); empty ⇒ unweighted.
-    pub in_weights: Vec<f32>,
+    pub in_weights: Lane<f32>,
 }
 
 impl Graph {

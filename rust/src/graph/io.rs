@@ -161,7 +161,14 @@ pub fn load_binary(path: &Path) -> Result<Graph, IoError> {
     } else {
         (Vec::new(), Vec::new())
     };
-    let g = Graph { out_offsets, out_targets, in_offsets, in_sources, out_weights, in_weights };
+    let g = Graph {
+        out_offsets: out_offsets.into(),
+        out_targets: out_targets.into(),
+        in_offsets: in_offsets.into(),
+        in_sources: in_sources.into(),
+        out_weights: out_weights.into(),
+        in_weights: in_weights.into(),
+    };
     g.validate().map_err(|_| IoError::BadBinary)?;
     Ok(g)
 }
@@ -173,6 +180,267 @@ fn take_slice<'a>(buf: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8]
     let s = &buf[*pos..*pos + len];
     *pos += len;
     Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Paged snapshot (`.pbin`): the mmap-able layout behind multi-process
+// shard groups (DESIGN.md §11).
+// ---------------------------------------------------------------------------
+
+const PAGE_MAGIC: &[u8; 8] = b"TLSPAGE1";
+const PAGE_VERSION: u32 = 1;
+/// Section alignment. 4096 is the page size on every Linux target we
+/// run on; a multiple of it would also work but waste padding.
+const PAGE_SIZE: usize = 4096;
+const FLAG_WEIGHTED: u32 = 1;
+/// Header prefix covered by the checksum: magic(8) + version(4) +
+/// flags(4) + n(8) + m(8) + page_size(8) + 6 × (offset, len)(96).
+const HEADER_CHECKED: usize = 136;
+const NUM_SECTIONS: usize = 6;
+
+/// FNV-1a 64-bit, guarding the header page against torn writes and
+/// truncation (lane payloads are length-checked against `n`/`m`).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn page_round_up(len: usize) -> usize {
+    len.div_ceil(PAGE_SIZE) * PAGE_SIZE
+}
+
+/// A graph opened from (or written as) a paged snapshot file.
+///
+/// Layout: one 4096-byte header page — magic `TLSPAGE1`, version,
+/// flags, `n`, `m`, page size, a six-entry section table of absolute
+/// `(offset, byte_len)` pairs, FNV-1a checksum — followed by the six
+/// CSR lanes (out-offsets, out-targets, in-offsets, in-sources,
+/// out-weights, in-weights), each little-endian and padded to a page
+/// boundary. Page alignment is what makes the file directly
+/// `mmap`-able: every lane lands on an address aligned for its element
+/// type, so [`open_mapped`](GraphSnapshot::open_mapped) builds the
+/// [`Graph`] as zero-copy [`Lane`](super::lane::Lane) views and N
+/// co-resident processes share one page-cache copy of the structure.
+#[derive(Debug)]
+pub struct GraphSnapshot {
+    graph: Graph,
+    mapped: bool,
+    file_bytes: u64,
+}
+
+impl GraphSnapshot {
+    /// Write `g` as a paged snapshot at `path`.
+    pub fn write(g: &Graph, path: &Path) -> Result<(), IoError> {
+        let n = g.num_vertices();
+        let m = g.num_edges();
+        let lens: [usize; NUM_SECTIONS] = [
+            (n + 1) * 8,
+            m * 4,
+            (n + 1) * 8,
+            m * 4,
+            if g.is_weighted() { m * 4 } else { 0 },
+            if g.is_weighted() { m * 4 } else { 0 },
+        ];
+        let mut header = vec![0u8; PAGE_SIZE];
+        header[0..8].copy_from_slice(PAGE_MAGIC);
+        header[8..12].copy_from_slice(&PAGE_VERSION.to_le_bytes());
+        let flags = if g.is_weighted() { FLAG_WEIGHTED } else { 0 };
+        header[12..16].copy_from_slice(&flags.to_le_bytes());
+        header[16..24].copy_from_slice(&(n as u64).to_le_bytes());
+        header[24..32].copy_from_slice(&(m as u64).to_le_bytes());
+        header[32..40].copy_from_slice(&(PAGE_SIZE as u64).to_le_bytes());
+        let mut off = PAGE_SIZE;
+        for (i, &len) in lens.iter().enumerate() {
+            let at = 40 + i * 16;
+            header[at..at + 8].copy_from_slice(&(off as u64).to_le_bytes());
+            header[at + 8..at + 16].copy_from_slice(&(len as u64).to_le_bytes());
+            off += page_round_up(len);
+        }
+        let sum = fnv1a64(&header[..HEADER_CHECKED]);
+        header[HEADER_CHECKED..HEADER_CHECKED + 8].copy_from_slice(&sum.to_le_bytes());
+
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(&header)?;
+        fn pad(w: &mut BufWriter<std::fs::File>, bytes_len: usize) -> std::io::Result<()> {
+            const ZEROS: [u8; PAGE_SIZE] = [0; PAGE_SIZE];
+            w.write_all(&ZEROS[..page_round_up(bytes_len) - bytes_len])
+        }
+        g.out_offsets.iter().try_for_each(|x| w.write_all(&x.to_le_bytes()))?;
+        pad(&mut w, lens[0])?;
+        g.out_targets.iter().try_for_each(|x| w.write_all(&x.to_le_bytes()))?;
+        pad(&mut w, lens[1])?;
+        g.in_offsets.iter().try_for_each(|x| w.write_all(&x.to_le_bytes()))?;
+        pad(&mut w, lens[2])?;
+        g.in_sources.iter().try_for_each(|x| w.write_all(&x.to_le_bytes()))?;
+        pad(&mut w, lens[3])?;
+        if g.is_weighted() {
+            g.out_weights.iter().try_for_each(|x| w.write_all(&x.to_le_bytes()))?;
+            pad(&mut w, lens[4])?;
+            g.in_weights.iter().try_for_each(|x| w.write_all(&x.to_le_bytes()))?;
+            pad(&mut w, lens[5])?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Open a paged snapshot, sharing the file's pages read-only with
+    /// every other process that has it open (`mmap` on unix,
+    /// little-endian targets; a plain owned read elsewhere). The
+    /// header — magic, version, checksum, section table — and the full
+    /// CSR invariants are validated before the graph is handed out;
+    /// any inconsistency is [`IoError::BadBinary`].
+    pub fn open_mapped(path: &Path) -> Result<GraphSnapshot, IoError> {
+        let f = std::fs::File::open(path)?;
+        let file_bytes = f.metadata()?.len();
+        if file_bytes < PAGE_SIZE as u64 {
+            return Err(IoError::BadBinary);
+        }
+        let mut header = vec![0u8; PAGE_SIZE];
+        {
+            let mut r = &f;
+            r.read_exact(&mut header)?;
+        }
+        if &header[0..8] != PAGE_MAGIC {
+            return Err(IoError::BadBinary);
+        }
+        let le32 = |at: usize| u32::from_le_bytes(header[at..at + 4].try_into().unwrap());
+        let le64 = |at: usize| u64::from_le_bytes(header[at..at + 8].try_into().unwrap());
+        if le32(8) != PAGE_VERSION || le64(32) != PAGE_SIZE as u64 {
+            return Err(IoError::BadBinary);
+        }
+        if le64(HEADER_CHECKED) != fnv1a64(&header[..HEADER_CHECKED]) {
+            return Err(IoError::BadBinary);
+        }
+        let flags = le32(12);
+        let weighted = flags & FLAG_WEIGHTED != 0;
+        let n = le64(16);
+        let m = le64(24);
+        let row_bytes = n.checked_add(1).and_then(|x| x.checked_mul(8)).ok_or(IoError::BadBinary)?;
+        let edge_bytes = m.checked_mul(4).ok_or(IoError::BadBinary)?;
+        let weight_bytes = if weighted { edge_bytes } else { 0 };
+        let expect = [row_bytes, edge_bytes, row_bytes, edge_bytes, weight_bytes, weight_bytes];
+        let mut sections = [(0u64, 0u64); NUM_SECTIONS];
+        for (i, s) in sections.iter_mut().enumerate() {
+            let (off, len) = (le64(40 + i * 16), le64(48 + i * 16));
+            if len != expect[i]
+                || off % PAGE_SIZE as u64 != 0
+                || off < PAGE_SIZE as u64
+                || off.checked_add(len).map_or(true, |end| end > file_bytes)
+            {
+                return Err(IoError::BadBinary);
+            }
+            *s = (off, len);
+        }
+        let (graph, mapped) = Self::build_lanes(&f, file_bytes, &sections, n, m, weighted)?;
+        graph.validate().map_err(|_| IoError::BadBinary)?;
+        Ok(GraphSnapshot { graph, mapped, file_bytes })
+    }
+
+    /// Zero-copy path: one shared mapping, six lane views into it.
+    #[cfg(all(unix, target_endian = "little"))]
+    fn build_lanes(
+        f: &std::fs::File,
+        file_bytes: u64,
+        sections: &[(u64, u64); NUM_SECTIONS],
+        n: u64,
+        m: u64,
+        weighted: bool,
+    ) -> Result<(Graph, bool), IoError> {
+        use super::lane::{Lane, Mapping};
+        use std::sync::Arc;
+        let map = Arc::new(Mapping::map_file(f, file_bytes as usize)?);
+        let rows = (n + 1) as usize;
+        let edges = m as usize;
+        let wlen = if weighted { edges } else { 0 };
+        let lane = |i: usize, len: usize| (sections[i].0 as usize, len);
+        let (o0, l0) = lane(0, rows);
+        let (o1, l1) = lane(1, edges);
+        let (o2, l2) = lane(2, rows);
+        let (o3, l3) = lane(3, edges);
+        let (o4, l4) = lane(4, wlen);
+        let (o5, l5) = lane(5, wlen);
+        Ok((
+            Graph {
+                out_offsets: Lane::from_mapping(&map, o0, l0),
+                out_targets: Lane::from_mapping(&map, o1, l1),
+                in_offsets: Lane::from_mapping(&map, o2, l2),
+                in_sources: Lane::from_mapping(&map, o3, l3),
+                out_weights: Lane::from_mapping(&map, o4, l4),
+                in_weights: Lane::from_mapping(&map, o5, l5),
+            },
+            true,
+        ))
+    }
+
+    /// Fallback for targets without mmap or with big-endian layout:
+    /// decode the little-endian sections into owned lanes.
+    #[cfg(not(all(unix, target_endian = "little")))]
+    fn build_lanes(
+        f: &std::fs::File,
+        _file_bytes: u64,
+        sections: &[(u64, u64); NUM_SECTIONS],
+        n: u64,
+        m: u64,
+        weighted: bool,
+    ) -> Result<(Graph, bool), IoError> {
+        let mut buf = Vec::new();
+        let mut r = f;
+        r.read_to_end(&mut buf)?;
+        let rows = (n + 1) as usize;
+        let edges = m as usize;
+        let sect = |i: usize| -> &[u8] {
+            let (off, len) = sections[i];
+            &buf[off as usize..(off + len) as usize]
+        };
+        let u64s = |b: &[u8]| -> Vec<u64> {
+            b.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+        };
+        let u32s = |b: &[u8]| -> Vec<u32> {
+            b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
+        };
+        let f32s = |b: &[u8]| -> Vec<f32> {
+            b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+        };
+        debug_assert_eq!(u64s(sect(0)).len(), rows);
+        let _ = edges;
+        Ok((
+            Graph {
+                out_offsets: u64s(sect(0)).into(),
+                out_targets: u32s(sect(1)).into(),
+                in_offsets: u64s(sect(2)).into(),
+                in_sources: u32s(sect(3)).into(),
+                out_weights: if weighted { f32s(sect(4)).into() } else { Vec::new().into() },
+                in_weights: if weighted { f32s(sect(5)).into() } else { Vec::new().into() },
+            },
+            false,
+        ))
+    }
+
+    /// The opened graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Take ownership of the graph (lanes keep the mapping alive).
+    pub fn into_graph(self) -> Graph {
+        self.graph
+    }
+
+    /// Whether the lanes are zero-copy mmap views (false on the owned
+    /// fallback path).
+    pub fn is_mapped(&self) -> bool {
+        self.mapped
+    }
+
+    /// Size of the snapshot file in bytes.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +501,63 @@ mod tests {
         let g = load_edge_list(&p, 0).unwrap();
         assert_eq!(g.num_vertices(), 3);
         assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn paged_roundtrip_unweighted() {
+        let g = generate::rmat(8, 8, 5);
+        let p = tmpdir().join("t7.pbin");
+        GraphSnapshot::write(&g, &p).unwrap();
+        let snap = GraphSnapshot::open_mapped(&p).unwrap();
+        assert!(snap.file_bytes() >= PAGE_SIZE as u64 * 5);
+        let g2 = snap.into_graph();
+        assert_eq!(g.out_offsets, g2.out_offsets);
+        assert_eq!(g.out_targets, g2.out_targets);
+        assert_eq!(g.in_offsets, g2.in_offsets);
+        assert_eq!(g.in_sources, g2.in_sources);
+        assert!(!g2.is_weighted());
+    }
+
+    #[test]
+    fn paged_roundtrip_weighted_and_mapped() {
+        let g = generate::road_grid(7, 9, 2);
+        let p = tmpdir().join("t8.pbin");
+        GraphSnapshot::write(&g, &p).unwrap();
+        let snap = GraphSnapshot::open_mapped(&p).unwrap();
+        #[cfg(all(unix, target_endian = "little"))]
+        assert!(snap.is_mapped(), "expected zero-copy lanes on unix little-endian");
+        let g2 = snap.graph();
+        assert_eq!(g.out_targets, g2.out_targets);
+        assert_eq!(g.out_weights, g2.out_weights);
+        assert_eq!(g.in_weights, g2.in_weights);
+    }
+
+    #[test]
+    fn paged_rejects_corrupt_and_truncated() {
+        let g = generate::rmat(6, 8, 4);
+        let p = tmpdir().join("t9.pbin");
+        GraphSnapshot::write(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // shorter than one header page
+        let p2 = tmpdir().join("t9-short.pbin");
+        std::fs::write(&p2, &bytes[..100]).unwrap();
+        assert!(matches!(GraphSnapshot::open_mapped(&p2), Err(IoError::BadBinary)));
+        // a whole section page missing at the tail
+        let p3 = tmpdir().join("t9-cut.pbin");
+        std::fs::write(&p3, &bytes[..bytes.len() - PAGE_SIZE]).unwrap();
+        assert!(matches!(GraphSnapshot::open_mapped(&p3), Err(IoError::BadBinary)));
+        // a flipped header byte fails the checksum
+        let mut evil = bytes.clone();
+        evil[16] ^= 0xff;
+        let p4 = tmpdir().join("t9-evil.pbin");
+        std::fs::write(&p4, &evil).unwrap();
+        assert!(matches!(GraphSnapshot::open_mapped(&p4), Err(IoError::BadBinary)));
+        // wrong magic
+        let mut other = bytes;
+        other[0] = b'X';
+        let p5 = tmpdir().join("t9-magic.pbin");
+        std::fs::write(&p5, &other).unwrap();
+        assert!(matches!(GraphSnapshot::open_mapped(&p5), Err(IoError::BadBinary)));
     }
 
     #[test]

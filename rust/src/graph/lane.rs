@@ -1,0 +1,285 @@
+//! Storage lanes for CSR columns: either an owned `Vec<T>` or a view
+//! into a shared read-only file mapping.
+//!
+//! The multi-process deployment (DESIGN.md §11) runs one serving
+//! process per shard group on the same host; each needs the same
+//! immutable CSR arrays. [`Lane`] lets [`Graph`] hold its six columns
+//! as plain vectors when built in memory, or as zero-copy views into
+//! one `mmap`ed snapshot file (see [`GraphSnapshot`]) so N processes
+//! share a single page-cache copy and cold-start in milliseconds.
+//!
+//! A lane dereferences to `&[T]`, so every read path (indexing,
+//! slicing, iteration) is unchanged. Mutation through `DerefMut` is
+//! copy-on-write: the first write promotes a mapped lane to an owned
+//! vector, leaving the shared mapping untouched.
+//!
+//! [`Graph`]: super::Graph
+//! [`GraphSnapshot`]: super::io::GraphSnapshot
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+/// A read-only, shared (`MAP_SHARED`, `PROT_READ`) mapping of a whole
+/// snapshot file. Unmapped on drop; [`Lane`]s keep it alive via `Arc`.
+pub struct Mapping {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is immutable (PROT_READ) for its whole lifetime,
+// so shared references to its bytes are valid from any thread.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map the first `len` bytes of `file` read-only. The file handle
+    /// may be dropped afterwards; the mapping persists until drop.
+    #[cfg(unix)]
+    pub fn map_file(file: &std::fs::File, len: usize) -> std::io::Result<Mapping> {
+        use std::os::raw::{c_int, c_void};
+        use std::os::unix::io::AsRawFd;
+        // Raw libc bindings: every std binary on unix already links
+        // libc, so this adds no dependency.
+        extern "C" {
+            fn mmap(
+                addr: *mut c_void,
+                len: usize,
+                prot: c_int,
+                flags: c_int,
+                fd: c_int,
+                offset: i64,
+            ) -> *mut c_void;
+        }
+        const PROT_READ: c_int = 1;
+        const MAP_SHARED: c_int = 1;
+        if len == 0 {
+            // zero-length mmap is EINVAL; an empty mapping needs no pages
+            return Ok(Mapping { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+        };
+        if ptr as usize == usize::MAX {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Mapping { ptr: ptr as *mut u8, len })
+    }
+
+    /// Number of mapped bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the mapping is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Byte view of the whole mapping.
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            // SAFETY: ptr/len describe a live PROT_READ mapping
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.len != 0 {
+            use std::os::raw::{c_int, c_void};
+            extern "C" {
+                fn munmap(addr: *mut c_void, len: usize) -> c_int;
+            }
+            // SAFETY: ptr/len came from a successful mmap and are
+            // unmapped exactly once (Mapping is not Clone)
+            unsafe {
+                munmap(self.ptr as *mut c_void, self.len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mapping({} bytes)", self.len)
+    }
+}
+
+enum Repr<T: Copy> {
+    Owned(Vec<T>),
+    Mapped { ptr: *const T, len: usize, map: Arc<Mapping> },
+}
+
+/// One CSR column: an owned vector, or a typed view into a shared
+/// [`Mapping`]. Dereferences to `&[T]`; writes copy-on-write.
+pub struct Lane<T: Copy> {
+    repr: Repr<T>,
+}
+
+// SAFETY: Owned is a Vec; Mapped is a read-only view whose backing
+// mapping is immutable and kept alive by the Arc.
+unsafe impl<T: Copy + Send> Send for Lane<T> {}
+unsafe impl<T: Copy + Sync> Sync for Lane<T> {}
+
+impl<T: Copy> Lane<T> {
+    /// View `len` elements of `T` at byte offset `off` inside `map`.
+    ///
+    /// The region must lie within the mapping and be aligned for `T`;
+    /// both are asserted (the snapshot loader validates its section
+    /// table before building lanes, so a trip here is a loader bug).
+    /// Only valid for plain-old-data `T` where any bit pattern is a
+    /// value (the integer/float lanes the snapshot stores).
+    pub(crate) fn from_mapping(map: &Arc<Mapping>, off: usize, len: usize) -> Lane<T> {
+        let bytes = len.checked_mul(std::mem::size_of::<T>()).expect("lane size overflow");
+        assert!(
+            off.checked_add(bytes).is_some_and(|end| end <= map.len()),
+            "lane [{off}, +{bytes}) outside mapping of {} bytes",
+            map.len()
+        );
+        let ptr = if len == 0 {
+            std::ptr::NonNull::<T>::dangling().as_ptr() as *const T
+        } else {
+            let p = unsafe { map.ptr.add(off) };
+            assert_eq!(p as usize % std::mem::align_of::<T>(), 0, "misaligned lane");
+            p as *const T
+        };
+        Lane { repr: Repr::Mapped { ptr, len, map: Arc::clone(map) } }
+    }
+
+    /// Whether this lane reads from a shared mapping (vs owned memory).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.repr, Repr::Mapped { .. })
+    }
+}
+
+impl<T: Copy> Deref for Lane<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match &self.repr {
+            Repr::Owned(v) => v,
+            // SAFETY: from_mapping checked bounds + alignment; the
+            // mapping is alive (Arc) and immutable
+            Repr::Mapped { ptr, len, .. } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+        }
+    }
+}
+
+impl<T: Copy> DerefMut for Lane<T> {
+    /// Copy-on-write: the first mutable access of a mapped lane copies
+    /// it into owned memory, so writers never touch the shared file.
+    fn deref_mut(&mut self) -> &mut [T] {
+        if self.is_mapped() {
+            self.repr = Repr::Owned(self.to_vec());
+        }
+        match &mut self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped { .. } => unreachable!("promoted to owned above"),
+        }
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for Lane<T> {
+    fn from(v: Vec<T>) -> Lane<T> {
+        Lane { repr: Repr::Owned(v) }
+    }
+}
+
+impl<T: Copy> Default for Lane<T> {
+    fn default() -> Lane<T> {
+        Vec::new().into()
+    }
+}
+
+impl<T: Copy> Clone for Lane<T> {
+    fn clone(&self) -> Lane<T> {
+        match &self.repr {
+            Repr::Owned(v) => Lane { repr: Repr::Owned(v.clone()) },
+            Repr::Mapped { ptr, len, map } => {
+                Lane { repr: Repr::Mapped { ptr: *ptr, len: *len, map: Arc::clone(map) } }
+            }
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for Lane<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for Lane<T> {
+    fn eq(&self, other: &Lane<T>) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<Vec<T>> for Lane<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        **self == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_lane_behaves_like_a_vec() {
+        let mut lane: Lane<u32> = vec![1, 2, 3].into();
+        assert_eq!(lane.len(), 3);
+        assert_eq!(lane[1], 2);
+        assert_eq!(&lane[1..], &[2, 3]);
+        assert_eq!(lane.iter().sum::<u32>(), 6);
+        lane[0] = 9;
+        assert_eq!(lane, vec![9, 2, 3]);
+        assert!(!lane.is_mapped());
+    }
+
+    #[cfg(unix)]
+    fn file_mapping(bytes: &[u8]) -> Arc<Mapping> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let p = std::env::temp_dir().join(format!(
+            "tlsched-lane-{}-{}.bin",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&p, bytes).unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        Arc::new(Mapping::map_file(&f, bytes.len()).unwrap())
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_lane_reads_and_copies_on_write() {
+        let words: Vec<u32> = vec![10, 20, 30, 40];
+        let bytes: Vec<u8> = words.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let map = file_mapping(&bytes);
+        let mut lane: Lane<u32> = Lane::from_mapping(&map, 0, 4);
+        assert!(lane.is_mapped());
+        assert_eq!(lane, words);
+        // first write promotes to owned; the mapping is untouched
+        lane[2] = 7;
+        assert!(!lane.is_mapped());
+        assert_eq!(lane[2], 7);
+        let again: Lane<u32> = Lane::from_mapping(&map, 0, 4);
+        assert_eq!(again[2], 30);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn empty_and_cloned_mapped_lanes() {
+        let bytes = [0u8; 16];
+        let map = file_mapping(&bytes);
+        let empty: Lane<f32> = Lane::from_mapping(&map, 8, 0);
+        assert!(empty.is_empty());
+        let lane: Lane<u64> = Lane::from_mapping(&map, 0, 2);
+        let clone = lane.clone();
+        drop(lane);
+        assert_eq!(clone, vec![0u64, 0]);
+    }
+}

@@ -1,13 +1,23 @@
 //! Graph substrate: immutable CSR structure shared by all concurrent
 //! jobs, edge-list/binary IO, synthetic generators, and the block
 //! partitioner the two-level scheduler operates on.
+//!
+//! Two snapshot formats exist (see [`io`]): the flat `.bin` CSR dump,
+//! and the paged `.pbin` layout whose sections are page-aligned so
+//! [`GraphSnapshot::open_mapped`] can `mmap` them directly — the
+//! substrate of the multi-process shard-group deployment (DESIGN.md
+//! §11), where every serving process on a host shares one read-only
+//! page-cache copy of the graph.
 
 pub mod builder;
 pub mod csr;
 pub mod generate;
 pub mod io;
+pub mod lane;
 pub mod partition;
 
 pub use builder::GraphBuilder;
 pub use csr::{Graph, VertexId};
+pub use io::GraphSnapshot;
+pub use lane::{Lane, Mapping};
 pub use partition::{Block, BlockPartition, ShardRange};

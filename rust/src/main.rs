@@ -5,6 +5,7 @@
 //! * `run`      — batch: run N jobs of mixed kinds to convergence.
 //! * `replay`   — trace replay through the coordinator.
 //! * `serve`    — live serving: persistent loop admitting streamed jobs.
+//! * `route`    — multi-process front: route jobs across shard-group serves.
 //! * `submit`   — client: send job lines to a serving socket, wait for DONE.
 //! * `loadgen`  — client: closed-loop trace replay over N connections.
 //! * `gen`      — generate a workload trace (JSONL) or a graph file.
@@ -19,6 +20,7 @@
 //! echo "pagerank 0" | tlsched serve --source stdin --time-scale 1
 //! tlsched serve --source tcp --listen 127.0.0.1:7171 --time-scale 60
 //! tlsched serve --source tcp --http 127.0.0.1:7180 --time-scale 60
+//! tlsched route --listen 127.0.0.1:7171 --groups 127.0.0.1:7201,127.0.0.1:7202
 //! tlsched submit --addr 127.0.0.1:7171 "sssp 42"
 //! tlsched loadgen --addr 127.0.0.1:7171 --connections 4 --minutes 2
 //! tlsched loadgen --addr 127.0.0.1:7180 --http true --minutes 2
@@ -34,7 +36,7 @@ use tlsched::engine::JobSpec;
 use tlsched::graph::BlockPartition;
 use tlsched::net::{
     proto, run_http_loadgen_with, run_loadgen_with, Client, HttpServer, HttpServerConfig,
-    NetServer, NetServerConfig, RetryPolicy, Submitted,
+    NetServer, NetServerConfig, RetryPolicy, Router, RouterConfig, Submitted,
 };
 use tlsched::scheduler::{Scheduler, SchedulerConfig, SchedulerKind};
 use tlsched::trace::{self, JobKind, TraceConfig};
@@ -56,6 +58,7 @@ fn main() {
         "run" => cmd_run(&rest),
         "replay" => cmd_replay(&rest),
         "serve" => cmd_serve(&rest),
+        "route" => cmd_route(&rest),
         "submit" => cmd_submit(&rest),
         "loadgen" => cmd_loadgen(&rest),
         "gen" => cmd_gen(&rest),
@@ -64,7 +67,7 @@ fn main() {
         _ => {
             println!(
                 "tlsched — two-level scheduling for concurrent graph processing\n\n\
-                 USAGE: tlsched <run|replay|serve|submit|loadgen|gen|info|xla> [options]\n\
+                 USAGE: tlsched <run|replay|serve|route|submit|loadgen|gen|info|xla> [options]\n\
                  Run `tlsched <cmd> --help` for per-command options."
             );
             0
@@ -699,6 +702,142 @@ fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
     0
 }
 
+/// `tlsched route`: the multi-process front (DESIGN.md §11) — a
+/// source-affine router over N `serve --source tcp` shard-group
+/// processes. The router builds the same graph partition as the
+/// groups (launch all of them with identical graph flags/config) and
+/// derives the block → group table from the byte-balanced shard split,
+/// so each submission lands on the group owning its source vertex.
+fn cmd_route(argv: &[String]) -> i32 {
+    let spec = common_spec("tlsched route", "route client jobs across shard-group serves")
+        .opt("groups", "", "comma-separated upstream serve addresses (required)")
+        .opt("listen", "", "tcp bind address (empty = config serve.listen)")
+        .opt("http", "", "also serve the HTTP/JSON gateway on this address (empty = config serve.http)")
+        .opt("time-scale", "60", "virtual seconds per wall second")
+        .opt("max-concurrent", "32", "expected concurrency (partition sizing)")
+        .opt("queue-capacity", "0", "submission-queue bound (0 = config/default)")
+        .opt("policy", "", "admission policy: fifo|slo|correlation (empty = config)")
+        .opt("slo-factor", "0", "deadline factor over nominal service (0 = config)")
+        .opt("report-every-s", "0", "periodic metrics-JSON cadence, run-clock seconds")
+        .opt("idle-timeout-s", "0", "close silent tcp peers after this many seconds (0 = off)")
+        .opt("shed-overdue", "false", "drop queued jobs already past their deadline")
+        .opt("max-in-flight", "128", "per-group in-flight window")
+        .opt("connect-retries", "40", "connection attempts per group at startup");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let mut cfg = build_config(&a);
+    if a.was_set("queue-capacity") && a.usize("queue-capacity") > 0 {
+        cfg.serve.admission.queue_capacity = a.usize("queue-capacity");
+    }
+    if a.was_set("idle-timeout-s") {
+        cfg.serve.idle_timeout_s = a.f64("idle-timeout-s");
+    }
+    if a.was_set("shed-overdue") {
+        cfg.serve.admission.shed_overdue = a.parse("shed-overdue");
+    }
+    if !a.str("policy").is_empty() {
+        cfg.serve.admission.policy = match AdmissionPolicy::from_name(a.str("policy")) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown admission policy '{}'", a.str("policy"));
+                return 2;
+            }
+        };
+    }
+    if a.was_set("slo-factor") && a.f64("slo-factor") > 0.0 {
+        cfg.serve.admission.slo_factor = a.f64("slo-factor");
+    }
+    if a.was_set("report-every-s") {
+        cfg.serve.report_every_s = a.f64("report-every-s");
+    }
+    if a.was_set("http") {
+        cfg.serve.http = a.str("http").to_string();
+    }
+    let groups: Vec<String> = a.list("groups");
+    if groups.is_empty() {
+        eprintln!("--groups is required (comma-separated serve addresses)");
+        return 2;
+    }
+    let g = cfg.build_graph().expect("graph");
+    let part = cfg.build_partition(&g, a.usize("max-concurrent"));
+    let nv = (g.num_vertices() as u32).max(1);
+    let listen = if a.was_set("listen") && !a.str("listen").is_empty() {
+        a.str("listen").to_string()
+    } else {
+        cfg.serve.listen.clone()
+    };
+    let http = if cfg.serve.http.is_empty() {
+        None
+    } else {
+        Some(HttpServerConfig {
+            listen: cfg.serve.http.clone(),
+            max_connections: cfg.serve.max_connections,
+            idle_timeout_s: cfg.serve.idle_timeout_s,
+            terminal_capacity: cfg.serve.http_terminal_capacity,
+        })
+    };
+    let rcfg = RouterConfig {
+        net: NetServerConfig {
+            listen,
+            max_connections: cfg.serve.max_connections,
+            idle_timeout_s: cfg.serve.idle_timeout_s,
+        },
+        http,
+        admission: cfg.serve.admission.clone(),
+        time_scale: a.f64("time-scale"),
+        report_every_s: cfg.serve.report_every_s,
+        groups,
+        max_in_flight_per_group: a.usize("max-in-flight"),
+        connect_retries: a.parse("connect-retries"),
+        ..Default::default()
+    };
+    let router = match Router::start(&rcfg, part, nv) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("route: {e}");
+            return 1;
+        }
+    };
+    println!("listening on {}", router.local_addr());
+    if let Some(h) = router.http_addr() {
+        println!("http listening on {h}");
+    }
+    log::info!(
+        "routing over {} group(s): policy={} queue_capacity={} time_scale={}",
+        rcfg.groups.len(),
+        cfg.serve.admission.policy.name(),
+        cfg.serve.admission.queue_capacity,
+        a.f64("time-scale"),
+    );
+    let stats = router.serve();
+    println!(
+        "route done: routed={} done={} failed={} shed={} wall={:.2}s \
+         connections={} acked={} rejected_busy={} rejected_parse={}",
+        stats.routed,
+        stats.done,
+        stats.failed,
+        stats.shed,
+        stats.wall_s,
+        stats.net.connections_total,
+        stats.net.accepted,
+        stats.net.rejected_busy,
+        stats.net.rejected_parse,
+    );
+    for gs in &stats.groups {
+        println!(
+            "  group {}: submitted={} done={} failed={}{}",
+            gs.addr,
+            gs.submitted,
+            gs.done,
+            gs.failed,
+            if gs.down { " DOWN" } else { "" },
+        );
+    }
+    0
+}
+
 fn cmd_submit(argv: &[String]) -> i32 {
     let spec = ArgSpec::new(
         "tlsched submit",
@@ -928,7 +1067,7 @@ fn cmd_gen(argv: &[String]) -> i32 {
         .opt("days", "7", "trace length in days")
         .opt("rate", "38", "mean arrivals/hour")
         .opt("seed", "2018", "trace seed")
-        .opt("graph-out", "", "write a graph here (.bin or .txt)")
+        .opt("graph-out", "", "write a graph here (.pbin, .bin or .txt)")
         .opt("graph", "rmat", "graph kind")
         .opt("scale", "14", "rmat scale")
         .opt("edge-factor", "8", "rmat edge factor");
@@ -959,7 +1098,10 @@ fn cmd_gen(argv: &[String]) -> i32 {
         let g =
             tlsched::graph::generate::rmat(a.parse("scale"), a.usize("edge-factor"), a.u64("seed"));
         let p = std::path::Path::new(a.str("graph-out"));
-        if a.str("graph-out").ends_with(".bin") {
+        if a.str("graph-out").ends_with(".pbin") {
+            // paged snapshot: mmap-shareable across shard-group processes
+            tlsched::graph::GraphSnapshot::write(&g, p).expect("save graph");
+        } else if a.str("graph-out").ends_with(".bin") {
             tlsched::graph::io::save_binary(&g, p).expect("save graph");
         } else {
             tlsched::graph::io::save_edge_list(&g, p).expect("save graph");
@@ -976,7 +1118,8 @@ fn cmd_gen(argv: &[String]) -> i32 {
 
 fn cmd_info(argv: &[String]) -> i32 {
     let spec = common_spec("tlsched info", "print graph / partition / queue statistics")
-        .opt("jobs", "8", "expected concurrency for partition sizing");
+        .opt("jobs", "8", "expected concurrency for partition sizing")
+        .opt("groups", "0", "print the block → shard-group routing table for N groups");
     let a = match spec.parse_from(argv) {
         Ok(a) => a,
         Err(e) => return usage_err(&spec, e),
@@ -1001,6 +1144,18 @@ fn cmd_info(argv: &[String]) -> i32 {
         for r in part.shard_by_bytes(cfg.shards) {
             println!(
                 "  shard {}: blocks {}..{} vertices {}..{} ({} bytes)",
+                r.id, r.blocks.start, r.blocks.end, r.vertices.start, r.vertices.end, r.bytes
+            );
+        }
+    }
+    // the block → shard-group routing table `tlsched route` would use
+    // with this many upstream groups (DESIGN.md §11)
+    let ngroups = a.usize("groups");
+    if ngroups > 0 {
+        println!("routing table:   {ngroups} shard groups (balanced by structure bytes)");
+        for r in part.shard_by_bytes(ngroups) {
+            println!(
+                "  group {}: blocks {}..{} vertices {}..{} ({} bytes)",
                 r.id, r.blocks.start, r.blocks.end, r.vertices.start, r.vertices.end, r.bytes
             );
         }

@@ -21,10 +21,14 @@
 //!   `POST /jobs` through the same [`JobSubmitter`] seam, terminal
 //!   states buffered for polling in a bounded table, plus `/status`,
 //!   `/metrics` and a static status page for operators.
+//! * [`router`] — the multi-process front (`tlsched route`): speaks
+//!   the same client protocol, forwards each submission to the shard
+//!   group owning its source vertex's block, and fans terminals back
+//!   to the submitting connection.
 //!
-//! See DESIGN.md §8 for the grammar, connection lifecycle,
-//! backpressure semantics and the shard-group deployment sketch, and
-//! §10 for the HTTP surface and its retention contract.
+//! See DESIGN.md §8 for the grammar, connection lifecycle and
+//! backpressure semantics, §10 for the HTTP surface and its retention
+//! contract, and §11 for the router and multi-process deployment.
 //!
 //! [`AdmissionQueue`]: crate::coordinator::AdmissionQueue
 //! [`JobSubmitter`]: crate::coordinator::JobSubmitter
@@ -32,6 +36,7 @@
 pub mod client;
 pub mod http;
 pub mod proto;
+pub mod router;
 pub mod server;
 
 pub use client::{
@@ -42,4 +47,5 @@ pub use http::{
     run_http_loadgen, run_http_loadgen_with, HttpClient, HttpServer, HttpServerConfig, HttpStats,
 };
 pub use proto::{JobLine, ParseError, Request, Response, PROTO_VERSION};
+pub use router::{GroupStats, Router, RouterConfig, RouterError, RouterStats};
 pub use server::{NetServer, NetServerConfig, NetStats};

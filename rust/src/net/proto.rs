@@ -10,6 +10,7 @@
 //! <kind> <source> [deadline_s]          # bare job line (stdin-compatible)
 //! STATUS                                # server-state JSON snapshot
 //! METRICS                               # latest serve metrics JSON
+//! GROUPS                                # block → shard-group routing table JSON
 //! QUIT                                  # half-close: no more submissions
 //! # comment / blank                     # skipped, never an error
 //! ```
@@ -66,6 +67,11 @@ pub enum Request {
     Submit(JobLine),
     Status,
     Metrics,
+    /// Routing-table query (added for the multi-process router,
+    /// DESIGN.md §11): answered with one JSON line describing the
+    /// block → shard-group map, `{"groups":[]}` on a server that has
+    /// none. Additive — the frozen v1 responses are untouched.
+    Groups,
     Quit,
 }
 
@@ -134,6 +140,7 @@ pub fn parse_request(line: &str, num_vertices: u32) -> Result<Option<Request>, P
         "QUIT" => bare(Request::Quit),
         "STATUS" => bare(Request::Status),
         "METRICS" => bare(Request::Metrics),
+        "GROUPS" => bare(Request::Groups),
         "SUBMIT" => {
             if rest.is_empty() {
                 return Err(ParseError::EmptySubmit);
@@ -158,6 +165,7 @@ impl Request {
             },
             Request::Status => "STATUS".to_string(),
             Request::Metrics => "METRICS".to_string(),
+            Request::Groups => "GROUPS".to_string(),
             Request::Quit => "QUIT".to_string(),
         }
     }
@@ -352,6 +360,9 @@ mod tests {
         assert_eq!(parse_request("quit", 10), Ok(Some(Request::Quit)));
         assert_eq!(parse_request("STATUS", 10), Ok(Some(Request::Status)));
         assert_eq!(parse_request("METRICS", 10), Ok(Some(Request::Metrics)));
+        assert_eq!(parse_request("GROUPS", 10), Ok(Some(Request::Groups)));
+        assert_eq!(parse_request("groups", 10), Ok(Some(Request::Groups)));
+        assert!(matches!(parse_request("GROUPS 2", 10), Err(ParseError::Trailing(_))));
         assert!(matches!(parse_request("QUIT now", 10), Err(ParseError::Trailing(_))));
         assert!(matches!(parse_request("SUBMIT", 10), Err(ParseError::EmptySubmit)));
     }
@@ -544,6 +555,7 @@ mod tests {
             }),
             Request::Status,
             Request::Metrics,
+            Request::Groups,
             Request::Quit,
         ];
         for r in cases {

@@ -1,0 +1,757 @@
+//! Source-affine router: the multi-process deployment front
+//! (`tlsched route`, DESIGN.md §11).
+//!
+//! One router process sits in front of N `serve --source tcp`
+//! processes ("shard groups"), all opened over the same graph
+//! snapshot. The router speaks the ordinary [`proto`] line protocol to
+//! its clients (plus the HTTP/JSON surface when configured), so
+//! `tlsched submit`, `tlsched loadgen` and every existing client work
+//! against it unchanged:
+//!
+//! ```text
+//! client ── SUBMIT kind src ──▶ router ── SUBMIT kind src ──▶ group i
+//! client ◀───── ACK tag ─────── router    (i = shard owning src's block)
+//! client ◀─ DONE tag r qw ex ── router ◀── DONE local r qw ex ─ group i
+//! ```
+//!
+//! **Affinity rule.** A submission's source vertex maps to its block
+//! (`BlockPartition::block_of`), the block to a shard group through
+//! the same byte-balanced split the sharded runtime uses
+//! ([`BlockPartition::shard_by_bytes`] with `shards = groups`). Router
+//! and groups must therefore be launched with identical graph and
+//! partition settings; `tlsched info --groups N` prints the table this
+//! induces, and the `GROUPS` request returns it as JSON.
+//!
+//! **Id spaces.** The router ACKs its own tags from its own admission
+//! queue; each group allocates private local ids. The two are joined
+//! per group: SUBMITs await ACKs in wire order (the upstream server
+//! answers a connection's requests in order), after which the group's
+//! local id keys the pending map until its `DONE`/`FAIL` arrives and
+//! is re-tagged for the submitting client.
+//!
+//! **Failure semantics.** Every job ACKed by the router terminates in
+//! exactly one `DONE`/`FAIL` even when a group dies: its in-flight and
+//! backlogged jobs fail with `group_down`, and later arrivals routed
+//! to that group fail the same way (no failover rerouting — that would
+//! silently break source affinity). An upstream `REJECT busy` becomes
+//! `FAIL <tag> upstream_busy` — the router's own queue already applied
+//! client-facing backpressure, so upstream rejects are a sizing signal,
+//! not a retry loop. Deadlines are enforced at the router's admission
+//! queue (overdue jobs shed with `FAIL <tag> shed`); they are not
+//! forwarded, because run clocks are per-process.
+//!
+//! [`proto`]: super::proto
+
+use super::http::{HttpServer, HttpServerConfig, HttpStats};
+use super::proto::{self, Response};
+use super::server::{NetServer, NetServerConfig, NetStats};
+use crate::coordinator::{AdmissionConfig, AdmissionQueue, JobOutcome, JobRecord, Submission};
+use crate::graph::{BlockPartition, ShardRange};
+use crate::trace::JobKind;
+use crate::util::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// Router tunables. `net`/`http`/`admission`/`report_every_s` mirror
+/// the same knobs on `tlsched serve`; the rest are router-specific.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Client-facing TCP front (listen address, connection cap, idle
+    /// timeout) — identical behavior to the serve front-end.
+    pub net: NetServerConfig,
+    /// Optional client-facing HTTP/JSON gateway.
+    pub http: Option<HttpServerConfig>,
+    /// Router-side admission queue: client backpressure (`REJECT
+    /// busy`), admission policy and overdue shedding run here.
+    pub admission: AdmissionConfig,
+    /// Run-clock scale of the router queue (1.0 = real time).
+    pub time_scale: f64,
+    /// Cadence of upstream STATUS/METRICS polling and merged metrics
+    /// publication, in run-clock seconds (0 = a 1s default).
+    pub report_every_s: f64,
+    /// Upstream `serve --source tcp` addresses; index = shard-group id.
+    pub groups: Vec<String>,
+    /// Per-group in-flight window (submitted upstream, no terminal
+    /// yet); excess ready jobs wait in a per-group backlog instead of
+    /// drawing upstream `REJECT busy`.
+    pub max_in_flight_per_group: usize,
+    /// Connection attempts per group at startup (groups may still be
+    /// binding when the router launches).
+    pub connect_retries: u32,
+    /// Base backoff between connection attempts, milliseconds
+    /// (doubles per attempt).
+    pub connect_backoff_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            net: NetServerConfig::default(),
+            http: None,
+            admission: AdmissionConfig::default(),
+            time_scale: 1.0,
+            report_every_s: 0.0,
+            groups: Vec::new(),
+            max_in_flight_per_group: 128,
+            connect_retries: 40,
+            connect_backoff_ms: 50,
+        }
+    }
+}
+
+/// Why the router failed to start.
+#[derive(Debug, thiserror::Error)]
+pub enum RouterError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("no shard groups configured (want --groups addr,addr,...)")]
+    NoGroups,
+    #[error("group {0}: bad greeting {1:?}")]
+    BadHello(String, String),
+}
+
+/// Final per-group counters.
+#[derive(Debug, Clone, Default)]
+pub struct GroupStats {
+    pub addr: String,
+    /// Jobs forwarded upstream.
+    pub submitted: u64,
+    /// `DONE` terminals relayed.
+    pub done: u64,
+    /// `FAIL` terminals relayed (including `group_down`/`upstream_busy`
+    /// synthesized by the router).
+    pub failed: u64,
+    /// True when the upstream connection was lost before shutdown.
+    pub down: bool,
+}
+
+/// Final router counters, returned by [`Router::serve`].
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    /// Jobs popped from the router queue and assigned to a group.
+    pub routed: u64,
+    /// `DONE` terminals relayed to clients.
+    pub done: u64,
+    /// `FAIL` terminals relayed or synthesized.
+    pub failed: u64,
+    /// Jobs shed overdue by the router's own admission queue.
+    pub shed: u64,
+    pub wall_s: f64,
+    pub groups: Vec<GroupStats>,
+    /// Client-facing TCP front counters.
+    pub net: NetStats,
+    /// Client-facing HTTP front counters, when configured.
+    pub http: Option<HttpStats>,
+}
+
+/// A job forwarded upstream, keyed back to the submitting client.
+struct Pending {
+    tag: u64,
+    kind: JobKind,
+    submitted_s: f64,
+}
+
+/// Which direct (JSON-answered) request is outstanding upstream.
+enum Direct {
+    Status,
+    Metrics,
+}
+
+enum Event {
+    Resp { group: usize, resp: Response },
+    Down { group: usize },
+}
+
+struct Upstream {
+    addr: String,
+    /// Write half; the main routing loop is the only writer.
+    write: TcpStream,
+    reader: Option<std::thread::JoinHandle<()>>,
+    /// SUBMITs written, ACK/REJECT not yet seen (wire order).
+    awaiting: VecDeque<Pending>,
+    /// ACKed upstream: group-local id → pending job.
+    pending: HashMap<u64, Pending>,
+    /// Ready jobs waiting for the in-flight window.
+    backlog: VecDeque<Submission>,
+    /// Outstanding STATUS/METRICS requests (wire order).
+    direct: VecDeque<Direct>,
+    down: bool,
+    submitted: u64,
+    done: u64,
+    failed: u64,
+    status_json: Option<String>,
+    metrics_json: Option<String>,
+}
+
+impl Upstream {
+    fn outstanding(&self) -> usize {
+        self.awaiting.len() + self.pending.len() + self.backlog.len()
+    }
+}
+
+/// A running router: client-facing fronts are live once
+/// [`Router::start`] returns; [`Router::serve`] runs the routing loop
+/// to completion (same last-client-out lifecycle as `tlsched serve`).
+pub struct Router {
+    net: NetServer,
+    http: Option<HttpServer>,
+    queue: AdmissionQueue,
+    part: BlockPartition,
+    /// block id → group id (the affinity table).
+    block_group: Vec<u32>,
+    groups: Vec<Upstream>,
+    rx: Receiver<Event>,
+    report_every_s: f64,
+    max_in_flight: usize,
+}
+
+impl Router {
+    /// Connect every shard group (verifying its `HELLO`), bind the
+    /// client-facing fronts, and publish the routing table. The jobs
+    /// only start flowing when [`Router::serve`] runs.
+    pub fn start(
+        cfg: &RouterConfig,
+        part: BlockPartition,
+        num_vertices: u32,
+    ) -> Result<Router, RouterError> {
+        if cfg.groups.is_empty() {
+            return Err(RouterError::NoGroups);
+        }
+        let (tx, rx) = channel();
+        let mut groups = Vec::with_capacity(cfg.groups.len());
+        for (i, addr) in cfg.groups.iter().enumerate() {
+            let stream = connect_retry(addr, cfg.connect_retries, cfg.connect_backoff_ms)?;
+            let _ = stream.set_nodelay(true);
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut hello = String::new();
+            reader.read_line(&mut hello)?;
+            match proto::parse_hello(&hello) {
+                Some(v) if v == proto::PROTO_VERSION => {}
+                _ => return Err(RouterError::BadHello(addr.clone(), hello.trim().to_string())),
+            }
+            let tx = Sender::clone(&tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("tlsched-route-{i}"))
+                .spawn(move || reader_loop(i, reader, tx))?;
+            groups.push(Upstream {
+                addr: addr.clone(),
+                write: stream,
+                reader: Some(handle),
+                awaiting: VecDeque::new(),
+                pending: HashMap::new(),
+                backlog: VecDeque::new(),
+                direct: VecDeque::new(),
+                down: false,
+                submitted: 0,
+                done: 0,
+                failed: 0,
+                status_json: None,
+                metrics_json: None,
+            });
+        }
+        let shards = part.shard_by_bytes(groups.len());
+        let mut block_group = vec![0u32; part.num_blocks()];
+        for s in &shards {
+            for b in s.blocks.clone() {
+                block_group[b as usize] = s.id;
+            }
+        }
+        let (submitter, queue) = AdmissionQueue::live(&cfg.admission, cfg.time_scale);
+        let net = NetServer::start(&cfg.net, submitter.clone(), num_vertices)?;
+        let http = match &cfg.http {
+            Some(hc) => Some(HttpServer::start(hc, submitter.clone(), num_vertices)?),
+            None => None,
+        };
+        drop(submitter);
+        let table = routing_table_json(&shards, &cfg.groups);
+        net.publish_groups(&table);
+        log::info!("route: fronting {} groups at {}", groups.len(), net.local_addr());
+        Ok(Router {
+            net,
+            http,
+            queue,
+            part,
+            block_group,
+            groups,
+            rx,
+            report_every_s: if cfg.report_every_s > 0.0 { cfg.report_every_s } else { 1.0 },
+            max_in_flight: cfg.max_in_flight_per_group.max(1),
+        })
+    }
+
+    /// Actual bound address of the TCP front.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.net.local_addr()
+    }
+
+    /// Actual bound address of the HTTP front, when configured.
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http.as_ref().map(|h| h.local_addr())
+    }
+
+    /// Run the routing loop until every client disconnected and all
+    /// accepted work has its terminal delivered, then QUIT the groups
+    /// and return the final counters.
+    pub fn serve(mut self) -> RouterStats {
+        let t0 = Instant::now();
+        let epoch = self.queue.epoch();
+        let scale = self.queue.time_scale();
+        let clock = move || epoch.elapsed().as_secs_f64() * scale;
+        let mut stats = RouterStats::default();
+        let mut next_poll = 0.0f64;
+        loop {
+            let now = clock();
+            self.queue.poll(now);
+            // jobs shed overdue by our own queue retire with a FAIL, so
+            // the exactly-one-terminal contract holds at the router tier
+            for sub in self.queue.take_shed() {
+                let fin = clock();
+                let rec = JobRecord {
+                    id: sub.tag,
+                    tag: sub.tag,
+                    kind: sub.kind.name(),
+                    submitted_s: sub.submitted_s,
+                    started_s: fin,
+                    finished_s: fin,
+                    rounds: 0,
+                    updates: 0,
+                    edges: 0,
+                    outcome: JobOutcome::Shed,
+                };
+                stats.shed += 1;
+                self.notify(&rec);
+            }
+            // assign every ready submission to its group's backlog
+            while let Some(sub) = self.queue.pop(&[], &self.part) {
+                let gi = self.group_of(sub.source);
+                self.groups[gi].backlog.push_back(sub);
+                stats.routed += 1;
+            }
+            for gi in 0..self.groups.len() {
+                self.flush_backlog(gi, &mut stats, clock());
+            }
+            // drain upstream events; park briefly when there are none
+            match self.rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(ev) => {
+                    self.handle_event(ev, clock(), &mut stats);
+                    while let Ok(ev) = self.rx.try_recv() {
+                        self.handle_event(ev, clock(), &mut stats);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    // every reader exited (all groups down, each already
+                    // reported via Down); keep draining client work — it
+                    // fails with group_down — until the clients leave
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+            if clock() >= next_poll {
+                self.poll_upstreams();
+                self.publish(&stats, t0.elapsed().as_secs_f64());
+                while next_poll <= clock() {
+                    next_poll += self.report_every_s;
+                }
+            }
+            let outstanding: usize = self.groups.iter().map(|g| g.outstanding()).sum();
+            if self.queue.is_exhausted() && outstanding == 0 {
+                break;
+            }
+        }
+        // wind down: half-close every live group; readers exit on EOF
+        for g in &mut self.groups {
+            if !g.down {
+                let _ = g.write.write_all(b"QUIT\n");
+            }
+        }
+        for g in &mut self.groups {
+            let _ = g.write.shutdown(std::net::Shutdown::Write);
+            if let Some(h) = g.reader.take() {
+                let _ = h.join();
+            }
+        }
+        self.publish(&stats, t0.elapsed().as_secs_f64());
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.groups = self
+            .groups
+            .iter()
+            .map(|g| GroupStats {
+                addr: g.addr.clone(),
+                submitted: g.submitted,
+                done: g.done,
+                failed: g.failed,
+                down: g.down,
+            })
+            .collect();
+        if let Some(h) = self.http {
+            stats.http = Some(h.finish());
+        }
+        stats.net = self.net.finish();
+        stats
+    }
+
+    fn group_of(&self, source: u32) -> usize {
+        self.block_group[self.part.block_of(source) as usize] as usize
+    }
+
+    /// Forward backlogged jobs while the group's in-flight window has
+    /// room; fail them straight away when the group is down.
+    fn flush_backlog(&mut self, gi: usize, stats: &mut RouterStats, now: f64) {
+        loop {
+            if self.groups[gi].down {
+                let Some(sub) = self.groups[gi].backlog.pop_front() else { break };
+                self.fail_sub(gi, &sub, now, "group_down", stats);
+                continue;
+            }
+            let g = &self.groups[gi];
+            if g.backlog.is_empty() || g.awaiting.len() + g.pending.len() >= self.max_in_flight {
+                break;
+            }
+            let sub = self.groups[gi].backlog.pop_front().unwrap();
+            // no deadline on the wire: run clocks are per-process, and
+            // deadline admission already ran at the router (module doc)
+            let line = format!("SUBMIT {} {}\n", sub.kind.name(), sub.source);
+            if self.groups[gi].write.write_all(line.as_bytes()).is_err() {
+                // the reader will report Down shortly; requeue until then
+                self.groups[gi].backlog.push_front(sub);
+                break;
+            }
+            let g = &mut self.groups[gi];
+            g.awaiting.push_back(Pending {
+                tag: sub.tag,
+                kind: sub.kind,
+                submitted_s: sub.submitted_s,
+            });
+            g.submitted += 1;
+        }
+    }
+
+    fn handle_event(&mut self, ev: Event, now: f64, stats: &mut RouterStats) {
+        match ev {
+            Event::Resp { group, resp } => self.handle_resp(group, resp, now, stats),
+            Event::Down { group } => self.handle_down(group, now, stats),
+        }
+    }
+
+    fn handle_resp(&mut self, gi: usize, resp: Response, now: f64, stats: &mut RouterStats) {
+        match resp {
+            Response::Ack(local_id) => {
+                let g = &mut self.groups[gi];
+                if let Some(p) = g.awaiting.pop_front() {
+                    g.pending.insert(local_id, p);
+                }
+            }
+            Response::Reject(reason) => {
+                if let Some(p) = self.groups[gi].awaiting.pop_front() {
+                    let why = if reason.starts_with("busy") {
+                        "upstream_busy".to_string()
+                    } else {
+                        format!("upstream_reject_{reason}")
+                    };
+                    self.fail_pending(gi, p, now, why, stats);
+                }
+            }
+            Response::Done { job_id, rounds, queue_wait_s: _, exec_s } => {
+                if let Some(p) = self.groups[gi].pending.remove(&job_id) {
+                    // preserve the group's measured execution time and
+                    // the true end-to-end latency: everything that is
+                    // not upstream execution counts as queueing
+                    let finished_s = now;
+                    let started_s = (finished_s - exec_s).max(p.submitted_s);
+                    let rec = JobRecord {
+                        id: p.tag,
+                        tag: p.tag,
+                        kind: p.kind.name(),
+                        submitted_s: p.submitted_s,
+                        started_s,
+                        finished_s,
+                        rounds,
+                        updates: 0,
+                        edges: 0,
+                        outcome: JobOutcome::Done,
+                    };
+                    self.groups[gi].done += 1;
+                    stats.done += 1;
+                    self.notify(&rec);
+                }
+            }
+            Response::Fail { job_id, reason } => {
+                if let Some(p) = self.groups[gi].pending.remove(&job_id) {
+                    // the group's reason passes through verbatim
+                    self.fail_pending(gi, p, now, reason, stats);
+                }
+            }
+            Response::Json(payload) => {
+                let g = &mut self.groups[gi];
+                match g.direct.pop_front() {
+                    Some(Direct::Status) => g.status_json = Some(payload),
+                    Some(Direct::Metrics) => g.metrics_json = Some(payload),
+                    None => {}
+                }
+            }
+        }
+    }
+
+    /// A group's connection died: everything it owed a terminal fails
+    /// with `group_down`, as will anything routed to it later.
+    fn handle_down(&mut self, gi: usize, now: f64, stats: &mut RouterStats) {
+        if self.groups[gi].down {
+            return;
+        }
+        log::warn!("route: group {gi} ({}) down", self.groups[gi].addr);
+        let g = &mut self.groups[gi];
+        g.down = true;
+        let victims: Vec<Pending> = g
+            .awaiting
+            .drain(..)
+            .chain(g.pending.drain().map(|(_, p)| p))
+            .collect();
+        let backlog: Vec<Submission> = g.backlog.drain(..).collect();
+        for p in victims {
+            self.fail_pending(gi, p, now, "group_down".to_string(), stats);
+        }
+        for sub in backlog {
+            self.fail_sub(gi, &sub, now, "group_down", stats);
+        }
+    }
+
+    fn fail_pending(
+        &mut self,
+        gi: usize,
+        p: Pending,
+        now: f64,
+        reason: String,
+        stats: &mut RouterStats,
+    ) {
+        let rec = JobRecord {
+            id: p.tag,
+            tag: p.tag,
+            kind: p.kind.name(),
+            submitted_s: p.submitted_s,
+            started_s: p.submitted_s,
+            finished_s: now,
+            rounds: 0,
+            updates: 0,
+            edges: 0,
+            outcome: JobOutcome::Failed(reason),
+        };
+        self.groups[gi].failed += 1;
+        stats.failed += 1;
+        self.notify(&rec);
+    }
+
+    fn fail_sub(
+        &mut self,
+        gi: usize,
+        sub: &Submission,
+        now: f64,
+        reason: &str,
+        stats: &mut RouterStats,
+    ) {
+        let rec = JobRecord {
+            id: sub.tag,
+            tag: sub.tag,
+            kind: sub.kind.name(),
+            submitted_s: sub.submitted_s,
+            started_s: sub.submitted_s,
+            finished_s: now,
+            rounds: 0,
+            updates: 0,
+            edges: 0,
+            outcome: JobOutcome::Failed(reason.to_string()),
+        };
+        self.groups[gi].failed += 1;
+        stats.failed += 1;
+        self.notify(&rec);
+    }
+
+    /// Route a terminal to whichever front the job came from: the HTTP
+    /// table claims its own tags, everything else goes out as a wire
+    /// `DONE`/`FAIL` (same split as `tlsched serve`).
+    fn notify(&self, rec: &JobRecord) {
+        let claimed = self.http.as_ref().is_some_and(|h| h.notify_done(rec));
+        if !claimed {
+            self.net.notify_done(rec);
+        }
+    }
+
+    /// Ask every live group for STATUS and METRICS (answers arrive
+    /// asynchronously and land in `status_json`/`metrics_json`).
+    fn poll_upstreams(&mut self) {
+        for g in &mut self.groups {
+            if g.down {
+                continue;
+            }
+            if g.write.write_all(b"STATUS\nMETRICS\n").is_ok() {
+                g.direct.push_back(Direct::Status);
+                g.direct.push_back(Direct::Metrics);
+            }
+        }
+    }
+
+    /// Publish the merged cross-group view as our own METRICS payload.
+    fn publish(&self, stats: &RouterStats, wall_s: f64) {
+        let per_group: Vec<Json> = self
+            .groups
+            .iter()
+            .map(|g| {
+                let metrics = g
+                    .metrics_json
+                    .as_deref()
+                    .and_then(|s| Json::parse(s).ok())
+                    .unwrap_or(Json::Null);
+                let status = g
+                    .status_json
+                    .as_deref()
+                    .and_then(|s| Json::parse(s).ok())
+                    .unwrap_or(Json::Null);
+                Json::obj(vec![
+                    ("addr", Json::str(g.addr.as_str())),
+                    ("up", Json::Bool(!g.down)),
+                    ("submitted", Json::num(g.submitted as f64)),
+                    ("done", Json::num(g.done as f64)),
+                    ("failed", Json::num(g.failed as f64)),
+                    ("in_flight", Json::num(g.outstanding() as f64)),
+                    ("status", status),
+                    ("metrics", metrics),
+                ])
+            })
+            .collect();
+        let up = self.groups.iter().filter(|g| !g.down).count();
+        let j = Json::obj(vec![
+            ("router", Json::Bool(true)),
+            ("groups", Json::num(self.groups.len() as f64)),
+            ("groups_up", Json::num(up as f64)),
+            ("routed", Json::num(stats.routed as f64)),
+            ("done", Json::num(stats.done as f64)),
+            ("failed", Json::num(stats.failed as f64)),
+            ("shed", Json::num(stats.shed as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("per_group", Json::arr(per_group)),
+        ]);
+        let s = j.to_string();
+        self.net.publish_metrics(&s);
+        if let Some(h) = &self.http {
+            h.publish_metrics(&s);
+        }
+    }
+}
+
+fn reader_loop(group: usize, mut reader: BufReader<TcpStream>, tx: Sender<Event>) {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        // unparseable lines are skipped (forward compatibility), never
+        // treated as group death — only EOF/IO errors are
+        if let Ok(resp) = proto::parse_response(t) {
+            if tx.send(Event::Resp { group, resp }).is_err() {
+                return;
+            }
+        }
+    }
+    let _ = tx.send(Event::Down { group });
+}
+
+fn connect_retry(addr: &str, retries: u32, backoff_ms: u64) -> std::io::Result<TcpStream> {
+    let mut attempt = 0u32;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if attempt >= retries {
+                    return Err(e);
+                }
+                let shift = attempt.min(4);
+                std::thread::sleep(Duration::from_millis(backoff_ms << shift));
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// The block → shard-group table as one JSON line (the `GROUPS`
+/// payload and the `tlsched info --groups` view).
+pub fn routing_table_json(shards: &[ShardRange], addrs: &[String]) -> String {
+    let items: Vec<Json> = shards
+        .iter()
+        .map(|s| {
+            let addr = addrs.get(s.id as usize).map(|a| a.as_str()).unwrap_or("");
+            Json::obj(vec![
+                ("id", Json::num(s.id as f64)),
+                ("addr", Json::str(addr)),
+                ("blocks", Json::arr(vec![Json::num(s.blocks.start), Json::num(s.blocks.end)])),
+                (
+                    "vertices",
+                    Json::arr(vec![Json::num(s.vertices.start), Json::num(s.vertices.end)]),
+                ),
+                ("bytes", Json::num(s.bytes as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("groups", Json::arr(items))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn routing_table_covers_every_block() {
+        let g = generate::rmat(10, 8, 7);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let shards = part.shard_by_bytes(3);
+        let addrs: Vec<String> = (0..3).map(|i| format!("127.0.0.1:{}", 7200 + i)).collect();
+        let json = routing_table_json(&shards, &addrs);
+        let j = Json::parse(&json).unwrap();
+        let groups = j.get("groups").unwrap().as_arr().unwrap();
+        assert_eq!(groups.len(), 3);
+        // block ranges tile [0, num_blocks) in order
+        let mut next = 0u64;
+        for g in groups {
+            let b = g.get("blocks").unwrap().as_arr().unwrap();
+            assert_eq!(b[0].as_u64().unwrap(), next);
+            next = b[1].as_u64().unwrap();
+        }
+        assert_eq!(next, part.num_blocks() as u64);
+    }
+
+    #[test]
+    fn start_fails_without_groups() {
+        let g = generate::rmat(8, 8, 7);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let cfg = RouterConfig {
+            net: NetServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() },
+            ..Default::default()
+        };
+        let nv = g.num_vertices() as u32;
+        assert!(matches!(Router::start(&cfg, part, nv), Err(RouterError::NoGroups)));
+    }
+
+    #[test]
+    fn start_fails_fast_on_unreachable_group() {
+        let g = generate::rmat(8, 8, 7);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        let cfg = RouterConfig {
+            net: NetServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() },
+            // discard-protocol port: nothing listens there in CI
+            groups: vec!["127.0.0.1:9".to_string()],
+            connect_retries: 0,
+            connect_backoff_ms: 1,
+            ..Default::default()
+        };
+        let nv = g.num_vertices() as u32;
+        assert!(matches!(Router::start(&cfg, part, nv), Err(RouterError::Io(_))));
+    }
+}

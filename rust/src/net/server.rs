@@ -176,6 +176,9 @@ struct Shared {
     /// Latest serve metrics JSON published by the serve loop's
     /// `on_report` hook (the `METRICS` payload).
     snapshot: Mutex<Option<String>>,
+    /// Routing-table JSON published by the router front (the `GROUPS`
+    /// payload); plain serve processes leave it unset.
+    groups: Mutex<Option<String>>,
     shutdown: AtomicBool,
     /// True once any connection has attempted a submission — the
     /// last-client-out shutdown only arms then, so a transient
@@ -224,6 +227,10 @@ impl Shared {
         self.snapshot.lock().unwrap().clone().unwrap_or_else(|| "{}".to_string())
     }
 
+    fn groups_json(&self) -> String {
+        self.groups.lock().unwrap().clone().unwrap_or_else(|| "{\"groups\":[]}".to_string())
+    }
+
     /// One connection retired; the last one out turns off the lights —
     /// but only once some connection has actually submitted work, so
     /// probes and one-off STATUS checks leave the server running.
@@ -268,6 +275,7 @@ impl NetServer {
             counters: Counters::default(),
             routes: Mutex::new(HashMap::new()),
             snapshot: Mutex::new(None),
+            groups: Mutex::new(None),
             shutdown: AtomicBool::new(false),
             saw_submission: AtomicBool::new(false),
             addr,
@@ -291,6 +299,13 @@ impl NetServer {
     /// `METRICS` payload. Call from the serve loop's report hook.
     pub fn publish_metrics(&self, json: &str) {
         *self.shared.snapshot.lock().unwrap() = Some(json.to_string());
+    }
+
+    /// Publish the block → shard-group routing table (one-line JSON)
+    /// as the `GROUPS` payload. The router front calls this once at
+    /// startup; servers that never do answer `{"groups":[]}`.
+    pub fn publish_groups(&self, json: &str) {
+        *self.shared.groups.lock().unwrap() = Some(json.to_string());
     }
 
     /// Route a retired job's terminal notification — `DONE` for
@@ -449,6 +464,9 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
             Ok(Some(Request::Metrics)) => {
                 conn.send_line(&shared.metrics_json());
             }
+            Ok(Some(Request::Groups)) => {
+                conn.send_line(&shared.groups_json());
+            }
             Ok(Some(Request::Submit(job))) => {
                 // arms the last-client-out shutdown (probe connections
                 // that never submit don't)
@@ -563,6 +581,13 @@ mod tests {
         writeln!(s, "METRICS").unwrap();
         let j = Json::parse(&read_line(&mut r)).unwrap();
         assert_eq!(j.get("completed").unwrap().as_u64(), Some(7));
+        // GROUPS before any published routing table: empty list
+        writeln!(s, "GROUPS").unwrap();
+        assert_eq!(read_line(&mut r), "{\"groups\":[]}");
+        server.publish_groups("{\"groups\":[{\"id\":0,\"addr\":\"127.0.0.1:7172\"}]}");
+        writeln!(s, "GROUPS").unwrap();
+        let j = Json::parse(&read_line(&mut r)).unwrap();
+        assert!(j.get("groups").is_some(), "published GROUPS payload served back");
         writeln!(s, "QUIT").unwrap();
         let mut line = String::new();
         assert_eq!(r.read_line(&mut line).unwrap(), 0, "closed after QUIT");

@@ -44,7 +44,7 @@
 //! it every job lane, summary and delta is still bit-identical to the
 //! pre-round state — quarantining the offending job and retrying the
 //! round with the survivors is exact, not best-effort. The
-//! `util::faults` chaos injector hooks into [`run_block_task`] behind
+//! `util::faults` chaos injector hooks into `run_block_task` behind
 //! one cold armed-check to prove this under test.
 //!
 //! Incremental ⟨Node_un, ΣP⟩ summaries stay exact: each task returns

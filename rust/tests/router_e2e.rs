@@ -1,0 +1,285 @@
+//! End-to-end tests of the source-affine router (DESIGN.md §11), run
+//! fully in-process: a [`Router`] fronting real shard-group stacks —
+//! each its own admission queue, TCP server and coordinator serve
+//! loop over the same graph. The contract under test:
+//!
+//! * **fixpoint parity** — jobs routed across groups converge to the
+//!   single-process batch fixpoints (exact for traversals, within
+//!   program tolerance for the PageRank family);
+//! * **source affinity** — each job lands on exactly the group that
+//!   owns its source vertex's block, per the byte-balanced table;
+//! * **exactly one terminal** — every ACKed job produces one
+//!   `DONE`/`FAIL`, including when a group dies mid-stream
+//!   (`FAIL <tag> group_down`), never zero and never two.
+
+use std::time::Duration;
+use tlsched::coordinator::{AdmissionConfig, AdmissionQueue, Coordinator, CoordinatorConfig};
+use tlsched::engine::{JobSpec, JobState};
+use tlsched::graph::{generate, BlockPartition, Graph};
+use tlsched::net::{proto, Client, NetServer, NetServerConfig, Router, RouterConfig, Submitted};
+use tlsched::scheduler::{SchedulerConfig, SchedulerKind};
+use tlsched::trace::JobKind;
+
+fn setup(scale: u32) -> (Graph, BlockPartition) {
+    let g = generate::rmat(scale, 8, 77);
+    let part = BlockPartition::by_vertex_count(&g, 64);
+    (g, part)
+}
+
+fn coord<'g>(g: &'g Graph, part: &'g BlockPartition, workers: usize) -> Coordinator<'g> {
+    let mut cfg = CoordinatorConfig::new(SchedulerConfig::new(SchedulerKind::TwoLevel));
+    cfg.workers = workers;
+    Coordinator::new(g, part, cfg)
+}
+
+fn start_group(g: &Graph) -> (AdmissionQueue, NetServer) {
+    let (submitter, queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1.0);
+    let cfg = NetServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_connections: 16,
+        ..Default::default()
+    };
+    let server = NetServer::start(&cfg, submitter, g.num_vertices() as u32).unwrap();
+    (queue, server)
+}
+
+fn router_over(groups: Vec<String>, part: BlockPartition, nv: u32) -> Router {
+    let rcfg = RouterConfig {
+        net: NetServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_connections: 16,
+            ..Default::default()
+        },
+        time_scale: 1.0,
+        groups,
+        ..Default::default()
+    };
+    Router::start(&rcfg, part, nv).unwrap()
+}
+
+fn sort_key(j: &JobState) -> (&'static str, u32) {
+    (j.program.name(), j.spec.source)
+}
+
+/// Exact for traversals (unique schedule-independent fixpoint),
+/// within program tolerance for the PageRank family.
+fn assert_fixpoints_match(batch: &[JobState], routed: &[JobState]) {
+    assert_eq!(batch.len(), routed.len());
+    let mut b: Vec<&JobState> = batch.iter().collect();
+    let mut r: Vec<&JobState> = routed.iter().collect();
+    b.sort_by_key(|j| sort_key(j));
+    r.sort_by_key(|j| sort_key(j));
+    for (b, r) in b.iter().zip(&r) {
+        assert_eq!(sort_key(b), sort_key(r), "jobs pair up by (kind, source)");
+        assert!(r.converged);
+        let exact = matches!(b.spec.kind, JobKind::Sssp | JobKind::Bfs | JobKind::Wcc);
+        if exact {
+            assert_eq!(b.values, r.values, "{}: exact fixpoint", b.program.name());
+        } else {
+            let tol = b.program.value_tolerance();
+            for (x, y) in b.values.iter().zip(&r.values) {
+                assert_eq!(x.is_finite(), y.is_finite());
+                if x.is_finite() {
+                    assert!((x - y).abs() < tol, "{}: {x} vs {y}", b.program.name());
+                }
+            }
+        }
+    }
+}
+
+/// Jobs spanning two shard groups, submitted through the router,
+/// converge to the single-process batch fixpoints; every job gets
+/// exactly one `DONE`, and each lands on the group the table assigns.
+#[test]
+fn router_fixpoint_parity_across_two_groups() {
+    let (g, part) = setup(10);
+    let nv = g.num_vertices() as u32;
+    // pick sources on both sides of the two-way shard split
+    let shards = part.shard_by_bytes(2);
+    let s0 = shards[0].vertices.start;
+    let s1 = shards[1].vertices.start;
+    let specs = vec![
+        JobSpec::new(JobKind::PageRank, s0),
+        JobSpec::new(JobKind::Sssp, s1),
+        JobSpec::new(JobKind::Bfs, s0 + 1),
+        JobSpec::new(JobKind::Wcc, s1),
+        JobSpec::new(JobKind::Ppr, s1 + 1),
+    ];
+    // the affinity table the router will derive — expected per-group load
+    let mut block_group = vec![0u32; part.num_blocks()];
+    for s in &shards {
+        for b in s.blocks.clone() {
+            block_group[b as usize] = s.id;
+        }
+    }
+    let mut expected = [0u64; 2];
+    for spec in &specs {
+        expected[block_group[part.block_of(spec.source) as usize] as usize] += 1;
+    }
+    assert!(expected.iter().all(|&e| e > 0), "both groups see work: {expected:?}");
+
+    let (bm, batch_jobs) = coord(&g, &part, 2).run_batch_collect(&specs);
+    assert_eq!(bm.completed(), 5);
+
+    let mut addrs = Vec::new();
+    let mut stacks = Vec::new();
+    for _ in 0..2 {
+        let (q, server) = start_group(&g);
+        addrs.push(server.local_addr().to_string());
+        stacks.push((q, server));
+    }
+    let router = router_over(addrs, part.clone(), nv);
+    let raddr = router.local_addr().to_string();
+
+    let client_specs = specs.clone();
+    let client = std::thread::spawn(move || {
+        let mut c = Client::connect_retry(&raddr, Duration::from_secs(5)).unwrap();
+        let mut ids = Vec::new();
+        for s in &client_specs {
+            match c.submit(s.kind, s.source, None).unwrap() {
+                Submitted::Accepted(id) => ids.push(id),
+                Submitted::Rejected(r) => panic!("rejected: {r}"),
+            }
+        }
+        let dones: Vec<_> = ids.iter().map(|_| c.wait_done().unwrap()).collect();
+        let leftovers = c.quit().unwrap();
+        assert!(leftovers.is_empty(), "no duplicate terminals after the expected ones");
+        (ids, dones)
+    });
+
+    let (rstats, group_out) = std::thread::scope(|s| {
+        let g = &g;
+        let part = &part;
+        let handles: Vec<_> = stacks
+            .into_iter()
+            .map(|(mut q, server)| {
+                s.spawn(move || {
+                    let mut c = coord(g, part, 2);
+                    let (m, jobs) =
+                        c.serve_notify_collect(&mut q, 0.0, |_| {}, |rec| server.notify_done(rec));
+                    let stats = server.finish();
+                    (m, jobs, stats)
+                })
+            })
+            .collect();
+        let rstats = router.serve();
+        let group_out: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (rstats, group_out)
+    });
+    let (mut ids, dones) = client.join().unwrap();
+
+    // exactly one terminal per ACKed job, all DONE
+    assert_eq!(dones.len(), 5);
+    assert!(dones.iter().all(|d| d.fail_reason.is_none()), "{dones:?}");
+    let mut done_ids: Vec<u64> = dones.iter().map(|d| d.job_id).collect();
+    ids.sort_unstable();
+    done_ids.sort_unstable();
+    assert_eq!(done_ids, ids, "terminals match ACKed ids one-to-one");
+    for d in &dones {
+        assert!(d.rounds > 0);
+        assert!(d.queue_wait_s >= 0.0 && d.exec_s >= 0.0);
+    }
+
+    // router counters and source affinity
+    assert_eq!((rstats.routed, rstats.done, rstats.failed, rstats.shed), (5, 5, 0, 0));
+    for (i, gs) in rstats.groups.iter().enumerate() {
+        assert!(!gs.down);
+        assert_eq!(gs.submitted, expected[i], "group {i} got exactly its table share");
+        assert_eq!(gs.done, expected[i]);
+        assert_eq!(gs.failed, 0);
+    }
+
+    // every group drained cleanly and the merged results hit the
+    // batch fixpoints
+    let mut merged: Vec<JobState> = Vec::new();
+    for (i, (m, jobs, stats)) in group_out.into_iter().enumerate() {
+        assert_eq!(m.completed() as u64, expected[i]);
+        assert!(m.drained);
+        assert_eq!(stats.done_sent, expected[i]);
+        assert_eq!(stats.done_dropped, 0);
+        merged.extend(jobs);
+    }
+    assert_fixpoints_match(&batch_jobs, &merged);
+}
+
+/// A group that dies mid-stream: its job fails with `group_down`, the
+/// other group's job completes, and every ACKed job still terminates
+/// exactly once.
+#[test]
+fn router_fails_jobs_of_a_dead_group_and_completes_the_rest() {
+    let (g, part) = setup(9);
+    let nv = g.num_vertices() as u32;
+    let shards = part.shard_by_bytes(2);
+    let live_src = shards[0].vertices.start;
+    let dead_src = shards[1].vertices.start;
+
+    // group 0: a real stack
+    let (mut queue, server) = start_group(&g);
+    let live_addr = server.local_addr().to_string();
+    // group 1: greets correctly, swallows poll traffic, then dies on
+    // the first forwarded job
+    let fake = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let fake_addr = fake.local_addr().unwrap().to_string();
+    let fake_thread = std::thread::spawn(move || {
+        use std::io::{BufRead, BufReader, Write};
+        let (mut s, _) = fake.accept().unwrap();
+        s.write_all(format!("{}\n", proto::hello_line()).as_bytes()).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if r.read_line(&mut line).unwrap() == 0 {
+                return; // router gave up first
+            }
+            if line.starts_with("SUBMIT") {
+                return; // drop the connection with the job un-ACKed
+            }
+        }
+    });
+
+    let router = router_over(vec![live_addr, fake_addr], part.clone(), nv);
+    let raddr = router.local_addr().to_string();
+    let client = std::thread::spawn(move || {
+        let mut c = Client::connect_retry(&raddr, Duration::from_secs(5)).unwrap();
+        let accept = |s: Submitted| match s {
+            Submitted::Accepted(id) => id,
+            Submitted::Rejected(r) => panic!("rejected: {r}"),
+        };
+        let id_live = accept(c.submit(JobKind::Bfs, live_src, None).unwrap());
+        let id_dead = accept(c.submit(JobKind::Sssp, dead_src, None).unwrap());
+        let a = c.wait_done().unwrap();
+        let b = c.wait_done().unwrap();
+        let leftovers = c.quit().unwrap();
+        assert!(leftovers.is_empty(), "exactly one terminal per job");
+        (id_live, id_dead, a, b)
+    });
+
+    let (rstats, m) = std::thread::scope(|s| {
+        let g = &g;
+        let part = &part;
+        let gh = s.spawn(move || {
+            let mut srv = coord(g, part, 1);
+            let (m, _jobs) =
+                srv.serve_notify_collect(&mut queue, 0.0, |_| {}, |rec| server.notify_done(rec));
+            server.finish();
+            m
+        });
+        let rstats = router.serve();
+        (rstats, gh.join().unwrap())
+    });
+    fake_thread.join().unwrap();
+    let (id_live, id_dead, a, b) = client.join().unwrap();
+
+    let (done, fail) = if a.fail_reason.is_none() { (a, b) } else { (b, a) };
+    assert_eq!(done.job_id, id_live, "the live group's job completed");
+    assert!(done.fail_reason.is_none());
+    assert!(done.rounds > 0);
+    assert_eq!(fail.job_id, id_dead, "the dead group's job failed");
+    assert_eq!(fail.fail_reason.as_deref(), Some("group_down"));
+
+    assert_eq!((rstats.routed, rstats.done, rstats.failed), (2, 1, 1));
+    assert!(!rstats.groups[0].down);
+    assert!(rstats.groups[1].down, "the dead group is marked down");
+    assert_eq!(rstats.groups[1].failed, 1);
+    assert_eq!(m.completed(), 1, "the live group ran exactly its own job");
+}
