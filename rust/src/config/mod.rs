@@ -82,6 +82,13 @@ pub struct ServeSettings {
     /// (`serve.http_terminal_capacity`): retired-but-unpolled jobs
     /// kept before the oldest are evicted.
     pub http_terminal_capacity: usize,
+    /// File the flight recorder appends job-lifecycle events to as
+    /// JSONL (`serve.trace_out`; also `serve --trace-out`). Empty
+    /// disables the sink; the in-memory ring stays on either way.
+    pub trace_out: String,
+    /// Capacity of the flight recorder's in-memory event ring
+    /// (`serve.trace_capacity`): oldest events fall off beyond it.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServeSettings {
@@ -94,6 +101,8 @@ impl Default for ServeSettings {
             idle_timeout_s: 0.0,
             http: String::new(),
             http_terminal_capacity: 1024,
+            trace_out: String::new(),
+            trace_capacity: 4096,
         }
     }
 }
@@ -333,6 +342,14 @@ impl RunConfig {
                 "must be > 0".into(),
             ));
         }
+        if let Some(t) = raw.get("serve.trace_out") {
+            cfg.serve.trace_out = t.clone();
+        }
+        cfg.serve.trace_capacity =
+            get_parse(&raw, "serve.trace_capacity", cfg.serve.trace_capacity)?;
+        if cfg.serve.trace_capacity == 0 {
+            return Err(ConfigError::Invalid("serve.trace_capacity", "must be > 0".into()));
+        }
         Ok(cfg)
     }
 
@@ -471,7 +488,8 @@ max_concurrent = 4
             "[serve]\npolicy = \"correlation\"\nqueue_capacity = 8\n\
              slo_factor = 2.5\nreport_every_s = 30\n\
              listen = \"0.0.0.0:9000\"\nmax_connections = 12\n\
-             http = \"127.0.0.1:7180\"\nhttp_terminal_capacity = 64\n",
+             http = \"127.0.0.1:7180\"\nhttp_terminal_capacity = 64\n\
+             trace_out = \"/tmp/trace.jsonl\"\ntrace_capacity = 128\n",
         )
         .unwrap();
         assert_eq!(cfg.serve.admission.policy, AdmissionPolicy::Correlation);
@@ -482,6 +500,8 @@ max_concurrent = 4
         assert_eq!(cfg.serve.max_connections, 12);
         assert_eq!(cfg.serve.http, "127.0.0.1:7180");
         assert_eq!(cfg.serve.http_terminal_capacity, 64);
+        assert_eq!(cfg.serve.trace_out, "/tmp/trace.jsonl");
+        assert_eq!(cfg.serve.trace_capacity, 128);
         // defaults
         let d = RunConfig::from_str("").unwrap();
         assert_eq!(d.serve.admission.policy, AdmissionPolicy::Fifo);
@@ -491,6 +511,8 @@ max_concurrent = 4
         assert!(d.serve.max_connections > 0);
         assert!(d.serve.http.is_empty(), "HTTP front is opt-in");
         assert!(d.serve.http_terminal_capacity > 0);
+        assert!(d.serve.trace_out.is_empty(), "trace sink is opt-in");
+        assert_eq!(d.serve.trace_capacity, 4096);
         // bad policy and zero capacity/connections/address error
         // instead of panicking later
         assert!(RunConfig::from_str("[serve]\npolicy = \"bogus\"\n").is_err());
@@ -498,6 +520,7 @@ max_concurrent = 4
         assert!(RunConfig::from_str("[serve]\nmax_connections = 0\n").is_err());
         assert!(RunConfig::from_str("[serve]\nlisten = \"\"\n").is_err());
         assert!(RunConfig::from_str("[serve]\nhttp_terminal_capacity = 0\n").is_err());
+        assert!(RunConfig::from_str("[serve]\ntrace_capacity = 0\n").is_err());
     }
 
     #[test]

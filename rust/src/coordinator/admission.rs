@@ -204,15 +204,23 @@ impl JobSubmitter {
     /// and is echoed as the retirement record's tag.
     pub fn submit(&self, req: JobRequest) -> Result<JobId, SubmitError> {
         let id = req.id.unwrap_or_else(|| self.next_id());
+        let submitted_s = self.now();
         let sub = Submission {
             kind: req.kind,
             source: req.source,
-            submitted_s: self.now(),
+            submitted_s,
             deadline_s: req.deadline_s,
             tag: id,
         };
         match self.tx.try_send(sub) {
-            Ok(()) => Ok(id),
+            Ok(()) => {
+                // `id` here is the submitter-side id — the `tag` of the
+                // coordinator's later `admitted`/terminal events.
+                let tel = crate::obs::global();
+                tel.jobs_submitted.inc();
+                tel.job_event(submitted_s, "submitted", id, req.kind.name(), "");
+                Ok(id)
+            }
             Err(TrySendError::Full(_)) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::QueueFull)

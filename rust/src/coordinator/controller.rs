@@ -272,13 +272,24 @@ impl<'g> Coordinator<'g> {
                 outcome: JobOutcome::Shed,
             };
             on_complete(&rec);
-            st.metrics.jobs.push(rec);
+            st.metrics.record(rec);
         }
+        let tel = crate::obs::global();
         while st.active.len() < cap {
             match q.pop(&st.active, self.part) {
                 Some(sub) => {
                     let mut job = self.new_job(JobSpec::new(sub.kind, sub.source));
                     self.sched.attach_job(self.part, &mut job);
+                    tel.jobs_admitted.inc();
+                    // `submitted` events carry the submitter-side id
+                    // (this record's tag); the tag detail joins the two.
+                    tel.job_event(
+                        now,
+                        "admitted",
+                        job.id as u64,
+                        sub.kind.name(),
+                        &format!("tag={}", sub.tag),
+                    );
                     st.meta.push(JobMeta {
                         tag: sub.tag,
                         submitted_s: sub.submitted_s,
@@ -295,8 +306,19 @@ impl<'g> Coordinator<'g> {
             }
         }
         if st.active.is_empty() {
+            tel.resident_jobs.set(0.0);
+            tel.queue_depth.set(q.pending_len() as f64);
             return if q.is_exhausted() { StepOutcome::Drained } else { StepOutcome::Idle };
         }
+        tel.resident_jobs.set(st.active.len() as f64);
+        tel.queue_depth.set(q.pending_len() as f64);
+        tel.job_event(
+            now,
+            "round_start",
+            0,
+            "",
+            &format!("round={} resident={}", st.metrics.rounds, st.active.len()),
+        );
         // -- round ----------------------------------------------------
         // Panic quarantine (DESIGN.md §9): a panic in a parallel or
         // sharded round unwinds out of `scope_map` *before* the
@@ -340,6 +362,13 @@ impl<'g> Coordinator<'g> {
         }
         st.metrics.totals.merge(s);
         st.metrics.rounds += 1;
+        tel.job_event(
+            retire_now(),
+            "round_end",
+            0,
+            "",
+            &format!("round={} updates={}", st.metrics.rounds - 1, s.updates),
+        );
         // -- retire ---------------------------------------------------
         // Lazy convergence check: scan only jobs that went quiet this
         // round; a globally zero-update round is definitive. The same
@@ -399,7 +428,7 @@ impl<'g> Coordinator<'g> {
                     outcome,
                 };
                 on_complete(&rec);
-                st.metrics.jobs.push(rec);
+                st.metrics.record(rec);
                 if st.collect {
                     st.retired.push(j);
                 }
@@ -499,7 +528,7 @@ impl<'g> Coordinator<'g> {
             outcome,
         };
         on_complete(&rec);
-        st.metrics.jobs.push(rec);
+        st.metrics.record(rec);
         if st.collect {
             st.retired.push(j);
         }
@@ -526,6 +555,9 @@ impl<'g> Coordinator<'g> {
         m.rejected = rejected;
         m.pool = self.pool.stats().delta_since(pool0);
         m.shards = self.shard_delta(shards0);
+        let tel = crate::obs::global();
+        tel.pool_workers.set(self.pool.workers() as f64);
+        tel.pool_tasks.set(self.pool.stats().scope_items as f64);
         let mut retired = st.retired;
         retired.sort_by_key(|j| j.id);
         (m, retired)
@@ -768,6 +800,9 @@ impl<'g> Coordinator<'g> {
                 st.metrics.rejected = q.rejected();
                 st.metrics.pool = self.pool.stats().delta_since(&pool0);
                 st.metrics.shards = self.shard_delta(&shards0);
+                let tel = crate::obs::global();
+                tel.pool_workers.set(self.pool.workers() as f64);
+                tel.pool_tasks.set(self.pool.stats().scope_items as f64);
                 on_report(&st.metrics);
                 while next_report <= clock() {
                     next_report += report_every_s;

@@ -1,10 +1,18 @@
 //! Coordinator metrics: per-job records and run-level aggregates,
 //! exportable as JSON for EXPERIMENTS.md scripting.
+//!
+//! Latency aggregates are histogram-backed: every retiring job goes
+//! through [`RunMetrics::record`], which feeds three bounded-memory
+//! [`HistogramData`]s (queue-wait / exec / end-to-end) instead of the
+//! old sort-a-`Vec` percentile pass, and mirrors the terminal into the
+//! process-wide telemetry ([`crate::obs`]) — counters, global
+//! histograms and the flight recorder — in one place. Means stay exact
+//! (histograms carry exact `sum`/`count`); p95s are bucket estimates.
 
+use crate::obs::HistogramData;
 use crate::scheduler::RoundStats;
 use crate::shard::ShardMetrics;
 use crate::util::json::Json;
-use crate::util::stats::percentile;
 use crate::util::threadpool::PoolStats;
 
 /// Terminal state of a job (DESIGN.md §9). Every job the coordinator
@@ -118,9 +126,42 @@ pub struct RunMetrics {
     /// Rounds whose wall time exceeded the coordinator's
     /// `round_watchdog_s` budget (0 when the watchdog is off).
     pub slow_rounds: u64,
+    /// Submit→start wait of completed jobs (seconds).
+    pub hist_queue_wait: HistogramData,
+    /// Start→finish execution of completed jobs (seconds).
+    pub hist_exec: HistogramData,
+    /// Submit→finish latency of completed jobs (seconds).
+    pub hist_latency: HistogramData,
 }
 
 impl RunMetrics {
+    /// Retire one job: store its record, fold its timings into the
+    /// run-level histograms (completed jobs only — failure modes have
+    /// no meaningful latency), and mirror the terminal into the
+    /// process-wide telemetry (outcome counter, global latency
+    /// histograms, flight-recorder event). The single choke point for
+    /// job terminals.
+    pub fn record(&mut self, rec: JobRecord) {
+        let tel = crate::obs::global();
+        let (counter, ev) = match &rec.outcome {
+            JobOutcome::Done => (&tel.jobs_completed, "completed"),
+            JobOutcome::Failed(_) => (&tel.jobs_failed, "failed"),
+            JobOutcome::Cancelled(_) => (&tel.jobs_cancelled, "cancelled"),
+            JobOutcome::Shed => (&tel.jobs_shed, "shed"),
+        };
+        counter.inc();
+        tel.job_event(rec.finished_s, ev, rec.id, rec.kind, rec.outcome.reason().unwrap_or(""));
+        if rec.outcome.is_done() {
+            let exec = rec.finished_s - rec.started_s;
+            self.hist_queue_wait.record(rec.queueing_s());
+            self.hist_exec.record(exec);
+            self.hist_latency.record(rec.latency_s());
+            tel.queue_wait.record(rec.queueing_s());
+            tel.exec.record(exec);
+            tel.latency.record(rec.latency_s());
+        }
+        self.jobs.push(rec);
+    }
     fn done_jobs(&self) -> impl Iterator<Item = &JobRecord> {
         self.jobs.iter().filter(|j| j.outcome.is_done())
     }
@@ -163,39 +204,26 @@ impl RunMetrics {
         n as f64 * 3600.0 / span
     }
 
+    /// Exact mean latency of completed jobs (histogram `sum`/`count`
+    /// are exact; only quantiles are estimates).
     pub fn mean_latency_s(&self) -> f64 {
-        let n = self.completed();
-        if n == 0 {
-            return 0.0;
-        }
-        self.done_jobs().map(|j| j.latency_s()).sum::<f64>() / n as f64
+        self.hist_latency.mean()
     }
 
+    /// p95 latency estimate from the bounded histogram (bucket-bound
+    /// error; 0.0 while empty so serve snapshots stay valid JSON).
     pub fn p95_latency_s(&self) -> f64 {
-        let xs: Vec<f64> = self.done_jobs().map(|j| j.latency_s()).collect();
-        if xs.is_empty() {
-            // keep periodic serve snapshots valid JSON (NaN isn't)
-            return 0.0;
-        }
-        percentile(&xs, 95.0)
+        self.hist_latency.quantile(0.95)
     }
 
     /// Mean seconds completed jobs spent waiting for admission (queue
     /// wait), the non-execution half of latency.
     pub fn mean_queue_wait_s(&self) -> f64 {
-        let n = self.completed();
-        if n == 0 {
-            return 0.0;
-        }
-        self.done_jobs().map(|j| j.queueing_s()).sum::<f64>() / n as f64
+        self.hist_queue_wait.mean()
     }
 
     pub fn p95_queue_wait_s(&self) -> f64 {
-        let xs: Vec<f64> = self.done_jobs().map(|j| j.queueing_s()).collect();
-        if xs.is_empty() {
-            return 0.0;
-        }
-        percentile(&xs, 95.0)
+        self.hist_queue_wait.quantile(0.95)
     }
 
     /// Work imbalance across shards: max per-shard updates over the
@@ -243,6 +271,14 @@ impl RunMetrics {
             ("mean_queue_wait_s", Json::num(self.mean_queue_wait_s())),
             ("p95_queue_wait_s", Json::num(self.p95_queue_wait_s())),
             ("rejected", Json::num(self.rejected as f64)),
+            (
+                "hist",
+                Json::obj(vec![
+                    ("queue_wait_s", self.hist_queue_wait.to_json()),
+                    ("exec_s", self.hist_exec.to_json()),
+                    ("latency_s", self.hist_latency.to_json()),
+                ]),
+            ),
             ("drained", Json::Bool(self.drained)),
             ("scheduling_s", Json::num(self.scheduling_s)),
             ("execution_s", Json::num(self.execution_s)),
@@ -339,9 +375,12 @@ mod tests {
     #[test]
     fn throughput_uses_span() {
         let mut m = RunMetrics::default();
-        m.jobs = vec![rec(0, 0.0, 0.0, 1800.0), rec(1, 0.0, 0.0, 3600.0)];
+        m.record(rec(0, 0.0, 0.0, 1800.0));
+        m.record(rec(1, 0.0, 0.0, 3600.0));
         assert!((m.throughput_per_hour() - 2.0).abs() < 1e-9);
+        // mean comes from the histogram's exact sum/count
         assert_eq!(m.mean_latency_s(), 2700.0);
+        assert_eq!(m.hist_latency.count, 2);
     }
 
     #[test]
@@ -355,7 +394,7 @@ mod tests {
     #[test]
     fn json_roundtrips() {
         let mut m = RunMetrics::default();
-        m.jobs = vec![rec(0, 0.0, 1.0, 2.0)];
+        m.record(rec(0, 0.0, 1.0, 2.0));
         m.rounds = 5;
         let j = m.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -426,16 +465,16 @@ mod tests {
     #[test]
     fn outcome_split_counts_and_exports() {
         let mut m = RunMetrics::default();
-        m.jobs = vec![
-            rec(0, 0.0, 0.0, 10.0),
-            JobRecord {
-                outcome: JobOutcome::Failed("injected panic at round 3".into()),
-                ..rec(1, 0.0, 0.0, 100.0)
-            },
-            JobRecord { outcome: JobOutcome::Cancelled("deadline"), ..rec(2, 0.0, 0.0, 5.0) },
-            JobRecord { outcome: JobOutcome::Shed, ..rec(3, 0.0, 20.0, 20.0) },
-        ];
+        m.record(rec(0, 0.0, 0.0, 10.0));
+        m.record(JobRecord {
+            outcome: JobOutcome::Failed("injected panic at round 3".into()),
+            ..rec(1, 0.0, 0.0, 100.0)
+        });
+        m.record(JobRecord { outcome: JobOutcome::Cancelled("deadline"), ..rec(2, 0.0, 0.0, 5.0) });
+        m.record(JobRecord { outcome: JobOutcome::Shed, ..rec(3, 0.0, 20.0, 20.0) });
         m.slow_rounds = 2;
+        // failure modes never reach the latency histograms
+        assert_eq!(m.hist_latency.count, 1);
         assert_eq!(m.completed(), 1);
         assert_eq!(m.failed(), 1);
         assert_eq!(m.cancelled(), 1);
@@ -465,11 +504,13 @@ mod tests {
     #[test]
     fn queue_wait_aggregates_and_exports() {
         let mut m = RunMetrics::default();
-        m.jobs = vec![rec(0, 0.0, 2.0, 10.0), rec(1, 1.0, 5.0, 11.0)];
+        m.record(rec(0, 0.0, 2.0, 10.0));
+        m.record(rec(1, 1.0, 5.0, 11.0));
         m.rejected = 3;
-        // queue waits: 2.0 and 4.0
+        // queue waits: 2.0 and 4.0; the p95 estimate lands inside the
+        // bucket holding the rank sample (4.0 → (2.5, 5.0])
         assert!((m.mean_queue_wait_s() - 3.0).abs() < 1e-9);
-        assert!(m.p95_queue_wait_s() >= 2.0);
+        assert!(m.p95_queue_wait_s() > 2.5 && m.p95_queue_wait_s() <= 5.0);
         let parsed = Json::parse(&m.to_json().to_string()).unwrap();
         assert_eq!(parsed.get("rejected").unwrap().as_u64().unwrap(), 3);
         let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();

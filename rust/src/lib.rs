@@ -24,6 +24,7 @@ pub mod engine;
 pub mod graph;
 pub mod memsim;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod scheduler;
 pub mod shard;

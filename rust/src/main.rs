@@ -20,6 +20,7 @@
 //! echo "pagerank 0" | tlsched serve --source stdin --time-scale 1
 //! tlsched serve --source tcp --listen 127.0.0.1:7171 --time-scale 60
 //! tlsched serve --source tcp --http 127.0.0.1:7180 --time-scale 60
+//! tlsched serve --source tcp --http 127.0.0.1:7180 --trace-out trace.jsonl
 //! tlsched route --listen 127.0.0.1:7171 --groups 127.0.0.1:7201,127.0.0.1:7202
 //! tlsched submit --addr 127.0.0.1:7171 "sssp 42"
 //! tlsched loadgen --addr 127.0.0.1:7171 --connections 4 --minutes 2
@@ -337,6 +338,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("report-every-s", "0", "periodic metrics-JSON cadence, run-clock seconds")
         .opt("idle-timeout-s", "0", "close silent tcp peers after this many seconds (0 = off)")
         .opt("shed-overdue", "false", "drop queued jobs already past their deadline")
+        .opt("trace-out", "", "stream job-lifecycle events (JSONL) to this path")
+        .opt("trace-capacity", "0", "flight-recorder ring capacity (0 = config/default)")
         .opt("report", "", "write final metrics JSON to this path");
     let a = match spec.parse_from(argv) {
         Ok(a) => a,
@@ -369,6 +372,23 @@ fn cmd_serve(argv: &[String]) -> i32 {
     }
     if a.was_set("http") {
         cfg.serve.http = a.str("http").to_string();
+    }
+    if a.was_set("trace-out") && !a.str("trace-out").is_empty() {
+        cfg.serve.trace_out = a.str("trace-out").to_string();
+    }
+    if a.was_set("trace-capacity") && a.usize("trace-capacity") > 0 {
+        cfg.serve.trace_capacity = a.usize("trace-capacity");
+    }
+    // Arm the flight recorder before any producer can submit, so the
+    // trace opens with the first job's `submitted` event.
+    let tel = tlsched::obs::global();
+    tel.flight.set_capacity(cfg.serve.trace_capacity);
+    if !cfg.serve.trace_out.is_empty() {
+        if let Err(e) = tel.flight.set_sink(&cfg.serve.trace_out) {
+            eprintln!("trace-out {}: {e}", cfg.serve.trace_out);
+            return 1;
+        }
+        log::info!("flight recorder streaming to {}", cfg.serve.trace_out);
     }
     let source = a.str("source").to_string();
     if source != "live" && source != "stdin" && source != "tcp" {

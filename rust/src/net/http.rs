@@ -19,7 +19,18 @@
 //!                 |  503 {"error":"closed"}           (serve loop gone)
 //! GET  /jobs/<id> -> 200 terminal JSON | 200 pending | 404 unknown
 //! GET  /status    -> 200 server-state JSON
-//! GET  /metrics   -> 200 latest serve metrics snapshot JSON
+//! GET  /metrics   -> 200 latest serve metrics snapshot JSON (before
+//!                    the first report tick: the live telemetry
+//!                    registry, never an empty `{}`)
+//! GET  /metrics?format=prometheus
+//!                 -> 200 Prometheus text exposition (the router's
+//!                    merged scrape when published, else the live
+//!                    in-process registry)
+//! GET  /trace     -> 200 flight-recorder dump, one JSON object per
+//!                    line (see crate::obs::flight)
+//! GET  /events    -> 200 text/event-stream; pushes `event: job`
+//!                    frames for every terminal and `event: metrics`
+//!                    frames on each report tick (SSE)
 //! GET  /          -> 200 static status page (text/html)
 //! POST /shutdown  -> 200; stops accepting and releases the primary
 //!                    submitter (the HTTP analog of the TCP server's
@@ -64,7 +75,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -220,6 +231,12 @@ struct Shared {
     /// Latest serve metrics JSON published by the serve loop's
     /// `on_report` hook (the `GET /metrics` payload).
     snapshot: Mutex<Option<String>>,
+    /// Prometheus exposition published by the router front (merged
+    /// per-group scrape); unset means render the live registry.
+    prom: Mutex<Option<String>>,
+    /// Live `GET /events` subscribers; dead ones fall out when a
+    /// broadcast's send fails (their receiver is gone).
+    subscribers: Mutex<Vec<mpsc::Sender<String>>>,
     shutdown: AtomicBool,
     addr: SocketAddr,
     max_connections: usize,
@@ -268,7 +285,34 @@ impl Shared {
     }
 
     fn metrics_json(&self) -> String {
-        self.snapshot.lock().unwrap().clone().unwrap_or_else(|| "{}".to_string())
+        match self.snapshot.lock().unwrap().clone() {
+            Some(s) => s,
+            // Before the serve loop's first report tick the gateway
+            // used to answer a bare `{}` — an early scrape learned
+            // nothing. Answer with the live telemetry registry instead.
+            None => crate::obs::global().registry_json(),
+        }
+    }
+
+    /// Prometheus exposition: the router-published merge wins;
+    /// otherwise the live registry renders on demand (a scrape never
+    /// races the report tick).
+    fn prom_text(&self) -> String {
+        self.prom
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| crate::obs::global().prometheus_text())
+    }
+
+    /// Fan one SSE frame out to every `GET /events` subscriber.
+    fn broadcast(&self, event: &str, data: &str) {
+        let mut subs = self.subscribers.lock().unwrap();
+        if subs.is_empty() {
+            return;
+        }
+        let frame = format!("event: {event}\ndata: {data}\n\n");
+        subs.retain(|tx| tx.send(frame.clone()).is_ok());
     }
 
     /// Static status page: the same JSON the API serves, readable in a
@@ -281,7 +325,8 @@ impl Shared {
              <h2>front-end</h2><pre>{}</pre>\
              <h2>latest serve metrics</h2><pre>{}</pre>\
              <p>API: POST /jobs &middot; GET /jobs/&lt;id&gt; &middot; \
-             GET /status &middot; GET /metrics</p>\
+             GET /status &middot; GET /metrics[?format=prometheus] &middot; \
+             GET /trace &middot; GET /events</p>\
              </body></html>",
             esc(self.status_json()),
             esc(self.metrics_json()),
@@ -324,6 +369,8 @@ impl HttpServer {
             counters: Counters::default(),
             jobs: Mutex::new(JobTable::new(cfg.terminal_capacity)),
             snapshot: Mutex::new(None),
+            prom: Mutex::new(None),
+            subscribers: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             addr,
             max_connections: cfg.max_connections.max(1),
@@ -343,9 +390,19 @@ impl HttpServer {
     }
 
     /// Publish a serve metrics snapshot (one-line JSON) as the
-    /// `GET /metrics` payload. Call from the serve loop's report hook.
+    /// `GET /metrics` payload, pushing it to every `GET /events`
+    /// subscriber too. Call from the serve loop's report hook.
     pub fn publish_metrics(&self, json: &str) {
         *self.shared.snapshot.lock().unwrap() = Some(json.to_string());
+        self.shared.broadcast("metrics", json);
+    }
+
+    /// Publish a Prometheus exposition (raw text) as the
+    /// `GET /metrics?format=prometheus` payload, overriding the
+    /// live-registry default. The router front calls this with the
+    /// merged per-group scrape.
+    pub fn publish_prom(&self, text: &str) {
+        *self.shared.prom.lock().unwrap() = Some(text.to_string());
     }
 
     /// Offer a retired job to this front: when the id is in the HTTP
@@ -357,7 +414,12 @@ impl HttpServer {
             return false; // batch/trace sentinel: never HTTP's
         }
         let resp = proto::terminal_response(rec);
-        let owned = self.shared.jobs.lock().unwrap().complete(rec.tag, resp.to_json());
+        let body = resp.to_json();
+        // every network job's terminal goes to the event stream, owned
+        // or not — co-resident TCP traffic retires through the same
+        // serve process and the stream observes the whole process
+        self.shared.broadcast("job", &body.to_string());
+        let owned = self.shared.jobs.lock().unwrap().complete(rec.tag, body);
         if owned {
             log::info!(
                 "http: job={} outcome={} latency_s={:.6}",
@@ -626,6 +688,19 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
                 log::info!("http: malformed request status={status} error={error:?}");
                 break;
             }
+            ReadOutcome::Request(req)
+                if req.method == "GET" && req.path.split('?').next() == Some("/events") =>
+            {
+                shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+                log::info!("http: event stream subscribed");
+                // an event stream never submits: release the submitter
+                // clone now so a long-lived subscriber cannot pin the
+                // coordinator's end-of-serve drain
+                drop(submitter);
+                serve_events(&mut writer, &shared);
+                shared.conn_closed();
+                return;
+            }
             ReadOutcome::Request(req) => {
                 shared.counters.requests.fetch_add(1, Ordering::Relaxed);
                 let t0 = Instant::now();
@@ -649,6 +724,36 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
     shared.conn_closed();
 }
 
+/// Pump one `GET /events` subscription: SSE response head, then one
+/// frame per broadcast, with a comment keepalive every second so a
+/// dead peer surfaces as a write error within a tick or two. The
+/// stream ends on peer loss or server shutdown. The subscription is
+/// seeded with the current metrics snapshot so a fresh subscriber
+/// need not wait out a full report interval.
+fn serve_events(writer: &mut TcpStream, shared: &Arc<Shared>) {
+    let (tx, rx) = mpsc::channel::<String>();
+    let _ = tx.send(format!("event: metrics\ndata: {}\n\n", shared.metrics_json()));
+    shared.subscribers.lock().unwrap().push(tx);
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    if writer.write_all(head.as_bytes()).is_err() {
+        return;
+    }
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let frame = match rx.recv_timeout(Duration::from_secs(1)) {
+            Ok(f) => f,
+            Err(mpsc::RecvTimeoutError::Timeout) => ": keepalive\n\n".to_string(),
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        if writer.write_all(frame.as_bytes()).is_err() || writer.flush().is_err() {
+            return; // peer gone; the dead sender falls out on next broadcast
+        }
+    }
+}
+
 /// Route one request. Returns (status, body, content type).
 fn dispatch(
     req: &HttpRequest,
@@ -658,7 +763,11 @@ fn dispatch(
 ) -> (u16, String, &'static str) {
     const JSON: &str = "application/json";
     let err = |msg: &str| Json::obj(vec![("error", Json::str(msg))]).to_string();
-    match (req.method.as_str(), req.path.as_str()) {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("POST", "/jobs") => {
             let job = match parse_job_body(&req.body, nv) {
                 Ok(j) => j,
@@ -718,7 +827,16 @@ fn dispatch(
             }
         }
         ("GET", "/status") => (200, shared.status_json(), JSON),
-        ("GET", "/metrics") => (200, shared.metrics_json(), JSON),
+        ("GET", "/metrics") => {
+            if query.split('&').any(|kv| kv == "format=prometheus") {
+                (200, shared.prom_text(), "text/plain; version=0.0.4")
+            } else {
+                (200, shared.metrics_json(), JSON)
+            }
+        }
+        ("GET", "/trace") => {
+            (200, crate::obs::global().flight.dump_jsonl(), "application/x-ndjson")
+        }
         ("GET", "/") => (200, shared.status_page(), "text/html"),
         ("POST", "/shutdown") => {
             log::info!("http: shutdown requested");
@@ -1144,11 +1262,22 @@ mod tests {
         assert!(status.get_u64("accepted").unwrap() >= 2);
         assert!(status.get_u64("rejected_busy").unwrap() >= 1);
         assert_eq!(status.get_u64("rejected_parse"), Some(1));
+        // before the first report tick: the live telemetry registry,
+        // not the old empty `{}` (every standard family pre-registers)
         let (st, metrics) = c.request("GET", "/metrics", None).unwrap();
-        assert_eq!((st, metrics), (200, Json::Obj(Default::default())));
+        assert_eq!(st, 200);
+        assert!(
+            metrics.get("tlsched_jobs_submitted_total").is_some(),
+            "live registry before first tick: {metrics}",
+        );
         server.publish_metrics("{\"completed\":5}");
         let (_, metrics) = c.request("GET", "/metrics", None).unwrap();
         assert_eq!(metrics.get_u64("completed"), Some(5));
+        // prometheus exposition and the flight dump are text, not JSON
+        let (st, body) = c.request("GET", "/metrics?format=prometheus", None).unwrap();
+        assert_eq!((st, body), (200, Json::Null), "prometheus exposition is text");
+        let (st, _) = c.request("GET", "/trace", None).unwrap();
+        assert_eq!(st, 200);
         let (st, page) = c.request("GET", "/", None).unwrap();
         assert_eq!((st, page), (200, Json::Null), "status page is html, not json");
         let (st, _) = c.request("GET", "/nope", None).unwrap();
@@ -1194,6 +1323,68 @@ mod tests {
         assert_eq!(status.get_u64("bad_requests"), Some(3));
         let _ = c.shutdown();
         drop(c);
+        server.finish();
+    }
+
+    /// `GET /events`: the subscription is seeded with a metrics frame,
+    /// later report ticks and job terminals stream as SSE frames.
+    #[test]
+    fn events_stream_pushes_metrics_and_job_terminals() {
+        let (submitter, _queue) = AdmissionQueue::live(&AdmissionConfig::default(), 1000.0);
+        let cfg = HttpServerConfig { listen: "127.0.0.1:0".to_string(), ..Default::default() };
+        let server = HttpServer::start(&cfg, submitter, 64).unwrap();
+        let s = TcpStream::connect(server.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut w = s.try_clone().unwrap();
+        w.write_all(b"GET /events HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("200"), "{line:?}");
+        assert!(line.contains("HTTP/1.1"), "{line:?}");
+        // the seeded metrics frame doubles as the registration barrier:
+        // once its data line arrives, the subscriber list holds us
+        loop {
+            line.clear();
+            assert!(r.read_line(&mut line).unwrap() > 0, "stream ended early");
+            if line.starts_with("data: ") {
+                break;
+            }
+        }
+        server.publish_metrics("{\"completed\":9}");
+        let rec = JobRecord {
+            id: 7,
+            tag: 42,
+            kind: "bfs",
+            submitted_s: 0.0,
+            started_s: 0.1,
+            finished_s: 0.5,
+            rounds: 3,
+            updates: 10,
+            edges: 20,
+            outcome: crate::coordinator::JobOutcome::Done,
+        };
+        // not in the pending set — the stream still observes it (the
+        // terminal belongs to the co-resident TCP front)
+        assert!(!server.notify_done(&rec));
+        let (mut saw_report, mut saw_job) = (false, false);
+        for _ in 0..64 {
+            line.clear();
+            if r.read_line(&mut line).unwrap() == 0 {
+                break;
+            }
+            if line.contains("\"completed\":9") {
+                saw_report = true;
+            }
+            if line.starts_with("data: ") && line.contains("\"state\":\"done\"") {
+                saw_job = true;
+            }
+            if saw_report && saw_job {
+                break;
+            }
+        }
+        assert!(saw_report, "report tick frame not streamed");
+        assert!(saw_job, "job terminal frame not streamed");
         server.finish();
     }
 

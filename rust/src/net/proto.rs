@@ -72,6 +72,12 @@ pub enum Request {
     /// block → shard-group map, `{"groups":[]}` on a server that has
     /// none. Additive — the frozen v1 responses are untouched.
     Groups,
+    /// Prometheus scrape (added for the telemetry layer, DESIGN.md
+    /// §12): answered with one JSON line `{"prometheus":"<text>"}`
+    /// wrapping the exposition, so the frozen one-line response framing
+    /// (and the router's reader loop) carry it unchanged. Additive,
+    /// like `GROUPS`.
+    Prom,
     Quit,
 }
 
@@ -141,6 +147,7 @@ pub fn parse_request(line: &str, num_vertices: u32) -> Result<Option<Request>, P
         "STATUS" => bare(Request::Status),
         "METRICS" => bare(Request::Metrics),
         "GROUPS" => bare(Request::Groups),
+        "PROM" => bare(Request::Prom),
         "SUBMIT" => {
             if rest.is_empty() {
                 return Err(ParseError::EmptySubmit);
@@ -166,6 +173,7 @@ impl Request {
             Request::Status => "STATUS".to_string(),
             Request::Metrics => "METRICS".to_string(),
             Request::Groups => "GROUPS".to_string(),
+            Request::Prom => "PROM".to_string(),
             Request::Quit => "QUIT".to_string(),
         }
     }
@@ -362,6 +370,9 @@ mod tests {
         assert_eq!(parse_request("METRICS", 10), Ok(Some(Request::Metrics)));
         assert_eq!(parse_request("GROUPS", 10), Ok(Some(Request::Groups)));
         assert_eq!(parse_request("groups", 10), Ok(Some(Request::Groups)));
+        assert_eq!(parse_request("PROM", 10), Ok(Some(Request::Prom)));
+        assert_eq!(parse_request("prom", 10), Ok(Some(Request::Prom)));
+        assert!(matches!(parse_request("PROM 2", 10), Err(ParseError::Trailing(_))));
         assert!(matches!(parse_request("GROUPS 2", 10), Err(ParseError::Trailing(_))));
         assert!(matches!(parse_request("QUIT now", 10), Err(ParseError::Trailing(_))));
         assert!(matches!(parse_request("SUBMIT", 10), Err(ParseError::EmptySubmit)));
@@ -556,6 +567,7 @@ mod tests {
             Request::Status,
             Request::Metrics,
             Request::Groups,
+            Request::Prom,
             Request::Quit,
         ];
         for r in cases {

@@ -69,8 +69,8 @@ pub struct RouterConfig {
     pub admission: AdmissionConfig,
     /// Run-clock scale of the router queue (1.0 = real time).
     pub time_scale: f64,
-    /// Cadence of upstream STATUS/METRICS polling and merged metrics
-    /// publication, in run-clock seconds (0 = a 1s default).
+    /// Cadence of upstream STATUS/METRICS/PROM polling and merged
+    /// metrics publication, in run-clock seconds (0 = a 1s default).
     pub report_every_s: f64,
     /// Upstream `serve --source tcp` addresses; index = shard-group id.
     pub groups: Vec<String>,
@@ -158,6 +158,7 @@ struct Pending {
 enum Direct {
     Status,
     Metrics,
+    Prom,
 }
 
 enum Event {
@@ -184,6 +185,9 @@ struct Upstream {
     failed: u64,
     status_json: Option<String>,
     metrics_json: Option<String>,
+    /// Latest Prometheus exposition scraped from this group (the
+    /// unwrapped text out of its `PROM` answer).
+    prom_text: Option<String>,
 }
 
 impl Upstream {
@@ -250,6 +254,7 @@ impl Router {
                 failed: 0,
                 status_json: None,
                 metrics_json: None,
+                prom_text: None,
             });
         }
         let shards = part.shard_by_bytes(groups.len());
@@ -489,6 +494,12 @@ impl Router {
                 match g.direct.pop_front() {
                     Some(Direct::Status) => g.status_json = Some(payload),
                     Some(Direct::Metrics) => g.metrics_json = Some(payload),
+                    Some(Direct::Prom) => {
+                        // unwrap {"prometheus":"<text>"} back to text
+                        g.prom_text = Json::parse(&payload).ok().and_then(|j| {
+                            j.get("prometheus").and_then(|p| p.as_str().map(String::from))
+                        });
+                    }
                     None => {}
                 }
             }
@@ -578,16 +589,18 @@ impl Router {
         }
     }
 
-    /// Ask every live group for STATUS and METRICS (answers arrive
-    /// asynchronously and land in `status_json`/`metrics_json`).
+    /// Ask every live group for STATUS, METRICS and PROM (answers
+    /// arrive asynchronously and land in `status_json` /
+    /// `metrics_json` / `prom_text`).
     fn poll_upstreams(&mut self) {
         for g in &mut self.groups {
             if g.down {
                 continue;
             }
-            if g.write.write_all(b"STATUS\nMETRICS\n").is_ok() {
+            if g.write.write_all(b"STATUS\nMETRICS\nPROM\n").is_ok() {
                 g.direct.push_back(Direct::Status);
                 g.direct.push_back(Direct::Metrics);
+                g.direct.push_back(Direct::Prom);
             }
         }
     }
@@ -636,6 +649,22 @@ impl Router {
         self.net.publish_metrics(&s);
         if let Some(h) = &self.http {
             h.publish_metrics(&s);
+        }
+        // merged Prometheus view: every group's scrape re-labeled with
+        // group="<id>" and regrouped by family, served from both fronts
+        // (PROM on the wire, GET /metrics?format=prometheus over HTTP)
+        let scrapes: Vec<(String, String)> = self
+            .groups
+            .iter()
+            .enumerate()
+            .filter_map(|(i, g)| g.prom_text.clone().map(|t| (i.to_string(), t)))
+            .collect();
+        if !scrapes.is_empty() {
+            let merged = crate::obs::prom::merge_scrapes(&scrapes);
+            self.net.publish_prom(&merged);
+            if let Some(h) = &self.http {
+                h.publish_prom(&merged);
+            }
         }
     }
 }

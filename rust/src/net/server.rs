@@ -179,6 +179,10 @@ struct Shared {
     /// Routing-table JSON published by the router front (the `GROUPS`
     /// payload); plain serve processes leave it unset.
     groups: Mutex<Option<String>>,
+    /// Prometheus exposition published by the router front (the merged
+    /// per-group scrape); plain serve processes leave it unset and
+    /// answer `PROM` from the live in-process registry instead.
+    prom: Mutex<Option<String>>,
     shutdown: AtomicBool,
     /// True once any connection has attempted a submission — the
     /// last-client-out shutdown only arms then, so a transient
@@ -231,6 +235,20 @@ impl Shared {
         self.groups.lock().unwrap().clone().unwrap_or_else(|| "{\"groups\":[]}".to_string())
     }
 
+    /// `PROM` payload: one JSON line `{"prometheus":"<exposition>"}`.
+    /// A published (router-merged) text wins; otherwise the live
+    /// registry is rendered on demand, so a scrape through the wire
+    /// protocol never races the report tick.
+    fn prom_json(&self) -> String {
+        let text = self
+            .prom
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| crate::obs::global().prometheus_text());
+        Json::obj(vec![("prometheus", Json::str(&text))]).to_string()
+    }
+
     /// One connection retired; the last one out turns off the lights —
     /// but only once some connection has actually submitted work, so
     /// probes and one-off STATUS checks leave the server running.
@@ -276,6 +294,7 @@ impl NetServer {
             routes: Mutex::new(HashMap::new()),
             snapshot: Mutex::new(None),
             groups: Mutex::new(None),
+            prom: Mutex::new(None),
             shutdown: AtomicBool::new(false),
             saw_submission: AtomicBool::new(false),
             addr,
@@ -306,6 +325,13 @@ impl NetServer {
     /// startup; servers that never do answer `{"groups":[]}`.
     pub fn publish_groups(&self, json: &str) {
         *self.shared.groups.lock().unwrap() = Some(json.to_string());
+    }
+
+    /// Publish a Prometheus exposition (raw text, not JSON) as the
+    /// `PROM` payload, overriding the live-registry default. The
+    /// router front calls this with the merged per-group scrape.
+    pub fn publish_prom(&self, text: &str) {
+        *self.shared.prom.lock().unwrap() = Some(text.to_string());
     }
 
     /// Route a retired job's terminal notification — `DONE` for
@@ -467,6 +493,9 @@ fn handle_conn(stream: TcpStream, submitter: JobSubmitter, shared: Arc<Shared>, 
             Ok(Some(Request::Groups)) => {
                 conn.send_line(&shared.groups_json());
             }
+            Ok(Some(Request::Prom)) => {
+                conn.send_line(&shared.prom_json());
+            }
             Ok(Some(Request::Submit(job))) => {
                 // arms the last-client-out shutdown (probe connections
                 // that never submit don't)
@@ -588,6 +617,17 @@ mod tests {
         writeln!(s, "GROUPS").unwrap();
         let j = Json::parse(&read_line(&mut r)).unwrap();
         assert!(j.get("groups").is_some(), "published GROUPS payload served back");
+        // PROM with nothing published: the live registry renders, so
+        // the standard counter families are always present
+        writeln!(s, "PROM").unwrap();
+        let j = Json::parse(&read_line(&mut r)).unwrap();
+        let text = j.get("prometheus").and_then(|v| v.as_str().map(str::to_string)).unwrap();
+        assert!(text.contains("tlsched_jobs_submitted_total"), "live scrape: {text}");
+        server.publish_prom("# TYPE up gauge\nup 1\n");
+        writeln!(s, "PROM").unwrap();
+        let j = Json::parse(&read_line(&mut r)).unwrap();
+        let text = j.get("prometheus").and_then(|v| v.as_str().map(str::to_string)).unwrap();
+        assert!(text.contains("up 1"), "published scrape wins: {text}");
         writeln!(s, "QUIT").unwrap();
         let mut line = String::new();
         assert_eq!(r.read_line(&mut line).unwrap(), 0, "closed after QUIT");

@@ -1,0 +1,194 @@
+//! Job-lifecycle flight recorder: a bounded ring of structured events.
+//!
+//! Every job leaves a trail — `submitted`, `admitted`, per-round
+//! markers and exactly one terminal (`completed` / `failed` /
+//! `cancelled` / `shed`, with an outcome reason) — so a surprising
+//! terminal can be reconstructed after the fact without rerunning the
+//! workload. The ring holds the last `capacity` events (default 4096,
+//! `serve.trace_capacity`); `tlsched serve --trace-out <path>` installs
+//! a file sink that additionally appends every event as one JSON line
+//! at record time, so the full trace survives even when the ring wraps.
+//!
+//! The recorder is a plain `Mutex<VecDeque>` — events are rare (a
+//! handful per job, two per round) next to the registry's per-sample
+//! hot path, so a lock is the right tool and keeps dump ordering exact.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::sync::Mutex;
+
+/// One recorded lifecycle event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Seconds since the run clock's origin (the serve loop start).
+    pub ts_s: f64,
+    /// Event kind: `submitted`, `admitted`, `round_start`, `round_end`,
+    /// `completed`, `failed`, `cancelled`, `shed`.
+    pub ev: &'static str,
+    /// Job id, or 0 for run-scoped events (`round_start`/`round_end`).
+    pub id: u64,
+    /// Job kind tag (empty for run-scoped events).
+    pub kind: String,
+    /// Free-form detail: outcome reason, round number, etc.
+    pub detail: String,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ts", Json::num(self.ts_s)),
+            ("ev", Json::str(self.ev)),
+            ("id", Json::num(self.id as f64)),
+            ("kind", Json::str(&self.kind)),
+            ("detail", Json::str(&self.detail)),
+        ])
+    }
+}
+
+struct Inner {
+    ring: VecDeque<Event>,
+    capacity: usize,
+    sink: Option<BufWriter<File>>,
+}
+
+/// The recorder itself (one per [`super::Telemetry`]).
+pub struct Flight {
+    inner: Mutex<Inner>,
+}
+
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+impl Default for Flight {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Flight {
+    pub fn new() -> Self {
+        Flight {
+            inner: Mutex::new(Inner {
+                ring: VecDeque::new(),
+                capacity: DEFAULT_CAPACITY,
+                sink: None,
+            }),
+        }
+    }
+
+    /// Resize the ring (keeps the newest events on shrink).
+    pub fn set_capacity(&self, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.capacity = capacity.max(1);
+        while g.ring.len() > g.capacity {
+            g.ring.pop_front();
+        }
+    }
+
+    /// Install a JSONL file sink (`--trace-out`). Events recorded from
+    /// here on are appended and flushed line-by-line; a flush failure
+    /// drops the sink rather than stalling the serve loop.
+    pub fn set_sink(&self, path: &str) -> std::io::Result<()> {
+        let f = File::create(path)?;
+        self.inner.lock().unwrap().sink = Some(BufWriter::new(f));
+        Ok(())
+    }
+
+    pub fn record(&self, ev: Event) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.sink.as_mut() {
+            let line = ev.to_json().to_string();
+            if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+                g.sink = None;
+            }
+        }
+        if g.ring.len() >= g.capacity {
+            g.ring.pop_front();
+        }
+        g.ring.push_back(ev);
+    }
+
+    /// The ring's contents, oldest first, as JSONL (one event per line).
+    pub fn dump_jsonl(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for ev in &g.ring {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: f64, kind: &'static str, id: u64) -> Event {
+        Event { ts_s: ts, ev: kind, id, kind: "bfs".to_string(), detail: String::new() }
+    }
+
+    #[test]
+    fn ring_keeps_newest_events() {
+        let f = Flight::new();
+        f.set_capacity(3);
+        for i in 0..5 {
+            f.record(ev(i as f64, "submitted", i));
+        }
+        assert_eq!(f.len(), 3);
+        let dump = f.dump_jsonl();
+        assert!(!dump.contains("\"id\":1,"));
+        assert!(dump.contains("\"id\":4,"));
+    }
+
+    #[test]
+    fn dump_is_one_json_object_per_line() {
+        let f = Flight::new();
+        f.record(ev(0.5, "submitted", 7));
+        f.record(Event {
+            ts_s: 1.0,
+            ev: "failed",
+            id: 7,
+            kind: "bfs".to_string(),
+            detail: "deadline".to_string(),
+        });
+        let dump = f.dump_jsonl();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("ts").is_some());
+            assert!(j.get("ev").is_some());
+        }
+        assert_eq!(
+            Json::parse(lines[1]).unwrap().get("detail").unwrap().as_str(),
+            Some("deadline")
+        );
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("tlsched_flight_test_{}.jsonl", std::process::id()));
+        let path_s = path.to_str().unwrap();
+        let f = Flight::new();
+        f.set_capacity(1); // ring wraps, file must still hold everything
+        f.set_sink(path_s).unwrap();
+        for i in 0..4 {
+            f.record(ev(i as f64, "admitted", i));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(text.lines().count(), 4);
+        assert_eq!(f.len(), 1);
+    }
+}

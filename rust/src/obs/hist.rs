@@ -1,0 +1,211 @@
+//! Fixed-bucket histograms: the bounded-memory latency representation.
+//!
+//! One histogram is `bounds.len() + 1` bucket counters (the last bucket
+//! is +Inf), a total count and a total sum — O(1) memory regardless of
+//! how many samples it absorbs, unlike the per-job record vectors it
+//! replaces in [`crate::coordinator::metrics`]. The default bounds are
+//! exponential from 1 ms to 100 s, which covers queue waits, round
+//! stages and end-to-end latencies at every time scale the serve loop
+//! runs under.
+//!
+//! [`HistogramData`] is the plain (non-atomic) value type: it backs
+//! `RunMetrics`' per-run aggregates, the export snapshots of the atomic
+//! registry histograms ([`super::registry::Histogram::snapshot`]), and
+//! cross-process merging on the router. `count` and `sum` are exact, so
+//! means derived from a histogram are exact; quantiles are estimates
+//! with a bucket-width error bound (see [`HistogramData::quantile`] and
+//! `tests/prop_obs.rs`).
+
+use crate::util::json::Json;
+
+/// Default bucket upper bounds in seconds (exponential, 1 ms – 100 s).
+/// A final +Inf bucket is implicit.
+pub const DEFAULT_BOUNDS: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0,
+    100.0,
+];
+
+/// Index of the bucket a value falls into: the first bound `>= v`, or
+/// `bounds.len()` for the +Inf bucket. Bounds are few (16 by default),
+/// so a linear scan beats a binary search in practice.
+pub fn bucket_index(bounds: &[f64], v: f64) -> usize {
+    bounds.iter().position(|&b| v <= b).unwrap_or(bounds.len())
+}
+
+/// A plain fixed-bucket histogram (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramData {
+    /// Bucket upper bounds, ascending; the +Inf bucket is implicit.
+    pub bounds: &'static [f64],
+    /// Per-bucket counts; `buckets.len() == bounds.len() + 1`.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Default for HistogramData {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistogramData {
+    pub fn new() -> Self {
+        Self::with_bounds(DEFAULT_BOUNDS)
+    }
+
+    pub fn with_bounds(bounds: &'static [f64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        HistogramData { bounds, buckets: vec![0; bounds.len() + 1], count: 0, sum: 0.0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.buckets[bucket_index(self.bounds, v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Merge another histogram in. Merging is associative and
+    /// commutative (bucket-wise addition), so per-shard / per-group
+    /// histograms can fold in any order (`tests/prop_obs.rs`).
+    /// Panics on mismatched bounds — merging different bucket layouts
+    /// is a programming error, not a data condition.
+    pub fn merge(&mut self, o: &HistogramData) {
+        assert!(std::ptr::eq(self.bounds, o.bounds) || self.bounds == o.bounds, "bounds mismatch");
+        for (a, b) in self.buckets.iter_mut().zip(&o.buckets) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.sum += o.sum;
+    }
+
+    /// Exact mean of all recorded samples (`sum` and `count` are exact).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile estimate for `q` in [0, 1]: locate the bucket holding
+    /// the rank-`ceil(q·count)` sample and interpolate linearly within
+    /// its bounds. The estimate always lies inside the bucket that
+    /// contains the exact rank sample, so the error is bounded by that
+    /// bucket's width (property-tested against the exact percentile in
+    /// `tests/prop_obs.rs`). The +Inf bucket clamps to the last finite
+    /// bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += n;
+            if cum >= rank {
+                if i >= self.bounds.len() {
+                    // +Inf bucket: no finite upper bound to interpolate
+                    // toward; report the largest finite bound.
+                    return self.bounds[self.bounds.len() - 1];
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = (rank - prev) as f64 / n as f64;
+                return lo + (hi - lo) * frac;
+            }
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    /// Compact JSON view: exact count/sum plus quantile estimates.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("p50", Json::num(self.quantile(0.50))),
+            ("p95", Json::num(self.quantile(0.95))),
+            ("p99", Json::num(self.quantile(0.99))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_covers() {
+        assert_eq!(bucket_index(DEFAULT_BOUNDS, 0.0), 0);
+        assert_eq!(bucket_index(DEFAULT_BOUNDS, 0.001), 0);
+        assert_eq!(bucket_index(DEFAULT_BOUNDS, 0.0011), 1);
+        assert_eq!(bucket_index(DEFAULT_BOUNDS, 1e9), DEFAULT_BOUNDS.len());
+        let mut last = 0;
+        for i in 0..2000 {
+            let v = i as f64 * 0.1;
+            let b = bucket_index(DEFAULT_BOUNDS, v);
+            assert!(b >= last, "bucket index must not decrease as v grows");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn count_and_sum_are_exact() {
+        let mut h = HistogramData::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 0.01);
+        }
+        assert_eq!(h.count, 100);
+        assert!((h.sum - 50.5).abs() < 1e-9);
+        assert!((h.mean() - 0.505).abs() < 1e-9);
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+    }
+
+    #[test]
+    fn quantile_of_uniform_samples_lands_in_right_bucket() {
+        let mut h = HistogramData::new();
+        // 100 samples at exactly 3.0s: every quantile is in (2.5, 5.0].
+        for _ in 0..100 {
+            h.record(3.0);
+        }
+        for q in [0.5, 0.95, 0.99] {
+            let est = h.quantile(q);
+            assert!(est > 2.5 && est <= 5.0, "q={q} est={est}");
+        }
+    }
+
+    #[test]
+    fn quantile_empty_and_overflow() {
+        let h = HistogramData::new();
+        assert_eq!(h.quantile(0.95), 0.0);
+        let mut h = HistogramData::new();
+        h.record(1e6); // +Inf bucket
+        assert_eq!(h.quantile(0.5), *DEFAULT_BOUNDS.last().unwrap());
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let mut a = HistogramData::new();
+        let mut b = HistogramData::new();
+        a.record(0.002);
+        b.record(0.002);
+        b.record(7.0);
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert!((a.sum - 7.004).abs() < 1e-9);
+        assert_eq!(a.buckets[bucket_index(DEFAULT_BOUNDS, 0.002)], 2);
+        assert_eq!(a.buckets[bucket_index(DEFAULT_BOUNDS, 7.0)], 1);
+    }
+
+    #[test]
+    fn json_has_exact_count() {
+        let mut h = HistogramData::new();
+        h.record(0.5);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(1));
+    }
+}

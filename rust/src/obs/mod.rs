@@ -1,0 +1,238 @@
+//! Telemetry: the observable surface of the two-level scheduler.
+//!
+//! Zero-dependency, in keeping with the workspace policy. Three pieces:
+//!
+//! - [`registry`] — lock-free named counters / gauges / fixed-bucket
+//!   histograms. Hot-path recording is relaxed atomics with no
+//!   allocation; export is snapshot-and-merge.
+//! - [`flight`] — a bounded ring of job-lifecycle events
+//!   (submitted → admitted → round markers → terminal), dumpable as
+//!   JSONL (`GET /trace`, `serve --trace-out`).
+//! - [`prom`] — Prometheus text exposition and the router's
+//!   cross-process scrape merge.
+//!
+//! [`global()`] hands out the process-wide [`Telemetry`], which
+//! pre-registers every standard instrument so the hot path never takes
+//! the registry lock (mirrors the armed-global idiom in
+//! [`crate::util::faults`]). The canonical metric names live here in
+//! one place; docs/OPERATIONS.md carries the operator-facing table.
+//!
+//! Round stages are profiled via [`StageTimes`]: the engines accumulate
+//! plan / execute / merge / exchange wall-clock into a stack value and
+//! hand it to [`Telemetry::record_round`], which records all four stage
+//! histograms *and* bumps `tlsched_rounds_total` in one call — so the
+//! stage-histogram counts and the round counter advance in lockstep,
+//! which the metrics-e2e CI leg asserts (equality is exact on an idle
+//! process). Timings deliberately do not ride on
+//! [`crate::scheduler::RoundStats`]: that struct is `Eq` and compared
+//! bit-for-bit across worker counts by the parity tests.
+
+pub mod flight;
+pub mod hist;
+pub mod prom;
+pub mod registry;
+
+pub use flight::{Event, Flight};
+pub use hist::HistogramData;
+pub use registry::{Counter, Gauge, Histogram, Registry};
+
+use std::sync::{Arc, OnceLock};
+
+/// Wall-clock seconds a round spent in each stage. Accumulated by the
+/// engines ([`crate::scheduler::Scheduler::round_parallel`],
+/// [`crate::shard::ShardedRuntime::round`]) and recorded in one shot by
+/// [`Telemetry::record_round`].
+///
+/// Job-major engines report plan + execute only (there is no separate
+/// merge pass); unsharded block-major engines report plan / execute /
+/// merge; the sharded runtime reports all four.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    /// Block planning: scope scan + task-spec construction.
+    pub plan: f64,
+    /// Parallel block execution on the pool.
+    pub execute: f64,
+    /// Copy-back of per-task deltas and frontier/value merge.
+    pub merge: f64,
+    /// Cross-shard frontier exchange (sharded runtime only).
+    pub exchange: f64,
+}
+
+/// Process-wide telemetry: the registry, the flight recorder, and
+/// handles to every standard instrument.
+pub struct Telemetry {
+    pub registry: Registry,
+    pub flight: Flight,
+
+    // job lifecycle counters
+    pub jobs_submitted: Arc<Counter>,
+    pub jobs_admitted: Arc<Counter>,
+    pub jobs_completed: Arc<Counter>,
+    pub jobs_failed: Arc<Counter>,
+    pub jobs_cancelled: Arc<Counter>,
+    pub jobs_shed: Arc<Counter>,
+    pub rounds_total: Arc<Counter>,
+
+    // latency histograms (seconds)
+    pub queue_wait: Arc<Histogram>,
+    pub exec: Arc<Histogram>,
+    pub latency: Arc<Histogram>,
+
+    // per-stage round histograms (seconds)
+    pub stage_plan: Arc<Histogram>,
+    pub stage_execute: Arc<Histogram>,
+    pub stage_merge: Arc<Histogram>,
+    pub stage_exchange: Arc<Histogram>,
+
+    // occupancy gauges
+    pub resident_jobs: Arc<Gauge>,
+    pub queue_depth: Arc<Gauge>,
+    pub pool_workers: Arc<Gauge>,
+    pub pool_tasks: Arc<Gauge>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        let r = Registry::new();
+        let stage = |name: &'static str| {
+            r.histogram_with(
+                "tlsched_round_stage_seconds",
+                &[("stage", name)],
+                "Wall-clock seconds per round stage",
+            )
+        };
+        Telemetry {
+            jobs_submitted: r
+                .counter("tlsched_jobs_submitted_total", "Jobs accepted by the submitter"),
+            jobs_admitted: r
+                .counter("tlsched_jobs_admitted_total", "Jobs admitted into the resident set"),
+            jobs_completed: r.counter("tlsched_jobs_completed_total", "Jobs that converged"),
+            jobs_failed: r.counter("tlsched_jobs_failed_total", "Jobs that failed"),
+            jobs_cancelled: r.counter("tlsched_jobs_cancelled_total", "Jobs cancelled by deadline"),
+            jobs_shed: r.counter("tlsched_jobs_shed_total", "Jobs shed by admission control"),
+            rounds_total: r.counter("tlsched_rounds_total", "Scheduler rounds executed"),
+            queue_wait: r
+                .histogram("tlsched_queue_wait_seconds", "Submit-to-admission wait per job"),
+            exec: r.histogram("tlsched_exec_seconds", "Admission-to-terminal execution per job"),
+            latency: r.histogram("tlsched_latency_seconds", "Submit-to-terminal latency per job"),
+            stage_plan: stage("plan"),
+            stage_execute: stage("execute"),
+            stage_merge: stage("merge"),
+            stage_exchange: stage("exchange"),
+            resident_jobs: r.gauge("tlsched_resident_jobs", "Jobs currently resident"),
+            queue_depth: r.gauge("tlsched_queue_depth", "Jobs waiting for admission"),
+            pool_workers: r.gauge("tlsched_pool_workers", "Worker threads in the pool"),
+            pool_tasks: r.gauge("tlsched_pool_tasks", "Block tasks dispatched to the pool"),
+            registry: r,
+            flight: Flight::new(),
+        }
+    }
+
+    /// Record one finished round: all four stage histograms plus the
+    /// round counter, in lockstep (see the module docs).
+    pub fn record_round(&self, s: &StageTimes) {
+        self.stage_plan.record(s.plan);
+        self.stage_execute.record(s.execute);
+        self.stage_merge.record(s.merge);
+        self.stage_exchange.record(s.exchange);
+        self.rounds_total.inc();
+    }
+
+    /// Record a job lifecycle event into the flight ring (and the file
+    /// sink, if installed).
+    pub fn job_event(&self, ts_s: f64, ev: &'static str, id: u64, kind: &str, detail: &str) {
+        self.flight.record(Event {
+            ts_s,
+            ev,
+            id,
+            kind: kind.to_string(),
+            detail: detail.to_string(),
+        });
+    }
+
+    /// Prometheus text exposition of the whole registry.
+    pub fn prometheus_text(&self) -> String {
+        prom::render(&self.registry.snapshot())
+    }
+
+    /// Live registry snapshot as one JSON object keyed by sample
+    /// (`family{labels}`); counters and gauges export their value,
+    /// histograms their `{count,sum,p50,p95,p99}` digest. This is the
+    /// HTTP gateway's `GET /metrics` answer before the serve loop's
+    /// first report tick.
+    pub fn registry_json(&self) -> String {
+        use crate::util::json::Json;
+        let map = self
+            .registry
+            .snapshot()
+            .into_iter()
+            .map(|s| {
+                let v = match &s.value {
+                    registry::SampleValue::Counter(n) => Json::num(*n as f64),
+                    registry::SampleValue::Gauge(g) => Json::num(*g),
+                    registry::SampleValue::Hist(h) => h.to_json(),
+                };
+                (s.key(), v)
+            })
+            .collect();
+        Json::Obj(map).to_string()
+    }
+}
+
+static GLOBAL: OnceLock<Telemetry> = OnceLock::new();
+
+/// The process-wide [`Telemetry`] (created on first use).
+pub fn global() -> &'static Telemetry {
+    GLOBAL.get_or_init(Telemetry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_round_keeps_stage_counts_and_rounds_in_lockstep() {
+        let t = Telemetry::new();
+        for i in 0..5 {
+            t.record_round(&StageTimes {
+                plan: 0.001 * i as f64,
+                execute: 0.01,
+                merge: 0.002,
+                exchange: 0.0,
+            });
+        }
+        assert_eq!(t.rounds_total.get(), 5);
+        for h in [&t.stage_plan, &t.stage_execute, &t.stage_merge, &t.stage_exchange] {
+            assert_eq!(h.count(), 5);
+        }
+    }
+
+    #[test]
+    fn prometheus_text_has_all_standard_families() {
+        let t = Telemetry::new();
+        t.jobs_submitted.inc();
+        t.record_round(&StageTimes::default());
+        let text = t.prometheus_text();
+        for family in [
+            "tlsched_jobs_submitted_total",
+            "tlsched_rounds_total",
+            "tlsched_queue_wait_seconds",
+            "tlsched_round_stage_seconds_bucket{stage=\"plan\"",
+        ] {
+            assert!(text.contains(family), "missing {family}");
+        }
+    }
+
+    #[test]
+    fn global_is_a_singleton() {
+        let a = global() as *const Telemetry;
+        let b = global() as *const Telemetry;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,290 @@
+//! Prometheus text exposition (version 0.0.4) and cross-process scrape
+//! merging.
+//!
+//! [`render`] turns a registry snapshot into the classic text format:
+//! one `# HELP` / `# TYPE` pair per family, counter/gauge samples as
+//! `name{labels} value`, histograms as cumulative `_bucket{le=…}`
+//! series plus `_sum` / `_count`. Families keep all their samples in
+//! one contiguous group (a format requirement) because the snapshot is
+//! sorted by family.
+//!
+//! [`merge_scrapes`] is the router's aggregation: it takes the raw
+//! scrape text of every shard group, injects a `group="<id>"` label
+//! into each sample and regroups families so the router exposes one
+//! merged scrape for the whole multi-process deployment. Samples are
+//! relabeled, never summed — cross-group histogram addition would hide
+//! which group is slow, and per-group series cost nothing extra.
+
+use super::registry::{Sample, SampleValue};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Escape a label value: backslash, double quote and newline.
+pub fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Escape help text: backslash and newline (quotes are legal there).
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        // Rust's f64 Display round-trips and never produces locale
+        // separators, so it is parseable by every Prometheus scraper.
+        format!("{v}")
+    }
+}
+
+fn label_body(labels: &[(String, String)]) -> String {
+    let parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    parts.join(",")
+}
+
+fn sample_name(
+    family: &str,
+    suffix: &str,
+    labels: &[(String, String)],
+    extra: Option<&str>,
+) -> String {
+    let body = label_body(labels);
+    match (body.is_empty(), extra) {
+        (true, None) => format!("{family}{suffix}"),
+        (true, Some(e)) => format!("{family}{suffix}{{{e}}}"),
+        (false, None) => format!("{family}{suffix}{{{body}}}"),
+        (false, Some(e)) => format!("{family}{suffix}{{{body},{e}}}"),
+    }
+}
+
+/// Render a snapshot (from [`super::registry::Registry::snapshot`]) as
+/// Prometheus text.
+pub fn render(samples: &[Sample]) -> String {
+    let mut out = String::new();
+    let mut last_family = "";
+    for s in samples {
+        if s.family != last_family {
+            let kind = match &s.value {
+                SampleValue::Counter(_) => "counter",
+                SampleValue::Gauge(_) => "gauge",
+                SampleValue::Hist(_) => "histogram",
+            };
+            let _ = writeln!(out, "# HELP {} {}", s.family, escape_help(s.help));
+            let _ = writeln!(out, "# TYPE {} {kind}", s.family);
+            last_family = &s.family;
+        }
+        match &s.value {
+            SampleValue::Counter(v) => {
+                let _ = writeln!(out, "{} {v}", sample_name(&s.family, "", &s.labels, None));
+            }
+            SampleValue::Gauge(v) => {
+                let _ =
+                    writeln!(out, "{} {}", sample_name(&s.family, "", &s.labels, None), fmt_value(*v));
+            }
+            SampleValue::Hist(h) => {
+                let mut cum = 0u64;
+                for (i, &n) in h.buckets.iter().enumerate() {
+                    cum += n;
+                    let le = if i < h.bounds.len() {
+                        fmt_value(h.bounds[i])
+                    } else {
+                        "+Inf".to_string()
+                    };
+                    let extra = format!("le=\"{le}\"");
+                    let _ = writeln!(
+                        out,
+                        "{} {cum}",
+                        sample_name(&s.family, "_bucket", &s.labels, Some(&extra))
+                    );
+                }
+                let _ = writeln!(
+                    out,
+                    "{} {}",
+                    sample_name(&s.family, "_sum", &s.labels, None),
+                    fmt_value(h.sum)
+                );
+                let _ =
+                    writeln!(out, "{} {}", sample_name(&s.family, "_count", &s.labels, None), h.count);
+            }
+        }
+    }
+    out
+}
+
+/// Family name of a sample line's metric name: the histogram series
+/// suffixes fold back onto their base family.
+fn family_of(name: &str) -> &str {
+    for suf in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suf) {
+            return base;
+        }
+    }
+    name
+}
+
+/// Merge the scrapes of several processes into one exposition, tagging
+/// every sample with a `group="<id>"` label (see the module docs).
+/// Unparseable lines are dropped — a half-written upstream scrape must
+/// not poison the merged view.
+pub fn merge_scrapes(scrapes: &[(String, String)]) -> String {
+    #[derive(Default)]
+    struct Family {
+        help: Option<String>,
+        kind: Option<String>,
+        samples: Vec<String>,
+    }
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+    for (group, text) in scrapes {
+        for line in text.lines() {
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            if let Some(rest) = t.strip_prefix("# HELP ") {
+                if let Some((name, help)) = rest.split_once(' ') {
+                    let f = families.entry(name.to_string()).or_default();
+                    f.help.get_or_insert_with(|| help.to_string());
+                }
+                continue;
+            }
+            if let Some(rest) = t.strip_prefix("# TYPE ") {
+                if let Some((name, kind)) = rest.split_once(' ') {
+                    let f = families.entry(name.to_string()).or_default();
+                    f.kind.get_or_insert_with(|| kind.to_string());
+                }
+                continue;
+            }
+            if t.starts_with('#') {
+                continue;
+            }
+            // sample line: name[{labels}] value
+            let Some(relabeled) = inject_group_label(t, group) else { continue };
+            let name_end = t.find(['{', ' ']).unwrap_or(t.len());
+            let fam = family_of(&t[..name_end]).to_string();
+            families.entry(fam).or_default().samples.push(relabeled);
+        }
+    }
+    let mut out = String::new();
+    for (name, f) in &families {
+        if f.samples.is_empty() {
+            continue;
+        }
+        if let Some(h) = &f.help {
+            let _ = writeln!(out, "# HELP {name} {h}");
+        }
+        if let Some(k) = &f.kind {
+            let _ = writeln!(out, "# TYPE {name} {k}");
+        }
+        for s in &f.samples {
+            let _ = writeln!(out, "{s}");
+        }
+    }
+    out
+}
+
+/// `name{a="b"} v` → `name{group="G",a="b"} v`; `name v` →
+/// `name{group="G"} v`. Returns None for lines that don't look like a
+/// sample.
+fn inject_group_label(line: &str, group: &str) -> Option<String> {
+    let esc = escape_label(group);
+    if let Some(brace) = line.find('{') {
+        let close = line.rfind('}')?;
+        if close < brace {
+            return None;
+        }
+        let labels = &line[brace + 1..close];
+        let sep = if labels.is_empty() { "" } else { "," };
+        Some(format!(
+            "{}{{group=\"{esc}\"{sep}{}}}{}",
+            &line[..brace],
+            labels,
+            &line[close + 1..]
+        ))
+    } else {
+        let sp = line.find(' ')?;
+        Some(format!("{}{{group=\"{esc}\"}}{}", &line[..sp], &line[sp..]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    #[test]
+    fn render_emits_help_type_once_per_family() {
+        let r = Registry::new();
+        r.counter("a_total", "counts a").add(2);
+        let h1 = r.histogram_with("d_seconds", &[("stage", "plan")], "durations");
+        let h2 = r.histogram_with("d_seconds", &[("stage", "merge")], "durations");
+        h1.record(0.002);
+        h2.record(4.0);
+        let text = render(&r.snapshot());
+        assert_eq!(text.matches("# TYPE d_seconds histogram").count(), 1);
+        assert_eq!(text.matches("# HELP d_seconds").count(), 1);
+        assert_eq!(text.matches("# TYPE a_total counter").count(), 1);
+        assert!(text.contains("a_total 2"));
+        assert!(text.contains("d_seconds_bucket{stage=\"plan\",le=\"0.0025\"} 1"));
+        assert!(text.contains("d_seconds_bucket{stage=\"plan\",le=\"+Inf\"} 1"));
+        assert!(text.contains("d_seconds_count{stage=\"merge\"} 1"));
+        assert!(text.contains("d_seconds_sum{stage=\"merge\"} 4"));
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let r = Registry::new();
+        r.gauge_with("g", &[("path", "a\"b\n")], "test").set(1.0);
+        let text = render(&r.snapshot());
+        assert!(text.contains("g{path=\"a\\\"b\\n\"} 1"));
+    }
+
+    #[test]
+    fn bucket_series_are_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("x_seconds", "test");
+        h.record(0.0005); // first bucket
+        h.record(0.3); // le=0.5
+        h.record(1e9); // +Inf
+        let text = render(&r.snapshot());
+        assert!(text.contains("x_seconds_bucket{le=\"0.001\"} 1"));
+        assert!(text.contains("x_seconds_bucket{le=\"0.5\"} 2"));
+        assert!(text.contains("x_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("x_seconds_count 3"));
+    }
+
+    #[test]
+    fn merge_injects_group_label_and_groups_families() {
+        let a = "# HELP j_total jobs\n# TYPE j_total counter\nj_total 3\n\
+                 # TYPE l_seconds histogram\nl_seconds_bucket{le=\"+Inf\"} 1\n\
+                 l_seconds_sum 0.5\nl_seconds_count 1\n";
+        let b = "# HELP j_total jobs\n# TYPE j_total counter\nj_total{src=\"x\"} 7\n";
+        let merged =
+            merge_scrapes(&[("0".to_string(), a.to_string()), ("1".to_string(), b.to_string())]);
+        assert_eq!(merged.matches("# TYPE j_total counter").count(), 1);
+        assert!(merged.contains("j_total{group=\"0\"} 3"));
+        assert!(merged.contains("j_total{group=\"1\",src=\"x\"} 7"));
+        assert!(merged.contains("l_seconds_bucket{group=\"0\",le=\"+Inf\"} 1"));
+        // histogram suffixes group under the base family's TYPE line
+        let bucket_pos = merged.find("l_seconds_bucket").unwrap();
+        let type_pos = merged.find("# TYPE l_seconds histogram").unwrap();
+        assert!(type_pos < bucket_pos);
+    }
+
+    #[test]
+    fn merge_drops_garbage_lines() {
+        let merged = merge_scrapes(&[(
+            "0".to_string(),
+            "# weird comment\nnot-a-sample\nok_total 1\n".to_string(),
+        )]);
+        assert!(merged.contains("ok_total{group=\"0\"} 1"));
+        assert!(!merged.contains("not-a-sample"));
+    }
+}

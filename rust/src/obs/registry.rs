@@ -1,0 +1,381 @@
+//! Lock-free instrument registry: named counters, gauges and
+//! fixed-bucket histograms.
+//!
+//! **Hot path.** Registration (`counter`/`gauge`/`histogram`) takes a
+//! mutex once and hands back an `Arc` handle; every subsequent
+//! `inc`/`set`/`record` is relaxed atomics on that handle — no lock, no
+//! allocation, no branch beyond the bucket scan. Counters are sharded
+//! across cache-line-padded stripes (thread-local stripe index) so
+//! concurrent increments from the serve loop, the pool workers and the
+//! network threads don't bounce one cache line.
+//!
+//! **Export path.** [`Registry::snapshot`] walks the instrument table
+//! and merges every stripe / bucket into plain values
+//! ([`super::hist::HistogramData`] for histograms). Snapshots are
+//! internally consistent per instrument (each counter is a sum of
+//! relaxed loads) but not across instruments — two counters incremented
+//! together may differ by in-flight increments. Exporters that need
+//! exact cross-instrument equality (the CI stage-count check) scrape an
+//! idle process, where relaxed reads are exact.
+//!
+//! Instruments may carry a label set (`counter_with` etc.); the sample
+//! key is `family{k="v",…}` and the Prometheus renderer groups samples
+//! of one family under a single `# TYPE` line (see [`super::prom`]).
+
+use super::hist::{bucket_index, HistogramData, DEFAULT_BOUNDS};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Stripe count of sharded counters. Eight 64-byte lines bound the
+/// snapshot cost while absorbing the handful of concurrently-writing
+/// threads a serve process runs (coordinator + pool + net handlers).
+const STRIPES: usize = 8;
+
+#[repr(align(64))]
+#[derive(Default)]
+struct PaddedU64(AtomicU64);
+
+thread_local! {
+    static STRIPE: usize = {
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES
+    };
+}
+
+/// Monotone counter, sharded across cache-line-padded stripes.
+#[derive(Default)]
+pub struct Counter {
+    stripes: [PaddedU64; STRIPES],
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        STRIPE.with(|&s| self.stripes[s].0.fetch_add(n, Ordering::Relaxed));
+    }
+
+    /// Sum of all stripes (relaxed; exact once writers are quiescent).
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (bit-stored in an atomic).
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Atomic fixed-bucket histogram; `record` is lock-free and
+/// allocation-free. The float `sum` is maintained with a CAS loop on
+/// the bit pattern — contention is per-histogram and recording sites
+/// are coarse (per job terminal, per round stage), so the loop almost
+/// never retries.
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [f64]) -> Self {
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, buckets, count: AtomicU64::new(0), sum_bits: AtomicU64::new(0) }
+    }
+
+    pub fn record(&self, v: f64) {
+        self.buckets[bucket_index(self.bounds, v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Plain-value copy for export and merging.
+    pub fn snapshot(&self) -> HistogramData {
+        HistogramData {
+            bounds: self.bounds,
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// One exported sample: a family name, its label set, help text and the
+/// instrument value at snapshot time. Sorted by (family, labels) in
+/// [`Registry::snapshot`] so rendering is deterministic.
+pub struct Sample {
+    pub family: String,
+    pub labels: Vec<(String, String)>,
+    pub help: &'static str,
+    pub value: SampleValue,
+}
+
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    Hist(HistogramData),
+}
+
+impl Sample {
+    /// `family{k="v",…}` (no braces when unlabeled) — the registry key
+    /// and the JSON export key.
+    pub fn key(&self) -> String {
+        sample_key(&self.family, &self.labels)
+    }
+}
+
+fn sample_key(family: &str, labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return family.to_string();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", super::prom::escape_label(v))).collect();
+    format!("{family}{{{}}}", body.join(","))
+}
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Histogram>),
+}
+
+struct Entry {
+    family: String,
+    labels: Vec<(String, String)>,
+    help: &'static str,
+    instrument: Instrument,
+}
+
+/// The instrument table. One per [`super::Telemetry`]; fresh instances
+/// are constructible for tests.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or fetch) an unlabeled counter.
+    pub fn counter(&self, family: &str, help: &'static str) -> Arc<Counter> {
+        self.counter_with(family, &[], help)
+    }
+
+    /// Register (or fetch) a labeled counter. Re-registration with the
+    /// same key returns the existing instrument; a kind clash panics
+    /// (programming error).
+    pub fn counter_with(
+        &self,
+        family: &str,
+        labels: &[(&str, &str)],
+        help: &'static str,
+    ) -> Arc<Counter> {
+        match self.entry(family, labels, help, || Instrument::Counter(Arc::new(Counter::default())))
+        {
+            Instrument::Counter(c) => c,
+            _ => panic!("{family}: registered with a different instrument kind"),
+        }
+    }
+
+    pub fn gauge(&self, family: &str, help: &'static str) -> Arc<Gauge> {
+        self.gauge_with(family, &[], help)
+    }
+
+    pub fn gauge_with(
+        &self,
+        family: &str,
+        labels: &[(&str, &str)],
+        help: &'static str,
+    ) -> Arc<Gauge> {
+        match self.entry(family, labels, help, || Instrument::Gauge(Arc::new(Gauge::default()))) {
+            Instrument::Gauge(g) => g,
+            _ => panic!("{family}: registered with a different instrument kind"),
+        }
+    }
+
+    pub fn histogram(&self, family: &str, help: &'static str) -> Arc<Histogram> {
+        self.histogram_with(family, &[], help)
+    }
+
+    pub fn histogram_with(
+        &self,
+        family: &str,
+        labels: &[(&str, &str)],
+        help: &'static str,
+    ) -> Arc<Histogram> {
+        match self
+            .entry(family, labels, help, || Instrument::Hist(Arc::new(Histogram::new(DEFAULT_BOUNDS))))
+        {
+            Instrument::Hist(h) => h,
+            _ => panic!("{family}: registered with a different instrument kind"),
+        }
+    }
+
+    fn entry(
+        &self,
+        family: &str,
+        labels: &[(&str, &str)],
+        help: &'static str,
+        make: impl FnOnce() -> Instrument,
+    ) -> Instrument {
+        let labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let key = sample_key(family, &labels);
+        let mut map = self.entries.lock().unwrap();
+        let e = map.entry(key).or_insert_with(|| Entry {
+            family: family.to_string(),
+            labels,
+            help,
+            instrument: make(),
+        });
+        match &e.instrument {
+            Instrument::Counter(c) => Instrument::Counter(Arc::clone(c)),
+            Instrument::Gauge(g) => Instrument::Gauge(Arc::clone(g)),
+            Instrument::Hist(h) => Instrument::Hist(Arc::clone(h)),
+        }
+    }
+
+    /// Snapshot every instrument into plain values, sorted by
+    /// (family, labels). See the module docs for the consistency model.
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let map = self.entries.lock().unwrap();
+        let mut out: Vec<Sample> = map
+            .values()
+            .map(|e| Sample {
+                family: e.family.clone(),
+                labels: e.labels.clone(),
+                help: e.help,
+                value: match &e.instrument {
+                    Instrument::Counter(c) => SampleValue::Counter(c.get()),
+                    Instrument::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Instrument::Hist(h) => SampleValue::Hist(h.snapshot()),
+                },
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.family, &a.labels).cmp(&(&b.family, &b.labels)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let r = Registry::new();
+        let c = r.counter("t_total", "test");
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn reregistration_returns_same_instrument() {
+        let r = Registry::new();
+        let a = r.counter("x_total", "test");
+        a.add(3);
+        let b = r.counter("x_total", "test");
+        assert_eq!(b.get(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "different instrument kind")]
+    fn kind_clash_panics() {
+        let r = Registry::new();
+        let _ = r.counter("y", "test");
+        let _ = r.gauge("y", "test");
+    }
+
+    #[test]
+    fn labeled_instruments_are_distinct() {
+        let r = Registry::new();
+        let a = r.histogram_with("stage_seconds", &[("stage", "plan")], "test");
+        let b = r.histogram_with("stage_seconds", &[("stage", "merge")], "test");
+        a.record(0.1);
+        a.record(0.2);
+        b.record(0.3);
+        assert_eq!(a.count(), 2);
+        assert_eq!(b.count(), 1);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().all(|s| s.family == "stage_seconds"));
+        assert_eq!(snap[0].key(), "stage_seconds{stage=\"merge\"}");
+    }
+
+    #[test]
+    fn histogram_sum_cas_survives_contention() {
+        let r = Registry::new();
+        let h = r.histogram("lat_seconds", "test");
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        h.record(0.5);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 2000);
+        assert!((s.sum - 1000.0).abs() < 1e-6);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 2000);
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let r = Registry::new();
+        let g = r.gauge("depth", "test");
+        g.set(3.0);
+        g.set(-1.5);
+        assert_eq!(g.get(), -1.5);
+    }
+}

@@ -253,11 +253,15 @@ pub(crate) fn execute_blocks_staged(
     specs: &[BlockTaskSpec],
     fused: bool,
     pool: &ThreadPool,
+    stages: &mut crate::obs::StageTimes,
 ) -> RoundStats {
     let jobs_ro: &[JobState] = jobs;
+    let t_exec = std::time::Instant::now();
     let results: Vec<Vec<JobBlockOut>> =
         pool.scope_map(specs, |_, spec| run_block_task(g, part, jobs_ro, spec, fused));
+    stages.execute += t_exec.elapsed().as_secs_f64();
 
+    let t_merge = std::time::Instant::now();
     let mut stats = RoundStats::default();
     // Phase 2a: copy block-local lanes back (disjoint vertex ranges)
     // and apply each block's net summary change.
@@ -275,6 +279,7 @@ pub(crate) fn execute_blocks_staged(
             }
         }
     }
+    stages.merge += t_merge.elapsed().as_secs_f64();
     stats
 }
 

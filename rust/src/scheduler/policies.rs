@@ -312,12 +312,27 @@ impl Scheduler {
         if self.cfg.incremental_summaries && self.cfg.kind != SchedulerKind::Independent {
             self.ensure_tracking(part, jobs);
         }
+        // Stage profiling rides on a stack accumulator, not on
+        // RoundStats: RoundStats is `Eq` and compared bit-for-bit by
+        // the parity tests, and timings are never bit-stable.
+        let t0 = Instant::now();
+        let plan0 = self.plan_seconds;
+        let mut stages = crate::obs::StageTimes::default();
         let stats = match self.cfg.kind {
             SchedulerKind::Independent => self.par_round_independent(g, part, jobs, pool),
             SchedulerKind::PrIterPerJob => self.par_round_priter(g, part, jobs, pool),
-            SchedulerKind::RoundRobinBlocks => self.par_round_roundrobin(g, part, jobs, pool),
-            SchedulerKind::TwoLevel => self.par_round_twolevel(g, part, jobs, pool),
+            SchedulerKind::RoundRobinBlocks => {
+                self.par_round_roundrobin(g, part, jobs, pool, &mut stages)
+            }
+            SchedulerKind::TwoLevel => self.par_round_twolevel(g, part, jobs, pool, &mut stages),
         };
+        stages.plan = (self.plan_seconds - plan0).max(0.0);
+        if stages.execute == 0.0 {
+            // Job-major rounds have no staged engine underneath: the
+            // whole remainder of the round is block execution.
+            stages.execute = (t0.elapsed().as_secs_f64() - stages.plan).max(0.0);
+        }
+        crate::obs::global().record_round(&stages);
         for j in jobs.iter_mut() {
             if !j.converged {
                 j.rounds += 1;
@@ -701,9 +716,10 @@ impl Scheduler {
         part: &BlockPartition,
         jobs: &mut [JobState],
         pool: &ThreadPool,
+        stages: &mut crate::obs::StageTimes,
     ) -> RoundStats {
         let specs = self.plan_specs_range(part, jobs, 0..part.num_blocks() as u32);
-        execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool)
+        execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool, stages)
     }
 
     /// TwoLevel, parallel: MPDS planning stays sequential (it is cheap
@@ -715,9 +731,10 @@ impl Scheduler {
         part: &BlockPartition,
         jobs: &mut [JobState],
         pool: &ThreadPool,
+        stages: &mut crate::obs::StageTimes,
     ) -> RoundStats {
         let specs = self.plan_specs_range(part, jobs, 0..part.num_blocks() as u32);
-        execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool)
+        execute_blocks_staged(g, part, jobs, &specs, self.cfg.fused, pool, stages)
     }
 
     /// Expose the global queue MPDS would produce right now (used by

@@ -48,6 +48,7 @@ use crate::scheduler::policies::converged_after_round;
 use crate::scheduler::{RoundStats, Scheduler, SchedulerConfig, SchedulerKind};
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Per-shard counters surfaced through `RunMetrics::shards` and the
 /// serve JSON snapshots. Counter fields are lifetime-cumulative on the
@@ -115,6 +116,11 @@ pub struct ShardedRuntime {
     /// Reused per-round buffers.
     flat: Vec<(u32, BlockTaskSpec)>,
     resident_seen: Vec<bool>,
+    /// Per-shard stage histograms (`tlsched_shard_stage_seconds`),
+    /// registered once at construction so `round` never touches the
+    /// registry lock.
+    shard_plan: Vec<Arc<crate::obs::Histogram>>,
+    shard_merge: Vec<Arc<crate::obs::Histogram>>,
 }
 
 impl ShardedRuntime {
@@ -137,7 +143,20 @@ impl ShardedRuntime {
         let mut block_shard = vec![0u32; part.num_blocks()];
         let mut scheds = Vec::with_capacity(shards);
         let mut metrics = Vec::with_capacity(shards);
+        let mut shard_plan = Vec::with_capacity(shards);
+        let mut shard_merge = Vec::with_capacity(shards);
+        let tel = crate::obs::global();
         for r in &ranges {
+            let sid = r.id.to_string();
+            let stage = |stage| {
+                tel.registry.histogram_with(
+                    "tlsched_shard_stage_seconds",
+                    &[("shard", sid.as_str()), ("stage", stage)],
+                    "Per-shard wall-clock seconds per round stage",
+                )
+            };
+            shard_plan.push(stage("plan"));
+            shard_merge.push(stage("merge"));
             for v in r.vertices.clone() {
                 vertex_shard[v as usize] = r.id;
             }
@@ -164,6 +183,8 @@ impl ShardedRuntime {
             block_map: None,
             flat: Vec::new(),
             resident_seen: Vec::new(),
+            shard_plan,
+            shard_merge,
             ranges,
         }
     }
@@ -237,6 +258,8 @@ impl ShardedRuntime {
         if self.cfg.incremental_summaries {
             self.ensure_tracking(part, jobs);
         }
+        let mut stages = crate::obs::StageTimes::default();
+        let mut shard_merge_s = vec![0.0f64; self.ranges.len()];
         // -- phase 1a: shard-local MPDS planning (sequential; cheap and
         // per-shard-RNG-ordered). Each shard's specs are contiguous in
         // the flat task list.
@@ -245,7 +268,11 @@ impl ShardedRuntime {
         for (s, r) in self.ranges.iter().enumerate() {
             let start = self.flat.len();
             if !r.is_empty() {
+                let t_plan = Instant::now();
                 let specs = self.scheds[s].plan_specs_range(part, jobs, r.blocks.clone());
+                let dt = t_plan.elapsed().as_secs_f64();
+                self.shard_plan[s].record(dt);
+                stages.plan += dt;
                 self.flat.extend(specs.into_iter().map(|spec| (s as u32, spec)));
             }
             bounds.push(start..self.flat.len());
@@ -254,13 +281,16 @@ impl ShardedRuntime {
         let jobs_ro: &[JobState] = jobs;
         let fused = self.cfg.fused;
         let flat = &self.flat;
+        let t_exec = Instant::now();
         let results =
             pool.scope_map(flat, |_, (_, spec)| run_block_task(g, part, jobs_ro, spec, fused));
+        stages.execute = t_exec.elapsed().as_secs_f64();
         // -- phase 2a: copy-backs + per-shard accounting.
         let mut stats = RoundStats::default();
         self.resident_seen.clear();
         self.resident_seen.resize(jobs.len(), false);
         for (s, specs) in bounds.iter().enumerate() {
+            let t_merge = Instant::now();
             let before = stats;
             self.resident_seen.iter_mut().for_each(|b| *b = false);
             for i in specs.clone() {
@@ -279,10 +309,12 @@ impl ShardedRuntime {
                 m.resident_jobs = self.resident_seen.iter().filter(|&&b| b).count() as u64;
                 m.resident_peak = m.resident_peak.max(m.resident_jobs);
             }
+            shard_merge_s[s] += t_merge.elapsed().as_secs_f64();
         }
         // -- phase 2b: fold intra-shard staged contributions in each
         // shard's queue order; route cross-shard ones to the exchange.
         for (s, specs) in bounds.iter().enumerate() {
+            let t_merge = Instant::now();
             let vr = self.ranges[s].vertices.clone();
             for i in specs.clone() {
                 for out in &results[i] {
@@ -303,8 +335,10 @@ impl ShardedRuntime {
                     self.metrics[s].exchanged_out += sent;
                 }
             }
+            shard_merge_s[s] += t_merge.elapsed().as_secs_f64();
         }
         // -- phase 2c: drain the exchange in (src, dst) order.
+        let t_exchange = Instant::now();
         let metrics = &mut self.metrics;
         self.exchange.drain(|_src, dst, contribs| {
             for c in contribs {
@@ -312,6 +346,12 @@ impl ShardedRuntime {
             }
             metrics[dst as usize].exchanged_in += contribs.len() as u64;
         });
+        stages.exchange = t_exchange.elapsed().as_secs_f64();
+        for (s, &dt) in shard_merge_s.iter().enumerate() {
+            self.shard_merge[s].record(dt);
+            stages.merge += dt;
+        }
+        crate::obs::global().record_round(&stages);
         for j in jobs.iter_mut() {
             if !j.converged {
                 j.rounds += 1;

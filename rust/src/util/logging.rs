@@ -1,14 +1,51 @@
 //! Minimal logger backend for the `log` facade.
 //!
-//! Prints `LEVEL target: message` to stderr, filtered by `TLSCHED_LOG`
-//! (error|warn|info|debug|trace, default info). Install once from
-//! binaries with [`init`].
+//! Prints `<ts> LEVEL target: message` to stderr, filtered by
+//! `TLSCHED_LOG` (error|warn|info|debug|trace, default info), where
+//! `<ts>` is a UTC ISO-8601 wall-clock timestamp. Setting
+//! `TLSCHED_LOG_FORMAT=json` switches every line to one JSON object
+//! (`{"level":…,"msg":…,"target":…,"ts":…}`) for log shippers.
+//! Install once from binaries with [`init`].
 
+use crate::util::json::Json;
 use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
 
 struct StderrLogger;
 
 static LOGGER: StderrLogger = StderrLogger;
+static JSON_FORMAT: AtomicBool = AtomicBool::new(false);
+
+/// Days since 1970-01-01 to civil (year, month, day) — Howard
+/// Hinnant's `civil_from_days`, so timestamps need no date dependency.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Current UTC wall-clock as `YYYY-MM-DDTHH:MM:SS.mmmZ`.
+fn timestamp() -> String {
+    let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let secs = now.as_secs();
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    let rem = secs % 86_400;
+    format!(
+        "{y:04}-{m:02}-{d:02}T{:02}:{:02}:{:02}.{:03}Z",
+        rem / 3600,
+        (rem % 3600) / 60,
+        rem % 60,
+        now.subsec_millis(),
+    )
+}
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
@@ -19,6 +56,24 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
+        let ts = timestamp();
+        if JSON_FORMAT.load(Ordering::Relaxed) {
+            let level = match record.level() {
+                Level::Error => "error",
+                Level::Warn => "warn",
+                Level::Info => "info",
+                Level::Debug => "debug",
+                Level::Trace => "trace",
+            };
+            let line = Json::obj(vec![
+                ("ts", Json::str(ts)),
+                ("level", Json::str(level)),
+                ("target", Json::str(record.target())),
+                ("msg", Json::str(record.args().to_string())),
+            ]);
+            eprintln!("{line}");
+            return;
+        }
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -26,13 +81,14 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("{lvl} {}: {}", record.target(), record.args());
+        eprintln!("{ts} {lvl} {}: {}", record.target(), record.args());
     }
 
     fn flush(&self) {}
 }
 
-/// Install the stderr logger. Idempotent — later calls are no-ops.
+/// Install the stderr logger. Idempotent — later calls are no-ops
+/// (though each call re-reads `TLSCHED_LOG_FORMAT`).
 pub fn init() {
     let level = match std::env::var("TLSCHED_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
@@ -42,6 +98,10 @@ pub fn init() {
         Ok("off") => LevelFilter::Off,
         _ => LevelFilter::Info,
     };
+    JSON_FORMAT.store(
+        std::env::var("TLSCHED_LOG_FORMAT").as_deref() == Ok("json"),
+        Ordering::Relaxed,
+    );
     if log::set_logger(&LOGGER).is_ok() {
         log::set_max_level(level);
     }
@@ -49,10 +109,31 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
+        init();
+        init();
         log::info!("logging initialized twice without panic");
+    }
+
+    #[test]
+    fn civil_from_days_hits_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        assert_eq!(civil_from_days(19_782), (2024, 2, 29), "leap day");
+        assert_eq!(civil_from_days(19_783), (2024, 3, 1));
+        assert_eq!(civil_from_days(-1), (1969, 12, 31), "pre-epoch");
+    }
+
+    #[test]
+    fn timestamp_is_iso8601_utc() {
+        let ts = timestamp();
+        assert_eq!(ts.len(), 24, "{ts}");
+        assert_eq!(&ts[4..5], "-");
+        assert_eq!(&ts[10..11], "T");
+        assert_eq!(&ts[19..20], ".");
+        assert!(ts.ends_with('Z'));
     }
 }

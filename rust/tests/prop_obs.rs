@@ -1,0 +1,394 @@
+//! Property tests for the telemetry layer (DESIGN.md §12): fixed-bucket
+//! histogram correctness (`obs::hist`) and Prometheus text exposition
+//! conformance (`obs::prom`). These are the properties the hist/prom
+//! module docs point at: bucket-index monotonicity, exact count/sum
+//! conservation, merge associativity/commutativity, the quantile
+//! bucket-width error bound, label-escape round-tripping, and the
+//! format-level invariants every scraper relies on (one HELP/TYPE per
+//! family, unique series, parseable values, cumulative buckets with
+//! `le="+Inf"` equal to `_count`).
+
+mod common;
+
+use common::prop_check;
+use std::collections::{BTreeMap, BTreeSet};
+use tlsched::obs::hist::{bucket_index, HistogramData, DEFAULT_BOUNDS};
+use tlsched::obs::prom::{escape_label, merge_scrapes, render};
+use tlsched::obs::registry::Registry;
+use tlsched::util::rng::Pcg32;
+
+/// Log-uniform sample over 1e-4 .. 1e3 seconds: spans below the first
+/// bound (0.001), across every finite bucket, and above the last bound
+/// (100.0) into the +Inf bucket.
+fn random_value(rng: &mut Pcg32) -> f64 {
+    10f64.powf(rng.gen_f64() * 7.0 - 4.0)
+}
+
+fn random_values(rng: &mut Pcg32, n: usize) -> Vec<f64> {
+    (0..n).map(|_| random_value(rng)).collect()
+}
+
+fn random_hist(rng: &mut Pcg32) -> HistogramData {
+    let mut h = HistogramData::new();
+    for _ in 0..rng.gen_index(64) {
+        h.record(random_value(rng));
+    }
+    h
+}
+
+#[test]
+fn prop_bucket_index_is_monotone_and_total() {
+    prop_check("bucket_index monotone/total", 512, |rng| {
+        let a = 10f64.powf(rng.gen_f64() * 8.0 - 5.0);
+        let b = 10f64.powf(rng.gen_f64() * 8.0 - 5.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let (il, ih) = (bucket_index(DEFAULT_BOUNDS, lo), bucket_index(DEFAULT_BOUNDS, hi));
+        if il > ih {
+            return Err(format!("index decreased: {lo} -> {il}, {hi} -> {ih}"));
+        }
+        if ih > DEFAULT_BOUNDS.len() {
+            return Err(format!("index {ih} past the +Inf bucket"));
+        }
+        // the chosen bucket's bounds must actually contain the value
+        let lo_bound = if il == 0 { f64::NEG_INFINITY } else { DEFAULT_BOUNDS[il - 1] };
+        let hi_bound =
+            if il < DEFAULT_BOUNDS.len() { DEFAULT_BOUNDS[il] } else { f64::INFINITY };
+        if !(lo > lo_bound && lo <= hi_bound) {
+            return Err(format!("{lo} not in bucket {il} = ({lo_bound}, {hi_bound}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_count_and_sum_are_conserved() {
+    prop_check("count/sum conservation", 256, |rng| {
+        let n = rng.gen_index(256);
+        let samples = random_values(rng, n);
+        let mut h = HistogramData::new();
+        let mut exact_sum = 0.0;
+        for &v in &samples {
+            h.record(v);
+            exact_sum += v;
+        }
+        if h.count != n as u64 {
+            return Err(format!("count {} != {n}", h.count));
+        }
+        if h.buckets.iter().sum::<u64>() != h.count {
+            return Err("bucket totals do not add up to count".into());
+        }
+        // record() accumulates in the same order as the fold above, so
+        // the float sums are bit-identical, not merely close.
+        if h.sum != exact_sum {
+            return Err(format!("sum {} != exact {exact_sum}", h.sum));
+        }
+        // splitting the stream and merging back conserves everything
+        let k = rng.gen_index(n + 1);
+        let mut h1 = HistogramData::new();
+        let mut h2 = HistogramData::new();
+        for &v in &samples[..k] {
+            h1.record(v);
+        }
+        for &v in &samples[k..] {
+            h2.record(v);
+        }
+        h1.merge(&h2);
+        if h1.buckets != h.buckets || h1.count != h.count {
+            return Err(format!("merge of split at {k} lost samples"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_is_associative_and_commutative() {
+    prop_check("merge assoc/commut", 256, |rng| {
+        let (a, b, c) = (random_hist(rng), random_hist(rng), random_hist(rng));
+        // (a ∪ b) ∪ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ∪ (b ∪ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        if left.buckets != right.buckets || left.count != right.count {
+            return Err("merge is not associative on buckets/count".into());
+        }
+        if (left.sum - right.sum).abs() > 1e-9 * (1.0 + left.sum.abs()) {
+            return Err(format!("sums diverge: {} vs {}", left.sum, right.sum));
+        }
+        // a ∪ b == b ∪ a
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        if ab.buckets != ba.buckets || ab.count != ba.count {
+            return Err("merge is not commutative on buckets/count".into());
+        }
+        if (ab.sum - ba.sum).abs() > 1e-9 * (1.0 + ab.sum.abs()) {
+            return Err(format!("sums diverge: {} vs {}", ab.sum, ba.sum));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantile_estimate_stays_in_exact_rank_bucket() {
+    prop_check("quantile bucket-width bound", 256, |rng| {
+        let n = 1 + rng.gen_index(512);
+        let samples = random_values(rng, n);
+        let mut h = HistogramData::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = (rng.gen_index(100) as f64 + 1.0) / 100.0; // (0, 1]
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        let exact = sorted[rank - 1];
+        let est = h.quantile(q);
+        let i = bucket_index(DEFAULT_BOUNDS, exact);
+        if i >= DEFAULT_BOUNDS.len() {
+            // +Inf bucket: the estimate clamps to the last finite bound
+            let last = *DEFAULT_BOUNDS.last().unwrap();
+            if est != last {
+                return Err(format!("+Inf-bucket sample: est {est} != clamp {last}"));
+            }
+        } else {
+            let lo = if i == 0 { 0.0 } else { DEFAULT_BOUNDS[i - 1] };
+            let hi = DEFAULT_BOUNDS[i];
+            if !(est > lo && est <= hi) {
+                return Err(format!(
+                    "q={q} n={n}: est {est} outside exact-rank bucket ({lo}, {hi}], exact {exact}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_label_escaping_round_trips() {
+    fn unescape(s: &str) -> String {
+        let mut out = String::new();
+        let mut it = s.chars();
+        while let Some(c) = it.next() {
+            if c != '\\' {
+                out.push(c);
+                continue;
+            }
+            match it.next() {
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                Some('n') => out.push('\n'),
+                other => {
+                    out.push('\\');
+                    if let Some(o) = other {
+                        out.push(o);
+                    }
+                }
+            }
+        }
+        out
+    }
+    prop_check("label escape round-trip", 512, |rng| {
+        let alphabet = ['a', 'z', '"', '\\', '\n', ' ', '{', '}', ',', '='];
+        let len = rng.gen_index(24);
+        let raw: String = (0..len).map(|_| alphabet[rng.gen_index(alphabet.len())]).collect();
+        let esc = escape_label(&raw);
+        if esc.contains('\n') {
+            return Err(format!("raw newline survived escaping: {raw:?}"));
+        }
+        if unescape(&esc) != raw {
+            return Err(format!("round-trip failed: {raw:?} -> {esc:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// A registry exercising every instrument kind, an escaped label value
+/// and the four stage histograms, with randomised values.
+fn random_registry(rng: &mut Pcg32) -> Registry {
+    let r = Registry::new();
+    r.counter("jobs_total", "jobs seen").add(u64::from(rng.next_u32()));
+    r.gauge("queue_depth", "queue depth").set(rng.gen_f64() * 100.0 - 50.0);
+    let nasty = ["plain", "w\"quote", "back\\slash", "new\nline"];
+    r.gauge_with("labeled", &[("path", nasty[rng.gen_index(nasty.len())])], "escaped label")
+        .set(rng.gen_f64());
+    for stage in ["plan", "execute", "merge", "exchange"] {
+        let h = r.histogram_with("stage_seconds", &[("stage", stage)], "stage durations");
+        for _ in 0..rng.gen_index(40) {
+            h.record(random_value(rng));
+        }
+    }
+    r
+}
+
+/// Split a `{…}` label body into (labels without `le`, parsed le bound).
+fn split_le(body: &str) -> Option<(String, f64)> {
+    let start = body.find("le=\"")?;
+    let rest = &body[start + 4..];
+    let end = rest.find('"')?;
+    let le = match &rest[..end] {
+        "+Inf" => f64::INFINITY,
+        s => s.parse().ok()?,
+    };
+    let mut others = String::new();
+    others.push_str(body[..start].trim_end_matches(','));
+    others.push_str(rest[end + 1..].trim_start_matches(','));
+    Some((others, le))
+}
+
+/// Conformance checker for the Prometheus text format (version 0.0.4):
+/// exactly one HELP and TYPE per family, known types only, unique
+/// series, every value parseable as f64 (incl. +Inf/-Inf/NaN), every
+/// sample covered by a TYPE line, and histogram series cumulative with
+/// `le="+Inf"` equal to `_count` and a `_sum` present.
+fn check_exposition(text: &str) -> Result<(), String> {
+    let mut type_of: BTreeMap<&str, &str> = BTreeMap::new();
+    let mut helped: BTreeSet<&str> = BTreeSet::new();
+    let mut series: BTreeMap<String, f64> = BTreeMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) =
+                rest.split_once(' ').ok_or_else(|| format!("bad TYPE line: {line}"))?;
+            if !matches!(kind, "counter" | "gauge" | "histogram") {
+                return Err(format!("unknown type {kind} for {name}"));
+            }
+            if type_of.insert(name, kind).is_some() {
+                return Err(format!("duplicate TYPE for {name}"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, _) =
+                rest.split_once(' ').ok_or_else(|| format!("bad HELP line: {line}"))?;
+            if !helped.insert(name) {
+                return Err(format!("duplicate HELP for {name}"));
+            }
+            continue;
+        }
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let sp = line.rfind(' ').ok_or_else(|| format!("sample without value: {line}"))?;
+        let (name, value) = (&line[..sp], &line[sp + 1..]);
+        if value.parse::<f64>().is_err() {
+            return Err(format!("unparseable value {value:?} in: {line}"));
+        }
+        if series.insert(name.to_string(), value.parse().unwrap()).is_some() {
+            return Err(format!("duplicate series {name}"));
+        }
+        let bare = name.split('{').next().unwrap();
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|s| {
+                bare.strip_suffix(s).filter(|b| type_of.get(b).copied() == Some("histogram"))
+            })
+            .unwrap_or(bare);
+        if !type_of.contains_key(family) {
+            return Err(format!("sample {name} has no TYPE line"));
+        }
+    }
+    for (fam, kind) in &type_of {
+        if *kind != "histogram" {
+            continue;
+        }
+        let bucket_name = format!("{fam}_bucket");
+        let mut groups: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+        for (name, &v) in &series {
+            if name.split('{').next().unwrap() != bucket_name {
+                continue;
+            }
+            let open = name.find('{').ok_or_else(|| format!("bucket without le: {name}"))?;
+            let (others, le) = split_le(&name[open + 1..name.len() - 1])
+                .ok_or_else(|| format!("bucket without le: {name}"))?;
+            groups.entry(others).or_default().push((le, v));
+        }
+        if groups.is_empty() {
+            return Err(format!("histogram {fam} has no bucket series"));
+        }
+        for (others, mut pts) in groups {
+            pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in pts.windows(2) {
+                if w[1].1 < w[0].1 {
+                    return Err(format!("{fam}{{{others}}}: buckets are not cumulative"));
+                }
+            }
+            let (last_le, last_v) = *pts.last().unwrap();
+            if last_le != f64::INFINITY {
+                return Err(format!("{fam}{{{others}}}: missing le=\"+Inf\" bucket"));
+            }
+            let suffixed = |suf: &str| {
+                if others.is_empty() {
+                    format!("{fam}{suf}")
+                } else {
+                    format!("{fam}{suf}{{{others}}}")
+                }
+            };
+            let count_name = suffixed("_count");
+            let count =
+                *series.get(&count_name).ok_or_else(|| format!("missing {count_name}"))?;
+            if last_v != count {
+                return Err(format!("{fam}: +Inf bucket {last_v} != count {count}"));
+            }
+            let sum_name = suffixed("_sum");
+            if !series.contains_key(&sum_name) {
+                return Err(format!("missing {sum_name}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_rendered_exposition_conforms() {
+    prop_check("exposition conformance", 64, |rng| {
+        check_exposition(&render(&random_registry(rng).snapshot()))
+    });
+}
+
+#[test]
+fn prop_merged_scrapes_conform_and_carry_group_labels() {
+    prop_check("merged-scrape conformance", 64, |rng| {
+        let a = render(&random_registry(rng).snapshot());
+        let b = render(&random_registry(rng).snapshot());
+        let merged = merge_scrapes(&[("0".to_string(), a), ("1".to_string(), b)]);
+        check_exposition(&merged)?;
+        for line in merged.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if !line.contains("group=\"") {
+                return Err(format!("merged sample without group label: {line}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn check_exposition_rejects_malformed_text() {
+    // the checker itself must catch format violations, or the property
+    // tests above prove nothing
+    assert!(check_exposition("# TYPE a counter\n# TYPE a counter\na 1\n").is_err());
+    assert!(check_exposition("# TYPE a counter\na 1\na 1\n").is_err());
+    assert!(check_exposition("a 1\n").is_err(), "sample without TYPE");
+    assert!(check_exposition("# TYPE a counter\na one\n").is_err(), "bad value");
+    assert!(
+        check_exposition(
+            "# TYPE h histogram\nh_bucket{le=\"+Inf\"} 2\nh_sum 1\nh_count 3\n"
+        )
+        .is_err(),
+        "+Inf bucket must equal count"
+    );
+    assert!(
+        check_exposition(
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 2\nh_sum 1\nh_count 2\n"
+        )
+        .is_err(),
+        "missing +Inf bucket"
+    );
+}
