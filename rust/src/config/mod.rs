@@ -6,7 +6,7 @@
 //! default matching the paper's settings, so an empty config is valid.
 
 use crate::coordinator::{AdmissionConfig, AdmissionPolicy};
-use crate::memsim::{CacheConfig, HierarchyConfig};
+use crate::memsim::HierarchyConfig;
 use crate::scheduler::{SchedulerConfig, SchedulerKind};
 use std::collections::BTreeMap;
 
@@ -54,6 +54,11 @@ pub struct RunConfig {
     /// Deterministic fault-injection spec (`[faults] spec`, same
     /// grammar as `TLSCHED_FAULTS`); empty = injection disabled.
     pub faults: String,
+    /// Locality-observatory sample rate in rounds
+    /// (`[obs] locality_sample`, also `--locality-sample`): every
+    /// 1-in-N rounds is replayed through the cache simulator
+    /// (DESIGN.md §13). 0 = profiling off.
+    pub locality_sample: u64,
     /// Serving-mode settings (`[serve]` section).
     pub serve: ServeSettings,
 }
@@ -122,6 +127,7 @@ impl Default for RunConfig {
             deadline_grace: 0.0,
             round_watchdog_s: 0.0,
             faults: String::new(),
+            locality_sample: 0,
             serve: ServeSettings::default(),
         }
     }
@@ -250,17 +256,59 @@ impl RunConfig {
         s.fused = get_parse(&raw, "scheduler.fused", s.fused)?;
         cfg.scheduler = s;
 
-        // [memory]
-        let mut h = HierarchyConfig::default();
-        if raw.get("memory.preset").map(|s| s.as_str()) == Some("small") {
-            h = HierarchyConfig::small();
-        }
-        h.llc = CacheConfig {
-            capacity: get_parse(&raw, "memory.llc_bytes", h.llc.capacity)?,
-            ..h.llc
+        // [memsim] — the simulated hierarchy behind the probe seam,
+        // `tlsched profile` and the locality observatory. `[memory]` is
+        // the legacy section name (preset/llc_bytes/dram_latency only);
+        // `[memsim]` keys win when both are present. Every level is
+        // validated here so a bad geometry fails the launch with the
+        // offending key instead of panicking inside `Cache::new`.
+        let preset = raw
+            .get("memsim.preset")
+            .or_else(|| raw.get("memory.preset"))
+            .map(|s| s.as_str())
+            .unwrap_or("default");
+        let mut h = match preset {
+            "default" => HierarchyConfig::default(),
+            "small" => HierarchyConfig::small(),
+            "tiny" => HierarchyConfig::tiny(),
+            other => return Err(ConfigError::Invalid("memsim.preset", other.into())),
         };
+        h.llc.capacity = get_parse(&raw, "memory.llc_bytes", h.llc.capacity)?;
         h.dram_latency = get_parse(&raw, "memory.dram_latency", h.dram_latency)?;
+        h.l1.capacity = get_parse(&raw, "memsim.l1_bytes", h.l1.capacity)?;
+        h.l2.capacity = get_parse(&raw, "memsim.l2_bytes", h.l2.capacity)?;
+        h.llc.capacity = get_parse(&raw, "memsim.llc_bytes", h.llc.capacity)?;
+        h.dram_latency = get_parse(&raw, "memsim.dram_latency", h.dram_latency)?;
+        if raw.contains_key("memsim.line_size") {
+            let line = get_parse(&raw, "memsim.line_size", h.l1.line_size)?;
+            h.l1.line_size = line;
+            h.l2.line_size = line;
+            h.llc.line_size = line;
+        }
+        if raw.contains_key("memsim.assoc") {
+            let assoc = get_parse(&raw, "memsim.assoc", h.l1.assoc)?;
+            h.l1.assoc = assoc;
+            h.l2.assoc = assoc;
+            h.llc.assoc = assoc;
+        }
+        for (key, c) in
+            [("memsim.l1_bytes", &h.l1), ("memsim.l2_bytes", &h.l2), ("memsim.llc_bytes", &h.llc)]
+        {
+            if let Err(e) = c.validate() {
+                let key = if e.starts_with("line_size") { "memsim.line_size" } else { key };
+                return Err(ConfigError::Invalid(key, e));
+            }
+        }
         cfg.hierarchy = h;
+
+        // [obs]
+        cfg.locality_sample = get_parse(&raw, "obs.locality_sample", 0u64)?;
+        if raw.contains_key("obs.locality_sample") && cfg.locality_sample == 0 {
+            return Err(ConfigError::Invalid(
+                "obs.locality_sample",
+                "must be >= 1 (omit to disable)".into(),
+            ));
+        }
 
         // [coordinator]
         cfg.max_concurrent = get_parse(&raw, "coordinator.max_concurrent", 32usize)?;
@@ -550,6 +598,63 @@ max_concurrent = 4
         assert!(RunConfig::from_str("[faults]\nspec = \"panic=oops\"\n").is_err());
         // empty spec is explicitly fine (injection off)
         assert!(RunConfig::from_str("[faults]\nspec = \"\"\n").unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn memsim_section_parses() {
+        let cfg = RunConfig::from_str(
+            "[memsim]\npreset = \"tiny\"\nl1_bytes = 16384\nline_size = 128\ndram_latency = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.hierarchy.l1.capacity, 16384);
+        assert_eq!(cfg.hierarchy.l1.line_size, 128);
+        assert_eq!(cfg.hierarchy.l2.line_size, 128);
+        assert_eq!(cfg.hierarchy.llc.capacity, 128 << 10, "tiny preset llc");
+        assert_eq!(cfg.hierarchy.dram_latency, 250);
+        // legacy [memory] keys still work; [memsim] wins when both given
+        let legacy =
+            RunConfig::from_str("[memory]\npreset = \"small\"\nllc_bytes = 2097152\n").unwrap();
+        assert_eq!(legacy.hierarchy.llc.capacity, 2 << 20);
+        assert_eq!(legacy.hierarchy.l1.capacity, 8 << 10);
+        let both = RunConfig::from_str(
+            "[memory]\nllc_bytes = 2097152\n\n[memsim]\nllc_bytes = 4194304\n",
+        )
+        .unwrap();
+        assert_eq!(both.hierarchy.llc.capacity, 4 << 20);
+    }
+
+    #[test]
+    fn memsim_rejections_name_the_key() {
+        // non-power-of-two line size: key-named error, not a deep panic
+        let e = RunConfig::from_str("[memsim]\nline_size = 48\n").unwrap_err();
+        assert!(e.to_string().contains("memsim.line_size"), "{e}");
+        // capacity not divisible into whole sets
+        let e = RunConfig::from_str("[memsim]\nl1_bytes = 1000\n").unwrap_err();
+        assert!(e.to_string().contains("memsim.l1_bytes"), "{e}");
+        // zero capacity → zero sets
+        let e = RunConfig::from_str("[memsim]\nl2_bytes = 0\n").unwrap_err();
+        assert!(e.to_string().contains("memsim.l2_bytes"), "{e}");
+        // divisible, but a non-power-of-two set count (would silently
+        // alias under the cache's set mask)
+        let e = RunConfig::from_str("[memsim]\nllc_bytes = 3145728\n").unwrap_err();
+        assert!(e.to_string().contains("memsim.llc_bytes"), "{e}");
+        // unknown preset
+        assert!(RunConfig::from_str("[memsim]\npreset = \"huge\"\n").is_err());
+        // the legacy key goes through the same validation (this was a
+        // deep `Cache::new` panic before the observatory landed)
+        let e = RunConfig::from_str("[memory]\nllc_bytes = 12345\n").unwrap_err();
+        assert!(e.to_string().contains("llc_bytes"), "{e}");
+    }
+
+    #[test]
+    fn obs_locality_sample_parses() {
+        assert_eq!(RunConfig::from_str("").unwrap().locality_sample, 0, "off by default");
+        let cfg = RunConfig::from_str("[obs]\nlocality_sample = 16\n").unwrap();
+        assert_eq!(cfg.locality_sample, 16);
+        // an explicit zero is a contradiction, not a silent disable
+        let e = RunConfig::from_str("[obs]\nlocality_sample = 0\n").unwrap_err();
+        assert!(e.to_string().contains("obs.locality_sample"), "{e}");
+        assert!(RunConfig::from_str("[obs]\nlocality_sample = nope\n").is_err());
     }
 
     #[test]

@@ -326,6 +326,14 @@ impl<'g> Coordinator<'g> {
         // every resident job is bit-identical to its pre-round state.
         // Failing the offending job and discarding the round is
         // therefore exact for the survivors, not best-effort.
+        //
+        // Locality observatory (DESIGN.md §13): advance the sampler's
+        // round clock before the round executes so its block tasks see
+        // a settled sampled/off-sample decision. One relaxed load when
+        // disarmed.
+        if crate::obs::locality::active() {
+            crate::obs::locality::round_tick();
+        }
         let round_t = Instant::now();
         let sharded = &mut self.sharded;
         let sched = &mut self.sched;

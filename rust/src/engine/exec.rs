@@ -148,6 +148,34 @@ pub fn process_block<P: Probe>(
     stats
 }
 
+/// Replay the per-job access *envelope* of one block through `probe`:
+/// the touch stream [`process_block`] would issue for job `jid` if
+/// every vertex of the block were active, in the same probe order
+/// (delta + value lane scan, offset pair, targets, weights, target
+/// delta lanes). The locality observatory (`crate::obs::locality`)
+/// uses this to sample cache behavior without borrowing job lanes —
+/// the envelope is a deterministic upper bound on the real stream
+/// (inactive vertices cost only the lane scan in the real kernel).
+pub fn replay_block_envelope<P: Probe>(g: &Graph, block: &Block, jid: u32, probe: &mut P) {
+    let weighted = g.is_weighted();
+    for v in block.vertices() {
+        let vi = v as usize;
+        probe.touch(Region::Deltas(jid), v as u64);
+        probe.touch(Region::Values(jid), v as u64);
+        probe.touch(Region::OutOffsets, v as u64);
+        probe.touch(Region::OutOffsets, v as u64 + 1);
+        let start = g.out_offsets[vi] as usize;
+        let end = g.out_offsets[vi + 1] as usize;
+        for e in start..end {
+            probe.touch(Region::OutTargets, e as u64);
+            if weighted {
+                probe.touch(Region::OutWeights, e as u64);
+            }
+            probe.touch(Region::Deltas(jid), g.out_targets[e] as u64);
+        }
+    }
+}
+
 /// One full sweep over all blocks in order (the unscheduled baseline's
 /// inner loop). Returns aggregate counters.
 pub fn full_sweep<P: Probe>(

@@ -194,6 +194,46 @@ pub fn process_block_fused_on<P: Probe>(
     stats
 }
 
+/// Replay the fused access *envelope* of one block through `probe`:
+/// the touch stream [`process_block_fused_on`] would issue for the
+/// given job ids if every vertex were active for every job — per
+/// vertex each job's delta/value lane, the structure row once, and per
+/// edge each job's target delta lane. Counterpart of
+/// [`super::exec::replay_block_envelope`] for the locality
+/// observatory; same upper-envelope caveat applies.
+pub fn replay_block_fused_envelope<P: Probe>(
+    g: &Graph,
+    block: &Block,
+    job_ids: &[u32],
+    probe: &mut P,
+) {
+    if job_ids.is_empty() {
+        return;
+    }
+    let weighted = g.is_weighted();
+    for v in block.vertices() {
+        let vi = v as usize;
+        for &jid in job_ids {
+            probe.touch(Region::Deltas(jid), v as u64);
+            probe.touch(Region::Values(jid), v as u64);
+        }
+        probe.touch(Region::OutOffsets, v as u64);
+        probe.touch(Region::OutOffsets, v as u64 + 1);
+        let start = g.out_offsets[vi] as usize;
+        let end = g.out_offsets[vi + 1] as usize;
+        for e in start..end {
+            probe.touch(Region::OutTargets, e as u64);
+            if weighted {
+                probe.touch(Region::OutWeights, e as u64);
+            }
+            let t = g.out_targets[e] as u64;
+            for &jid in job_ids {
+                probe.touch(Region::Deltas(jid), t);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -16,8 +16,10 @@ pub mod fused;
 pub mod job;
 
 pub use exec::{
-    full_sweep, process_block, run_single_to_convergence, BlockRunStats, NoProbe, Probe,
-    SimProbe,
+    full_sweep, process_block, replay_block_envelope, run_single_to_convergence, BlockRunStats,
+    NoProbe, Probe, SimProbe,
 };
-pub use fused::{process_block_fused, process_block_fused_on, FusedStats};
+pub use fused::{
+    process_block_fused, process_block_fused_on, replay_block_fused_envelope, FusedStats,
+};
 pub use job::{BlockSummary, JobId, JobSpec, JobState};

@@ -10,6 +10,7 @@
 //! * `loadgen`  — client: closed-loop trace replay over N connections.
 //! * `gen`      — generate a workload trace (JSONL) or a graph file.
 //! * `info`     — print graph/partition/queue statistics.
+//! * `profile`  — A/B per-job vs fused through the cache simulator.
 //! * `xla`      — run the batched XLA backend (requires artifacts).
 //!
 //! Examples:
@@ -26,6 +27,8 @@
 //! tlsched loadgen --addr 127.0.0.1:7171 --connections 4 --minutes 2
 //! tlsched loadgen --addr 127.0.0.1:7180 --http true --minutes 2
 //! tlsched gen --trace trace.jsonl --days 7
+//! tlsched profile --graph rmat --scale 12 --jobs 8 --memsim tiny
+//! tlsched serve --source live --minutes 1 --http 127.0.0.1:7180 --locality-sample 8
 //! tlsched xla --jobs 4
 //! ```
 
@@ -34,7 +37,7 @@ use tlsched::coordinator::{
     AdmissionPolicy, AdmissionQueue, Coordinator, CoordinatorConfig, JobRequest, SubmitError,
 };
 use tlsched::engine::JobSpec;
-use tlsched::graph::BlockPartition;
+use tlsched::graph::{BlockPartition, Graph};
 use tlsched::net::{
     proto, run_http_loadgen_with, run_loadgen_with, Client, HttpServer, HttpServerConfig,
     NetServer, NetServerConfig, RetryPolicy, Router, RouterConfig, Submitted,
@@ -64,11 +67,12 @@ fn main() {
         "loadgen" => cmd_loadgen(&rest),
         "gen" => cmd_gen(&rest),
         "info" => cmd_info(&rest),
+        "profile" => cmd_profile(&rest),
         "xla" => cmd_xla(&rest),
         _ => {
             println!(
                 "tlsched — two-level scheduling for concurrent graph processing\n\n\
-                 USAGE: tlsched <run|replay|serve|route|submit|loadgen|gen|info|xla> [options]\n\
+                 USAGE: tlsched <run|replay|serve|route|submit|loadgen|gen|info|profile|xla> [options]\n\
                  Run `tlsched <cmd> --help` for per-command options."
             );
             0
@@ -103,6 +107,7 @@ fn common_spec(bin: &'static str, about: &'static str) -> ArgSpec {
         .opt("shards", "1", "scheduler shards, byte-balanced block ranges (1 = unsharded)")
         .opt("deadline-grace", "0", "cancel jobs past deadline*grace (0 = never cancel)")
         .opt("round-watchdog-s", "0", "log+count rounds over this wall budget (0 = off)")
+        .opt("locality-sample", "0", "replay 1-in-N rounds through the cache simulator (0 = off)")
 }
 
 fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
@@ -197,6 +202,15 @@ fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
     if a.was_set("round-watchdog-s") {
         cfg.round_watchdog_s = a.f64("round-watchdog-s");
     }
+    if a.was_set("locality-sample") {
+        cfg.locality_sample = a.u64("locality-sample");
+        if cfg.locality_sample == 0 {
+            // Mirrors the `[obs] locality_sample` config rejection: an
+            // explicit zero is a contradiction, not "off".
+            eprintln!("--locality-sample must be >= 1 (omit to disable)");
+            std::process::exit(2);
+        }
+    }
     // config-file fault spec (env TLSCHED_FAULTS, installed at
     // startup, takes precedence)
     if !cfg.faults.is_empty() && !tlsched::util::faults::active() {
@@ -212,6 +226,19 @@ fn build_config(a: &tlsched::util::args::Args) -> RunConfig {
         }
     }
     cfg
+}
+
+/// Install + arm the locality observatory (`tlsched::obs::locality`,
+/// DESIGN.md §13) when sampled profiling was requested. Must run after
+/// the graph and partition exist and before the first round so every
+/// sampled round sees a settled address map.
+fn arm_locality(cfg: &RunConfig, g: &Graph, part: &BlockPartition) {
+    if cfg.locality_sample == 0 {
+        return;
+    }
+    tlsched::obs::locality::install(cfg.hierarchy, cfg.locality_sample, g, part);
+    tlsched::obs::locality::arm();
+    log::info!("locality observatory armed: replaying 1-in-{} rounds", cfg.locality_sample);
 }
 
 fn cmd_run(argv: &[String]) -> i32 {
@@ -234,6 +261,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         part.num_blocks(),
         part.target_vertices
     );
+    arm_locality(&cfg, &g, &part);
     let kinds: Vec<JobKind> = a
         .list::<String>("mix")
         .iter()
@@ -308,6 +336,7 @@ fn cmd_replay(argv: &[String]) -> i32 {
     ccfg.shards = cfg.shards;
     ccfg.deadline_grace = cfg.deadline_grace;
     ccfg.round_watchdog_s = cfg.round_watchdog_s;
+    arm_locality(&cfg, &g, &part);
     let mut coord = Coordinator::new(&g, &part, ccfg);
     let m = coord.run_trace(&jobs, a.f64("time-scale"));
     println!(
@@ -402,6 +431,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
 
     let g = cfg.build_graph().expect("graph");
     let part = cfg.build_partition(&g, a.usize("max-concurrent"));
+    arm_locality(&cfg, &g, &part);
     let time_scale = a.f64("time-scale");
     let (submitter, mut queue) = AdmissionQueue::live(&cfg.serve.admission, time_scale);
     let nv = (g.num_vertices() as u32).max(1);
@@ -586,6 +616,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
 fn serve_tcp(a: &tlsched::util::args::Args, cfg: &RunConfig) -> i32 {
     let g = cfg.build_graph().expect("graph");
     let part = cfg.build_partition(&g, a.usize("max-concurrent"));
+    arm_locality(cfg, &g, &part);
     let time_scale = a.f64("time-scale");
     let (submitter, mut queue) = AdmissionQueue::live(&cfg.serve.admission, time_scale);
     let nv = (g.num_vertices() as u32).max(1);
@@ -1183,6 +1214,160 @@ fn cmd_info(argv: &[String]) -> i32 {
     let max_deg =
         (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap_or(0);
     println!("max out-degree:  {max_deg}");
+    // configured memsim hierarchy and the block sizing it implies —
+    // lets operators sanity-check block granularity against L2 before
+    // arming `--locality-sample` or running `tlsched profile`
+    let h = &cfg.hierarchy;
+    println!("memsim hierarchy:");
+    for (name, c) in [("L1", &h.l1), ("L2", &h.l2), ("LLC", &h.llc)] {
+        println!(
+            "  {:<4}{:>9} bytes  line {:>3}  assoc {:>2}  sets {:>6}  hit {} cyc",
+            name, c.capacity, c.line_size, c.assoc, c.sets(), c.hit_latency
+        );
+    }
+    println!("  DRAM latency {} cyc, {} work cyc/access", h.dram_latency, h.work_cycles_per_access);
+    let jobs = a.usize("jobs");
+    for (label, budget) in [("cache budget", cfg.cache_budget), ("L2-sized", h.l2.capacity)] {
+        let p = BlockPartition::by_cache_budget(&g, budget, jobs);
+        println!(
+            "  {:<13}{:>9} bytes -> {} vertices/block ({} blocks at {} jobs)",
+            label, budget, p.target_vertices, p.num_blocks(), jobs
+        );
+    }
+    if cfg.locality_sample > 0 {
+        println!("locality sample: 1-in-{} rounds", cfg.locality_sample);
+    }
+    0
+}
+
+/// `tlsched profile`: run the same batch twice through the cache
+/// simulator — per-job kernels vs the fused multi-job kernel — and emit
+/// BENCH_locality.json quantifying the paper's redundancy reduction
+/// (Figs 4–5): per-level miss rates, stall share, and the fused/per-job
+/// simulated DRAM traffic ratio. Unlike the sampled observatory
+/// (`--locality-sample`), this drives the *real* kernels through
+/// `SimProbe` on the sequential probed path, so the comparison is
+/// exact, not an envelope.
+fn cmd_profile(argv: &[String]) -> i32 {
+    use tlsched::engine::SimProbe;
+    use tlsched::memsim::{AddressMap, HierarchyConfig, HierarchyStats, MemoryHierarchy};
+    use tlsched::util::json::Json;
+
+    let spec = common_spec("tlsched profile", "A/B per-job vs fused through the cache simulator")
+        .opt("jobs", "8", "number of concurrent jobs")
+        .opt("mix", "pagerank,sssp,wcc,bfs,ppr", "job-kind rotation")
+        .opt("memsim", "tiny", "hierarchy preset for the comparison: tiny|small|default")
+        .opt("out", "BENCH_locality.json", "write the comparison JSON here (empty = stdout)");
+    let a = match spec.parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => return usage_err(&spec, e),
+    };
+    let mut cfg = build_config(&a);
+    if a.was_set("memsim") || a.str("config").is_empty() {
+        cfg.hierarchy = match a.str("memsim") {
+            "tiny" => HierarchyConfig::tiny(),
+            "small" => HierarchyConfig::small(),
+            "default" => HierarchyConfig::default(),
+            other => {
+                eprintln!("unknown memsim preset '{other}' (want tiny|small|default)");
+                return 2;
+            }
+        };
+    }
+    let g = cfg.build_graph().expect("graph");
+    let jobs = a.usize("jobs");
+    let part = cfg.build_partition(&g, jobs);
+    let kinds: Vec<JobKind> = a
+        .list::<String>("mix")
+        .iter()
+        .filter_map(|s| JobKind::from_name(s))
+        .collect();
+    if kinds.is_empty() {
+        eprintln!("--mix must name at least one of pagerank,sssp,wcc,bfs,ppr");
+        return 2;
+    }
+    let specs: Vec<JobSpec> = (0..jobs)
+        .map(|i| JobSpec::new(kinds[i % kinds.len()], (i * 97) as u32 % g.num_vertices() as u32))
+        .collect();
+    log::info!(
+        "profiling {} jobs over {} blocks, preset l1={} l2={} llc={}",
+        jobs,
+        part.num_blocks(),
+        cfg.hierarchy.l1.capacity,
+        cfg.hierarchy.l2.capacity,
+        cfg.hierarchy.llc.capacity,
+    );
+    let map = AddressMap::new(&g);
+    // One fresh coordinator + hierarchy per mode: both runs see the
+    // same cold caches and the same specs; only `fused` differs, which
+    // changes the address stream but never the fixpoints.
+    let run_mode = |fused: bool| -> (u64, HierarchyStats) {
+        let mut sc = cfg.scheduler.clone();
+        sc.fused = fused;
+        let mut ccfg = CoordinatorConfig::new(sc);
+        // probed rounds are sequential; don't spawn an idle pool
+        ccfg.workers = 1;
+        let mut coord = Coordinator::new(&g, &part, ccfg);
+        let mut mem = MemoryHierarchy::new(cfg.hierarchy);
+        let m = {
+            let mut probe = SimProbe { map: &map, mem: &mut mem };
+            coord.run_batch_probed(&specs, &mut probe)
+        };
+        (m.rounds, mem.stats())
+    };
+    let (rounds_pj, s_pj) = run_mode(false);
+    let (rounds_f, s_f) = run_mode(true);
+    let line = cfg.hierarchy.l1.line_size;
+    let (dram_pj, dram_f) = (s_pj.dram_bytes(line), s_f.dram_bytes(line));
+    let traffic_ratio = dram_f as f64 / dram_pj.max(1) as f64;
+    println!(
+        "profile: jobs={jobs} blocks={} perjob[rounds={rounds_pj} llc_miss={:.4} stall={:.4} dram={dram_pj}B] \
+         fused[rounds={rounds_f} llc_miss={:.4} stall={:.4} dram={dram_f}B] traffic_ratio={traffic_ratio:.4}",
+        part.num_blocks(),
+        s_pj.llc_miss_rate(),
+        s_pj.stall_share(),
+        s_f.llc_miss_rate(),
+        s_f.stall_share(),
+    );
+    let mode_keys = |prefix: &str, rounds: u64, s: &HierarchyStats| {
+        vec![
+            (format!("locality_{prefix}_rounds"), Json::num(rounds as f64)),
+            (format!("locality_{prefix}_l1_miss_rate"), Json::num(s.l1.miss_rate())),
+            (format!("locality_{prefix}_l2_miss_rate"), Json::num(s.l2.miss_rate())),
+            (format!("locality_{prefix}_llc_miss_rate"), Json::num(s.llc_miss_rate())),
+            (format!("locality_{prefix}_stall_share"), Json::num(s.stall_share())),
+            (format!("locality_{prefix}_total_cycles"), Json::num(s.total_cycles() as f64)),
+            (format!("locality_{prefix}_dram_bytes"), Json::num(s.dram_bytes(line) as f64)),
+        ]
+    };
+    let mut fields: Vec<(String, Json)> = vec![
+        ("locality_jobs".to_string(), Json::num(jobs as f64)),
+        ("locality_blocks".to_string(), Json::num(part.num_blocks() as f64)),
+        ("locality_preset_llc_bytes".to_string(), Json::num(cfg.hierarchy.llc.capacity as f64)),
+    ];
+    fields.extend(mode_keys("perjob", rounds_pj, &s_pj));
+    fields.extend(mode_keys("fused", rounds_f, &s_f));
+    fields.push(("locality_traffic_ratio".to_string(), Json::num(traffic_ratio)));
+    // verification bit the CI leg asserts: fused must move strictly
+    // less simulated DRAM than per-job on the same workload
+    fields.push((
+        "locality_verified".to_string(),
+        Json::num(if dram_f < dram_pj { 1.0 } else { 0.0 }),
+    ));
+    let json = Json::Obj(fields.into_iter().collect());
+    if !a.str("out").is_empty() {
+        std::fs::write(a.str("out"), json.to_string()).expect("write profile json");
+        log::info!("profile written to {}", a.str("out"));
+    } else {
+        println!("{json}");
+    }
+    if dram_f >= dram_pj {
+        eprintln!(
+            "profile: fused DRAM traffic {dram_f}B is not below per-job {dram_pj}B — \
+             try a smaller --memsim preset or more --jobs"
+        );
+        return 1;
+    }
     0
 }
 

@@ -34,6 +34,11 @@ impl CacheConfig {
         if self.sets() == 0 {
             return Err("zero sets".into());
         }
+        if !self.sets().is_power_of_two() {
+            // `Cache` indexes sets with a mask; a non-power-of-two set
+            // count would silently alias lines instead of erroring.
+            return Err("capacity / (line_size * assoc) must be a power of two".into());
+        }
         Ok(())
     }
 }

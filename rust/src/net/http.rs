@@ -28,10 +28,16 @@
 //!                    in-process registry)
 //! GET  /trace     -> 200 flight-recorder dump, one JSON object per
 //!                    line (see crate::obs::flight)
+//! GET  /blocks    -> 200 locality-observatory heat JSON: per-block
+//!                    access heat / sharing / last-touch plus hierarchy
+//!                    hit rates (`{"armed":false,...}` stub until
+//!                    `--locality-sample` arms it; see crate::obs::locality)
 //! GET  /events    -> 200 text/event-stream; pushes `event: job`
 //!                    frames for every terminal and `event: metrics`
 //!                    frames on each report tick (SSE)
-//! GET  /          -> 200 static status page (text/html)
+//! GET  /          -> 200 live dashboard (text/html): static shell
+//!                    whose script subscribes to /events and polls
+//!                    /blocks for the heat strip
 //! POST /shutdown  -> 200; stops accepting and releases the primary
 //!                    submitter (the HTTP analog of the TCP server's
 //!                    last-client-out shutdown)
@@ -315,22 +321,15 @@ impl Shared {
         subs.retain(|tx| tx.send(frame.clone()).is_ok());
     }
 
-    /// Static status page: the same JSON the API serves, readable in a
-    /// browser without tooling.
+    /// Live dashboard (`GET /`): a static HTML shell whose script
+    /// subscribes to `GET /events` (SSE) for metrics/job frames and
+    /// polls `GET /blocks` for the locality heat strip. Pure
+    /// client-side — the server renders no state into the page, so a
+    /// request costs one string clone and the page degrades gracefully
+    /// (the strip shows "observatory disarmed" when `--locality-sample`
+    /// was not given).
     fn status_page(&self) -> String {
-        let esc = |s: String| s.replace('<', "&lt;");
-        format!(
-            "<!DOCTYPE html><html><head><title>tlsched serve</title></head><body>\
-             <h1>tlsched serve</h1>\
-             <h2>front-end</h2><pre>{}</pre>\
-             <h2>latest serve metrics</h2><pre>{}</pre>\
-             <p>API: POST /jobs &middot; GET /jobs/&lt;id&gt; &middot; \
-             GET /status &middot; GET /metrics[?format=prometheus] &middot; \
-             GET /trace &middot; GET /events</p>\
-             </body></html>",
-            esc(self.status_json()),
-            esc(self.metrics_json()),
-        )
+        DASHBOARD_HTML.to_string()
     }
 
     fn conn_closed(&self) {
@@ -341,6 +340,116 @@ impl Shared {
         self.shutdown.store(true, Ordering::Release);
     }
 }
+
+/// The `GET /` payload: a self-contained live dashboard. No templating
+/// — all state arrives client-side via `GET /events` (SSE metrics/job
+/// frames), `GET /status`, and a 2s `GET /blocks` poll for the
+/// locality heat strip. Raw string, so keep `"#` out of the markup.
+const DASHBOARD_HTML: &str = r##"<!DOCTYPE html><html><head><meta charset='utf-8'>
+<title>tlsched serve</title>
+<style>
+body{font-family:system-ui,sans-serif;margin:1.5rem;background:#14161a;color:#d8dce2}
+h1{font-size:1.15rem;margin:0 0 .3rem}
+h2{font-size:.95rem;color:#8fb8de;margin:1.3rem 0 .4rem}
+.muted{color:#79808a;font-size:.8rem}
+canvas{background:#1b1e24;border:1px solid #2c313a}
+table{border-collapse:collapse;font-size:.85rem}
+td,th{border:1px solid #2c313a;padding:2px 10px;text-align:right}
+th{color:#8fb8de;font-weight:600}
+td:first-child,th:first-child{text-align:left}
+div.heat{display:flex;flex-wrap:wrap;gap:1px;max-width:62rem}
+div.heat span{width:9px;height:15px;background:#22262d;display:inline-block}
+</style></head><body>
+<h1>tlsched serve &mdash; live</h1>
+<div class='muted' id='meta'>waiting for the first report tick&hellip;</div>
+<h2>throughput (jobs/h, green) &middot; p95 latency (s, amber)</h2>
+<canvas id='spark' width='620' height='90'></canvas>
+<h2>block heat <span class='muted' id='heatmeta'></span></h2>
+<div class='heat' id='heat'></div>
+<h2>serve counters</h2>
+<table><tbody id='counters'></tbody></table>
+<h2>recent terminals</h2>
+<table id='jobs'><thead><tr><th>id</th><th>kind</th><th>state</th><th>latency s</th></tr></thead>
+<tbody></tbody></table>
+<p class='muted'>API: POST /jobs &middot; GET /jobs/&lt;id&gt; &middot; GET /status &middot;
+GET /metrics[?format=prometheus] &middot; GET /trace &middot; GET /blocks &middot; GET /events</p>
+<script>
+'use strict';
+var tp=[],p95=[],terminals=[];
+function push(a,v){a.push(v);if(a.length>120)a.shift();}
+function line(ctx,a,color,w,h){
+  if(a.length<2)return;
+  var max=Math.max.apply(null,a)||1;
+  ctx.strokeStyle=color;ctx.lineWidth=1.5;ctx.beginPath();
+  for(var i=0;i<a.length;i++){
+    var x=i*(w/119),y=h-2-(a[i]/max)*(h-8);
+    if(i===0)ctx.moveTo(x,y);else ctx.lineTo(x,y);
+  }
+  ctx.stroke();
+}
+function draw(){
+  var c=document.getElementById('spark'),ctx=c.getContext('2d');
+  ctx.clearRect(0,0,c.width,c.height);
+  line(ctx,tp,'#6fbf73',c.width,c.height);
+  line(ctx,p95,'#e0a458',c.width,c.height);
+}
+function fmt(x,d){return (typeof x==='number')?x.toFixed(d):'-';}
+function counters(m){
+  var rows=[['completed',m.completed],['failed',m.failed],['cancelled',m.cancelled],
+    ['shed',m.shed],['rejected',m.rejected],['rounds',m.rounds],
+    ['sharing factor',fmt(m.sharing_factor,2)],['throughput /h',fmt(m.throughput_per_hour,1)],
+    ['mean latency s',fmt(m.mean_latency_s,3)],['p95 latency s',fmt(m.p95_latency_s,3)],
+    ['p95 queue wait s',fmt(m.p95_queue_wait_s,3)]];
+  var html='';
+  for(var i=0;i<rows.length;i++)
+    html+='<tr><td>'+rows[i][0]+'</td><td>'+(rows[i][1]===undefined?'-':rows[i][1])+'</td></tr>';
+  document.getElementById('counters').innerHTML=html;
+}
+function jobRows(){
+  var html='';
+  for(var i=terminals.length-1;i>=0;i--){
+    var j=terminals[i];
+    html+='<tr><td>'+j.id+'</td><td>'+(j.kind||'')+'</td><td>'+(j.state||'')+'</td><td>'+
+      fmt(j.latency_s,3)+'</td></tr>';
+  }
+  document.querySelector('#jobs tbody').innerHTML=html;
+}
+var es=new EventSource('/events');
+es.addEventListener('metrics',function(e){
+  var m;try{m=JSON.parse(e.data);}catch(err){return;}
+  document.getElementById('meta').textContent=
+    'completed '+(m.completed||0)+' / rounds '+(m.rounds||0)+
+    ' / sharing '+fmt(m.sharing_factor,2)+' / wall '+fmt(m.wall_s,1)+'s';
+  push(tp,m.throughput_per_hour||0);push(p95,m.p95_latency_s||0);
+  draw();counters(m);
+});
+es.addEventListener('job',function(e){
+  var j;try{j=JSON.parse(e.data);}catch(err){return;}
+  terminals.push(j);if(terminals.length>12)terminals.shift();
+  jobRows();
+});
+es.onerror=function(){document.getElementById('meta').textContent='event stream disconnected';};
+function heat(){
+  fetch('/blocks').then(function(r){return r.json();}).then(function(b){
+    var hm=document.getElementById('heatmeta');
+    if(!b.armed){hm.textContent='observatory disarmed (serve with --locality-sample N)';return;}
+    hm.textContent=b.num_blocks+' blocks, 1-in-'+b.sample+' sampling, '+
+      b.sampled_rounds+'/'+b.rounds_seen+' rounds sampled';
+    var max=1,i;
+    for(i=0;i<b.blocks.length;i++)if(b.blocks[i].heat>max)max=b.blocks[i].heat;
+    var html='';
+    for(i=0;i<b.blocks.length;i++){
+      var bl=b.blocks[i],t=bl.heat/max;
+      html+='<span style="background:hsl('+Math.round(225-205*t)+',70%,'+
+        Math.round(16+42*t)+'%)" title="block '+bl.id+': heat '+bl.heat+
+        ', sharing '+fmt(bl.sharing,2)+'"></span>';
+    }
+    document.getElementById('heat').innerHTML=html;
+  }).catch(function(){});
+}
+heat();setInterval(heat,2000);
+</script></body></html>
+"##;
 
 /// Handle to a running HTTP front-end. Start it before the serve loop,
 /// wire [`HttpServer::notify_done`] into the completion hook (before
@@ -837,6 +946,9 @@ fn dispatch(
         ("GET", "/trace") => {
             (200, crate::obs::global().flight.dump_jsonl(), "application/x-ndjson")
         }
+        ("GET", "/blocks") => {
+            (200, crate::obs::locality::blocks_json().to_string(), JSON)
+        }
         ("GET", "/") => (200, shared.status_page(), "text/html"),
         ("POST", "/shutdown") => {
             log::info!("http: shutdown requested");
@@ -1280,6 +1392,11 @@ mod tests {
         assert_eq!(st, 200);
         let (st, page) = c.request("GET", "/", None).unwrap();
         assert_eq!((st, page), (200, Json::Null), "status page is html, not json");
+        // the heat endpoint answers a disarmed stub when the locality
+        // observatory was never installed (no --locality-sample here)
+        let (st, blocks) = c.request("GET", "/blocks", None).unwrap();
+        assert_eq!(st, 200);
+        assert!(blocks.get("blocks").is_some(), "blocks stub missing: {blocks}");
         let (st, _) = c.request("GET", "/nope", None).unwrap();
         assert_eq!(st, 404);
         let (st, _) = c.request("DELETE", "/jobs", None).unwrap();

@@ -1,0 +1,487 @@
+//! Locality observatory: online, sampled cache-residency profiling of
+//! the serving path (DESIGN.md §13).
+//!
+//! The paper's thesis is that correlation-aware scheduling keeps hot
+//! blocks cache-resident across concurrent jobs; this module makes
+//! that visible in production. Every 1-in-N rounds (the sample rate),
+//! the block tasks of that round replay their access *envelope* — the
+//! touch stream the kernels would issue with every vertex active
+//! ([`crate::engine::replay_block_envelope`] /
+//! [`crate::engine::replay_block_fused_envelope`]) — through a private
+//! memsim [`MemoryHierarchy`], and the sampler accumulates per-block
+//! heat, reuse distances (in sampled rounds), the CAJS sharing ratio
+//! (distinct jobs touching a block within one round), and per-level
+//! hit/miss + stall counters into the `obs` registry families
+//! `tlsched_block_heat`, `tlsched_reuse_distance`,
+//! `tlsched_cache_{hits,misses}_total{level}`,
+//! `tlsched_job_sharing_ratio`, `tlsched_locality_stall_share` and
+//! `tlsched_locality_sampled_rounds_total`.
+//!
+//! **Zero cost when disarmed** (mirrors [`crate::util::faults`]): the
+//! two call sites — [`crate::scheduler::parallel`]'s `run_block_task`
+//! and the coordinator's `step` — each pay exactly one relaxed atomic
+//! load ([`active`]); the hooks themselves are `#[cold]`. Armed but
+//! off-sample rounds pay one more relaxed load per block task
+//! (`SAMPLING`) and never take the state lock. The envelope replay is
+//! an upper bound on the real stream (inactive vertices cost only the
+//! lane scan in the real kernels), which keeps sampling independent of
+//! job lane contents and therefore deterministic for a given block
+//! dispatch sequence.
+//!
+//! The exact (non-envelope) measurement lives in `tlsched profile`,
+//! which drives the real kernels through [`crate::engine::SimProbe`]
+//! on the batch path and emits `BENCH_locality.json`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{replay_block_envelope, replay_block_fused_envelope, SimProbe};
+use crate::graph::{Block, BlockPartition, Graph};
+use crate::memsim::{AddressMap, HierarchyConfig, HierarchyStats, MemoryHierarchy};
+use crate::obs::{Counter, Gauge, Histogram};
+use crate::util::json::Json;
+
+/// What one sampled round observed for one touched block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockTouch {
+    pub block: u32,
+    /// Distinct jobs that touched the block this round (CAJS sharing).
+    pub jobs: u32,
+    /// Sampled rounds since the block's previous touch (`None` on the
+    /// first touch ever).
+    pub reuse: Option<u64>,
+}
+
+/// Aggregates flushed when a sampled round ends.
+#[derive(Debug, Clone, Default)]
+pub struct RoundSummary {
+    pub touched: Vec<BlockTouch>,
+    /// Mean `jobs` over `touched` — the round's sharing ratio.
+    pub mean_sharing: f64,
+}
+
+/// The sampling profiler core. Owns a private [`MemoryHierarchy`] and
+/// the per-block accumulators; deliberately free of globals so the
+/// property tests (`tests/prop_memsim.rs`) can drive it directly.
+pub struct LocalitySampler {
+    sample: u64,
+    map: AddressMap,
+    mem: MemoryHierarchy,
+    blocks: Vec<Block>,
+    /// Rounds begun (1-based once `begin_round` ran).
+    round_seq: u64,
+    /// Sampled rounds begun.
+    sampled_seq: u64,
+    cur_sampled: bool,
+    /// Cumulative job-touches per block over all sampled rounds.
+    heat: Vec<u64>,
+    /// Sampled rounds in which the block was touched at least once.
+    touch_rounds: Vec<u64>,
+    /// Absolute round (1-based) of the block's last sampled touch.
+    last_round: Vec<u64>,
+    /// `sampled_seq` of the block's last touch (0 = never).
+    last_sampled: Vec<u64>,
+    /// Scratch: distinct-job count per block for the current round.
+    round_jobs: Vec<u32>,
+    /// Scratch: blocks touched in the current round.
+    round_list: Vec<u32>,
+}
+
+impl LocalitySampler {
+    /// `sample` is the 1-in-N round rate; must be >= 1 (1 = every
+    /// round). The partition's blocks are cloned so the sampler needs
+    /// no graph borrows after construction besides the CSR itself.
+    pub fn new(hcfg: HierarchyConfig, sample: u64, g: &Graph, part: &BlockPartition) -> Self {
+        assert!(sample >= 1, "locality sample rate must be >= 1");
+        let nb = part.blocks.len();
+        LocalitySampler {
+            sample,
+            map: AddressMap::new(g),
+            mem: MemoryHierarchy::new(hcfg),
+            blocks: part.blocks.clone(),
+            round_seq: 0,
+            sampled_seq: 0,
+            cur_sampled: false,
+            heat: vec![0; nb],
+            touch_rounds: vec![0; nb],
+            last_round: vec![0; nb],
+            last_sampled: vec![0; nb],
+            round_jobs: vec![0; nb],
+            round_list: Vec::new(),
+        }
+    }
+
+    /// Advance the round clock: flush the round that just ended (if it
+    /// was sampled and saw any block) and decide whether the round now
+    /// beginning is sampled. Returns the flushed aggregates, if any.
+    pub fn begin_round(&mut self) -> Option<RoundSummary> {
+        let flushed = self.flush_current();
+        self.cur_sampled = self.round_seq % self.sample == 0;
+        self.round_seq += 1;
+        if self.cur_sampled {
+            self.sampled_seq += 1;
+        }
+        flushed
+    }
+
+    /// Fold the current round's scratch into the cumulative
+    /// accumulators. Called from `begin_round`; also useful directly at
+    /// end-of-run.
+    pub fn flush_current(&mut self) -> Option<RoundSummary> {
+        if self.round_list.is_empty() {
+            return None;
+        }
+        let mut touched = Vec::with_capacity(self.round_list.len());
+        let mut total_jobs = 0u64;
+        // Keep the summary deterministic regardless of task dispatch
+        // order: block tasks may record in any interleaving.
+        self.round_list.sort_unstable();
+        for &b in &self.round_list {
+            let bi = b as usize;
+            let jobs = self.round_jobs[bi];
+            self.round_jobs[bi] = 0;
+            let reuse = if self.last_sampled[bi] > 0 {
+                Some(self.sampled_seq - self.last_sampled[bi])
+            } else {
+                None
+            };
+            self.heat[bi] += jobs as u64;
+            self.touch_rounds[bi] += 1;
+            self.last_sampled[bi] = self.sampled_seq;
+            self.last_round[bi] = self.round_seq;
+            total_jobs += jobs as u64;
+            touched.push(BlockTouch { block: b, jobs, reuse });
+        }
+        let mean_sharing = total_jobs as f64 / touched.len() as f64;
+        self.round_list.clear();
+        Some(RoundSummary { touched, mean_sharing })
+    }
+
+    /// Whether the current round is being sampled.
+    pub fn is_sampling(&self) -> bool {
+        self.cur_sampled
+    }
+
+    /// Record one block task of the current round. No-op when the
+    /// round is off-sample. Replays the task's access envelope through
+    /// the private hierarchy and notes the block/job touch counts.
+    pub fn record_block(&mut self, g: &Graph, block: u32, job_ids: &[u32], fused: bool) {
+        if !self.cur_sampled || job_ids.is_empty() {
+            return;
+        }
+        let b = &self.blocks[block as usize];
+        let mut probe = SimProbe { map: &self.map, mem: &mut self.mem };
+        if fused {
+            replay_block_fused_envelope(g, b, job_ids, &mut probe);
+        } else {
+            for &jid in job_ids {
+                replay_block_envelope(g, b, jid, &mut probe);
+            }
+        }
+        let bi = block as usize;
+        if self.round_jobs[bi] == 0 {
+            self.round_list.push(block);
+        }
+        self.round_jobs[bi] += job_ids.len() as u32;
+    }
+
+    pub fn stats(&self) -> HierarchyStats {
+        self.mem.stats()
+    }
+
+    pub fn heat(&self) -> &[u64] {
+        &self.heat
+    }
+
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
+    pub fn rounds_seen(&self) -> u64 {
+        self.round_seq
+    }
+
+    pub fn sampled_rounds(&self) -> u64 {
+        self.sampled_seq
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn line_size(&self) -> usize {
+        self.mem.config().l1.line_size
+    }
+}
+
+/// Global wrapper: the sampler plus the registry instruments it
+/// publishes into, and the last published hierarchy baseline (the
+/// counters export deltas, the gauges levels).
+struct Observatory {
+    sampler: LocalitySampler,
+    published: HierarchyStats,
+    heat_hist: Arc<Histogram>,
+    reuse_hist: Arc<Histogram>,
+    sharing: Arc<Gauge>,
+    stall_share: Arc<Gauge>,
+    sampled_rounds: Arc<Counter>,
+    hits: [Arc<Counter>; 3],
+    misses: [Arc<Counter>; 3],
+}
+
+impl Observatory {
+    fn publish(&mut self, s: &RoundSummary) {
+        for t in &s.touched {
+            self.heat_hist.record(t.jobs as f64);
+            if let Some(r) = t.reuse {
+                self.reuse_hist.record(r as f64);
+            }
+        }
+        self.sharing.set(s.mean_sharing);
+        let cur = self.sampler.stats();
+        let levels = [
+            (cur.l1, self.published.l1),
+            (cur.l2, self.published.l2),
+            (cur.llc, self.published.llc),
+        ];
+        for (i, (now, was)) in levels.iter().enumerate() {
+            self.hits[i].add(now.hits - was.hits);
+            self.misses[i].add(now.misses - was.misses);
+        }
+        self.stall_share.set(cur.stall_share());
+        self.published = cur;
+        self.sampled_rounds.inc();
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static SAMPLING: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<Observatory>> = Mutex::new(None);
+
+/// The one gate the block-task and round hot paths check: a relaxed
+/// load, false unless an observatory was installed *and* armed.
+#[inline]
+pub fn active() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Install a sampler over this graph/partition (without arming it),
+/// registering the metric families on the global registry. Replaces
+/// any previous observatory.
+pub fn install(hcfg: HierarchyConfig, sample: u64, g: &Graph, part: &BlockPartition) {
+    let r = &crate::obs::global().registry;
+    let hit = |lvl| {
+        r.counter_with(
+            "tlsched_cache_hits_total",
+            &[("level", lvl)],
+            "Simulated cache hits by level over sampled rounds",
+        )
+    };
+    let miss = |lvl| {
+        r.counter_with(
+            "tlsched_cache_misses_total",
+            &[("level", lvl)],
+            "Simulated cache misses by level over sampled rounds",
+        )
+    };
+    let obs = Observatory {
+        sampler: LocalitySampler::new(hcfg, sample, g, part),
+        published: HierarchyStats::default(),
+        heat_hist: r.histogram(
+            "tlsched_block_heat",
+            "Distinct jobs touching a block in one sampled round",
+        ),
+        reuse_hist: r.histogram(
+            "tlsched_reuse_distance",
+            "Sampled rounds between consecutive touches of the same block",
+        ),
+        sharing: r.gauge(
+            "tlsched_job_sharing_ratio",
+            "Mean distinct jobs per touched block in the last sampled round",
+        ),
+        stall_share: r.gauge(
+            "tlsched_locality_stall_share",
+            "Simulated memory-stall share of cycles over sampled rounds",
+        ),
+        sampled_rounds: r.counter(
+            "tlsched_locality_sampled_rounds_total",
+            "Rounds replayed through the cache simulator",
+        ),
+        hits: [hit("l1"), hit("l2"), hit("llc")],
+        misses: [miss("l1"), miss("l2"), miss("llc")],
+    };
+    *STATE.lock().unwrap() = Some(obs);
+    SAMPLING.store(false, Ordering::SeqCst);
+}
+
+/// Arm the installed observatory: [`active`] starts returning true.
+pub fn arm() {
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm: [`active`] returns false, both hooks become no-ops. The
+/// accumulated state stays installed (re-arm to resume).
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    SAMPLING.store(false, Ordering::SeqCst);
+}
+
+/// Round hook (coordinator `step`, armed path only): advance the round
+/// clock, publish the previous sampled round's aggregates, and expose
+/// whether the round now starting is sampled via the `SAMPLING` flag
+/// the block tasks check. Runs strictly between rounds on the
+/// coordinator thread, so block tasks never race the flag.
+#[cold]
+pub fn round_tick() {
+    let mut st = STATE.lock().unwrap();
+    if let Some(obs) = st.as_mut() {
+        if let Some(sum) = obs.sampler.begin_round() {
+            obs.publish(&sum);
+        }
+        SAMPLING.store(obs.sampler.is_sampling(), Ordering::Relaxed);
+    }
+}
+
+/// Block-task hook (armed path only): feed one block task's envelope
+/// into the sampler if the current round is sampled. Off-sample rounds
+/// return after one relaxed load, before the state lock.
+#[cold]
+pub fn record_block(g: &Graph, block: u32, job_ids: &[u32], fused: bool) {
+    if !SAMPLING.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut st = STATE.lock().unwrap();
+    if let Some(obs) = st.as_mut() {
+        obs.sampler.record_block(g, block, job_ids, fused);
+    }
+}
+
+/// The `GET /blocks` answer: per-block heat/sharing plus a hierarchy
+/// summary. Well-formed (with an empty `blocks` array) when no
+/// observatory is installed, so the endpoint is always scrapeable.
+pub fn blocks_json() -> Json {
+    let st = STATE.lock().unwrap();
+    let Some(obs) = st.as_ref() else {
+        return Json::obj(vec![
+            ("armed", Json::Bool(false)),
+            ("sample", Json::num(0.0)),
+            ("rounds_seen", Json::num(0.0)),
+            ("sampled_rounds", Json::num(0.0)),
+            ("num_blocks", Json::num(0.0)),
+            ("blocks", Json::Arr(Vec::new())),
+        ]);
+    };
+    let s = &obs.sampler;
+    let h = s.stats();
+    let blocks: Vec<Json> = (0..s.num_blocks())
+        .map(|bi| {
+            let rounds = s.touch_rounds[bi];
+            let sharing = if rounds == 0 {
+                0.0
+            } else {
+                s.heat[bi] as f64 / rounds as f64
+            };
+            Json::obj(vec![
+                ("id", Json::num(bi as f64)),
+                ("heat", Json::num(s.heat[bi] as f64)),
+                ("rounds", Json::num(rounds as f64)),
+                ("sharing", Json::num(sharing)),
+                ("last_round", Json::num(s.last_round[bi] as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("armed", Json::Bool(active())),
+        ("sample", Json::num(s.sample() as f64)),
+        ("rounds_seen", Json::num(s.rounds_seen() as f64)),
+        ("sampled_rounds", Json::num(s.sampled_rounds() as f64)),
+        ("num_blocks", Json::num(s.num_blocks() as f64)),
+        (
+            "hierarchy",
+            Json::obj(vec![
+                ("llc_miss_rate", Json::num(h.llc_miss_rate())),
+                ("stall_share", Json::num(h.stall_share())),
+                ("dram_bytes", Json::num(h.dram_bytes(s.line_size()) as f64)),
+            ]),
+        ),
+        ("blocks", Json::Arr(blocks)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn setup() -> (Graph, BlockPartition) {
+        let g = generate::erdos_renyi(256, 1024, 5);
+        let part = BlockPartition::by_vertex_count(&g, 64);
+        (g, part)
+    }
+
+    #[test]
+    fn sampler_respects_sample_rate() {
+        let (g, part) = setup();
+        let mut s = LocalitySampler::new(HierarchyConfig::small(), 3, &g, &part);
+        let mut sampled = 0;
+        for _ in 0..9 {
+            s.begin_round();
+            if s.is_sampling() {
+                sampled += 1;
+                s.record_block(&g, 0, &[0], false);
+            } else {
+                // Off-sample recording must be a no-op.
+                s.record_block(&g, 0, &[0], false);
+            }
+        }
+        assert_eq!(sampled, 3, "1-in-3 over 9 rounds");
+        assert_eq!(s.sampled_rounds(), 3);
+        s.begin_round();
+        // Heat counts only sampled-round touches.
+        assert_eq!(s.heat()[0], 3);
+        assert!(s.stats().l1.accesses > 0);
+    }
+
+    #[test]
+    fn reuse_distance_counts_sampled_rounds() {
+        let (g, part) = setup();
+        let mut s = LocalitySampler::new(HierarchyConfig::small(), 1, &g, &part);
+        s.begin_round();
+        s.record_block(&g, 2, &[0, 1], true);
+        let first = s.begin_round().expect("flushed");
+        assert_eq!(first.touched, vec![BlockTouch { block: 2, jobs: 2, reuse: None }]);
+        assert!((first.mean_sharing - 2.0).abs() < 1e-9);
+        // one sampled round without the block, then touch again
+        s.record_block(&g, 1, &[0], false);
+        s.begin_round();
+        s.record_block(&g, 2, &[1], false);
+        let again = s.begin_round().expect("flushed");
+        assert_eq!(again.touched, vec![BlockTouch { block: 2, jobs: 1, reuse: Some(2) }]);
+    }
+
+    #[test]
+    fn fused_envelope_touches_less_than_per_job() {
+        let (g, part) = setup();
+        let ids = [0u32, 1, 2, 3];
+        let mut fused = LocalitySampler::new(HierarchyConfig::small(), 1, &g, &part);
+        fused.begin_round();
+        fused.record_block(&g, 0, &ids, true);
+        let mut perjob = LocalitySampler::new(HierarchyConfig::small(), 1, &g, &part);
+        perjob.begin_round();
+        perjob.record_block(&g, 0, &ids, false);
+        assert!(
+            fused.stats().l1.accesses < perjob.stats().l1.accesses,
+            "fused envelope reads structure once"
+        );
+    }
+
+    #[test]
+    fn blocks_json_is_well_formed_without_install() {
+        // Never installs or arms — other tests in this binary run
+        // coordinator rounds concurrently.
+        let j = blocks_json();
+        let txt = j.to_string();
+        assert!(txt.contains("\"blocks\""));
+        assert!(txt.contains("\"num_blocks\""));
+    }
+}

@@ -29,6 +29,7 @@
 
 pub mod flight;
 pub mod hist;
+pub mod locality;
 pub mod prom;
 pub mod registry;
 

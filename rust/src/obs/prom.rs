@@ -133,6 +133,11 @@ fn family_of(name: &str) -> &str {
 /// every sample with a `group="<id>"` label (see the module docs).
 /// Unparseable lines are dropped — a half-written upstream scrape must
 /// not poison the merged view.
+///
+/// Family-agnostic by construction: families introduced after this was
+/// written (e.g. the locality observatory's `tlsched_block_heat` /
+/// `tlsched_cache_*` set, DESIGN.md §13) flow through the router merge
+/// with no registration step here.
 pub fn merge_scrapes(scrapes: &[(String, String)]) -> String {
     #[derive(Default)]
     struct Family {

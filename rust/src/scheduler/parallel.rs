@@ -120,6 +120,12 @@ pub(crate) fn run_block_task(
         let salt = spec.active.first().map_or(0, |&ji| jobs[ji].rounds);
         crate::util::faults::maybe_delay(spec.block, salt);
     }
+    // Locality-observatory gate (`obs::locality`, DESIGN.md §13): same
+    // zero-cost-disarmed shape as the fault gate — one relaxed load,
+    // and the job-id gather allocates only on the armed path.
+    if crate::obs::locality::active() {
+        record_locality(g, jobs, spec, fused);
+    }
     if fused {
         block_pass(g, part, jobs, spec.block, &spec.active)
     } else {
@@ -129,6 +135,15 @@ pub(crate) fn run_block_task(
         }
         outs
     }
+}
+
+/// Armed-path half of the locality gate in [`run_block_task`]: gather
+/// the task's job ids and hand the block to the sampler. `#[cold]` so
+/// the disarmed path stays one relaxed load with no spill.
+#[cold]
+fn record_locality(g: &Graph, jobs: &[JobState], spec: &BlockTaskSpec, fused: bool) {
+    let ids: Vec<u32> = spec.active.iter().map(|&ji| jobs[ji].id).collect();
+    crate::obs::locality::record_block(g, spec.block, &ids, fused);
 }
 
 /// One staged pass over a block for the given job indices, with the

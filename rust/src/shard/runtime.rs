@@ -243,7 +243,10 @@ impl ShardedRuntime {
     ///
     /// Failure containment matches the unsharded staged round: every
     /// block task (phase 1b) runs through the same `run_block_task` —
-    /// fault-injection gate included — and a task panic re-throws out
+    /// fault-injection *and* locality-observatory gates included, so
+    /// sampled cache profiling (`crate::obs::locality`, DESIGN.md §13)
+    /// covers sharded rounds with no extra hook here — and a task
+    /// panic re-throws out
     /// of `scope_map` before any copy-back, fold or exchange drain
     /// runs, so the coordinator's quarantine sees all jobs (and the
     /// exchange buffers) untouched by the aborted round.

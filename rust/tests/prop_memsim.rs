@@ -1,0 +1,238 @@
+//! Property tests for the memsim substrate (DESIGN.md §4) and the
+//! locality observatory built on it (DESIGN.md §13): set-associative
+//! LRU invariants, address-map region disjointness, hierarchy stats
+//! conservation, and determinism of sampled profiling.
+
+mod common;
+
+use common::{prop_check, random_graph, random_partition};
+use tlsched::memsim::{
+    AddressMap, Cache, CacheConfig, HierarchyConfig, HierarchyStats, MemoryHierarchy, Region,
+};
+use tlsched::obs::locality::LocalitySampler;
+use tlsched::util::rng::Pcg32;
+
+fn random_cache_config(rng: &mut Pcg32) -> CacheConfig {
+    let line_size = 32usize << rng.gen_range(3); // 32|64|128|256
+    let assoc = 1usize << (1 + rng.gen_range(3)); // 2|4|8
+    let sets = 1usize << (2 + rng.gen_range(5)); // 4..64
+    CacheConfig {
+        capacity: line_size * assoc * sets,
+        line_size,
+        assoc,
+        hit_latency: 1 + rng.next_u64() % 8,
+    }
+}
+
+/// Within one set: `assoc` distinct lines are all simultaneously
+/// resident (every re-access hits), and inserting one more line evicts
+/// exactly the LRU way — the evicted line misses on return while the
+/// most-recently-used line still hits.
+#[test]
+fn prop_lru_set_invariants() {
+    prop_check("lru_set_invariants", 64, |rng| {
+        let cfg = random_cache_config(rng);
+        let mut c = Cache::new(cfg);
+        let sets = cfg.sets() as u64;
+        let set = rng.next_u64() % sets;
+        let line = |i: u64| (set + i * sets) * cfg.line_size as u64;
+        for i in 0..cfg.assoc as u64 {
+            if c.access(line(i)) {
+                return Err(format!("cold access of line {i} hit"));
+            }
+        }
+        for i in 0..cfg.assoc as u64 {
+            if !c.access(line(i)) {
+                return Err(format!(
+                    "line {i} of {} resident lines missed (assoc {})",
+                    cfg.assoc, cfg.assoc
+                ));
+            }
+        }
+        // LRU order is now 0..assoc again; one more line evicts way 0
+        let extra = cfg.assoc as u64;
+        if c.access(line(extra)) {
+            return Err("conflicting line hit a full set".into());
+        }
+        if !c.access(line(extra - 1)) {
+            return Err("MRU survivor was evicted instead of the LRU way".into());
+        }
+        if c.access(line(0)) {
+            return Err("LRU line survived an eviction that must have removed it".into());
+        }
+        Ok(())
+    });
+}
+
+/// Every region of the simulated layout — the six shared-structure
+/// arrays and each job's value/delta lanes — occupies a disjoint byte
+/// range, for any graph shape and job count. Overlap would let one
+/// job's lane writes masquerade as graph-structure reuse.
+#[test]
+fn prop_address_map_regions_disjoint() {
+    prop_check("address_map_regions_disjoint", 48, |rng| {
+        let g = random_graph(rng);
+        let map = AddressMap::new(&g);
+        let n = g.num_vertices() as u64;
+        let m = g.num_edges() as u64;
+        let jobs = 2 + rng.gen_range(5);
+        let mut spans: Vec<(&'static str, u64, u64)> = vec![
+            (
+                "in_offsets",
+                map.addr(Region::InOffsets, 0),
+                map.addr(Region::InOffsets, n) + 8,
+            ),
+            (
+                "out_offsets",
+                map.addr(Region::OutOffsets, 0),
+                map.addr(Region::OutOffsets, n) + 8,
+            ),
+        ];
+        if m > 0 {
+            for (name, r) in [
+                ("in_sources", Region::InSources),
+                ("in_weights", Region::InWeights),
+                ("out_targets", Region::OutTargets),
+                ("out_weights", Region::OutWeights),
+            ] {
+                spans.push((name, map.addr(r, 0), map.addr(r, m - 1) + 4));
+            }
+        }
+        for j in 0..jobs {
+            for (name, r) in [("values", Region::Values(j)), ("deltas", Region::Deltas(j))] {
+                spans.push((name, map.addr(r, 0), map.addr(r, n - 1) + 4));
+            }
+        }
+        for (i, a) in spans.iter().enumerate() {
+            for b in spans.iter().skip(i + 1) {
+                if a.2 > b.1 && b.2 > a.1 {
+                    return Err(format!(
+                        "{} [{}, {}) overlaps {} [{}, {}) at {jobs} jobs",
+                        a.0, a.1, a.2, b.0, b.1, b.2
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Conservation across the inclusive hierarchy for an arbitrary access
+/// stream: per level hits + misses == accesses, each inner level's
+/// misses are exactly the next level's accesses, and DRAM sees exactly
+/// the LLC misses.
+#[test]
+fn prop_hierarchy_stats_conservation() {
+    prop_check("hierarchy_stats_conservation", 48, |rng| {
+        let cfg = match rng.gen_range(3) {
+            0 => HierarchyConfig::tiny(),
+            1 => HierarchyConfig::small(),
+            _ => HierarchyConfig::default(),
+        };
+        let mut mem = MemoryHierarchy::new(cfg);
+        let footprint = 1u64 << (14 + rng.gen_range(8)); // 16K..2M bytes
+        let accesses = 2_000 + rng.gen_index(8_000);
+        let mut cursor = rng.next_u64() % footprint;
+        for _ in 0..accesses {
+            // mixed stream: mostly short sequential runs, some jumps
+            if rng.gen_range(8) == 0 {
+                cursor = rng.next_u64() % footprint;
+            } else {
+                cursor = (cursor + 4) % footprint;
+            }
+            mem.access(cursor);
+        }
+        let s = mem.stats();
+        for (lvl, cs) in [("l1", s.l1), ("l2", s.l2), ("llc", s.llc)] {
+            if cs.hits + cs.misses != cs.accesses {
+                return Err(format!(
+                    "{lvl}: hits {} + misses {} != accesses {}",
+                    cs.hits, cs.misses, cs.accesses
+                ));
+            }
+        }
+        if s.l1.accesses != accesses as u64 {
+            return Err(format!("l1 saw {} of {} issued accesses", s.l1.accesses, accesses));
+        }
+        if s.l2.accesses != s.l1.misses {
+            return Err(format!("l2 accesses {} != l1 misses {}", s.l2.accesses, s.l1.misses));
+        }
+        if s.llc.accesses != s.l2.misses {
+            return Err(format!("llc accesses {} != l2 misses {}", s.llc.accesses, s.l2.misses));
+        }
+        if s.dram_accesses != s.llc.misses {
+            return Err(format!("dram {} != llc misses {}", s.dram_accesses, s.llc.misses));
+        }
+        Ok(())
+    });
+}
+
+fn stats_fields(s: &HierarchyStats) -> [u64; 12] {
+    [
+        s.l1.accesses,
+        s.l1.hits,
+        s.l1.misses,
+        s.l2.accesses,
+        s.l2.hits,
+        s.l2.misses,
+        s.llc.accesses,
+        s.llc.hits,
+        s.llc.misses,
+        s.dram_accesses,
+        s.stall_cycles,
+        s.work_cycles,
+    ]
+}
+
+/// Two samplers fed the identical round/block stream produce identical
+/// heat vectors, round summaries, and simulated hierarchy stats — the
+/// observatory's replay is a pure function of its input stream, never
+/// of wall clock or task interleaving (`flush_current` sorts).
+#[test]
+fn prop_sampled_profiling_deterministic() {
+    prop_check("sampled_profiling_deterministic", 24, |rng| {
+        let g = random_graph(rng);
+        let part = random_partition(&g, rng);
+        let sample = 1 + rng.next_u64() % 4;
+        let jobs: Vec<u32> = (0..(1 + rng.gen_range(4))).collect();
+        let fused = rng.gen_range(2) == 0;
+        let hcfg = HierarchyConfig::tiny();
+        let mut a = LocalitySampler::new(hcfg, sample, &g, &part);
+        let mut b = LocalitySampler::new(hcfg, sample, &g, &part);
+        let rounds = 3 + rng.gen_index(6);
+        let nb = part.blocks.len();
+        for _ in 0..rounds {
+            let sa = a.begin_round();
+            let sb = b.begin_round();
+            match (&sa, &sb) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    if x.touched != y.touched || x.mean_sharing != y.mean_sharing {
+                        return Err(format!("round summaries diverged: {x:?} vs {y:?}"));
+                    }
+                }
+                _ => return Err("one sampler flushed, the other did not".into()),
+            }
+            let touches = 1 + rng.gen_index(nb.min(8));
+            for _ in 0..touches {
+                let blk = rng.gen_index(nb) as u32;
+                a.record_block(&g, blk, &jobs, fused);
+                b.record_block(&g, blk, &jobs, fused);
+            }
+        }
+        if a.heat() != b.heat() {
+            return Err("heat vectors diverged".into());
+        }
+        if stats_fields(&a.stats()) != stats_fields(&b.stats()) {
+            return Err(format!(
+                "hierarchy stats diverged: {:?} vs {:?}",
+                stats_fields(&a.stats()),
+                stats_fields(&b.stats())
+            ));
+        }
+        if a.sampled_rounds() != b.sampled_rounds() || a.rounds_seen() != b.rounds_seen() {
+            return Err("round clocks diverged".into());
+        }
+        Ok(())
+    });
+}

@@ -3,7 +3,7 @@
 #
 # Usage:
 #   scripts/refresh_bench_baseline.sh <BENCH_baseline_candidate.json> \
-#       [BENCH_serve.json]
+#       [BENCH_serve.json] [BENCH_locality.json]
 #
 # The candidate comes from the `bench-fused` artifact of a *green*
 # bench-smoke CI run (or a local `cargo bench --bench throughput --
@@ -20,6 +20,13 @@
 # in the net-e2e job. Without it, the previous serve_* values are
 # preserved unchanged.
 #
+# The optional third argument is the `BENCH_locality.json` from the
+# metrics-e2e profile step (or a local `tlsched profile` run). Passing
+# it folds the locality_* keys — per-mode miss rates, stall shares,
+# DRAM bytes, and locality_traffic_ratio — into the baseline with
+# `locality_verified` carried over from the report. Without it, any
+# previous locality_* values are preserved unchanged.
+#
 # Never hand-edit speedup or latency values into BENCH_baseline.json:
 # unmeasured floors either mask regressions (too low) or flake CI
 # (too high).
@@ -27,15 +34,20 @@ set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-candidate="${1:?usage: $0 <BENCH_baseline_candidate.json> [BENCH_serve.json]}"
+candidate="${1:?usage: $0 <BENCH_baseline_candidate.json> [BENCH_serve.json] [BENCH_locality.json]}"
 [ -f "$candidate" ] || { echo "error: $candidate not found" >&2; exit 1; }
 serve="${2:-}"
 if [ -n "$serve" ] && [ ! -f "$serve" ]; then
     echo "error: $serve not found" >&2
     exit 1
 fi
+locality="${3:-}"
+if [ -n "$locality" ] && [ ! -f "$locality" ]; then
+    echo "error: $locality not found" >&2
+    exit 1
+fi
 
-python3 - "$candidate" "$serve" <<'EOF'
+python3 - "$candidate" "$serve" "$locality" <<'EOF'
 import json, sys
 
 cand = json.load(open(sys.argv[1]))
@@ -77,6 +89,25 @@ else:
     for k in serve_keys:
         cand[k] = old.get(k, 0.0)
     cand["serve_verified"] = old.get("serve_verified", 0)
+
+if sys.argv[3]:
+    prof = json.load(open(sys.argv[3]))
+    loc_required = ["locality_traffic_ratio", "locality_verified",
+                    "locality_fused_dram_bytes", "locality_perjob_dram_bytes"]
+    missing = [k for k in loc_required if k not in prof]
+    assert not missing, f"locality report missing keys: {missing}"
+    assert prof["locality_verified"], \
+        "locality report is unverified (fused did not beat per-job)"
+    for k, v in sorted(prof.items()):
+        if k.startswith("locality_"):
+            cand[k] = v
+    print(f"  locality_traffic_ratio: {old.get('locality_traffic_ratio', 'unset')}"
+          f" -> {prof['locality_traffic_ratio']}")
+else:
+    # preserve any previous locality profile unchanged
+    for k, v in old.items():
+        if k.startswith("locality_"):
+            cand[k] = v
 
 with open("BENCH_baseline.json", "w") as f:
     json.dump(cand, f)
